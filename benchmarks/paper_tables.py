@@ -1,0 +1,142 @@
+"""Reproductions of the paper's tables/figures on the calibrated Jetson
+cost model + the executable pipeline. One function per artifact:
+
+  fig9_standalone        — standalone per-engine throughput (3 variants)
+  fig10_utilization      — GPU utilization of the DLA-assigned model
+  fig11_12_naive         — client-server scheme: GPU / DLA throughput
+  table3_4_haxconn_2gan  — 2x Pix2Pix swap schedule: partitions + FPS
+  table5_6_haxconn_yolo  — Pix2Pix + YOLOv8 swap schedule
+  pipeline_wallclock     — CPU wall-clock of the *executable* pipeline
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import core
+from repro.core.constraints import DLA_ANALOGUE_CONSTRAINTS
+from repro.core.engine import jetson_orin_engines
+from repro.models import Pix2PixConfig, Pix2PixGenerator, YOLOv8, YOLOv8Config
+
+GPU, DLA = jetson_orin_engines(constraints_dla=DLA_ANALOGUE_CONSTRAINTS)
+VARIANTS = ("padded", "cropping", "conv")
+
+
+def _graphs():
+    return {m: Pix2PixGenerator(Pix2PixConfig(deconv_mode=m)).layer_graph() for m in VARIANTS}
+
+
+def fig9_standalone(rows):
+    g = _graphs()
+    for m in VARIANTS:
+        s = core.standalone_schedule(g[m], DLA, GPU)
+        rows.append((f"fig9_standalone_dla_fps[{m}]", s.cycle_time * 1e6, f"{1/s.cycle_time:.1f}fps"))
+    return rows
+
+
+def fig10_utilization(rows):
+    g = _graphs()
+    for m in VARIANTS:
+        util = core.peer_utilization(g[m], DLA, GPU)
+        rows.append((f"fig10_gpu_util[{m}]", 0.0, f"{util*100:.1f}%"))
+    return rows
+
+
+def fig11_12_naive(rows):
+    g = _graphs()
+    yolo = YOLOv8(YOLOv8Config(img_size=256)).layer_graph()
+    for m in VARIANTS:
+        s = core.naive_schedule(g[m], yolo, DLA, GPU)
+        rows.append(
+            (
+                f"fig11_naive_gpu_fps[{m}]",
+                1e6 / max(s.loads["GPU"].fps, 1e-9),
+                f"{s.loads['GPU'].fps:.1f}fps",
+            )
+        )
+        rows.append(
+            (
+                f"fig12_naive_dla_fps[{m}]",
+                1e6 / max(s.loads["DLA"].fps, 1e-9),
+                f"{s.loads['DLA'].fps:.1f}fps",
+            )
+        )
+    return rows
+
+
+def table3_4_haxconn_2gan(rows, verbose=False):
+    g = _graphs()
+    for m in VARIANTS:
+        r = core.haxconn_schedule(g[m], g[m], DLA, GPU)
+        s = r.schedule
+        per_stream = s.aggregate_fps / 2
+        rows.append(
+            (
+                f"table3_partition[{m}]",
+                s.cycle_time * 1e6,
+                f"DLA->GPU@{r.p_a};GPU->DLA@{r.p_b}",
+            )
+        )
+        rows.append(
+            (
+                f"table4_fps[{m}]",
+                s.cycle_time * 1e6,
+                f"agg={s.aggregate_fps:.1f};per_stream={per_stream:.1f};"
+                f"dla_busy={s.loads['DLA'].busy*1e3:.2f}ms;gpu_busy={s.loads['GPU'].busy*1e3:.2f}ms",
+            )
+        )
+        if verbose:
+            print(f"\n--- HaX-CoNN 2x Pix2Pix [{m}] ---")
+            print(s.ascii_timeline())
+    return rows
+
+
+def table5_6_haxconn_yolo(rows, verbose=False):
+    g = _graphs()
+    yolo = YOLOv8(YOLOv8Config(img_size=256)).layer_graph()
+    for m in VARIANTS:
+        r = core.haxconn_schedule(g[m], yolo, DLA, GPU)
+        s = r.schedule
+        rows.append(
+            (
+                f"table5_partition[{m}]",
+                s.cycle_time * 1e6,
+                f"DLA->GPU@{r.p_a};GPU->DLA@{r.p_b}",
+            )
+        )
+        rows.append(
+            (
+                f"table6_fps[{m}]",
+                s.cycle_time * 1e6,
+                f"agg={s.aggregate_fps:.1f};idle_dla={s.idle_fraction('DLA')*100:.0f}%;"
+                f"idle_gpu={s.idle_fraction('GPU')*100:.0f}%",
+            )
+        )
+        if verbose:
+            print(f"\n--- HaX-CoNN Pix2Pix[{m}] + YOLOv8 ---")
+            print(s.ascii_timeline())
+    return rows
+
+
+def pipeline_wallclock(rows, img=64, n_frames=4):
+    """Executable two-model pipeline vs sequential execution (CPU)."""
+    cfg = Pix2PixConfig(img_size=img, base=8, deconv_mode="cropping")
+    gen = Pix2PixGenerator(cfg)
+    params = {"generator": gen.init(jax.random.key(0))}
+    gsm = core.pix2pix_staged(cfg, params)
+    ycfg = YOLOv8Config(img_size=img)
+    ym = YOLOv8(ycfg)
+    ysm = core.yolo_staged(ycfg, ym.init(jax.random.key(1)))
+    plan = core.haxconn_schedule(gsm.graph, ysm.graph, DLA, GPU)
+    pipe = core.TwoModelPipeline(gsm, ysm, plan)
+    frames = [jax.random.normal(jax.random.key(i), (1, img, img, 3)) for i in range(n_frames)]
+    # warmup + timed
+    pipe.run_stream(frames[:1], frames[:1])
+    t0 = time.perf_counter()
+    outs_a, outs_b = pipe.run_stream(frames, frames)
+    jax.block_until_ready(outs_a[-1])
+    dt = (time.perf_counter() - t0) / n_frames
+    rows.append(("pipeline_wallclock_per_frame", dt * 1e6, f"{1/dt:.2f}fps_cpu"))
+    return rows

@@ -1,0 +1,62 @@
+"""Aggregate the dry-run artifacts into the EXPERIMENTS.md roofline table."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load_rows(mesh: str = "16x16"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ART, f"*__{mesh}.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    rows.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])))
+    return rows
+
+
+def fmt_ms(s):
+    return f"{float(s)*1e3:.2f}"
+
+
+def markdown_table(mesh: str = "16x16") -> str:
+    rows = load_rows(mesh)
+    out = [
+        f"| arch | shape | t_comp (ms) | t_mem (ms) | t_coll (ms) | bottleneck | useful 6ND/HLO | roofline frac | mem/dev (GiB) | what would move the dominant term |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["status"] == "skip":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | skip | — | — | — | ({r['reason'][:48]}) |")
+            continue
+        mem = r["memory_per_device"]["total"] / 2**30
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_ms(r['t_compute_s'])} | {fmt_ms(r['t_memory_s'])} "
+            f"| {fmt_ms(r['t_collective_s'])} | {r['bottleneck']} | {r['useful_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.3f} | {mem:.2f} | {r.get('next_step', '')} |"
+        )
+    return "\n".join(out)
+
+
+def csv_rows(mesh: str = "16x16"):
+    print("arch,shape,mesh,us_per_step,bottleneck,roofline_fraction")
+    for r in load_rows(mesh):
+        if r["status"] != "ok":
+            continue
+        t = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        print(f"{r['arch']},{r['shape']},{r['mesh']},{t*1e6:.1f},{r['bottleneck']},{r['roofline_fraction']:.4f}")
+
+
+def main():
+    for mesh in ("16x16", "2x16x16"):
+        rows = load_rows(mesh)
+        if rows:
+            print(f"\n## Roofline baselines — mesh {mesh} ({len(rows)} cells)\n")
+            print(markdown_table(mesh))
+
+
+if __name__ == "__main__":
+    main()

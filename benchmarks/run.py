@@ -1,0 +1,67 @@
+"""Benchmark harness — one function per paper table/figure plus the
+roofline aggregation. Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run [--full]
+
+--full trains the Table II variants longer and times more pipeline
+frames; the default finishes in a few minutes on CPU.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--skip-accuracy", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks.paper_tables import (
+        fig9_standalone,
+        fig10_utilization,
+        fig11_12_naive,
+        pipeline_wallclock,
+        table3_4_haxconn_2gan,
+        table5_6_haxconn_yolo,
+    )
+
+    rows: list[tuple] = []
+    fig9_standalone(rows)
+    fig10_utilization(rows)
+    fig11_12_naive(rows)
+    table3_4_haxconn_2gan(rows, verbose=True)
+    table5_6_haxconn_yolo(rows, verbose=True)
+    pipeline_wallclock(rows, n_frames=8 if args.full else 3)
+
+    if not args.skip_accuracy:
+        from benchmarks.table2_accuracy import table2_accuracy
+
+        table2_accuracy(rows, steps=400 if args.full else 120)
+
+    # roofline summary rows from dry-run artifacts (if present)
+    try:
+        from benchmarks.roofline_table import load_rows
+
+        for r in load_rows("16x16"):
+            if r.get("status") != "ok":
+                continue
+            t = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+            rows.append(
+                (
+                    f"roofline[{r['arch']}|{r['shape']}]",
+                    t * 1e6,
+                    f"bneck={r['bottleneck']};frac={r['roofline_fraction']:.4f}",
+                )
+            )
+    except Exception as e:  # dry-run not yet executed
+        print(f"# roofline artifacts unavailable: {e}", file=sys.stderr)
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

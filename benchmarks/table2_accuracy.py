@@ -1,0 +1,73 @@
+"""Table II reproduction: accuracy of the three Pix2Pix variants.
+
+Important honesty note vs. the paper: 'padded' and 'cropping' are the
+SAME function (the crop substitution is mathematically exact — property-
+tested), so with transferred weights their SSIM/PSNR/MSE are identical
+BY CONSTRUCTION: surgery costs zero accuracy. The paper's +5% SSIM for
+the substituted variants reflects independent retraining variance (and,
+for 'conv', +10.2M genuinely trainable params). We therefore report:
+  padded    — trained from scratch
+  cropping  — padded weights transferred through surgery (zero-cost)
+  conv      — trained from scratch (extra parameters)
+on held-out synthetic CT->MRI phantoms (the paper's dataset [28] is not
+available offline; see DESIGN.md)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.data import PhantomConfig, phantom_batches
+from repro.models import Pix2Pix, Pix2PixConfig
+from repro.train.metrics import mse, psnr, ssim, to_uint8_range
+from repro.train.optimizer import Adam
+from repro.train.steps import make_pix2pix_train_step
+
+
+def _train(cfg, steps, batch_size, seed=0):
+    model = Pix2Pix(cfg)
+    params = model.init(jax.random.key(seed))
+    g_opt = Adam(lr=2e-4, b1=0.5)
+    d_opt = Adam(lr=2e-4, b1=0.5)
+    opt_state = {"g": g_opt.init(params["generator"]), "d": d_opt.init(params["discriminator"])}
+    step = jax.jit(make_pix2pix_train_step(model, g_opt, d_opt, lambda_l1=cfg.lambda_l1))
+    data = phantom_batches(batch_size, PhantomConfig(img_size=cfg.img_size), seed=seed + 1)
+    for i in range(steps):
+        b = next(data)
+        batch = {"src": jnp.asarray(b["src"]), "dst": jnp.asarray(b["dst"])}
+        params, opt_state, m = step(params, opt_state, batch, jax.random.key(i))
+    return model, params
+
+
+def _evaluate(model, params, img_size, n=8, seed=777):
+    data = phantom_batches(n, PhantomConfig(img_size=img_size), seed=seed)
+    b = next(data)
+    src, dst = jnp.asarray(b["src"]), jnp.asarray(b["dst"])
+    fake = model.generate(params, src)
+    o, g = to_uint8_range(dst), to_uint8_range(fake)
+    return {
+        "ssim": float(ssim(o, g).mean()) * 100,
+        "psnr": float(psnr(o, g).mean()),
+        "mse": float(mse(o, g).mean()),
+    }
+
+
+def table2_accuracy(rows, img=64, base=16, steps=150, batch=4):
+    base_cfg = Pix2PixConfig(img_size=img, base=base, deconv_mode="padded")
+    model_p, params_p = _train(base_cfg, steps, batch)
+    res_p = _evaluate(model_p, params_p, img)
+    rows.append(("table2_padded", 0.0, f"ssim={res_p['ssim']:.2f};psnr={res_p['psnr']:.2f};mse={res_p['mse']:.2f}"))
+
+    # cropping: surgery transfers the padded weights — identical function
+    cfg_c = dataclasses.replace(base_cfg, deconv_mode="cropping")
+    model_c = Pix2Pix(cfg_c)
+    res_c = _evaluate(model_c, params_p, img)
+    rows.append(("table2_cropping_surgery", 0.0, f"ssim={res_c['ssim']:.2f};psnr={res_c['psnr']:.2f};mse={res_c['mse']:.2f}"))
+    assert abs(res_c["ssim"] - res_p["ssim"]) < 1e-3, "surgery must preserve accuracy exactly"
+
+    cfg_v = dataclasses.replace(base_cfg, deconv_mode="conv")
+    model_v, params_v = _train(cfg_v, steps, batch)
+    res_v = _evaluate(model_v, params_v, img)
+    rows.append(("table2_conv_retrained", 0.0, f"ssim={res_v['ssim']:.2f};psnr={res_v['psnr']:.2f};mse={res_v['mse']:.2f}"))
+    return rows

@@ -1,0 +1,56 @@
+"""The paper's client-server scheme (§VI.D.1): TWO Pix2Pix instances
+reconstructing independent MRI streams, swap-scheduled across the engines.
+Compares the original (fallback-ridden) model against the hardware-aware
+variants — the paper's headline 'double the DLA throughput' result.
+
+  PYTHONPATH=src python examples/multi_stream_recon.py
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import core
+from repro.core.constraints import DLA_ANALOGUE_CONSTRAINTS
+from repro.core.engine import jetson_orin_engines
+from repro.models import Pix2PixConfig, Pix2PixGenerator
+
+GPU, DLA = jetson_orin_engines(constraints_dla=DLA_ANALOGUE_CONSTRAINTS)
+
+
+def main():
+    print("== 2x Pix2Pix multi-stream reconstruction (256x256, cost model) ==\n")
+    results = {}
+    for mode in ("padded", "cropping", "conv"):
+        g = Pix2PixGenerator(Pix2PixConfig(deconv_mode=mode)).layer_graph()
+        ill, _ = core.check_graph(g, DLA)
+        r = core.haxconn_schedule(g, g, DLA, GPU)
+        s = r.schedule
+        results[mode] = s
+        print(f"--- {mode} ({len(ill)} DLA-illegal layers) ---")
+        print(f"  partitions: instance A DLA[0:{r.p_a}) GPU[{r.p_a}:); instance B GPU[0:{r.p_b}) DLA[{r.p_b}:)")
+        print(f"  per-stream {s.aggregate_fps/2:.1f} FPS, aggregate {s.aggregate_fps:.1f} FPS")
+        print(s.ascii_timeline())
+        print()
+    gain = results["cropping"].aggregate_fps / results["padded"].aggregate_fps
+    print(f"hardware-aware (cropping) vs original aggregate gain: {gain:.2f}x")
+    print("(paper Table IV: DLA throughput 86.94 -> 147.66 FPS = 1.70x on Jetson)")
+
+    # small-scale EXECUTABLE check: the two streams produce exact outputs
+    cfg = Pix2PixConfig(img_size=64, base=8, deconv_mode="cropping")
+    gen = Pix2PixGenerator(cfg)
+    params = {"generator": gen.init(jax.random.key(0))}
+    sm_a = core.pix2pix_staged(cfg, params)
+    sm_b = core.pix2pix_staged(cfg, params)
+    plan = core.haxconn_schedule(sm_a.graph, sm_b.graph, DLA, GPU)
+    pipe = core.TwoModelPipeline(sm_a, sm_b, plan)
+    frames = [jax.random.normal(jax.random.key(i), (1, 64, 64, 3)) for i in range(3)]
+    outs_a, outs_b = pipe.run_stream(frames, list(reversed(frames)))
+    ok = all(
+        bool(jnp.allclose(sm_a.run_all(f), o, atol=1e-5)) for f, o in zip(frames, outs_a)
+    )
+    print(f"\nexecutable 2-stream pipeline functional check: {'OK' if ok else 'FAIL'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Perf hillclimb driver: lower a cell under variant knobs and report the
+three roofline terms + memory, for the hypothesis->change->measure loop.
+
+  PYTHONPATH=src python experiments/hillclimb.py --arch mamba2_2_7b --shape train_4k \
+      --variant fsdp=False n_micro=2
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import argparse
+import json
+import sys
+import time
+
+import jax
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+from repro.configs import get_arch
+from repro.launch.analytic import analytic_bytes, analytic_flops
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import analyze
+from repro.launch.specs import build_cell
+
+
+def run(arch, shape, set_cfg=None, **kw):
+    import dataclasses
+    spec = get_arch(arch)
+    if set_cfg:
+        spec = dataclasses.replace(spec, config=dataclasses.replace(spec.config, **set_cfg))
+    mesh = make_production_mesh()
+    cell = build_cell(spec, shape, mesh, **kw)
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        compiled = (
+            jax.jit(cell.fn, in_shardings=cell.in_shardings, donate_argnums=cell.donate_argnums)
+            .lower(*cell.args)
+            .compile()
+        )
+    rf = analyze(spec.name, shape, "16x16", mesh.size, compiled, cell.model_flops, analytic_flops(spec, shape), analytic_bytes(spec, shape, mesh.size))
+    mem = rf.memory_per_device["total"] / 2**30
+    print(
+        f"[{arch}|{shape}|{kw}] comp={rf.t_compute*1e3:.1f}ms mem={rf.t_memory*1e3:.1f}ms "
+        f"coll={rf.t_collective*1e3:.1f}ms bneck={rf.bottleneck} frac={rf.roofline_fraction:.4f} "
+        f"mem/dev={mem:.2f}GiB corr={rf.loop_correction:.1f} (compile {time.time()-t0:.0f}s)"
+    )
+    return rf
+
+
+def parse_kw(items):
+    out = {}
+    for it in items:
+        k, v = it.split("=")
+        if v in ("True", "False"):
+            out[k] = v == "True"
+        elif v.isdigit():
+            out[k] = int(v)
+        else:
+            try:
+                out[k] = float(v)
+            except ValueError:
+                out[k] = v
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", nargs="*", default=[])
+    ap.add_argument("--set", nargs="*", default=[], help="config overrides, e.g. remat=False attn_chunk=512")
+    a = ap.parse_args()
+    run(a.arch, a.shape, set_cfg=parse_kw(a.set) or None, **parse_kw(a.variant))

@@ -1,0 +1,64 @@
+"""DeepSeek-V2-Lite (16B) [arXiv:2405.04434; hf deepseek-ai/DeepSeek-V2-Lite].
+
+27L d_model=2048 16H vocab=102400; MLA kv_lora_rank=512 (qk_nope=128,
+qk_rope=64, v_head=128); fine-grained MoE expert d_ff=1408 top-6 with
+2 shared experts; first layer dense. NOTE: the assignment line says
+"2 shared+160 routed", but 160 routed experts gives a ~36B model — the
+*Lite-16B* config is 64 routed (160 belongs to full DeepSeek-V2); we use
+64 to match the 16B parameter count (see DESIGN.md). MLA still has full
+quadratic attention -> long_500k skipped.
+"""
+from repro.models import LMConfig
+
+FAMILY = "lm"
+
+CONFIG = LMConfig(
+    name="deepseek-v2-lite-16b",
+    n_layers=27,
+    d_model=2048,
+    n_q=16,
+    n_kv=16,
+    head_dim=128,
+    d_ff=8 * 1408,
+    vocab=102400,
+    attn_type="mla",
+    kv_lora=512,
+    qk_nope_dim=128,
+    qk_rope_dim=64,
+    v_head_dim=128,
+    mla_absorb=True,
+    moe=True,
+    n_experts=64,
+    top_k=6,
+    d_ff_expert=1408,
+    n_shared=2,
+    first_k_dense=1,
+    act="silu",
+    tie_embeddings=False,
+)
+
+SMOKE = LMConfig(
+    name="deepseek-v2-lite-smoke",
+    n_layers=3,
+    d_model=64,
+    n_q=4,
+    n_kv=4,
+    head_dim=16,
+    d_ff=8 * 32,
+    vocab=512,
+    attn_type="mla",
+    kv_lora=32,
+    qk_nope_dim=16,
+    qk_rope_dim=8,
+    v_head_dim=16,
+    moe=True,
+    n_experts=8,
+    top_k=2,
+    d_ff_expert=32,
+    n_shared=2,
+    first_k_dense=1,
+    tie_embeddings=False,
+)
+
+SKIP_SHAPES = ("long_500k",)
+SKIP_REASONS = {"long_500k": "MLA compresses the KV cache but attention is still quadratic full attention"}

@@ -1,0 +1,12 @@
+"""The paper's own model: Pix2Pix CT->MRI (256x256), three variants."""
+import dataclasses
+
+from repro.models import Pix2PixConfig
+
+FAMILY = "pix2pix"
+
+CONFIG = Pix2PixConfig(name="pix2pix-mri", img_size=256, deconv_mode="padded")
+CONFIG_CROPPING = dataclasses.replace(CONFIG, deconv_mode="cropping")
+CONFIG_CONV = dataclasses.replace(CONFIG, deconv_mode="conv")
+
+SMOKE = Pix2PixConfig(name="pix2pix-smoke", img_size=64, base=8, deconv_mode="cropping")

@@ -1,0 +1,8 @@
+"""The paper's detector: YOLOv8 (n-scale) for stroke detection on CT."""
+from repro.models import YOLOv8Config
+
+FAMILY = "yolo"
+
+CONFIG = YOLOv8Config(name="yolov8n-stroke", img_size=256, n_classes=2)
+
+SMOKE = YOLOv8Config(name="yolov8-smoke", img_size=64, n_classes=2)

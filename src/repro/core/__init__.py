@@ -1,0 +1,32 @@
+# The paper's primary contribution: engine-aware multi-model scheduling.
+from .graph import LayerGraph, LayerMeta, conv_meta, pointwise_meta
+from .engine import (
+    EngineSpec,
+    jetson_orin_engines,
+    tpu_submesh_engines,
+    TPU_V5E_BF16_FLOPS,
+    TPU_V5E_HBM_BW,
+    TPU_V5E_ICI_BW,
+)
+from .constraints import (
+    DLA_ANALOGUE_CONSTRAINTS,
+    TPU_SMALL_CONSTRAINTS,
+    DeconvPaddingZero,
+    DtypeConstraint,
+    KernelSizeRange,
+    LaneAlignment,
+    StaticShapesOnly,
+    Violation,
+    check_graph,
+)
+from .surgery import RULES, SurgeryReport, apply_surgery, substitute_pix2pix
+from .cost_model import graph_time, layer_time, segment_cost, transfer_time
+from .scheduler import (
+    HaxConnResult,
+    Schedule,
+    haxconn_schedule,
+    naive_schedule,
+    peer_utilization,
+    standalone_schedule,
+)
+from .pipeline import StagedModel, TwoModelPipeline, pix2pix_staged, yolo_staged

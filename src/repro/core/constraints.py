@@ -1,0 +1,128 @@
+"""Per-engine capability constraints.
+
+Mirrors the DLA restrictions the paper works around (§III.A.2, [26]):
+  * only FP16/INT8 dtypes                  -> DtypeConstraint
+  * deconvolution padding must be zero     -> DeconvPaddingZero
+  * kernel sizes must be in [1, 32]        -> KernelSizeRange
+  * no dynamic tensor shapes ([9]-[11])    -> StaticShapesOnly
+plus TPU-flavoured rules used by the submesh engines:
+  * channel counts should align to the 128-lane MXU -> LaneAlignment
+    (severity "inefficient": legal but costed with an efficiency penalty)
+
+A violated "illegal" constraint forces *fallback*: the layer must execute
+on the peer engine, splitting the segment and paying two transfers — the
+exact Jetson semantics the paper eliminates via surgery.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .graph import LayerMeta
+
+COMPUTE_KINDS = ("conv", "deconv", "matmul", "attn", "moe", "ssd", "c2f", "head", "sppf")
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    layer: str
+    constraint: str
+    reason: str
+    severity: str = "illegal"  # "illegal" | "inefficient"
+
+
+@dataclasses.dataclass(frozen=True)
+class DtypeConstraint:
+    allowed: tuple[str, ...] = ("bf16", "int8")
+
+    def check(self, l: LayerMeta):
+        dt = l.attrs.get("dtype", "bf16")
+        if dt not in self.allowed:
+            return Violation(l.name, "dtype", f"dtype {dt} not in {self.allowed}")
+        return None
+
+
+@dataclasses.dataclass(frozen=True)
+class DeconvPaddingZero:
+    def check(self, l: LayerMeta):
+        if l.kind == "deconv" and l.attrs.get("padding", 0) != 0:
+            return Violation(
+                l.name, "deconv_padding", "deconvolution padding must be zero on this engine"
+            )
+        return None
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSizeRange:
+    lo: int = 1
+    hi: int = 32
+
+    def check(self, l: LayerMeta):
+        if l.kind in ("conv", "deconv"):
+            k = l.attrs.get("kernel", 1)
+            if not (self.lo <= k <= self.hi):
+                return Violation(l.name, "kernel_size", f"kernel {k} outside [{self.lo},{self.hi}]")
+        return None
+
+
+@dataclasses.dataclass(frozen=True)
+class StaticShapesOnly:
+    def check(self, l: LayerMeta):
+        if l.attrs.get("dynamic_shape", False):
+            return Violation(l.name, "dynamic_shape", "dynamic tensor shapes unsupported")
+        return None
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupedDeconvUnsupported:
+    def check(self, l: LayerMeta):
+        if l.kind == "deconv" and l.attrs.get("groups", 1) != 1:
+            return Violation(l.name, "grouped_deconv", "grouped deconvolution unsupported")
+        return None
+
+
+@dataclasses.dataclass(frozen=True)
+class LaneAlignment:
+    """TPU MXU lane alignment: channel dims should be multiples of ``lanes``."""
+
+    lanes: int = 128
+
+    def check(self, l: LayerMeta):
+        if l.kind in COMPUTE_KINDS and len(l.out_shape) >= 1:
+            c = l.out_shape[-1]
+            if c >= self.lanes and c % self.lanes:
+                return Violation(
+                    l.name,
+                    "lane_alignment",
+                    f"channels {c} not a multiple of {self.lanes} lanes",
+                    severity="inefficient",
+                )
+        return None
+
+
+DLA_ANALOGUE_CONSTRAINTS = (
+    DtypeConstraint(),
+    DeconvPaddingZero(),
+    KernelSizeRange(1, 32),
+    StaticShapesOnly(),
+    GroupedDeconvUnsupported(),
+)
+
+TPU_SMALL_CONSTRAINTS = DLA_ANALOGUE_CONSTRAINTS + (LaneAlignment(128),)
+
+
+def check_graph(graph, engine):
+    """Per-layer violations for a graph on an engine.
+
+    Returns {layer_idx: [Violation, ...]} containing only layers with
+    >=1 "illegal" violation (inefficiencies are reported separately).
+    """
+    illegal, inefficient = {}, {}
+    for l in graph:
+        vs = engine.supports(l)
+        ill = [v for v in vs if v.severity == "illegal"]
+        ine = [v for v in vs if v.severity == "inefficient"]
+        if ill:
+            illegal[l.idx] = ill
+        if ine:
+            inefficient[l.idx] = ine
+    return illegal, inefficient

@@ -1,0 +1,101 @@
+"""Roofline cost model over layer graphs + engine specs.
+
+Per-layer time on an engine is the roofline max(flops/peak, bytes/bw);
+"inefficient" (but legal) layers pay a derate. Transfers between engines
+cost boundary_bytes / link_bw plus a fixed switch overhead — this is what
+makes fallback expensive and what the HaX-CoNN balance search trades off.
+
+The same estimates can be *profiled* instead of analytic: see
+``core.profiler`` which re-derives flops/bytes from XLA's
+``compiled.cost_analysis()`` per layer (the trtexec analogue).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .constraints import Violation
+from .graph import LayerGraph, LayerMeta
+
+SWITCH_OVERHEAD = 25e-6  # s; engine handoff latency (DeepStream/TensorRT-like)
+INEFFICIENT_DERATE = 0.5  # achieved fraction of engine flops on mis-aligned layers
+
+
+def layer_time(l: LayerMeta, engine) -> float:
+    flops = engine.flops
+    for v in engine.supports(l):
+        if v.severity == "inefficient":
+            flops = flops * INEFFICIENT_DERATE
+    t_c = l.flops / flops if flops else 0.0
+    t_m = l.bytes_accessed / engine.hbm_bw
+    return max(t_c, t_m)
+
+
+def transfer_time(nbytes: float, engine) -> float:
+    return nbytes / engine.link_bw + SWITCH_OVERHEAD
+
+
+def is_illegal(l: LayerMeta, engine) -> bool:
+    return any(v.severity == "illegal" for v in engine.supports(l))
+
+
+@dataclasses.dataclass
+class SegmentCost:
+    """Cost of running graph[lo:hi] 'assigned' to ``engine`` with illegal
+    layers falling back to ``peer`` (paper's Jetson semantics)."""
+
+    lo: int
+    hi: int
+    engine_busy: float  # time the assigned engine computes
+    peer_busy: float  # time stolen from the peer by fallback
+    transfer: float  # engine<->peer handoff time (incl. switch overhead)
+    n_fallback_runs: int
+    elapsed: float  # wall time of the segment (serialized fallback)
+
+    @property
+    def has_fallback(self):
+        return self.n_fallback_runs > 0
+
+
+def segment_cost(graph: LayerGraph, lo: int, hi: int, engine, peer, allow_fallback=True) -> SegmentCost:
+    engine_busy = peer_busy = transfer = 0.0
+    runs = 0
+    prev_illegal = False
+    for i in range(lo, hi):
+        l = graph[i]
+        ill = allow_fallback and is_illegal(l, engine)
+        if ill:
+            peer_busy += layer_time(l, peer)
+            if not prev_illegal:
+                runs += 1
+                # hand the activation to the peer...
+                prev_bytes = graph[i - 1].boundary_bytes if i > lo else l.boundary_bytes
+                transfer += transfer_time(prev_bytes, engine)
+        else:
+            engine_busy += layer_time(l, engine)
+            if prev_illegal:
+                # ...and back
+                transfer += transfer_time(graph[i - 1].boundary_bytes, engine)
+        prev_illegal = ill
+    if prev_illegal:
+        transfer += transfer_time(graph[hi - 1].boundary_bytes, engine)
+    return SegmentCost(
+        lo=lo,
+        hi=hi,
+        engine_busy=engine_busy,
+        peer_busy=peer_busy,
+        transfer=transfer,
+        n_fallback_runs=runs,
+        elapsed=engine_busy + peer_busy + transfer,
+    )
+
+
+def graph_time(graph: LayerGraph, engine, peer=None, allow_fallback=True) -> SegmentCost:
+    peer = peer or engine
+    return segment_cost(graph, 0, len(graph), engine, peer, allow_fallback=allow_fallback)
+
+
+def partition_boundary_bytes(graph: LayerGraph, p: int) -> float:
+    """Bytes crossing a partition placed after layer p-1."""
+    if p <= 0 or p >= len(graph):
+        return 0.0
+    return graph[p - 1].boundary_bytes

@@ -1,0 +1,95 @@
+"""Compute-engine abstraction.
+
+The paper schedules across the Jetson's GPU and DLA. On a TPU pod the
+same role is played by *disjoint submeshes* with different sizes and (to
+model the DLA's restricted op set) different capability constraints. The
+cost model and the HaX-CoNN scheduler consume only this abstraction, so
+the identical machinery drives:
+
+  * the faithful Jetson reproduction (calibrated GPU/DLA engine specs),
+  * TPU submesh co-serving (two models sharing one pod),
+  * and prefill/decode-style disaggregation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+# ---- hardware constants -------------------------------------------------------
+# TPU v5e (target hardware for the framework):
+TPU_V5E_BF16_FLOPS = 197e12  # per chip
+TPU_V5E_HBM_BW = 819e9  # bytes/s per chip
+TPU_V5E_ICI_BW = 50e9  # bytes/s per link (~4 links/chip on a 2D torus)
+
+# Jetson AGX Orin engine efficiencies, calibrated so that the cost model
+# lands on the paper's measured standalone throughputs (Table IV context:
+# Pix2Pix G is ~12.1 GFLOP/frame at 256x256; GPU ~172 FPS, balanced DLA
+# ~148 FPS). These are *effective* (achieved) rates, not peaks.
+JETSON_ORIN_GPU_FLOPS = 2.1e12
+JETSON_ORIN_GPU_BW = 204.8e9
+JETSON_ORIN_DLA_FLOPS = 1.85e12
+JETSON_ORIN_DLA_BW = 102.4e9
+JETSON_XFER_BW = 32e9  # engine<->engine via shared DRAM
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineSpec:
+    name: str
+    n_chips: int
+    peak_flops: float  # total achievable FLOP/s for the engine
+    hbm_bw: float  # total bytes/s
+    link_bw: float  # bytes/s to the peer engine
+    constraints: tuple[Any, ...] = ()
+    efficiency: float = 1.0  # multiplier on peak_flops (achievable utilization)
+
+    @property
+    def flops(self):
+        return self.peak_flops * self.efficiency
+
+    def supports(self, layer) -> list:
+        """Return the list of violated constraints for a layer (empty = legal)."""
+        out = []
+        for c in self.constraints:
+            v = c.check(layer)
+            if v is not None:
+                out.append(v)
+        return out
+
+
+def jetson_orin_engines(constraints_dla=(), constraints_gpu=()):
+    gpu = EngineSpec(
+        "GPU", 1, JETSON_ORIN_GPU_FLOPS, JETSON_ORIN_GPU_BW, JETSON_XFER_BW, tuple(constraints_gpu)
+    )
+    dla = EngineSpec(
+        "DLA", 1, JETSON_ORIN_DLA_FLOPS, JETSON_ORIN_DLA_BW, JETSON_XFER_BW, tuple(constraints_dla)
+    )
+    return gpu, dla
+
+
+def tpu_submesh_engines(
+    n_big: int = 192,
+    n_small: int = 64,
+    constraints_small=(),
+    efficiency: float = 0.6,
+):
+    """Split one 256-chip pod into a flexible 'GPU-analogue' submesh and a
+    constrained 'DLA-analogue' submesh for concurrent multi-model serving."""
+    big = EngineSpec(
+        "TPU-BIG",
+        n_big,
+        n_big * TPU_V5E_BF16_FLOPS,
+        n_big * TPU_V5E_HBM_BW,
+        TPU_V5E_ICI_BW * min(n_big, n_small),
+        (),
+        efficiency,
+    )
+    small = EngineSpec(
+        "TPU-SMALL",
+        n_small,
+        n_small * TPU_V5E_BF16_FLOPS,
+        n_small * TPU_V5E_HBM_BW,
+        TPU_V5E_ICI_BW * min(n_big, n_small),
+        tuple(constraints_small),
+        efficiency,
+    )
+    return big, small

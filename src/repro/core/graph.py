@@ -1,0 +1,137 @@
+"""Layer-graph representation consumed by the engine-constraint checker,
+the surgery pass, and the HaX-CoNN scheduler.
+
+A ``LayerGraph`` is a linear sequence of ``LayerMeta`` nodes (the paper
+schedules at layer-sequence granularity; skip connections are captured as
+extra tensor traffic on the node, which is what matters for transfer
+costing at partition points).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+
+@dataclasses.dataclass
+class LayerMeta:
+    idx: int
+    name: str
+    kind: str  # conv | deconv | crop | bn | act | pool | pad | concat | tanh | dropout | matmul | attn | moe | ssd | norm | embed | other
+    in_shape: tuple[int, ...]
+    out_shape: tuple[int, ...]
+    attrs: dict[str, Any] = dataclasses.field(default_factory=dict)
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    params: int = 0
+    # bytes that must move to the next layer if a partition is placed after
+    # this node (activation + any live skip tensors)
+    boundary_bytes: float = 0.0
+
+    def clone(self, **kw):
+        d = dataclasses.asdict(self)
+        d.update(kw)
+        return LayerMeta(**d)
+
+
+@dataclasses.dataclass
+class LayerGraph:
+    model_name: str
+    layers: list[LayerMeta]
+
+    def __len__(self):
+        return len(self.layers)
+
+    def __iter__(self):
+        return iter(self.layers)
+
+    def __getitem__(self, i):
+        return self.layers[i]
+
+    def total_flops(self):
+        return sum(l.flops for l in self.layers)
+
+    def total_bytes(self):
+        return sum(l.bytes_accessed for l in self.layers)
+
+    def total_params(self):
+        return sum(l.params for l in self.layers)
+
+    def renumber(self):
+        for i, l in enumerate(self.layers):
+            l.idx = i
+        return self
+
+
+def _size(shape):
+    return math.prod(shape)
+
+
+def conv_meta(
+    idx,
+    name,
+    B,
+    h_in,
+    w_in,
+    c_in,
+    c_out,
+    kernel,
+    stride,
+    padding,
+    dtype_bytes=2,
+    transposed=False,
+    groups=1,
+):
+    """LayerMeta for a (transposed) convolution with analytic flops/bytes."""
+    if transposed:
+        h_out = stride * (h_in - 1) + kernel - 2 * padding
+        w_out = stride * (w_in - 1) + kernel - 2 * padding
+        flops = 2.0 * B * h_in * w_in * c_in * kernel * kernel * c_out / groups
+    else:
+        h_out = (h_in + 2 * padding - kernel) // stride + 1
+        w_out = (w_in + 2 * padding - kernel) // stride + 1
+        flops = 2.0 * B * h_out * w_out * c_out * kernel * kernel * c_in / groups
+    params = kernel * kernel * (c_in // groups) * c_out + c_out
+    in_shape = (B, h_in, w_in, c_in)
+    out_shape = (B, h_out, w_out, c_out)
+    bytes_accessed = dtype_bytes * (_size(in_shape) + _size(out_shape)) + 4 * params
+    return LayerMeta(
+        idx=idx,
+        name=name,
+        kind="deconv" if transposed else "conv",
+        in_shape=in_shape,
+        out_shape=out_shape,
+        attrs={"kernel": kernel, "stride": stride, "padding": padding, "groups": groups},
+        flops=flops,
+        bytes_accessed=bytes_accessed,
+        params=params,
+        boundary_bytes=dtype_bytes * _size(out_shape),
+    )
+
+
+def pointwise_meta(idx, name, kind, shape, dtype_bytes=2, flops_per_elem=1.0, params=0):
+    n = _size(shape)
+    return LayerMeta(
+        idx=idx,
+        name=name,
+        kind=kind,
+        in_shape=shape,
+        out_shape=shape,
+        flops=flops_per_elem * n,
+        bytes_accessed=dtype_bytes * 2 * n + 4 * params,
+        params=params,
+        boundary_bytes=dtype_bytes * n,
+    )
+
+
+def reshape_meta(idx, name, kind, in_shape, out_shape, dtype_bytes=2):
+    return LayerMeta(
+        idx=idx,
+        name=name,
+        kind=kind,
+        in_shape=in_shape,
+        out_shape=out_shape,
+        flops=0.0,
+        bytes_accessed=dtype_bytes * (_size(in_shape) + _size(out_shape)),
+        boundary_bytes=dtype_bytes * _size(out_shape),
+    )

@@ -1,0 +1,66 @@
+"""Per-layer dry-run profiler — the trtexec analogue.
+
+Re-derives ``LayerMeta.flops`` / ``bytes_accessed`` from XLA's
+``compiled.cost_analysis()`` by lowering each compute layer individually
+on ShapeDtypeStructs (no allocation). The scheduler can then run against
+*compiler-measured* costs instead of analytic estimates.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .graph import LayerGraph
+
+
+@functools.lru_cache(maxsize=512)
+def _conv_cost(in_shape, kernel, stride, padding, c_out, transposed, dtype_str):
+    dtype = jnp.dtype(dtype_str)
+    x = jax.ShapeDtypeStruct(in_shape, dtype)
+    w = jax.ShapeDtypeStruct((kernel, kernel, in_shape[-1], c_out), dtype)
+
+    if transposed:
+
+        def f(x, w):
+            y = jax.lax.conv_transpose(
+                x, w, strides=(stride, stride), padding="VALID", dimension_numbers=("NHWC", "HWIO", "NHWC")
+            )
+            if padding:
+                y = y[:, padding:-padding, padding:-padding, :]
+            return y
+
+    else:
+
+        def f(x, w):
+            pad = [(padding, padding), (padding, padding)] if padding else "VALID"
+            return jax.lax.conv_general_dilated(
+                x, w, (stride, stride), pad, dimension_numbers=("NHWC", "HWIO", "NHWC")
+            )
+
+    compiled = jax.jit(f).lower(x, w).compile()
+    ca = compiled.cost_analysis() or {}
+    return float(ca.get("flops", 0.0)), float(ca.get("bytes accessed", 0.0))
+
+
+def profile_graph(graph: LayerGraph, dtype=jnp.bfloat16) -> LayerGraph:
+    """Return a copy of ``graph`` with XLA-measured flops/bytes on conv and
+    deconv layers (other kinds keep analytic estimates)."""
+    out = []
+    for l in graph:
+        if l.kind in ("conv", "deconv"):
+            flops, bytes_ = _conv_cost(
+                tuple(l.in_shape),
+                l.attrs.get("kernel", 1),
+                l.attrs.get("stride", 1),
+                l.attrs.get("padding", 0),
+                l.out_shape[-1],
+                l.kind == "deconv",
+                jnp.dtype(dtype).name,
+            )
+            nl = l.clone(flops=flops or l.flops, bytes_accessed=bytes_ or l.bytes_accessed)
+        else:
+            nl = l.clone()
+        out.append(nl)
+    return LayerGraph(graph.model_name + "[profiled]", out).renumber()

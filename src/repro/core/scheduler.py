@@ -1,0 +1,249 @@
+"""Multi-model multi-engine schedules (the paper's §IV + §VI).
+
+Three scheduling modes, exactly as evaluated by the paper:
+
+* ``standalone``      — one model on one engine, illegal layers falling
+                        back to the peer (Fig. 8/9/10).
+* ``naive``           — model A whole on the constrained engine, model B
+                        whole on the flexible engine (client-server
+                        scheme, Fig. 11/12).
+* ``haxconn``         — HaX-CoNN-style swap schedule: each model is split
+                        at one partition point; the two instances run
+                        counter-phased across both engines so busy times
+                        balance (Tables III–VI). The two partition points
+                        are found by exact search over all O(L_A * L_B)
+                        candidates against the roofline cost model — the
+                        two-engine specialization of HaX-CoNN's SAT
+                        formulation, solved optimally.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from .cost_model import (
+    SegmentCost,
+    graph_time,
+    partition_boundary_bytes,
+    segment_cost,
+    transfer_time,
+)
+from .graph import LayerGraph
+
+
+@dataclasses.dataclass
+class EngineLoad:
+    busy: float = 0.0  # productive compute time per cycle
+    stall: float = 0.0  # waiting on peer fallback / transfers
+
+    @property
+    def fps(self):
+        total = self.busy + self.stall
+        return 1.0 / total if total > 0 else math.inf
+
+
+@dataclasses.dataclass
+class Schedule:
+    kind: str
+    models: tuple[str, ...]
+    engines: tuple[str, ...]
+    cycle_time: float  # steady-state seconds per frame (per model instance)
+    loads: dict[str, EngineLoad]
+    partitions: dict[str, tuple[int, int]] | None = None  # model -> (to_peer, back)
+    notes: list[str] = dataclasses.field(default_factory=list)
+    segments: list[tuple] = dataclasses.field(default_factory=list)  # (engine, label, dur)
+
+    @property
+    def aggregate_fps(self):
+        return len(self.models) / self.cycle_time if self.cycle_time > 0 else math.inf
+
+    def engine_fps(self, name):
+        return self.loads[name].fps
+
+    def idle_fraction(self, name):
+        l = self.loads[name]
+        return 1.0 - l.busy / self.cycle_time if self.cycle_time else 0.0
+
+    def ascii_timeline(self, width: int = 72) -> str:
+        """Nsight-style textual timing diagram of one steady-state cycle."""
+        lines = [f"cycle = {self.cycle_time*1e3:.2f} ms  ({self.aggregate_fps:.1f} FPS aggregate)"]
+        scale = width / self.cycle_time if self.cycle_time else 0
+        for eng in self.engines:
+            segs = [(lbl, dur) for e, lbl, dur in self.segments if e == eng]
+            bar, legend = "", []
+            for lbl, dur in segs:
+                n = max(1, int(dur * scale))
+                ch = lbl[0].upper()
+                bar += ch * n
+                legend.append(f"{lbl}={dur*1e3:.2f}ms")
+            bar = bar[:width].ljust(width, ".")
+            lines.append(f"{eng:>9} |{bar}|")
+            lines.append(f"{'':>9}  {' '.join(legend)}")
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# standalone (Fig. 8/9/10)
+# ---------------------------------------------------------------------------
+
+
+def standalone_schedule(graph: LayerGraph, engine, peer, allow_fallback=True) -> Schedule:
+    c = graph_time(graph, engine, peer, allow_fallback=allow_fallback)
+    loads = {
+        engine.name: EngineLoad(busy=c.engine_busy, stall=c.peer_busy + c.transfer),
+        peer.name: EngineLoad(busy=c.peer_busy, stall=0.0),
+    }
+    segs = [(engine.name, "compute", c.engine_busy)]
+    if c.peer_busy:
+        segs += [(engine.name, "stall", c.peer_busy + c.transfer), (peer.name, "fallback", c.peer_busy)]
+    sched = Schedule(
+        kind="standalone",
+        models=(graph.model_name,),
+        engines=(engine.name, peer.name),
+        cycle_time=c.elapsed,
+        loads=loads,
+        segments=segs,
+        notes=[f"fallback_runs={c.n_fallback_runs}"],
+    )
+    return sched
+
+
+def peer_utilization(graph: LayerGraph, engine, peer) -> float:
+    """Fraction of the frame time the *peer* is busy serving fallbacks —
+    the paper's Fig. 10 'GPU utilization of the DLA-assigned model'."""
+    c = graph_time(graph, engine, peer)
+    return c.peer_busy / c.elapsed if c.elapsed else 0.0
+
+
+# ---------------------------------------------------------------------------
+# naive concurrent (client-server scheme, Fig. 11/12)
+# ---------------------------------------------------------------------------
+
+
+def naive_schedule(graph_a: LayerGraph, graph_b: LayerGraph, constrained, flexible) -> Schedule:
+    """A runs whole on the constrained engine (DLA), B whole on the flexible
+    one (GPU). A's fallbacks preempt the GPU and stretch both periods."""
+    ca = graph_time(graph_a, constrained, flexible)
+    tb = graph_time(graph_b, flexible, flexible, allow_fallback=False).engine_busy
+    # GPU serves B plus A's fallback work each A-frame; A-frames take at
+    # least ca.elapsed, so the steady-state GPU period per B frame:
+    gpu_period = tb + ca.peer_busy * min(1.0, (tb + ca.peer_busy) / max(ca.elapsed, 1e-12))
+    dla_period = max(ca.elapsed, 0.0)
+    loads = {
+        flexible.name: EngineLoad(busy=tb, stall=gpu_period - tb),
+        constrained.name: EngineLoad(busy=ca.engine_busy, stall=dla_period - ca.engine_busy),
+    }
+    return Schedule(
+        kind="naive",
+        models=(graph_a.model_name, graph_b.model_name),
+        engines=(constrained.name, flexible.name),
+        cycle_time=max(gpu_period, dla_period),
+        loads=loads,
+        segments=[
+            (constrained.name, "a_compute", ca.engine_busy),
+            (constrained.name, "stall", ca.peer_busy + ca.transfer),
+            (flexible.name, "b_compute", tb),
+            (flexible.name, "fallback", ca.peer_busy),
+        ],
+        notes=[f"A fallback runs={ca.n_fallback_runs}"],
+    )
+
+
+# ---------------------------------------------------------------------------
+# HaX-CoNN swap schedule (Tables III-VI)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class HaxConnResult:
+    schedule: Schedule
+    p_a: int  # A: [0, p_a) on constrained engine, [p_a, L) on flexible
+    p_b: int  # B: [0, p_b) on flexible engine,  [p_b, L) on constrained
+    phase: dict[str, float]
+
+
+def _candidate_points(graph: LayerGraph, stride: int = 1):
+    return list(range(1, len(graph), stride))
+
+
+def _evaluate_pair(graph_a, graph_b, pa, pb, constrained, flexible, allow_fallback):
+    la, lb = len(graph_a), len(graph_b)
+    ca1 = segment_cost(graph_a, 0, pa, constrained, flexible, allow_fallback)
+    ca2 = segment_cost(graph_a, pa, la, flexible, flexible, False)
+    xa = transfer_time(partition_boundary_bytes(graph_a, pa), constrained)
+    cb1 = segment_cost(graph_b, 0, pb, flexible, flexible, False)
+    cb2 = segment_cost(graph_b, pb, lb, constrained, flexible, allow_fallback)
+    xb = transfer_time(partition_boundary_bytes(graph_b, pb), flexible)
+    t_con = ca1.elapsed + cb2.elapsed + xa + xb
+    t_flex = cb1.elapsed + ca2.elapsed + ca1.peer_busy + cb2.peer_busy
+    return ca1, ca2, cb1, cb2, xa, xb, t_con, t_flex
+
+
+def haxconn_schedule(
+    graph_a: LayerGraph,
+    graph_b: LayerGraph,
+    constrained,
+    flexible,
+    allow_fallback: bool = True,
+    stride: int = 1,
+    fixed: tuple[int, int] | None = None,
+) -> HaxConnResult:
+    """Exact search for the partition pair minimizing steady-state cycle time
+    (or evaluation at a caller-``fixed`` (pa, pb) — e.g. the paper's
+    Table III/V points).
+
+    Steady state (double buffered): per cycle the constrained engine runs
+    A[0:pa) of frame t and B[pb:) of frame t-1; the flexible engine runs
+    B[0:pb) of frame t and A[pa:) of frame t-1. Cycle = max(engine periods)
+    + partition transfers. Fallback inside a constrained segment steals
+    flexible-engine time and stalls the constrained engine (original,
+    non-surgered models) — exactly why the paper's hardware-aware variants
+    double DLA throughput here.
+    """
+    best = None
+    la, lb = len(graph_a), len(graph_b)
+    cand_a = [fixed[0]] if fixed else _candidate_points(graph_a, stride)
+    cand_b = [fixed[1]] if fixed else _candidate_points(graph_b, stride)
+    for pa in cand_a:
+        for pb in cand_b:
+            ca1, ca2, cb1, cb2, xa, xb, t_con, t_flex = _evaluate_pair(
+                graph_a, graph_b, pa, pb, constrained, flexible, allow_fallback
+            )
+            cycle = max(t_con, t_flex)
+            idle = abs(t_con - t_flex)
+            key = (cycle, idle)
+            if best is None or key < best[0]:
+                best = (key, pa, pb, ca1, ca2, cb1, cb2, xa, xb, t_con, t_flex)
+    (_, pa, pb, ca1, ca2, cb1, cb2, xa, xb, t_con, t_flex) = best
+    cycle = max(t_con, t_flex)
+    loads = {
+        constrained.name: EngineLoad(
+            busy=ca1.engine_busy + cb2.engine_busy, stall=cycle - (ca1.engine_busy + cb2.engine_busy)
+        ),
+        flexible.name: EngineLoad(
+            busy=cb1.engine_busy + ca2.engine_busy + ca1.peer_busy + cb2.peer_busy,
+            stall=cycle - (cb1.engine_busy + ca2.engine_busy + ca1.peer_busy + cb2.peer_busy),
+        ),
+    }
+    sched = Schedule(
+        kind="haxconn",
+        models=(graph_a.model_name, graph_b.model_name),
+        engines=(constrained.name, flexible.name),
+        cycle_time=cycle,
+        loads=loads,
+        partitions={graph_a.model_name: (pa, la), graph_b.model_name: (pb, lb)},
+        segments=[
+            (constrained.name, "a1", ca1.elapsed),
+            (constrained.name, "xfer", xa + xb),
+            (constrained.name, "b2", cb2.elapsed),
+            (flexible.name, "b1", cb1.elapsed),
+            (flexible.name, "a2", ca2.elapsed),
+            (flexible.name, "fallback", ca1.peer_busy + cb2.peer_busy),
+        ],
+        notes=[
+            f"A: constrained[0:{pa}) flexible[{pa}:{la})",
+            f"B: flexible[0:{pb}) constrained[{pb}:{lb})",
+            f"fallback_runs={ca1.n_fallback_runs + cb2.n_fallback_runs}",
+        ],
+    )
+    return HaxConnResult(sched, pa, pb, {"constrained": t_con, "flexible": t_flex})

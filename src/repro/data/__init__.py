@@ -1,0 +1,9 @@
+from .synthetic import (
+    PhantomConfig,
+    detection_batches,
+    grid_targets,
+    make_phantom_pair,
+    phantom_batches,
+    token_batches,
+)
+from .loader import FailingIterator, Prefetcher, shard_batch

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for flash attention: GQA + causal + sliding window +
+logit softcap (the gemma2/hymba/phi4 attention flavours)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.3819763e38
+
+
+def attention_ref(q, k, v, causal=True, window=0, softcap=None, scale=None):
+    """q: (B, Sq, Hq, D); k/v: (B, Sk, Hk, D); Hq % Hk == 0.
+
+    window > 0 limits attention to the last ``window`` keys (inclusive of
+    self). Returns (B, Sq, Hq, D)."""
+    B, Sq, Hq, D = q.shape
+    Sk, Hk = k.shape[1], k.shape[2]
+    G = Hq // Hk
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(D).astype(jnp.float32)
+    qg = q.reshape(B, Sq, Hk, G, D)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32) * scale
+    if softcap:
+        scores = softcap * jnp.tanh(scores / softcap)
+    qpos = jnp.arange(Sq)[:, None] + (Sk - Sq)  # align ends (prefill/full)
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window and window > 0:
+        mask &= (qpos - kpos) < window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v)
+    return out.reshape(B, Sq, Hq, D)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the hardware-aware transposed convolution.
+
+Torch semantics: out = stride*(in-1) + k - 2*padding, implemented as a
+VALID transposed conv followed by a border crop — the exact op pair the
+paper substitutes for the DLA-illegal fused deconv (eq. 5+7 == eq. 6).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+DN = ("NHWC", "HWIO", "NHWC")
+
+
+def deconv2d_ref(x, w, b=None, stride: int = 2, padding: int = 1):
+    """x: (B, H, W, Cin); w: (kh, kw, Cin, Cout); torch-style ``padding``."""
+    y = jax.lax.conv_transpose(
+        x, w.astype(x.dtype), strides=(stride, stride), padding="VALID", dimension_numbers=DN
+    )
+    if padding:
+        y = y[:, padding:-padding, padding:-padding, :]
+    if b is not None:
+        y = y + b.astype(x.dtype)
+    return y

@@ -1,0 +1,3 @@
+"""Oracle for the SSD kernel: the chunked pure-jnp implementation in
+repro.nn.ssm (itself verified against the naive recurrence in tests)."""
+from repro.nn.ssm import ssd_chunked as ssd_ref  # noqa: F401

@@ -1,0 +1,1 @@
+from .mesh import make_host_mesh, make_production_mesh

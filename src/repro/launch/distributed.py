@@ -1,0 +1,24 @@
+"""Multi-host initialization + env-driven config.
+
+On a real pod slice each host runs the same program; JAX discovers its
+local devices and the coordinator wires the global mesh. We honor both
+explicit flags and the standard env vars (COORDINATOR_ADDRESS, NPROC,
+PROCESS_ID) so the same entrypoint works under SLURM/GKE/manual launch.
+"""
+from __future__ import annotations
+
+import os
+
+
+def maybe_initialize_distributed(coordinator=None, num_processes=None, process_id=None):
+    coordinator = coordinator or os.environ.get("COORDINATOR_ADDRESS")
+    if not coordinator:
+        return False
+    import jax
+
+    jax.distributed.initialize(
+        coordinator_address=coordinator,
+        num_processes=int(num_processes or os.environ["NPROC"]),
+        process_id=int(process_id or os.environ["PROCESS_ID"]),
+    )
+    return True

@@ -1,0 +1,135 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# isort: split  — the two lines above MUST run before any jax import.
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes and extract roofline terms.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2_2b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multipod] [--single]
+
+Artifacts: experiments/dryrun/<arch>__<shape>__<mesh>.json (+ aggregated
+table printed at the end). Compile failures (sharding mismatch, OOM,
+unsupported collective) are bugs and reported as such.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from ..configs import ARCH_IDS, SHAPES, get_arch
+from .mesh import make_production_mesh
+from .analytic import analytic_bytes, analytic_flops
+from .roofline import analyze
+from .specs import build_cell
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool, verbose: bool = True) -> dict:
+    spec = get_arch(arch_name)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    if shape_name in spec.skip_shapes:
+        reason = (spec.skip_reasons or {}).get(shape_name, "skipped per assignment")
+        return {"arch": spec.name, "shape": shape_name, "mesh": mesh_name, "status": "skip", "reason": reason}
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cell = build_cell(spec, shape_name, mesh)
+    try:
+        with jax.set_mesh(mesh):
+            jitted = jax.jit(
+                cell.fn,
+                in_shardings=cell.in_shardings,
+                donate_argnums=cell.donate_argnums,
+            )
+            lowered = jitted.lower(*cell.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        rf = analyze(
+            spec.name,
+            shape_name,
+            mesh_name,
+            mesh.size,
+            compiled,
+            cell.model_flops,
+            analytic_flops(spec, shape_name),
+            analytic_bytes(spec, shape_name, mesh.size),
+        )
+        row = rf.row()
+        row.update(
+            {
+                "status": "ok",
+                "kind": cell.kind,
+                "t_lower_s": round(t_lower, 2),
+                "t_compile_s": round(t_compile, 2),
+            }
+        )
+        if verbose:
+            mem = row["memory_per_device"]["total"] / 2**30
+            print(
+                f"[dryrun] {spec.name:>22} {shape_name:<12} {mesh_name:<8} OK "
+                f"comp={rf.t_compute*1e3:.2f}ms mem={rf.t_memory*1e3:.2f}ms "
+                f"coll={rf.t_collective*1e3:.2f}ms bneck={rf.bottleneck:<10} "
+                f"useful={rf.useful_flops_ratio:.2f} mem/dev={mem:.2f}GiB "
+                f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)",
+                flush=True,
+            )
+        return row
+    except Exception as e:
+        if verbose:
+            print(f"[dryrun] {spec.name:>22} {shape_name:<12} {mesh_name:<8} FAIL {e}", flush=True)
+        return {
+            "arch": spec.name,
+            "shape": shape_name,
+            "mesh": mesh_name,
+            "status": "fail",
+            "error": f"{type(e).__name__}: {e}",
+            "trace": traceback.format_exc()[-4000:],
+        }
+
+
+def save_row(row: dict):
+    os.makedirs(ART_DIR, exist_ok=True)
+    path = os.path.join(ART_DIR, f"{row['arch']}__{row['shape']}__{row['mesh']}.json")
+    with open(path, "w") as f:
+        json.dump(row, f, indent=1, default=str)
+    return path
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multipod", action="store_true", help="2x16x16 mesh (512 chips)")
+    ap.add_argument("--both-meshes", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.all or not args.arch else (args.arch,)
+    shapes = tuple(SHAPES) if args.all or not args.shape else (args.shape,)
+    meshes = (False, True) if args.both_meshes else (args.multipod,)
+
+    rows = []
+    for mp in meshes:
+        for a in archs:
+            for s in shapes:
+                row = run_cell(a, s, mp)
+                save_row(row)
+                rows.append(row)
+    n_ok = sum(r["status"] == "ok" for r in rows)
+    n_skip = sum(r["status"] == "skip" for r in rows)
+    n_fail = sum(r["status"] == "fail" for r in rows)
+    print(f"\n[dryrun] done: {n_ok} ok, {n_skip} skip, {n_fail} fail / {len(rows)} cells")
+    if n_fail:
+        for r in rows:
+            if r["status"] == "fail":
+                print(f"  FAIL {r['arch']} {r['shape']} {r['mesh']}: {r['error']}")
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,192 @@
+"""Dry-run cell builder: (arch x shape x mesh) -> jit-ready function,
+abstract inputs (ShapeDtypeStructs — nothing allocated), and shardings.
+
+Conventions:
+  train   -> full train_step(params fp32, opt_state, batch) incl. AdamW
+  prefill -> prefill(params, tokens) returning (logits, caches)
+  decode  -> decode_step(params, token, caches, t) with a max_len=seq KV
+             cache; batch=1 cells shard the KV sequence dim (SP).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import SHAPES, ArchSpec, build_model
+from ..dist.sharding import (
+    batch_sharding,
+    cache_shardings,
+    default_rules,
+    tree_shardings_shaped,
+)
+from ..train.optimizer import AdamW, warmup_cosine
+from ..train.steps import make_lm_train_step
+
+N_IMG_PATCHES = 1024  # VLM stub: patches per sequence
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str
+    fn: Callable
+    args: tuple
+    in_shardings: tuple
+    donate_argnums: tuple
+    model_flops: float
+    n_chips: int
+    flops_scale: float = 1.0  # cost_analysis counts scan bodies once
+
+
+def model_flops_estimate(spec: ArchSpec, shape_name: str) -> float:
+    cfg = spec.config
+    sh = SHAPES[shape_name]
+    n_active = cfg.n_active_params()
+    if sh["kind"] == "train":
+        tokens = sh["seq_len"] * sh["global_batch"]
+        return 6.0 * n_active * tokens
+    if sh["kind"] == "prefill":
+        tokens = sh["seq_len"] * sh["global_batch"]
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * sh["global_batch"]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_cell(
+    spec: ArchSpec,
+    shape_name: str,
+    mesh,
+    fsdp: bool | None = None,  # None -> the arch's TRAIN_FSDP default
+    n_micro: int | None = None,
+    bf16_params: bool = False,  # bf16 params + fp32 master in opt state
+) -> Cell:
+    cfg = spec.config
+    sh = SHAPES[shape_name]
+    kind = sh["kind"]
+    B, S = sh["global_batch"], sh["seq_len"]
+    # FSDP weight sharding only helps when optimizer state exists; for
+    # serving it makes GSPMD go weight-stationary and all-gather the full
+    # batch (measured 3x18GiB on 27b prefill). Serve cells use pure TP.
+    if fsdp is None:
+        fsdp = spec.train_fsdp
+    rules = default_rules(fsdp=fsdp and kind == "train", mesh_axes=mesh.axis_names)
+    if n_micro is None:
+        n_micro = spec.train_micro
+    if kind == "train" and hasattr(cfg, "act_spec"):
+        import dataclasses as _dc
+
+        cfg = _dc.replace(cfg, act_spec=tuple(rules["batch"]))
+    # per-microbatch size must stay divisible by the DP extent
+    dp = 1
+    for ax in rules["batch"]:
+        dp *= mesh.shape[ax]
+    while n_micro > 1 and (B // n_micro) % dp:
+        n_micro //= 2
+    model = build_model(cfg)
+    n_chips = mesh.size
+
+    train_dtype = jnp.bfloat16 if bf16_params else jnp.float32
+    abstract_params = model.abstract(train_dtype if kind == "train" else jnp.bfloat16)
+    param_sh = tree_shardings_shaped(mesh, model.axes(), abstract_params, rules)
+    rep = NamedSharding(mesh, P())
+    # train batches spread over every chip (FSDP-style DP); serving batches
+    # over the DP axes only (the model axis carries TP for serving).
+    bsh = batch_sharding(mesh, B, rules, key="batch")
+    seq_sharded = B == 1
+
+    mf = model_flops_estimate(spec, shape_name)
+
+    if kind == "train":
+        opt = AdamW(lr=warmup_cosine(3e-4, 100, 10000), weight_decay=0.01, master_weights=bf16_params)
+        step = make_lm_train_step(model, opt, n_micro=n_micro)
+        opt_state = opt.abstract_state(abstract_params)
+        opt_sh = {"m": param_sh, "v": param_sh, "step": rep}
+        if bf16_params:
+            opt_sh["master"] = param_sh
+        batch, batch_sh = _train_batch(spec, B, S, bsh, rep)
+        return Cell(
+            arch=spec.name,
+            shape=shape_name,
+            kind=kind,
+            fn=step,
+            args=(abstract_params, opt_state, batch),
+            in_shardings=(param_sh, opt_sh, batch_sh),
+            donate_argnums=(0, 1),
+            model_flops=mf,
+            n_chips=n_chips,
+            flops_scale=float(n_micro),
+        )
+
+    if kind == "prefill":
+        if spec.family == "whisper":
+            fn = lambda p, frames, tokens: model.prefill(p, frames, tokens)
+            args = (
+                abstract_params,
+                _sds((B, cfg.n_frames, cfg.d_model), jnp.bfloat16),
+                _sds((B, S), jnp.int32),
+            )
+            in_sh = (param_sh, bsh, bsh)
+        else:
+            fn = lambda p, tokens: model.prefill(p, tokens)
+            args = (abstract_params, _sds((B, S), jnp.int32))
+            in_sh = (param_sh, bsh)
+        return Cell(
+            arch=spec.name,
+            shape=shape_name,
+            kind=kind,
+            fn=fn,
+            args=args,
+            in_shardings=in_sh,
+            donate_argnums=(),
+            model_flops=mf,
+            n_chips=n_chips,
+        )
+
+    # decode
+    caches = model.init_caches(B, S, dtype=jnp.bfloat16, abstract=True)
+    cache_sh = cache_shardings(mesh, caches, rules, seq_sharded=seq_sharded)
+    fn = lambda p, token, caches, t: model.decode_step(p, token, caches, t)
+    args = (abstract_params, _sds((B, 1), jnp.int32), caches, _sds((), jnp.int32))
+    in_sh = (param_sh, bsh, cache_sh, rep)
+    return Cell(
+        arch=spec.name,
+        shape=shape_name,
+        kind=kind,
+        fn=fn,
+        args=args,
+        in_shardings=in_sh,
+        donate_argnums=(2,),
+        model_flops=mf,
+        n_chips=n_chips,
+    )
+
+
+def _train_batch(spec: ArchSpec, B, S, bsh, rep):
+    cfg = spec.config
+    if spec.family == "whisper":
+        batch = {
+            "frames": _sds((B, cfg.n_frames, cfg.d_model), jnp.bfloat16),
+            "tokens": _sds((B, S), jnp.int32),
+            "labels": _sds((B, S), jnp.int32),
+        }
+        sh = {"frames": bsh, "tokens": bsh, "labels": bsh}
+        return batch, sh
+    batch = {"tokens": _sds((B, S), jnp.int32), "labels": _sds((B, S), jnp.int32)}
+    sh = {"tokens": bsh, "labels": bsh}
+    if getattr(cfg, "mrope_sections", None):
+        batch["positions"] = _sds((B, S, 3), jnp.int32)
+        batch["extra_embeds"] = _sds((B, N_IMG_PATCHES, cfg.d_model), jnp.bfloat16)
+        batch["embed_positions"] = _sds((B, N_IMG_PATCHES), jnp.int32)
+        sh["positions"] = bsh
+        sh["extra_embeds"] = bsh
+        sh["embed_positions"] = bsh
+    return batch, sh

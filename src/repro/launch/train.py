@@ -1,0 +1,90 @@
+"""Production training entrypoint.
+
+Single host (this container):
+  PYTHONPATH=src python -m repro.launch.train --arch gemma2_2b --smoke --steps 100
+
+Multi-host (one invocation per host; see launch/distributed.py):
+  python -m repro.launch.train --arch gemma2_27b --coordinator $ADDR \
+      --num-processes $N --process-id $I --multipod
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_arch, build_model
+from ..data import Prefetcher, token_batches
+from ..dist.sharding import batch_sharding, default_rules, tree_shardings_shaped
+from ..train import LoopConfig, run_train_loop
+from ..train.optimizer import AdamW, warmup_cosine
+from ..train.steps import make_lm_train_step
+from .distributed import maybe_initialize_distributed
+from .mesh import make_host_mesh, make_production_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2_2b")
+    ap.add_argument("--smoke", action="store_true", help="use the reduced config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--n-micro", type=int, default=1)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=200)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--coordinator", default=None)
+    ap.add_argument("--num-processes", type=int, default=None)
+    ap.add_argument("--process-id", type=int, default=None)
+    args = ap.parse_args()
+
+    maybe_initialize_distributed(args.coordinator, args.num_processes, args.process_id)
+
+    spec = get_arch(args.arch)
+    cfg = spec.smoke if args.smoke else spec.config
+    cfg = dataclasses.replace(cfg, act_dtype=jnp.float32 if args.smoke else jnp.bfloat16)
+    model = build_model(cfg)
+    mesh = (
+        make_production_mesh(multi_pod=args.multipod)
+        if args.production_mesh
+        else make_host_mesh(args.model_parallel)
+    )
+    rules = default_rules(True, mesh.axis_names)
+
+    params = model.init(jax.random.key(0))
+    opt = AdamW(lr=warmup_cosine(args.lr, 50, args.steps), weight_decay=0.01)
+    opt_state = opt.init(params)
+    step = make_lm_train_step(model, opt, n_micro=args.n_micro)
+
+    abstract = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
+    psh = tree_shardings_shaped(mesh, model.axes(), abstract, rules)
+    osh = {"m": psh, "v": psh, "step": jax.NamedSharding(mesh, jax.sharding.PartitionSpec())}
+    bsh = batch_sharding(mesh, args.batch, rules)
+    with jax.set_mesh(mesh):
+        params = jax.device_put(params, psh)
+        opt_state = jax.device_put(opt_state, osh)
+        jstep = jax.jit(step, in_shardings=(psh, osh, {"tokens": bsh, "labels": bsh}), donate_argnums=(0, 1))
+
+        data = Prefetcher(
+            token_batches(args.batch, args.seq, cfg.vocab, seed=jax.process_index()),
+            transform=lambda b: {k: jax.device_put(jnp.asarray(v), bsh) for k, v in b.items()},
+        )
+        out = run_train_loop(
+            jstep,
+            params,
+            opt_state,
+            data,
+            LoopConfig(args.steps, args.ckpt_dir, ckpt_every=args.ckpt_every, log_every=20),
+            shardings={"params": psh, "opt_state": osh},
+        )
+    print(f"[train] finished at step {out.step}; stragglers={len(out.straggler_events)}")
+
+
+if __name__ == "__main__":
+    main()

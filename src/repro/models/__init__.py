@@ -1,0 +1,6 @@
+from .lm import LMConfig, TransformerLM
+from .mamba2 import Mamba2Config, Mamba2LM
+from .hymba import HymbaConfig, HymbaLM
+from .whisper import WhisperConfig, WhisperModel
+from .pix2pix import Pix2Pix, Pix2PixConfig, Pix2PixGenerator, Pix2PixDiscriminator
+from .yolov8 import YOLOv8, YOLOv8Config

@@ -1,0 +1,221 @@
+"""Hymba: hybrid-head architecture — parallel attention + Mamba(SSD) heads in
+every layer (arXiv:2411.13676). Most layers use sliding-window attention;
+a few (first/middle/last) are global. Attention and SSM branches run in
+parallel on the same input and are fused by normalized averaging.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..nn import MLP, Attention, Embedding, Mamba2Block, Module, RMSNorm, Stacked
+
+
+@dataclasses.dataclass(frozen=True)
+class HymbaConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_q: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    ssm_state: int = 16
+    head_dim: int = 64
+    local_window: int = 1024
+    global_layers: tuple[int, ...] = (0, 15, 31)
+    expand: int = 2
+    ssm_head_dim: int = 64
+    n_groups: int = 1
+    d_conv: int = 4
+    chunk: int = 128
+    rope_base: float = 10000.0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = True
+    act_dtype: Any = jnp.bfloat16
+    attn_chunk: int = 1024
+    remat: bool = True
+    act_spec: Any = None
+
+    def windows(self):
+        return tuple(0 if i in self.global_layers else self.local_window for i in range(self.n_layers))
+
+    def attn(self):
+        return Attention(self.d_model, self.n_q, self.n_kv, self.head_dim,
+                         rope_base=self.rope_base, attn_chunk=self.attn_chunk)
+
+    def mamba(self):
+        return Mamba2Block(
+            self.d_model,
+            d_state=self.ssm_state,
+            d_conv=self.d_conv,
+            expand=self.expand,
+            head_dim=self.ssm_head_dim,
+            n_groups=self.n_groups,
+            chunk=self.chunk,
+        )
+
+    def n_params(self):
+        d = self.d_model
+        attn = d * self.head_dim * (self.n_q + 2 * self.n_kv) + self.n_q * self.head_dim * d
+        b = self.mamba()
+        d_in_proj = 2 * b.d_inner + 2 * b.n_groups * b.d_state + b.n_heads
+        mamba = d * d_in_proj + b.d_conv * b.conv_dim + b.conv_dim + 3 * b.n_heads + b.d_inner + b.d_inner * d
+        mlp = 3 * d * self.d_ff
+        per_layer = attn + mamba + mlp + 4 * d
+        return self.vocab * d + self.n_layers * per_layer + d
+
+    def n_active_params(self):
+        return self.n_params()
+
+
+@dataclasses.dataclass(frozen=True)
+class HymbaBlock(Module):
+    cfg: HymbaConfig
+
+    def specs(self):
+        c = self.cfg
+        return {
+            "ln_mix": RMSNorm(c.d_model, c.norm_eps),
+            "attn": c.attn(),
+            "mamba": c.mamba(),
+            "ln_attn_out": RMSNorm(c.d_model, c.norm_eps),
+            "ln_mamba_out": RMSNorm(c.d_model, c.norm_eps),
+            "ln_mlp": RMSNorm(c.d_model, c.norm_eps),
+            "mlp": MLP(c.d_model, c.d_ff, act="silu"),
+        }
+
+    def _fuse(self, p, a, m):
+        c = self.cfg
+        a = RMSNorm(c.d_model, c.norm_eps)(p["ln_attn_out"], a)
+        m = RMSNorm(c.d_model, c.norm_eps)(p["ln_mamba_out"], m)
+        return 0.5 * (a + m)
+
+    def __call__(self, p, x, positions, window):
+        c = self.cfg
+        h = RMSNorm(c.d_model, c.norm_eps)(p["ln_mix"], x)
+        a = c.attn()(p["attn"], h, positions, window=window)
+        m = c.mamba()(p["mamba"], h)
+        x = x + self._fuse(p, a, m)
+        h = RMSNorm(c.d_model, c.norm_eps)(p["ln_mlp"], x)
+        return x + MLP(c.d_model, c.d_ff, act="silu")(p["mlp"], h)
+
+    def prefill(self, p, x, positions, window, cache_dtype=jnp.bfloat16):
+        c = self.cfg
+        h = RMSNorm(c.d_model, c.norm_eps)(p["ln_mix"], x)
+        a, kv = c.attn().prefill(p["attn"], h, positions, window=window, cache_dtype=cache_dtype)
+        m, st = c.mamba().prefill(p["mamba"], h, cache_dtype)
+        x = x + self._fuse(p, a, m)
+        h = RMSNorm(c.d_model, c.norm_eps)(p["ln_mlp"], x)
+        return x + MLP(c.d_model, c.d_ff, act="silu")(p["mlp"], h), {"kv": kv, "ssm": st}
+
+    def decode(self, p, x, cache, t, window):
+        c = self.cfg
+        h = RMSNorm(c.d_model, c.norm_eps)(p["ln_mix"], x)
+        a, kv = c.attn().decode(p["attn"], h, cache["kv"], t, window=window)
+        m, st = c.mamba().decode(p["mamba"], h, cache["ssm"])
+        x = x + self._fuse(p, a, m)
+        h = RMSNorm(c.d_model, c.norm_eps)(p["ln_mlp"], x)
+        return x + MLP(c.d_model, c.d_ff, act="silu")(p["mlp"], h), {"kv": kv, "ssm": st}
+
+    def init_cache(self, batch, max_len, dtype=jnp.bfloat16, abstract=False):
+        c = self.cfg
+        if abstract:
+            return {
+                "kv": c.attn().abstract_cache(batch, max_len, dtype),
+                "ssm": c.mamba().abstract_cache(batch, dtype),
+            }
+        return {
+            "kv": c.attn().init_cache(batch, max_len, dtype),
+            "ssm": c.mamba().init_cache(batch, dtype),
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class HymbaLM(Module):
+    cfg: HymbaConfig
+
+    def specs(self):
+        c = self.cfg
+        return {
+            "embed": Embedding(c.vocab, c.d_model),
+            "blocks": Stacked(HymbaBlock(c), c.n_layers),
+            "final_norm": RMSNorm(c.d_model, c.norm_eps),
+        }
+
+    def _logits(self, p, x):
+        c = self.cfg
+        return Embedding(c.vocab, c.d_model).attend(p["embed"], x)
+
+    def __call__(self, p, tokens, positions=None, return_hidden=False):
+        c = self.cfg
+        B, S = tokens.shape
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        x = Embedding(c.vocab, c.d_model)(p["embed"], tokens).astype(c.act_dtype)
+        windows = jnp.asarray(c.windows(), jnp.int32)
+        blk = HymbaBlock(c)
+        blk_call = jax.checkpoint(blk.__call__) if c.remat else blk.__call__
+
+        def constrain(x):
+            if c.act_spec is None:
+                return x
+            from jax.sharding import PartitionSpec as P
+
+            return jax.lax.with_sharding_constraint(x, P(tuple(c.act_spec)))
+
+        def body(x, xs):
+            bp, w = xs
+            return constrain(blk_call(bp, constrain(x), positions, w)), None
+
+        x, _ = jax.lax.scan(body, x, (p["blocks"], windows))
+        x = RMSNorm(c.d_model, c.norm_eps)(p["final_norm"], x)
+        if return_hidden:
+            return x, jnp.zeros((), jnp.float32)
+        return self._logits(p, x), jnp.zeros((), jnp.float32)
+
+    def head(self, p, x):
+        return self._logits(p, x)
+
+    def init_caches(self, batch, max_len, dtype=jnp.bfloat16, abstract=False):
+        c = self.cfg
+        one = HymbaBlock(c).init_cache(batch, max_len, dtype, abstract=abstract)
+        if abstract:
+            return jax.tree.map(lambda s: jax.ShapeDtypeStruct((c.n_layers, *s.shape), s.dtype), one)
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (c.n_layers, *a.shape)).copy(), one)
+
+    def prefill(self, p, tokens, positions=None, cache_dtype=jnp.bfloat16):
+        c = self.cfg
+        B, S = tokens.shape
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        x = Embedding(c.vocab, c.d_model)(p["embed"], tokens).astype(c.act_dtype)
+        windows = jnp.asarray(c.windows(), jnp.int32)
+        blk = HymbaBlock(c)
+
+        def body(x, xs):
+            bp, w = xs
+            x, cache = blk.prefill(bp, x, positions, w, cache_dtype)
+            return x, cache
+
+        x, caches = jax.lax.scan(body, x, (p["blocks"], windows))
+        x = RMSNorm(c.d_model, c.norm_eps)(p["final_norm"], x)
+        return self._logits(p, x[:, -1:]), caches
+
+    def decode_step(self, p, token, caches, t):
+        c = self.cfg
+        x = Embedding(c.vocab, c.d_model)(p["embed"], token).astype(c.act_dtype)
+        windows = jnp.asarray(c.windows(), jnp.int32)
+        blk = HymbaBlock(c)
+
+        def body(x, xs):
+            bp, cache, w = xs
+            x, cache = blk.decode(bp, x, cache, t, w)
+            return x, cache
+
+        x, caches = jax.lax.scan(body, x, (p["blocks"], caches, windows))
+        x = RMSNorm(c.d_model, c.norm_eps)(p["final_norm"], x)
+        return self._logits(p, x), caches

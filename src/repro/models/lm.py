@@ -1,0 +1,428 @@
+"""Unified decoder-only transformer LM.
+
+One config covers: gemma-2b (MQA, GeGLU, head_dim 256), gemma2-2b/27b
+(alternating local/global attention, logit softcaps, post-norms),
+phi4-mini (GQA+SwiGLU), deepseek-moe-16b (fine-grained MoE, first layer
+dense), deepseek-v2-lite (MLA + MoE), and the qwen2-vl text backbone
+(M-RoPE). Layers are scanned (stacked params) so compiled HLO is O(1) in
+depth; per-layer attention windows ride along as scan inputs so
+local/global alternation stays a single homogeneous scan body.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..nn import (
+    MLP,
+    Attention,
+    Embedding,
+    Linear,
+    MLAAttention,
+    MoE,
+    Module,
+    RMSNorm,
+    Stacked,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_q: int
+    n_kv: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    # attention
+    attn_type: str = "gqa"  # "gqa" | "mla"
+    rope_base: float = 10000.0
+    attn_softcap: float | None = None
+    final_softcap: float | None = None
+    local_window: int = 0  # sliding-window size for "local" layers
+    layer_pattern: str = "global"  # "global" | "local_global" | "hymba"
+    global_layers: tuple[int, ...] = ()  # explicit global layer ids (pattern="custom")
+    query_scale: float | None = None
+    mrope_sections: tuple[int, ...] | None = None
+    # MLA
+    kv_lora: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    mla_absorb: bool = True
+    # MLP / MoE
+    act: str = "silu"
+    moe: bool = False
+    n_experts: int = 0
+    top_k: int = 0
+    d_ff_expert: int = 0
+    n_shared: int = 0
+    first_k_dense: int = 1
+    capacity_factor: float = 1.25
+    # misc
+    embed_scale: bool = False  # gemma multiplies embeddings by sqrt(d)
+    zero_centered_norm: bool = False  # gemma (1 + scale) RMSNorm
+    post_norms: bool = False  # gemma2 post-attention/post-ffn norms
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = True
+    act_dtype: Any = jnp.bfloat16
+    attn_chunk: int = 1024  # query-chunked attention block (0 = dense)
+    remat: bool = True  # activation checkpointing on scanned layers
+    # sharding constraint pinned on the residual stream between layers:
+    # tuple of mesh axes for the batch dim (e.g. ("data",)). Stops GSPMD
+    # from picking weight-stationary layouts that all-gather activations.
+    act_spec: Any = None
+    # "full": recompute everything (max memory savings, +fwd flops)
+    # "dots": save matmul outputs, recompute elementwise only (Megatron-style
+    #         selective checkpointing; recompute flops ~0)
+    remat_policy: str = "full"
+
+    # ---- derived -------------------------------------------------------------
+    def windows(self) -> tuple[int, ...]:
+        """Per-layer window (0 = global/full attention)."""
+        if self.layer_pattern == "global":
+            return (0,) * self.n_layers
+        if self.layer_pattern == "local_global":
+            # gemma2: even layers local (sliding window), odd layers global
+            return tuple(
+                self.local_window if i % 2 == 0 else 0 for i in range(self.n_layers)
+            )
+        if self.layer_pattern == "custom":
+            return tuple(
+                0 if i in self.global_layers else self.local_window
+                for i in range(self.n_layers)
+            )
+        raise ValueError(self.layer_pattern)
+
+    def n_params(self) -> int:
+        """Analytic parameter count (for 6ND roofline bookkeeping)."""
+        d, v = self.d_model, self.vocab
+        emb = v * d
+        if self.attn_type == "mla":
+            qd = self.qk_nope_dim + self.qk_rope_dim
+            attn = (
+                d * self.n_q * qd
+                + d * self.kv_lora
+                + d * self.qk_rope_dim
+                + self.kv_lora * self.n_q * (self.qk_nope_dim + self.v_head_dim)
+                + self.n_q * self.v_head_dim * d
+            )
+        else:
+            attn = d * self.head_dim * (self.n_q + 2 * self.n_kv) + self.n_q * self.head_dim * d
+        dense_mlp = 3 * d * self.d_ff
+        if self.moe:
+            expert = 3 * d * self.d_ff_expert
+            moe_mlp = self.n_experts * expert + self.n_shared * expert + d * self.n_experts
+            n_moe = self.n_layers - self.first_k_dense
+            mlps = self.first_k_dense * dense_mlp + n_moe * moe_mlp
+        else:
+            mlps = self.n_layers * dense_mlp
+        norms = self.n_layers * (4 if self.post_norms else 2) * d + d
+        head = 0 if self.tie_embeddings else v * d
+        return emb + head + self.n_layers * attn + mlps + norms
+
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: only routed top-k + shared)."""
+        if not self.moe:
+            return self.n_params()
+        d = self.d_model
+        expert = 3 * d * self.d_ff_expert
+        n_moe = self.n_layers - self.first_k_dense
+        inactive = n_moe * (self.n_experts - self.top_k) * expert
+        return self.n_params() - inactive
+
+
+@dataclasses.dataclass(frozen=True)
+class LMBlock(Module):
+    cfg: LMConfig
+    use_moe: bool
+
+    def _attn(self):
+        c = self.cfg
+        if c.attn_type == "mla":
+            return MLAAttention(
+                c.d_model,
+                c.n_q,
+                kv_lora=c.kv_lora,
+                qk_nope_dim=c.qk_nope_dim,
+                qk_rope_dim=c.qk_rope_dim,
+                v_head_dim=c.v_head_dim,
+                rope_base=c.rope_base,
+                absorb=c.mla_absorb,
+                attn_chunk=c.attn_chunk,
+            )
+        return Attention(
+            c.d_model,
+            c.n_q,
+            c.n_kv,
+            c.head_dim,
+            rope_base=c.rope_base,
+            softcap=c.attn_softcap,
+            query_scale=c.query_scale,
+            mrope_sections=c.mrope_sections,
+            attn_chunk=c.attn_chunk,
+        )
+
+    def _mlp(self):
+        c = self.cfg
+        if self.use_moe:
+            return MoE(
+                c.d_model,
+                c.d_ff_expert,
+                c.n_experts,
+                c.top_k,
+                n_shared=c.n_shared,
+                capacity_factor=c.capacity_factor,
+                act=c.act,
+            )
+        return MLP(c.d_model, c.d_ff, act=c.act)
+
+    def specs(self):
+        c = self.cfg
+        norm = lambda: RMSNorm(c.d_model, c.norm_eps, zero_centered=c.zero_centered_norm)
+        s = {"ln_attn": norm(), "attn": self._attn(), "ln_mlp": norm(), "mlp": self._mlp()}
+        if c.post_norms:
+            s["ln_attn_post"] = norm()
+            s["ln_mlp_post"] = norm()
+        return s
+
+    def _norm(self, p, name, x):
+        c = self.cfg
+        return RMSNorm(c.d_model, c.norm_eps, zero_centered=c.zero_centered_norm)(p[name], x)
+
+    def __call__(self, p, x, positions, window):
+        c = self.cfg
+        h = self._norm(p, "ln_attn", x)
+        h = self._attn()(p["attn"], h, positions, window=window)
+        if c.post_norms:
+            h = self._norm(p, "ln_attn_post", h)
+        x = x + h
+        h = self._norm(p, "ln_mlp", x)
+        if self.use_moe:
+            h, aux = self._mlp()(p["mlp"], h)
+        else:
+            h, aux = self._mlp()(p["mlp"], h), jnp.zeros((), jnp.float32)
+        if c.post_norms:
+            h = self._norm(p, "ln_mlp_post", h)
+        return x + h, aux
+
+    def prefill(self, p, x, positions, window, cache_dtype=jnp.bfloat16):
+        c = self.cfg
+        h = self._norm(p, "ln_attn", x)
+        h, cache = self._attn().prefill(p["attn"], h, positions, window=window, cache_dtype=cache_dtype)
+        if c.post_norms:
+            h = self._norm(p, "ln_attn_post", h)
+        x = x + h
+        h = self._norm(p, "ln_mlp", x)
+        if self.use_moe:
+            h, aux = self._mlp()(p["mlp"], h)
+        else:
+            h, aux = self._mlp()(p["mlp"], h), jnp.zeros((), jnp.float32)
+        if c.post_norms:
+            h = self._norm(p, "ln_mlp_post", h)
+        return x + h, cache, aux
+
+    def decode(self, p, x, cache, t, window):
+        c = self.cfg
+        h = self._norm(p, "ln_attn", x)
+        h, cache = self._attn().decode(p["attn"], h, cache, t, window=window)
+        if c.post_norms:
+            h = self._norm(p, "ln_attn_post", h)
+        x = x + h
+        h = self._norm(p, "ln_mlp", x)
+        if self.use_moe:
+            h, _ = self._mlp()(p["mlp"], h)
+        else:
+            h = self._mlp()(p["mlp"], h)
+        if c.post_norms:
+            h = self._norm(p, "ln_mlp_post", h)
+        return x + h, cache
+
+    def init_cache(self, batch, max_len, dtype=jnp.bfloat16):
+        return self._attn().init_cache(batch, max_len, dtype)
+
+    def abstract_cache(self, batch, max_len, dtype=jnp.bfloat16):
+        return self._attn().abstract_cache(batch, max_len, dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerLM(Module):
+    cfg: LMConfig
+
+    @property
+    def n_dense(self):
+        return self.cfg.first_k_dense if self.cfg.moe else 0
+
+    @property
+    def n_scan(self):
+        return self.cfg.n_layers - self.n_dense
+
+    def specs(self):
+        c = self.cfg
+        s: dict[str, Any] = {
+            "embed": Embedding(c.vocab, c.d_model, scale_by_sqrt_d=c.embed_scale),
+            "blocks": Stacked(LMBlock(c, use_moe=c.moe), self.n_scan),
+            "final_norm": RMSNorm(c.d_model, c.norm_eps, zero_centered=c.zero_centered_norm),
+        }
+        if self.n_dense:
+            s["dense_blocks"] = [LMBlock(c, use_moe=False) for _ in range(self.n_dense)]
+        if not c.tie_embeddings:
+            s["lm_head"] = Linear(c.d_model, c.vocab, in_axis="embed", out_axis="vocab")
+        return s
+
+    # ---- helpers ---------------------------------------------------------------
+    def _windows(self):
+        return jnp.asarray(self.cfg.windows(), jnp.int32)
+
+    def _logits(self, p, x):
+        c = self.cfg
+        if c.tie_embeddings:
+            logits = Embedding(c.vocab, c.d_model).attend(p["embed"], x)
+        else:
+            logits = Linear(c.d_model, c.vocab)(p["lm_head"], x)
+        if c.final_softcap:
+            logits = (c.final_softcap * jnp.tanh(logits.astype(jnp.float32) / c.final_softcap)).astype(logits.dtype)
+        return logits
+
+    def _embed(self, p, tokens, extra_embeds=None, embed_positions=None):
+        c = self.cfg
+        x = Embedding(c.vocab, c.d_model, scale_by_sqrt_d=c.embed_scale)(p["embed"], tokens)
+        x = x.astype(c.act_dtype)
+        if extra_embeds is not None:
+            # VLM stub frontend: scatter precomputed patch embeddings into the
+            # sequence at the given positions (B, n_img) int32.
+            B = x.shape[0]
+            bidx = jnp.arange(B)[:, None]
+            x = x.at[bidx, embed_positions].set(extra_embeds.astype(c.act_dtype))
+        return x
+
+    # ---- train forward -----------------------------------------------------------
+    def __call__(self, p, tokens, positions=None, extra_embeds=None, embed_positions=None, return_hidden=False):
+        c = self.cfg
+        B, S = tokens.shape[:2]
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+            if c.mrope_sections is not None:
+                positions = jnp.broadcast_to(positions[..., None], (B, S, 3))
+        x = self._embed(p, tokens, extra_embeds, embed_positions)
+        windows = self._windows()
+        aux_total = jnp.zeros((), jnp.float32)
+        policy = (
+            jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            if c.remat_policy == "dots"
+            else None
+        )
+        dense_blk = LMBlock(c, use_moe=False)
+        dense_call = jax.checkpoint(dense_blk.__call__, policy=policy) if c.remat else dense_blk.__call__
+        for i in range(self.n_dense):
+            x, aux = dense_call(p["dense_blocks"][i], x, positions, windows[i])
+            aux_total = aux_total + aux
+
+        blk = LMBlock(c, use_moe=c.moe)
+        blk_call = jax.checkpoint(blk.__call__, policy=policy) if c.remat else blk.__call__
+
+        def constrain(x):
+            if c.act_spec is None:
+                return x
+            from jax.sharding import PartitionSpec as P
+
+            return jax.lax.with_sharding_constraint(x, P(tuple(c.act_spec)))
+
+        def body(carry, xs):
+            x, aux_acc = carry
+            bp, w = xs
+            x, aux = blk_call(bp, constrain(x), positions, w)
+            return (constrain(x), aux_acc + aux), None
+
+        (x, aux_total), _ = jax.lax.scan(
+            body, (x, aux_total), (p["blocks"], windows[self.n_dense :])
+        )
+        x = RMSNorm(c.d_model, c.norm_eps, zero_centered=c.zero_centered_norm)(p["final_norm"], x)
+        if return_hidden:
+            return x, aux_total
+        return self._logits(p, x), aux_total
+
+    def head(self, p, x):
+        return self._logits(p, x)
+
+    # ---- caches -------------------------------------------------------------------
+    def _cache_len(self, layer_idx, max_len):
+        """Ring-buffer caches for pure-local layers: size = window."""
+        w = self.cfg.windows()[layer_idx]
+        return max_len if w == 0 else min(max_len, w)
+
+    def init_caches(self, batch, max_len, dtype=jnp.bfloat16, abstract=False):
+        c = self.cfg
+        blk = LMBlock(c, use_moe=c.moe)
+        fn = blk.abstract_cache if abstract else blk.init_cache
+        dense = [
+            LMBlock(c, use_moe=False).abstract_cache(batch, self._cache_len(i, max_len), dtype)
+            if abstract
+            else LMBlock(c, use_moe=False).init_cache(batch, self._cache_len(i, max_len), dtype)
+            for i in range(self.n_dense)
+        ]
+        # scanned layers must share one cache length: use the max over them
+        scan_lens = {self._cache_len(i, max_len) for i in range(self.n_dense, c.n_layers)}
+        scan_len = max(scan_lens)
+        one = fn(batch, scan_len, dtype)
+        if abstract:
+            scanned = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((self.n_scan, *s.shape), s.dtype), one
+            )
+        else:
+            scanned = jax.tree.map(lambda a: jnp.broadcast_to(a, (self.n_scan, *a.shape)).copy(), one)
+        return {"dense": dense, "scan": scanned}
+
+    # ---- serving ------------------------------------------------------------------
+    def prefill(self, p, tokens, positions=None, cache_dtype=jnp.bfloat16):
+        c = self.cfg
+        B, S = tokens.shape[:2]
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+            if c.mrope_sections is not None:
+                positions = jnp.broadcast_to(positions[..., None], (B, S, 3))
+        x = self._embed(p, tokens)
+        windows = self._windows()
+        dense_caches = []
+        for i in range(self.n_dense):
+            blk = LMBlock(c, use_moe=False)
+            x, cache, _ = blk.prefill(p["dense_blocks"][i], x, positions, windows[i], cache_dtype)
+            dense_caches.append(cache)
+
+        blk = LMBlock(c, use_moe=c.moe)
+
+        def body(x, xs):
+            bp, w = xs
+            x, cache, _ = blk.prefill(bp, x, positions, w, cache_dtype)
+            return x, cache
+
+        x, scan_caches = jax.lax.scan(body, x, (p["blocks"], windows[self.n_dense :]))
+        x = RMSNorm(c.d_model, c.norm_eps, zero_centered=c.zero_centered_norm)(p["final_norm"], x)
+        return self._logits(p, x[:, -1:]), {"dense": dense_caches, "scan": scan_caches}
+
+    def decode_step(self, p, token, caches, t):
+        """token: (B, 1) int32; t: scalar position. Returns (logits, caches)."""
+        c = self.cfg
+        x = self._embed(p, token)
+        windows = self._windows()
+        new_dense = []
+        for i in range(self.n_dense):
+            blk = LMBlock(c, use_moe=False)
+            x, cache = blk.decode(p["dense_blocks"][i], x, caches["dense"][i], t, windows[i])
+            new_dense.append(cache)
+
+        blk = LMBlock(c, use_moe=c.moe)
+
+        def body(x, xs):
+            bp, cache, w = xs
+            x, cache = blk.decode(bp, x, cache, t, w)
+            return x, cache
+
+        x, new_scan = jax.lax.scan(body, x, (p["blocks"], caches["scan"], windows[self.n_dense :]))
+        x = RMSNorm(c.d_model, c.norm_eps, zero_centered=c.zero_centered_norm)(p["final_norm"], x)
+        return self._logits(p, x), {"dense": new_dense, "scan": new_scan}

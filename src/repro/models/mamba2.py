@@ -1,0 +1,158 @@
+"""Mamba-2 language model (attention-free, SSD blocks; arXiv:2405.21060)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..nn import Embedding, Mamba2Block, Module, RMSNorm, Stacked
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Config:
+    name: str
+    n_layers: int
+    d_model: int
+    vocab: int
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk: int = 128
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = True
+    act_dtype: Any = jnp.bfloat16
+    remat: bool = True
+    act_spec: Any = None
+
+    def block(self) -> Mamba2Block:
+        return Mamba2Block(
+            self.d_model,
+            d_state=self.d_state,
+            d_conv=self.d_conv,
+            expand=self.expand,
+            head_dim=self.head_dim,
+            n_groups=self.n_groups,
+            chunk=self.chunk,
+        )
+
+    def n_params(self) -> int:
+        b = self.block()
+        d_in_proj = 2 * b.d_inner + 2 * b.n_groups * b.d_state + b.n_heads
+        per_layer = (
+            self.d_model * d_in_proj
+            + b.d_conv * b.conv_dim
+            + b.conv_dim
+            + 3 * b.n_heads
+            + b.d_inner
+            + b.d_inner * self.d_model
+            + self.d_model
+        )
+        return self.vocab * self.d_model + self.n_layers * per_layer + self.d_model
+
+    def n_active_params(self) -> int:
+        return self.n_params()
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2LayerWrapped(Module):
+    """Pre-norm residual wrapper around a Mamba2Block."""
+
+    cfg: Mamba2Config
+
+    def specs(self):
+        return {"norm": RMSNorm(self.cfg.d_model, self.cfg.norm_eps), "mixer": self.cfg.block()}
+
+    def __call__(self, p, x):
+        h = RMSNorm(self.cfg.d_model, self.cfg.norm_eps)(p["norm"], x)
+        return x + self.cfg.block()(p["mixer"], h)
+
+    def prefill(self, p, x, cache_dtype=jnp.bfloat16):
+        h = RMSNorm(self.cfg.d_model, self.cfg.norm_eps)(p["norm"], x)
+        y, cache = self.cfg.block().prefill(p["mixer"], h, cache_dtype)
+        return x + y, cache
+
+    def decode(self, p, x, cache):
+        h = RMSNorm(self.cfg.d_model, self.cfg.norm_eps)(p["norm"], x)
+        y, cache = self.cfg.block().decode(p["mixer"], h, cache)
+        return x + y, cache
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2LM(Module):
+    cfg: Mamba2Config
+
+    def specs(self):
+        c = self.cfg
+        return {
+            "embed": Embedding(c.vocab, c.d_model),
+            "blocks": Stacked(Mamba2LayerWrapped(c), c.n_layers),
+            "final_norm": RMSNorm(c.d_model, c.norm_eps),
+        }
+
+    def _logits(self, p, x):
+        c = self.cfg
+        return Embedding(c.vocab, c.d_model).attend(p["embed"], x)
+
+    def __call__(self, p, tokens, positions=None, return_hidden=False):
+        c = self.cfg
+        x = Embedding(c.vocab, c.d_model)(p["embed"], tokens).astype(c.act_dtype)
+        layer = Mamba2LayerWrapped(c)
+        layer_call = jax.checkpoint(layer.__call__) if c.remat else layer.__call__
+
+        def constrain(x):
+            if c.act_spec is None:
+                return x
+            from jax.sharding import PartitionSpec as P
+
+            return jax.lax.with_sharding_constraint(x, P(tuple(c.act_spec)))
+
+        def body(x, bp):
+            return constrain(layer_call(bp, constrain(x))), None
+
+        x, _ = jax.lax.scan(body, x, p["blocks"])
+        x = RMSNorm(c.d_model, c.norm_eps)(p["final_norm"], x)
+        if return_hidden:
+            return x, jnp.zeros((), jnp.float32)
+        return self._logits(p, x), jnp.zeros((), jnp.float32)
+
+    def head(self, p, x):
+        return self._logits(p, x)
+
+    def init_caches(self, batch, max_len=0, dtype=jnp.bfloat16, abstract=False):
+        c = self.cfg
+        b = c.block()
+        one = b.abstract_cache(batch, dtype) if abstract else b.init_cache(batch, dtype)
+        if abstract:
+            return jax.tree.map(lambda s: jax.ShapeDtypeStruct((c.n_layers, *s.shape), s.dtype), one)
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (c.n_layers, *a.shape)).copy(), one)
+
+    def prefill(self, p, tokens, positions=None, cache_dtype=jnp.bfloat16):
+        c = self.cfg
+        x = Embedding(c.vocab, c.d_model)(p["embed"], tokens).astype(c.act_dtype)
+        layer = Mamba2LayerWrapped(c)
+
+        def body(x, bp):
+            x, cache = layer.prefill(bp, x, cache_dtype)
+            return x, cache
+
+        x, caches = jax.lax.scan(body, x, p["blocks"])
+        x = RMSNorm(c.d_model, c.norm_eps)(p["final_norm"], x)
+        return self._logits(p, x[:, -1:]), caches
+
+    def decode_step(self, p, token, caches, t=None):
+        c = self.cfg
+        x = Embedding(c.vocab, c.d_model)(p["embed"], token).astype(c.act_dtype)
+        layer = Mamba2LayerWrapped(c)
+
+        def body(x, xs):
+            bp, cache = xs
+            x, cache = layer.decode(bp, x, cache)
+            return x, cache
+
+        x, caches = jax.lax.scan(body, x, (p["blocks"], caches))
+        x = RMSNorm(c.d_model, c.norm_eps)(p["final_norm"], x)
+        return self._logits(p, x), caches

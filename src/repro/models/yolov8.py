@@ -1,0 +1,352 @@
+"""YOLOv8-style one-stage detector (Ultralytics [31]): C2f backbone, SPPF,
+PAN/FPN neck, anchor-free decoupled head with DFL box regression.
+
+Used by the paper for stroke detection on CT. Scaled by (depth, width)
+multiples; default matches the "n" scale. The training loss here is a
+simplified grid-assignment objective (BCE cls + DFL + CIoU-lite L1) — the
+paper itself only consumes detector *throughput*, which depends on the
+architecture, not the loss."""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..core.graph import LayerGraph, LayerMeta, conv_meta
+from ..nn import BatchNorm2D, Conv2D, Module, max_pool
+
+
+@dataclasses.dataclass(frozen=True)
+class YOLOv8Config:
+    name: str = "yolov8n"
+    img_size: int = 256
+    n_classes: int = 2  # stroke / no-stroke lesion classes
+    depth: float = 0.33
+    width: float = 0.25
+    reg_max: int = 16
+    act_dtype: Any = jnp.float32
+
+    def ch(self, c):
+        return max(16, int(round(c * self.width / 8)) * 8)
+
+    def n(self, n):
+        return max(1, round(n * self.depth))
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvBlock(Module):
+    c_in: int
+    c_out: int
+    k: int = 3
+    s: int = 1
+
+    def specs(self):
+        pad = self.k // 2
+        return {
+            "conv": Conv2D(self.c_in, self.c_out, self.k, self.s, padding=pad, use_bias=False),
+            "bn": BatchNorm2D(self.c_out),
+        }
+
+    def __call__(self, p, x):
+        pad = self.k // 2
+        x = Conv2D(self.c_in, self.c_out, self.k, self.s, padding=pad, use_bias=False)(p["conv"], x)
+        return jax.nn.silu(BatchNorm2D(self.c_out)(p["bn"], x))
+
+
+@dataclasses.dataclass(frozen=True)
+class Bottleneck(Module):
+    c: int
+    shortcut: bool = True
+
+    def specs(self):
+        return {"cv1": ConvBlock(self.c, self.c, 3), "cv2": ConvBlock(self.c, self.c, 3)}
+
+    def __call__(self, p, x):
+        y = ConvBlock(self.c, self.c, 3)(p["cv1"], x)
+        y = ConvBlock(self.c, self.c, 3)(p["cv2"], y)
+        return x + y if self.shortcut else y
+
+
+@dataclasses.dataclass(frozen=True)
+class C2f(Module):
+    c_in: int
+    c_out: int
+    n: int = 1
+    shortcut: bool = True
+
+    def specs(self):
+        c_h = self.c_out // 2
+        return {
+            "cv1": ConvBlock(self.c_in, self.c_out, 1),
+            "bn": [Bottleneck(c_h, self.shortcut) for _ in range(self.n)],
+            "cv2": ConvBlock((2 + self.n) * c_h, self.c_out, 1),
+        }
+
+    def __call__(self, p, x):
+        c_h = self.c_out // 2
+        y = ConvBlock(self.c_in, self.c_out, 1)(p["cv1"], x)
+        y1, y2 = jnp.split(y, 2, axis=-1)
+        outs = [y1, y2]
+        for i in range(self.n):
+            y2 = Bottleneck(c_h, self.shortcut)(p["bn"][i], y2)
+            outs.append(y2)
+        return ConvBlock((2 + self.n) * c_h, self.c_out, 1)(p["cv2"], jnp.concatenate(outs, -1))
+
+
+@dataclasses.dataclass(frozen=True)
+class SPPF(Module):
+    c: int
+
+    def specs(self):
+        c_h = self.c // 2
+        return {"cv1": ConvBlock(self.c, c_h, 1), "cv2": ConvBlock(4 * c_h, self.c, 1)}
+
+    def __call__(self, p, x):
+        c_h = self.c // 2
+        x = ConvBlock(self.c, c_h, 1)(p["cv1"], x)
+        p1 = max_pool(x, 5, 1, padding=2)
+        p2 = max_pool(p1, 5, 1, padding=2)
+        p3 = max_pool(p2, 5, 1, padding=2)
+        return ConvBlock(4 * c_h, self.c, 1)(p["cv2"], jnp.concatenate([x, p1, p2, p3], -1))
+
+
+def _upsample2(x):
+    B, H, W, C = x.shape
+    return jax.image.resize(x, (B, 2 * H, 2 * W, C), "nearest")
+
+
+@dataclasses.dataclass(frozen=True)
+class DetectHead(Module):
+    c_in: int
+    n_classes: int
+    reg_max: int
+
+    def specs(self):
+        c2 = max(16, self.c_in, self.reg_max * 4)
+        c3 = max(self.c_in, min(self.n_classes, 100))
+        return {
+            "box1": ConvBlock(self.c_in, c2, 3),
+            "box2": ConvBlock(c2, c2, 3),
+            "box3": Conv2D(c2, 4 * self.reg_max, 1, 1, padding=0),
+            "cls1": ConvBlock(self.c_in, c3, 3),
+            "cls2": ConvBlock(c3, c3, 3),
+            "cls3": Conv2D(c3, self.n_classes, 1, 1, padding=0),
+        }
+
+    def __call__(self, p, x):
+        c2 = max(16, self.c_in, self.reg_max * 4)
+        c3 = max(self.c_in, min(self.n_classes, 100))
+        b = ConvBlock(self.c_in, c2, 3)(p["box1"], x)
+        b = ConvBlock(c2, c2, 3)(p["box2"], b)
+        b = Conv2D(c2, 4 * self.reg_max, 1, 1, padding=0)(p["box3"], b)
+        c = ConvBlock(self.c_in, c3, 3)(p["cls1"], x)
+        c = ConvBlock(c3, c3, 3)(p["cls2"], c)
+        c = Conv2D(c3, self.n_classes, 1, 1, padding=0)(p["cls3"], c)
+        return jnp.concatenate([b, c], axis=-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class YOLOv8(Module):
+    cfg: YOLOv8Config
+
+    def _dims(self):
+        c = self.cfg
+        return c.ch(64), c.ch(128), c.ch(256), c.ch(512), c.ch(1024)
+
+    def specs(self):
+        cfg = self.cfg
+        c1, c2, c3, c4, c5 = self._dims()
+        n = cfg.n
+        return {
+            "stem": ConvBlock(3, c1, 3, 2),
+            "down2": ConvBlock(c1, c2, 3, 2),
+            "c2f_2": C2f(c2, c2, n(3)),
+            "down3": ConvBlock(c2, c3, 3, 2),
+            "c2f_3": C2f(c3, c3, n(6)),
+            "down4": ConvBlock(c3, c4, 3, 2),
+            "c2f_4": C2f(c4, c4, n(6)),
+            "down5": ConvBlock(c4, c5, 3, 2),
+            "c2f_5": C2f(c5, c5, n(3)),
+            "sppf": SPPF(c5),
+            # neck (PAN)
+            "n_c2f_4": C2f(c5 + c4, c4, n(3), shortcut=False),
+            "n_c2f_3": C2f(c4 + c3, c3, n(3), shortcut=False),
+            "n_down3": ConvBlock(c3, c3, 3, 2),
+            "n_c2f_4b": C2f(c3 + c4, c4, n(3), shortcut=False),
+            "n_down4": ConvBlock(c4, c4, 3, 2),
+            "n_c2f_5b": C2f(c4 + c5, c5, n(3), shortcut=False),
+            "head3": DetectHead(c3, cfg.n_classes, cfg.reg_max),
+            "head4": DetectHead(c4, cfg.n_classes, cfg.reg_max),
+            "head5": DetectHead(c5, cfg.n_classes, cfg.reg_max),
+        }
+
+    def __call__(self, p, x):
+        cfg = self.cfg
+        c1, c2, c3, c4, c5 = self._dims()
+        n = cfg.n
+        x = x.astype(cfg.act_dtype)
+        x = ConvBlock(3, c1, 3, 2)(p["stem"], x)
+        x = ConvBlock(c1, c2, 3, 2)(p["down2"], x)
+        x = C2f(c2, c2, n(3))(p["c2f_2"], x)
+        x = ConvBlock(c2, c3, 3, 2)(p["down3"], x)
+        f3 = C2f(c3, c3, n(6))(p["c2f_3"], x)
+        x = ConvBlock(c3, c4, 3, 2)(p["down4"], f3)
+        f4 = C2f(c4, c4, n(6))(p["c2f_4"], x)
+        x = ConvBlock(c4, c5, 3, 2)(p["down5"], f4)
+        x = C2f(c5, c5, n(3))(p["c2f_5"], x)
+        f5 = SPPF(c5)(p["sppf"], x)
+        # top-down
+        u4 = C2f(c5 + c4, c4, n(3), shortcut=False)(
+            p["n_c2f_4"], jnp.concatenate([_upsample2(f5), f4], -1)
+        )
+        u3 = C2f(c4 + c3, c3, n(3), shortcut=False)(
+            p["n_c2f_3"], jnp.concatenate([_upsample2(u4), f3], -1)
+        )
+        # bottom-up
+        d4 = C2f(c3 + c4, c4, n(3), shortcut=False)(
+            p["n_c2f_4b"], jnp.concatenate([ConvBlock(c3, c3, 3, 2)(p["n_down3"], u3), u4], -1)
+        )
+        d5 = C2f(c4 + c5, c5, n(3), shortcut=False)(
+            p["n_c2f_5b"], jnp.concatenate([ConvBlock(c4, c4, 3, 2)(p["n_down4"], d4), f5], -1)
+        )
+        o3 = DetectHead(c3, cfg.n_classes, cfg.reg_max)(p["head3"], u3)
+        o4 = DetectHead(c4, cfg.n_classes, cfg.reg_max)(p["head4"], d4)
+        o5 = DetectHead(c5, cfg.n_classes, cfg.reg_max)(p["head5"], d5)
+        return {"p3": o3, "p4": o4, "p5": o5}
+
+    # ---- per-node executable ops aligned with layer_graph ----------------------
+    def staged_ops(self):
+        cfg = self.cfg
+        c1, c2, c3, c4, c5 = self._dims()
+        n = cfg.n
+
+        def upd(key, fn, src="x"):
+            def f(p, s):
+                s = dict(s)
+                s[key] = fn(p, s[src] if isinstance(src, str) else src(s))
+                return s
+
+            return f
+
+        ops = [
+            ("stem", upd("x", lambda p, v: ConvBlock(3, c1, 3, 2)(p["stem"], v))),
+            ("down2", upd("x", lambda p, v: ConvBlock(c1, c2, 3, 2)(p["down2"], v))),
+            ("c2f_2", upd("x", lambda p, v: C2f(c2, c2, n(3))(p["c2f_2"], v))),
+            ("down3", upd("x", lambda p, v: ConvBlock(c2, c3, 3, 2)(p["down3"], v))),
+            ("c2f_3", upd("f3", lambda p, v: C2f(c3, c3, n(6))(p["c2f_3"], v))),
+            ("down4", upd("x", lambda p, v: ConvBlock(c3, c4, 3, 2)(p["down4"], v), src="f3")),
+            ("c2f_4", upd("f4", lambda p, v: C2f(c4, c4, n(6))(p["c2f_4"], v))),
+            ("down5", upd("x", lambda p, v: ConvBlock(c4, c5, 3, 2)(p["down5"], v), src="f4")),
+            ("c2f_5", upd("x", lambda p, v: C2f(c5, c5, n(3))(p["c2f_5"], v))),
+            ("sppf", upd("f5", lambda p, v: SPPF(c5)(p["sppf"], v))),
+            (
+                "n_c2f_4",
+                upd(
+                    "u4",
+                    lambda p, v: C2f(c5 + c4, c4, n(3), shortcut=False)(p["n_c2f_4"], v),
+                    src=lambda s: jnp.concatenate([_upsample2(s["f5"]), s["f4"]], -1),
+                ),
+            ),
+            (
+                "n_c2f_3",
+                upd(
+                    "u3",
+                    lambda p, v: C2f(c4 + c3, c3, n(3), shortcut=False)(p["n_c2f_3"], v),
+                    src=lambda s: jnp.concatenate([_upsample2(s["u4"]), s["f3"]], -1),
+                ),
+            ),
+            ("n_down3", upd("x", lambda p, v: ConvBlock(c3, c3, 3, 2)(p["n_down3"], v), src="u3")),
+            (
+                "n_c2f_4b",
+                upd(
+                    "d4",
+                    lambda p, v: C2f(c3 + c4, c4, n(3), shortcut=False)(p["n_c2f_4b"], v),
+                    src=lambda s: jnp.concatenate([s["x"], s["u4"]], -1),
+                ),
+            ),
+            ("n_down4", upd("x", lambda p, v: ConvBlock(c4, c4, 3, 2)(p["n_down4"], v), src="d4")),
+            (
+                "n_c2f_5b",
+                upd(
+                    "d5",
+                    lambda p, v: C2f(c4 + c5, c5, n(3), shortcut=False)(p["n_c2f_5b"], v),
+                    src=lambda s: jnp.concatenate([s["x"], s["f5"]], -1),
+                ),
+            ),
+            ("head3", upd("o3", lambda p, v: DetectHead(c3, cfg.n_classes, cfg.reg_max)(p["head3"], v), src="u3")),
+            ("head4", upd("o4", lambda p, v: DetectHead(c4, cfg.n_classes, cfg.reg_max)(p["head4"], v), src="d4")),
+            ("head5", upd("o5", lambda p, v: DetectHead(c5, cfg.n_classes, cfg.reg_max)(p["head5"], v), src="d5")),
+        ]
+        return ops
+
+    # ---- coarse layer graph for the scheduler ---------------------------------
+    def layer_graph(self, batch: int = 1, dtype_bytes: int = 2) -> LayerGraph:
+        cfg = self.cfg
+        c1, c2, c3, c4, c5 = self._dims()
+        n = cfg.n
+        s = cfg.img_size
+        layers: list[LayerMeta] = []
+
+        def block(name, kind, h, c_in, c_out, flops, params):
+            layers.append(
+                LayerMeta(
+                    idx=len(layers),
+                    name=name,
+                    kind=kind,
+                    in_shape=(batch, h, h, c_in),
+                    out_shape=(batch, h, h, c_out),
+                    flops=flops,
+                    bytes_accessed=dtype_bytes * batch * h * h * (c_in + c_out) + 4 * params,
+                    params=params,
+                    boundary_bytes=dtype_bytes * batch * h * h * c_out,
+                )
+            )
+
+        def conv_fl(h, cin, cout, k, stride=1):
+            return 2.0 * batch * (h / stride) ** 2 * cout * k * k * cin
+
+        def c2f_fl(h, cin, cout, nb):
+            ch = cout // 2
+            f = conv_fl(h, cin, cout, 1) + conv_fl(h, (2 + nb) * ch, cout, 1)
+            f += nb * 2 * conv_fl(h, ch, ch, 3)
+            pr = cin * cout + (2 + nb) * ch * cout + nb * 2 * 9 * ch * ch
+            return f, pr
+
+        h = s
+        block("stem", "conv", h, 3, c1, conv_fl(h, 3, c1, 3, 2), 9 * 3 * c1)
+        h //= 2
+        plan = [
+            ("down2", "conv", c1, c2, 2), ("c2f_2", "c2f", c2, c2, n(3)),
+            ("down3", "conv", c2, c3, 2), ("c2f_3", "c2f", c3, c3, n(6)),
+            ("down4", "conv", c3, c4, 2), ("c2f_4", "c2f", c4, c4, n(6)),
+            ("down5", "conv", c4, c5, 2), ("c2f_5", "c2f", c5, c5, n(3)),
+        ]
+        for name, kind, cin, cout, arg in plan:
+            if kind == "conv":
+                block(name, "conv", h, cin, cout, conv_fl(h, cin, cout, 3, 2), 9 * cin * cout)
+                h //= 2
+            else:
+                f, pr = c2f_fl(h, cin, cout, arg)
+                block(name, "c2f", h, cin, cout, f, pr)
+        f, pr = c2f_fl(h, c5, c5, 1)
+        block("sppf", "sppf", h, c5, c5, f * 0.6, c5 * c5 // 2 * 5)
+        f, pr = c2f_fl(h * 2, c5 + c4, c4, n(3))
+        block("n_c2f_4", "c2f", h * 2, c5 + c4, c4, f, pr)
+        f, pr = c2f_fl(h * 4, c4 + c3, c3, n(3))
+        block("n_c2f_3", "c2f", h * 4, c4 + c3, c3, f, pr)
+        block("n_down3", "conv", h * 4, c3, c3, conv_fl(h * 4, c3, c3, 3, 2), 9 * c3 * c3)
+        f, pr = c2f_fl(h * 2, c3 + c4, c4, n(3))
+        block("n_c2f_4b", "c2f", h * 2, c3 + c4, c4, f, pr)
+        block("n_down4", "conv", h * 2, c4, c4, conv_fl(h * 2, c4, c4, 3, 2), 9 * c4 * c4)
+        f, pr = c2f_fl(h, c4 + c5, c5, n(3))
+        block("n_c2f_5b", "c2f", h, c4 + c5, c5, f, pr)
+        for hn, (name, cin) in zip((h * 4, h * 2, h), (("head3", c3), ("head4", c4), ("head5", c5))):
+            c_box = max(16, cin, cfg.reg_max * 4)
+            fl = 2 * conv_fl(hn, cin, c_box, 3) + conv_fl(hn, c_box, 4 * cfg.reg_max, 1)
+            fl += 2 * conv_fl(hn, cin, cin, 3) + conv_fl(hn, cin, cfg.n_classes, 1)
+            pr = 9 * cin * c_box + 9 * c_box * c_box + 9 * cin * cin * 2
+            block(name, "head", hn, cin, 4 * cfg.reg_max + cfg.n_classes, fl, pr)
+        return LayerGraph(cfg.name, layers).renumber()

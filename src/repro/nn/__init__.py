@@ -1,0 +1,29 @@
+from .module import (
+    Module,
+    ParamSpec,
+    Stacked,
+    param_count,
+    cast_tree,
+    zeros_init,
+    ones_init,
+    normal_init,
+    lecun_init,
+    conv_init,
+)
+from .linear import Linear, MultiLinear, OutputLinear
+from .norm import RMSNorm, LayerNorm
+from .embed import Embedding
+from .attention import Attention, MLAAttention, causal_window_mask
+from .mlp import MLP
+from .moe import MoE
+from .ssm import Mamba2Block, ssd_chunked, ssd_decode_step
+from .conv import (
+    Conv2D,
+    ConvTranspose2D,
+    Crop2D,
+    BatchNorm2D,
+    max_pool,
+    avg_pool,
+    leaky_relu,
+)
+from .rotary import apply_rope, apply_mrope

@@ -1,0 +1,386 @@
+"""Attention: MHA/GQA/MQA with causal + sliding-window masks, logit softcap,
+RoPE/M-RoPE, KV caches (full + ring-buffer), and DeepSeek-V2 MLA.
+
+Full-sequence path is used by train/prefill; ``decode`` consumes a KV cache.
+``window`` may be a python int or a traced scalar so that local/global
+alternating stacks (gemma2, hymba) scan over one homogeneous layer body.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .linear import MultiLinear, OutputLinear
+from .module import Module
+from .rotary import apply_mrope, apply_rope
+
+NEG_INF = -2.3819763e38  # large negative for masking (fits bf16 after cast via fp32)
+
+
+def _mask_bias(mask):
+    return jnp.where(mask, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def causal_window_mask(q_pos, k_pos, window=None):
+    """Boolean mask (..., Sq, Sk): causal and optionally within a left window.
+
+    q_pos/k_pos: int arrays broadcastable to (..., Sq) / (..., Sk).
+    window: None, python int, or traced int scalar (jnp int). window == 0 or
+    None means unbounded (global attention).
+    """
+    q = q_pos[..., :, None]
+    k = k_pos[..., None, :]
+    m = k <= q
+    if window is not None:
+        w = jnp.asarray(window, jnp.int32)
+        local = (q - k) < w
+        m = m & jnp.where(w > 0, local, True)
+    return m
+
+
+def _sdpa(q, k, v, mask, scale, softcap=None):
+    """q: (B,Sq,Hk,G,D) k: (B,Sk,Hk,D) v: (B,Sk,Hk,Dv) mask: (B|1,1,Sq,Sk)."""
+    assert mask.ndim == 4, mask.shape
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", q, k).astype(jnp.float32) * scale
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+    scores = scores + _mask_bias(mask)[:, :, None, :, :]  # -> (B,1,1,Sq,Sk)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v)
+    return out
+
+
+def effective_chunk(chunk: int, Sq: int, Sk: int, budget: int = 1 << 22) -> int:
+    """Adapt the query-chunk so the transient (chunk, Sk) score block stays
+    within ~``budget`` elements per head (long-context prefill would
+    otherwise hold chunk*Sk = 1024*32768 fp32 scores per head)."""
+    ck = min(chunk, max(128, budget // max(Sk, 1)))
+    while Sq % ck:
+        ck //= 2
+    return max(ck, 1)
+
+
+def _sdpa_chunked(q, k, v, q_pos, k_pos, window, scale, softcap, chunk):
+    """Query-chunked SDPA: loops query blocks with lax.map; each block body
+    is rematerialized so neither forward nor backward holds (Sq, Sk)."""
+    B, Sq = q.shape[:2]
+    nc = Sq // chunk
+
+    def body(i):
+        start = i * chunk
+        qs = jax.lax.dynamic_slice_in_dim(q, start, chunk, axis=1)
+        qp = jax.lax.dynamic_slice_in_dim(q_pos, start, chunk, axis=-1)
+        mask = causal_window_mask(qp, k_pos, window)[:, None]
+        return _sdpa(qs, k, v, mask, scale, softcap)
+
+    outs = jax.lax.map(jax.checkpoint(body), jnp.arange(nc, dtype=jnp.int32))
+    # (nc, B, chunk, Hk, G, D) -> (B, Sq, Hk, G, D)
+    outs = jnp.moveaxis(outs, 0, 1).reshape(B, Sq, *q.shape[2:])
+    return outs
+
+
+@dataclasses.dataclass(frozen=True)
+class Attention(Module):
+    """GQA attention block (q/k/v/o projections + rotary)."""
+
+    d_model: int
+    n_q: int
+    n_kv: int
+    head_dim: int
+    rope_base: float = 10000.0
+    softcap: float | None = None
+    query_scale: float | None = None  # default 1/sqrt(head_dim)
+    mrope_sections: tuple[int, ...] | None = None
+    use_rope: bool = True
+    # query-chunked attention: bounds the transient (B,H,chunk,S) score
+    # tensor instead of materializing (B,H,S,S); chunks are individually
+    # rematerialized so train memory is O(S) per layer.
+    attn_chunk: int = 0
+
+    @property
+    def _scale(self):
+        return self.query_scale if self.query_scale is not None else 1.0 / math.sqrt(self.head_dim)
+
+    def specs(self):
+        return {
+            "wq": MultiLinear(self.d_model, self.n_q, self.head_dim),
+            "wk": MultiLinear(self.d_model, self.n_kv, self.head_dim),
+            "wv": MultiLinear(self.d_model, self.n_kv, self.head_dim),
+            "wo": OutputLinear(self.n_q, self.head_dim, self.d_model),
+        }
+
+    # -- helpers -------------------------------------------------------------
+    def _qkv(self, p, x, positions, kv_x=None):
+        kv_x = x if kv_x is None else kv_x
+        q = MultiLinear(self.d_model, self.n_q, self.head_dim)(p["wq"], x)
+        k = MultiLinear(self.d_model, self.n_kv, self.head_dim)(p["wk"], kv_x)
+        v = MultiLinear(self.d_model, self.n_kv, self.head_dim)(p["wv"], kv_x)
+        if self.use_rope and positions is not None:
+            if self.mrope_sections is not None:
+                q = apply_mrope(q, positions, self.mrope_sections, self.rope_base)
+                k = apply_mrope(k, positions, self.mrope_sections, self.rope_base)
+            else:
+                q = apply_rope(q, positions, self.rope_base)
+                k = apply_rope(k, positions, self.rope_base)
+        return q, k, v
+
+    def _group(self, q):
+        b, s, _, d = q.shape
+        return q.reshape(b, s, self.n_kv, self.n_q // self.n_kv, d)
+
+    # -- full-sequence (train / prefill) ---------------------------------------
+    def prefill(self, p, x, positions=None, window=None, cache_dtype=jnp.bfloat16):
+        """Full forward that also returns the KV cache for subsequent decode."""
+        B, S = x.shape[:2]
+        q, k, v = self._qkv(p, x, positions)
+        q_pos = positions if positions is not None else jnp.arange(S)[None, :]
+        if positions is not None and positions.ndim == 3:
+            q_pos = positions[..., 0]
+        qg = self._group(q)
+        ck = effective_chunk(self.attn_chunk, S, S) if self.attn_chunk else 0
+        if ck and S > ck and S % ck == 0:
+            out = _sdpa_chunked(qg, k, v, q_pos, q_pos, window, self._scale, self.softcap, ck)
+        else:
+            mask = causal_window_mask(q_pos, q_pos, window)[:, None]
+            out = _sdpa(qg, k, v, mask, self._scale, self.softcap)
+        out = out.reshape(B, S, self.n_q, self.head_dim)
+        y = OutputLinear(self.n_q, self.head_dim, self.d_model)(p["wo"], out)
+        cache = {"k": k.astype(cache_dtype), "v": v.astype(cache_dtype)}
+        return y, cache
+
+    def __call__(self, p, x, positions=None, window=None, causal=True, kv_x=None, kv_positions=None):
+        B, S = x.shape[:2]
+        q, k, v = self._qkv(p, x, positions, kv_x=kv_x)
+        if kv_x is None:
+            q_pos = positions if positions is not None else jnp.arange(S)[None, :]
+            k_pos = q_pos
+        else:
+            q_pos = positions if positions is not None else jnp.arange(S)[None, :]
+            k_pos = kv_positions if kv_positions is not None else jnp.arange(k.shape[1])[None, :]
+        if positions is not None and positions.ndim == 3:  # mrope: use temporal ids for mask
+            q_pos = positions[..., 0]
+            k_pos = q_pos if kv_x is None else k_pos
+        qg = self._group(q)
+        ck = effective_chunk(self.attn_chunk, S, k.shape[1]) if self.attn_chunk else 0
+        if causal and ck and S > ck and S % ck == 0:
+            out = _sdpa_chunked(qg, k, v, q_pos, k_pos, window, self._scale, self.softcap, ck)
+        else:
+            if causal:
+                mask = causal_window_mask(q_pos, k_pos, window)[:, None]  # (B,1,Sq,Sk)
+            else:
+                mask = jnp.ones((1, 1, S, k.shape[1]), bool)
+            out = _sdpa(qg, k, v, mask, self._scale, self.softcap)
+        out = out.reshape(B, S, self.n_q, self.head_dim)
+        return OutputLinear(self.n_q, self.head_dim, self.d_model)(p["wo"], out)
+
+    def project_kv(self, p, kv_x):
+        """Compute (k, v) only — used to precompute cross-attention caches."""
+        k = MultiLinear(self.d_model, self.n_kv, self.head_dim)(p["wk"], kv_x)
+        v = MultiLinear(self.d_model, self.n_kv, self.head_dim)(p["wv"], kv_x)
+        return k, v
+
+    def attend_kv(self, p, x, k, v, mask=None):
+        """Attention of queries from ``x`` against precomputed (k, v)."""
+        B, S = x.shape[:2]
+        q = MultiLinear(self.d_model, self.n_q, self.head_dim)(p["wq"], x)
+        if mask is None:
+            mask = jnp.ones((1, 1, S, k.shape[1]), bool)
+        out = _sdpa(self._group(q), k.astype(q.dtype), v.astype(q.dtype), mask, self._scale, self.softcap)
+        out = out.reshape(B, S, self.n_q, self.head_dim)
+        return OutputLinear(self.n_q, self.head_dim, self.d_model)(p["wo"], out)
+
+    # -- decode with cache -----------------------------------------------------
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        return {
+            "k": jnp.zeros((batch, max_len, self.n_kv, self.head_dim), dtype),
+            "v": jnp.zeros((batch, max_len, self.n_kv, self.head_dim), dtype),
+        }
+
+    def abstract_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        sds = jax.ShapeDtypeStruct
+        return {
+            "k": sds((batch, max_len, self.n_kv, self.head_dim), dtype),
+            "v": sds((batch, max_len, self.n_kv, self.head_dim), dtype),
+        }
+
+    def decode(self, p, x, cache, t, window=None):
+        """x: (B,1,d); t: scalar index of the new token. Returns (y, cache)."""
+        B = x.shape[0]
+        pos = jnp.full((B, 1), t, jnp.int32)
+        if self.mrope_sections is not None:
+            pos = jnp.broadcast_to(pos[..., None], (B, 1, 3))
+        q, k_new, v_new = self._qkv(p, x, pos)
+        S = cache["k"].shape[1]
+        if S == 1:  # degenerate: window-1 cache
+            k, v = k_new.astype(cache["k"].dtype), v_new.astype(cache["v"].dtype)
+            cache = {"k": k, "v": v}
+            k_pos = jnp.full((1, 1), t, jnp.int32)
+        else:
+            slot = jnp.asarray(t, jnp.int32) % S  # full cache: S >= max_len so slot == t
+            k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0))
+            v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0))
+            cache = {"k": k, "v": v}
+            base = jnp.arange(S, dtype=jnp.int32)
+            # ring buffer: absolute position of each slot given current t
+            # slots <= slot hold positions t - (slot - i); slots > slot hold t - (S - (i - slot))
+            k_pos = jnp.where(base <= slot, t - (slot - base), t - (S - (base - slot)))[None, :]
+        q_pos = jnp.full((1, 1), t, jnp.int32)
+        mask = causal_window_mask(q_pos, k_pos, window) & (k_pos >= 0)[..., None, :]
+        mask = mask[:, None]  # (1,1,1,S)
+        out = _sdpa(self._group(q), k.astype(q.dtype), v.astype(q.dtype), mask, self._scale, self.softcap)
+        out = out.reshape(B, 1, self.n_q, self.head_dim)
+        y = OutputLinear(self.n_q, self.head_dim, self.d_model)(p["wo"], out)
+        return y, cache
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAAttention(Module):
+    """Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+    KV is compressed into a rank-``kv_lora`` latent + a shared RoPE key.
+    The cache stores only (c_kv, k_rope): 512+64 floats per token instead of
+    2 * n_heads * head_dim. ``absorb`` enables the paper's weight-absorption
+    decode optimization (attend in latent space; no per-step k/v expansion).
+    """
+
+    d_model: int
+    n_q: int
+    kv_lora: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    rope_base: float = 10000.0
+    absorb: bool = False
+    attn_chunk: int = 0
+
+    @property
+    def _scale(self):
+        return 1.0 / math.sqrt(self.qk_nope_dim + self.qk_rope_dim)
+
+    def specs(self):
+        qd = self.qk_nope_dim + self.qk_rope_dim
+        return {
+            "wq": MultiLinear(self.d_model, self.n_q, qd),
+            "wdkv": MultiLinear(self.d_model, 1, self.kv_lora, head_axis=None),
+            "wkr": MultiLinear(self.d_model, 1, self.qk_rope_dim, head_axis=None),
+            "wuk": MultiLinear(self.kv_lora, self.n_q, self.qk_nope_dim, in_axis=None),
+            "wuv": MultiLinear(self.kv_lora, self.n_q, self.v_head_dim, in_axis=None),
+            "wo": OutputLinear(self.n_q, self.v_head_dim, self.d_model),
+        }
+
+    def _latents(self, p, x, positions):
+        c_kv = MultiLinear(self.d_model, 1, self.kv_lora, head_axis=None)(p["wdkv"], x)[:, :, 0]
+        k_r = MultiLinear(self.d_model, 1, self.qk_rope_dim, head_axis=None)(p["wkr"], x)
+        if positions is not None:
+            k_r = apply_rope(k_r, positions, self.rope_base)
+        return c_kv, k_r[:, :, 0]
+
+    def __call__(self, p, x, positions=None, window=None, causal=True):
+        B, S, _ = x.shape
+        qd = self.qk_nope_dim + self.qk_rope_dim
+        q = MultiLinear(self.d_model, self.n_q, qd)(p["wq"], x)
+        q_nope, q_rope = q[..., : self.qk_nope_dim], q[..., self.qk_nope_dim :]
+        if positions is None:
+            positions = jnp.arange(S)[None, :]
+        q_rope = apply_rope(q_rope, positions, self.rope_base)
+        c_kv, k_r = self._latents(p, x, positions)
+        k_nope = MultiLinear(self.kv_lora, self.n_q, self.qk_nope_dim, in_axis=None)(p["wuk"], c_kv)
+        v = MultiLinear(self.kv_lora, self.n_q, self.v_head_dim, in_axis=None)(p["wuv"], c_kv)
+
+        def attend(q_nope_c, q_rope_c, q_pos_c):
+            mask = (
+                causal_window_mask(q_pos_c, positions, window)[:, None]
+                if causal
+                else jnp.ones((1, 1, q_pos_c.shape[-1], S), bool)
+            )
+            scores = (
+                jnp.einsum("bqhd,bkhd->bhqk", q_nope_c, k_nope)
+                + jnp.einsum("bqhd,bkd->bhqk", q_rope_c, k_r)
+            ).astype(jnp.float32) * self._scale
+            scores = scores + _mask_bias(mask)
+            probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+            return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+        ck = effective_chunk(self.attn_chunk, S, S) if self.attn_chunk else 0
+        if ck and S > ck and S % ck == 0:
+
+            def body(i):
+                st = i * ck
+                return attend(
+                    jax.lax.dynamic_slice_in_dim(q_nope, st, ck, 1),
+                    jax.lax.dynamic_slice_in_dim(q_rope, st, ck, 1),
+                    jax.lax.dynamic_slice_in_dim(positions, st, ck, -1),
+                )
+
+            outs = jax.lax.map(jax.checkpoint(body), jnp.arange(S // ck, dtype=jnp.int32))
+            out = jnp.moveaxis(outs, 0, 1).reshape(B, S, self.n_q, self.v_head_dim)
+        else:
+            out = attend(q_nope, q_rope, positions)
+        return OutputLinear(self.n_q, self.v_head_dim, self.d_model)(p["wo"], out)
+
+    def prefill(self, p, x, positions=None, window=None, cache_dtype=jnp.bfloat16):
+        B, S, _ = x.shape
+        if positions is None:
+            positions = jnp.arange(S)[None, :]
+        y = self(p, x, positions, window=window)
+        c_kv, k_r = self._latents(p, x, positions)
+        return y, {"c_kv": c_kv.astype(cache_dtype), "k_r": k_r.astype(cache_dtype)}
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        return {
+            "c_kv": jnp.zeros((batch, max_len, self.kv_lora), dtype),
+            "k_r": jnp.zeros((batch, max_len, self.qk_rope_dim), dtype),
+        }
+
+    def abstract_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        sds = jax.ShapeDtypeStruct
+        return {
+            "c_kv": sds((batch, max_len, self.kv_lora), dtype),
+            "k_r": sds((batch, max_len, self.qk_rope_dim), dtype),
+        }
+
+    def decode(self, p, x, cache, t, window=None):
+        B = x.shape[0]
+        pos = jnp.full((B, 1), t, jnp.int32)
+        qd = self.qk_nope_dim + self.qk_rope_dim
+        q = MultiLinear(self.d_model, self.n_q, qd)(p["wq"], x)
+        q_nope, q_rope = q[..., : self.qk_nope_dim], q[..., self.qk_nope_dim :]
+        q_rope = apply_rope(q_rope, pos, self.rope_base)
+        c_new, kr_new = self._latents(p, x, pos)
+        cache = {
+            "c_kv": jax.lax.dynamic_update_slice(cache["c_kv"], c_new.astype(cache["c_kv"].dtype), (0, t, 0)),
+            "k_r": jax.lax.dynamic_update_slice(cache["k_r"], kr_new.astype(cache["k_r"].dtype), (0, t, 0)),
+        }
+        c_kv, k_r = cache["c_kv"].astype(x.dtype), cache["k_r"].astype(x.dtype)
+        S = c_kv.shape[1]
+        k_pos = jnp.arange(S, dtype=jnp.int32)[None, :]
+        mask = causal_window_mask(jnp.full((1, 1), t, jnp.int32), k_pos, window)  # (1,1,S)
+        if self.absorb:
+            # weight absorption: q_nope' = q_nope @ W_uk  -> attend against c_kv
+            wuk = p["wuk"]["w"].astype(x.dtype)  # (kv_lora, H, nope)
+            q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope, wuk)  # (B,1,H,r)
+            scores = (
+                jnp.einsum("bqhr,bkr->bhqk", q_lat, c_kv)
+                + jnp.einsum("bqhd,bkd->bhqk", q_rope, k_r)
+            ).astype(jnp.float32) * self._scale
+            scores = scores + _mask_bias(mask)[:, None]
+            probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+            out_lat = jnp.einsum("bhqk,bkr->bqhr", probs, c_kv)  # (B,1,H,r)
+            wuv = p["wuv"]["w"].astype(x.dtype)  # (kv_lora, H, v)
+            out = jnp.einsum("bqhr,rhd->bqhd", out_lat, wuv)
+        else:
+            k_nope = MultiLinear(self.kv_lora, self.n_q, self.qk_nope_dim, in_axis=None)(p["wuk"], c_kv)
+            v = MultiLinear(self.kv_lora, self.n_q, self.v_head_dim, in_axis=None)(p["wuv"], c_kv)
+            scores = (
+                jnp.einsum("bqhd,bkhd->bhqk", q_nope, k_nope)
+                + jnp.einsum("bqhd,bkd->bhqk", q_rope, k_r)
+            ).astype(jnp.float32) * self._scale
+            scores = scores + _mask_bias(mask)[:, None]
+            probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+            out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+        y = OutputLinear(self.n_q, self.v_head_dim, self.d_model)(p["wo"], out)
+        return y, cache

@@ -1,0 +1,172 @@
+"""Conv layers (NHWC), torch-semantics padding, for the Pix2Pix/YOLO models.
+
+``ConvTranspose2D`` implements *torch* semantics: ``padding=p`` trims ``p``
+rows/cols from each border of the pad-free (VALID) transposed convolution —
+this makes the paper's eq.(6) == eq.(5)+(7) equivalence exact by
+construction (property-tested in tests/test_surgery.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .module import Module, ParamSpec, conv_init, zeros_init, ones_init
+
+DN = ("NHWC", "HWIO", "NHWC")
+
+
+def _pad_arg(padding, k):
+    if padding == "SAME":
+        return "SAME"
+    if padding == "VALID" or padding == 0:
+        return "VALID"
+    if isinstance(padding, int):
+        return [(padding, padding), (padding, padding)]
+    return padding
+
+
+@dataclasses.dataclass(frozen=True)
+class Conv2D(Module):
+    c_in: int
+    c_out: int
+    kernel: int = 3
+    stride: int = 1
+    padding: int | str = 0  # torch-style int or SAME/VALID
+    use_bias: bool = True
+    groups: int = 1
+
+    def specs(self):
+        s = {
+            "w": ParamSpec(
+                (self.kernel, self.kernel, self.c_in // self.groups, self.c_out),
+                (None, None, "conv_in", "conv_out"),
+                conv_init(),
+            )
+        }
+        if self.use_bias:
+            s["b"] = ParamSpec((self.c_out,), ("conv_out",), zeros_init())
+        return s
+
+    def __call__(self, p, x):
+        y = jax.lax.conv_general_dilated(
+            x,
+            p["w"].astype(x.dtype),
+            window_strides=(self.stride, self.stride),
+            padding=_pad_arg(self.padding, self.kernel),
+            dimension_numbers=DN,
+            feature_group_count=self.groups,
+        )
+        if self.use_bias:
+            y = y + p["b"].astype(x.dtype)
+        return y
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvTranspose2D(Module):
+    """Torch-semantics transposed conv: out = stride*(in-1) + k - 2*padding."""
+
+    c_in: int
+    c_out: int
+    kernel: int = 4
+    stride: int = 2
+    padding: int = 0  # torch padding; implemented as VALID + crop
+    use_bias: bool = True
+
+    def specs(self):
+        s = {
+            "w": ParamSpec(
+                (self.kernel, self.kernel, self.c_in, self.c_out),
+                (None, None, "conv_in", "conv_out"),
+                conv_init(),
+            )
+        }
+        if self.use_bias:
+            s["b"] = ParamSpec((self.c_out,), ("conv_out",), zeros_init())
+        return s
+
+    def __call__(self, p, x):
+        y = jax.lax.conv_transpose(
+            x,
+            p["w"].astype(x.dtype),
+            strides=(self.stride, self.stride),
+            padding="VALID",
+            dimension_numbers=DN,
+        )
+        if self.padding:
+            pad = self.padding
+            y = y[:, pad:-pad, pad:-pad, :]
+        if self.use_bias:
+            y = y + p["b"].astype(x.dtype)
+        return y
+
+
+@dataclasses.dataclass(frozen=True)
+class Crop2D(Module):
+    """Remove ``crop`` rows/cols from each border (the paper's substitution)."""
+
+    crop: int = 1
+
+    def specs(self):
+        return {}
+
+    def __call__(self, p, x):
+        c = self.crop
+        return x[:, c:-c, c:-c, :]
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchNorm2D(Module):
+    """Batch-statistics norm over (B, H, W). Pix2Pix uses batch stats at
+    inference too (batch-size-1 instance-norm behaviour), so no running
+    stats are tracked."""
+
+    c: int
+    eps: float = 1e-5
+
+    def specs(self):
+        return {
+            "scale": ParamSpec((self.c,), ("conv_out",), ones_init()),
+            "bias": ParamSpec((self.c,), ("conv_out",), zeros_init()),
+            # carried like TF (counted in Table II's totals); updated by EMA
+            # in the training loop when eval-mode stats are wanted
+            "moving_mean": ParamSpec((self.c,), ("conv_out",), zeros_init()),
+            "moving_var": ParamSpec((self.c,), ("conv_out",), ones_init()),
+        }
+
+    def __call__(self, p, x, use_running: bool = False):
+        dtype = x.dtype
+        x32 = x.astype(jnp.float32)
+        if use_running:
+            mean = p["moving_mean"].astype(jnp.float32)
+            var = p["moving_var"].astype(jnp.float32)
+        else:
+            mean = jnp.mean(x32, axis=(0, 1, 2), keepdims=True)
+            var = jnp.var(x32, axis=(0, 1, 2), keepdims=True)
+        y = (x32 - mean) * jax.lax.rsqrt(var + self.eps)
+        return (y * p["scale"] + p["bias"]).astype(dtype)
+
+
+def max_pool(x, window: int = 2, stride: int | None = None, padding="VALID"):
+    stride = stride or window
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        (1, window, window, 1),
+        (1, stride, stride, 1),
+        padding if isinstance(padding, str) else [(0, 0), (padding, padding), (padding, padding), (0, 0)],
+    )
+
+
+def avg_pool(x, window: int = 2, stride: int | None = None):
+    stride = stride or window
+    y = jax.lax.reduce_window(
+        x, 0.0, jax.lax.add, (1, window, window, 1), (1, stride, stride, 1), "VALID"
+    )
+    return y / (window * window)
+
+
+def leaky_relu(x, slope: float = 0.2):
+    return jax.nn.leaky_relu(x, slope)

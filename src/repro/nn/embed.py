@@ -1,0 +1,28 @@
+"""Token embedding with optional tied output head."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from .module import Module, ParamSpec, normal_init
+
+
+@dataclasses.dataclass(frozen=True)
+class Embedding(Module):
+    vocab: int
+    d: int
+    scale_by_sqrt_d: bool = False  # gemma multiplies embeddings by sqrt(d)
+
+    def specs(self):
+        return {"table": ParamSpec((self.vocab, self.d), ("vocab", "embed"), normal_init(0.02))}
+
+    def __call__(self, p, tokens):
+        x = jnp.take(p["table"], tokens, axis=0)
+        if self.scale_by_sqrt_d:
+            x = x * jnp.sqrt(jnp.asarray(self.d, x.dtype))
+        return x
+
+    def attend(self, p, x):
+        """Tied logits: (..., d) -> (..., vocab)."""
+        return jnp.einsum("...d,vd->...v", x, p["table"].astype(x.dtype))

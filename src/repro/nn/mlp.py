@@ -1,0 +1,46 @@
+"""Gated / plain MLPs."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .linear import Linear
+from .module import Module
+
+ACTS = {
+    "gelu": jax.nn.gelu,
+    "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True),
+    "silu": jax.nn.silu,
+    "relu": jax.nn.relu,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class MLP(Module):
+    """Gated (SwiGLU/GeGLU) or plain MLP."""
+
+    d_model: int
+    d_ff: int
+    act: str = "silu"
+    gated: bool = True
+
+    def specs(self):
+        s = {
+            "up": Linear(self.d_model, self.d_ff, in_axis="embed", out_axis="mlp"),
+            "down": Linear(self.d_ff, self.d_model, in_axis="mlp", out_axis="embed"),
+        }
+        if self.gated:
+            s["gate"] = Linear(self.d_model, self.d_ff, in_axis="embed", out_axis="mlp")
+        return s
+
+    def __call__(self, p, x):
+        up = Linear(self.d_model, self.d_ff)(p["up"], x)
+        act = ACTS[self.act]
+        if self.gated:
+            gate = Linear(self.d_model, self.d_ff)(p["gate"], x)
+            h = act(gate) * up
+        else:
+            h = act(up)
+        return Linear(self.d_ff, self.d_model)(p["down"], h)

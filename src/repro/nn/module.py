@@ -1,0 +1,200 @@
+"""Minimal functional module system.
+
+No flax in this environment, so we roll a small, explicit system:
+
+- A ``Module`` is a frozen dataclass of hyper-parameters exposing
+  ``specs() -> dict[str, ParamSpec | Module | list]``.
+- ``init(key)`` materializes the params pytree (nested dicts of jnp arrays).
+- ``axes()`` returns the *same-structure* pytree of logical sharding axis
+  tuples (one logical name or None per array dim). ``dist.sharding`` maps
+  logical names onto mesh axes.
+- ``abstract(dtype)`` returns the ShapeDtypeStruct pytree — used by the
+  dry-run so full-size params are never allocated.
+- ``Stacked(module, n)`` stacks ``n`` copies with a leading layer axis for
+  ``jax.lax.scan`` over layers (keeps HLO size O(1) in depth).
+
+Modules are pure: ``__call__(params, *args)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+InitFn = Callable[[jax.Array, tuple[int, ...], Any], jax.Array]
+
+
+def zeros_init() -> InitFn:
+    return lambda key, shape, dtype: jnp.zeros(shape, dtype)
+
+
+def ones_init() -> InitFn:
+    return lambda key, shape, dtype: jnp.ones(shape, dtype)
+
+
+def normal_init(stddev: float = 0.02) -> InitFn:
+    def f(key, shape, dtype):
+        return (jax.random.normal(key, shape, jnp.float32) * stddev).astype(dtype)
+
+    return f
+
+
+def lecun_init(fan_in_dims: tuple[int, ...] = (-2,)) -> InitFn:
+    """Variance-scaling (fan_in) init. ``fan_in_dims`` index shape dims."""
+
+    def f(key, shape, dtype):
+        fan_in = 1
+        for d in fan_in_dims:
+            fan_in *= shape[d]
+        std = 1.0 / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+    return f
+
+
+def conv_init() -> InitFn:
+    """Fan-in over (kh, kw, cin) for HWIO conv kernels."""
+
+    def f(key, shape, dtype):
+        fan_in = 1
+        for d in shape[:-1]:
+            fan_in *= d
+        std = math.sqrt(2.0 / max(fan_in, 1))
+        return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+    return f
+
+
+# ---------------------------------------------------------------------------
+# Param spec + module base
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: InitFn = dataclasses.field(default_factory=lambda: lecun_init())
+    dtype: Any = None  # None -> use the dtype passed to Module.init
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+class Module:
+    """Base class; subclasses are dataclasses implementing specs()/__call__."""
+
+    def specs(self) -> dict[str, Any]:  # pragma: no cover - abstract
+        raise NotImplementedError
+
+    # -- param tree construction ------------------------------------------------
+    def init(self, key: jax.Array, dtype: Any = jnp.float32) -> dict[str, Any]:
+        return _init_tree(self.specs(), key, dtype)
+
+    def axes(self) -> dict[str, Any]:
+        return _axes_tree(self.specs())
+
+    def abstract(self, dtype: Any = jnp.float32) -> dict[str, Any]:
+        return _abstract_tree(self.specs(), dtype)
+
+    def __call__(self, params, *args, **kwargs):  # pragma: no cover - abstract
+        raise NotImplementedError
+
+
+def _split_key(key, n):
+    return list(jax.random.split(key, n)) if n > 0 else []
+
+
+def _init_tree(spec: Any, key: jax.Array, dtype: Any) -> Any:
+    if isinstance(spec, ParamSpec):
+        return spec.init(key, spec.shape, spec.dtype or dtype)
+    if isinstance(spec, Module):
+        return spec.init(key, dtype)
+    if isinstance(spec, dict):
+        keys = _split_key(key, len(spec))
+        return {k: _init_tree(v, sk, dtype) for (k, v), sk in zip(sorted(spec.items()), keys)}
+    if isinstance(spec, (list, tuple)):
+        keys = _split_key(key, len(spec))
+        return [_init_tree(v, sk, dtype) for v, sk in zip(spec, keys)]
+    raise TypeError(f"bad spec: {type(spec)}")
+
+
+def _axes_tree(spec: Any) -> Any:
+    if isinstance(spec, ParamSpec):
+        return spec.axes
+    if isinstance(spec, Module):
+        return spec.axes()
+    if isinstance(spec, dict):
+        return {k: _axes_tree(v) for k, v in spec.items()}
+    if isinstance(spec, (list, tuple)):
+        return [_axes_tree(v) for v in spec]
+    raise TypeError(f"bad spec: {type(spec)}")
+
+
+def _abstract_tree(spec: Any, dtype: Any) -> Any:
+    if isinstance(spec, ParamSpec):
+        return jax.ShapeDtypeStruct(spec.shape, spec.dtype or dtype)
+    if isinstance(spec, Module):
+        return spec.abstract(dtype)
+    if isinstance(spec, dict):
+        return {k: _abstract_tree(v, dtype) for k, v in spec.items()}
+    if isinstance(spec, (list, tuple)):
+        return [_abstract_tree(v, dtype) for v in spec]
+    raise TypeError(f"bad spec: {type(spec)}")
+
+
+# ---------------------------------------------------------------------------
+# Stacked (scan-over-layers) wrapper
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Stacked(Module):
+    """Stack ``n`` copies of ``inner`` along a leading 'layers' axis.
+
+    Params come out with shape (n, *inner_shape) so the model can
+    ``jax.lax.scan`` over the leading axis. Logical axis for the stacking
+    dim is "layers" (mapped to no mesh axis by default).
+    """
+
+    inner: Module
+    n: int
+
+    def specs(self):
+        return {"stack": self}  # sentinel; init/axes/abstract overridden
+
+    def init(self, key, dtype=jnp.float32):
+        keys = jax.random.split(key, self.n)
+        return jax.vmap(lambda k: self.inner.init(k, dtype))(keys)
+
+    def axes(self):
+        inner_axes = self.inner.axes()
+        return jax.tree.map(
+            lambda a: ("layers", *a),
+            inner_axes,
+            is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x),
+        )
+
+    def abstract(self, dtype=jnp.float32):
+        inner = self.inner.abstract(dtype)
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((self.n, *s.shape), s.dtype), inner
+        )
+
+    def __call__(self, params, *args, **kwargs):
+        raise TypeError("Stacked params are consumed via jax.lax.scan in the parent model")
+
+
+def param_count(params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+def cast_tree(params, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, params)

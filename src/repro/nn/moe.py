@@ -1,0 +1,105 @@
+"""Mixture-of-Experts (DeepSeekMoE-style: shared + fine-grained routed experts).
+
+Dispatch uses sort + static-capacity gather/scatter (NOT one-hot dispatch
+einsums): expert GEMM FLOPs stay linear in tokens —
+``E * C * d * ff`` with ``C = ceil(T * top_k * capacity_factor / E)`` —
+so compiled-HLO FLOPs track MODEL_FLOPS instead of blowing up O(T^2).
+Routed weights are stacked (E, ...) with logical axis "expert" for EP.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .linear import Linear
+from .mlp import MLP
+from .module import Module, ParamSpec, lecun_init, normal_init
+
+
+@dataclasses.dataclass(frozen=True)
+class MoE(Module):
+    d_model: int
+    d_ff_expert: int  # fine-grained expert width
+    n_experts: int
+    top_k: int
+    n_shared: int = 0
+    capacity_factor: float = 1.25
+    act: str = "silu"
+    router_scale: bool = False  # deepseek-v2 uses routed_scaling_factor
+    routed_scaling_factor: float = 1.0
+
+    def specs(self):
+        E, d, f = self.n_experts, self.d_model, self.d_ff_expert
+        s = {
+            "router": ParamSpec((d, E), ("embed", None), normal_init(0.02)),
+            "w_gate": ParamSpec((E, d, f), ("expert", "embed", "mlp"), lecun_init((-2,))),
+            "w_up": ParamSpec((E, d, f), ("expert", "embed", "mlp"), lecun_init((-2,))),
+            "w_down": ParamSpec((E, f, d), ("expert", "mlp", "embed"), lecun_init((-2,))),
+        }
+        if self.n_shared:
+            s["shared"] = MLP(d, f * self.n_shared, act=self.act, gated=True)
+        return s
+
+    def capacity(self, n_tokens: int) -> int:
+        c = math.ceil(n_tokens * self.top_k * self.capacity_factor / self.n_experts)
+        return max(8, int(c))
+
+    def __call__(self, p, x):
+        """x: (B, S, d) -> (y, aux_loss)."""
+        B, S, d = x.shape
+        T = B * S
+        E, k = self.n_experts, self.top_k
+        xf = x.reshape(T, d)
+
+        logits = (xf.astype(jnp.float32) @ p["router"].astype(jnp.float32))  # (T, E)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gates, eidx = jax.lax.top_k(probs, k)  # (T, k)
+        gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+        if self.router_scale:
+            gates = gates * self.routed_scaling_factor
+
+        # ---- sort-based dispatch with static capacity ----
+        C = self.capacity(T)
+        flat_e = eidx.reshape(T * k)
+        order = jnp.argsort(flat_e, stable=True)  # (T*k,)
+        tok = order // k  # source token per sorted slot
+        sorted_e = jnp.take(flat_e, order)
+        # index of each entry within its expert group
+        first = jnp.searchsorted(sorted_e, sorted_e, side="left")
+        pos = jnp.arange(T * k, dtype=jnp.int32) - first.astype(jnp.int32)
+        valid = pos < C
+        slot = jnp.where(valid, sorted_e * C + pos, E * C)  # overflow -> dropped row
+
+        # token id per (expert, capacity) slot; E*C slot 'T' reads the zero pad row
+        slot_tok = jnp.full((E * C + 1,), T, jnp.int32).at[slot].set(jnp.where(valid, tok, T))[: E * C]
+        slot_gate = jnp.zeros((E * C + 1,), jnp.float32).at[slot].set(
+            jnp.where(valid, jnp.take(gates.reshape(T * k), order), 0.0)
+        )[: E * C]
+
+        x_pad = jnp.concatenate([xf, jnp.zeros((1, d), xf.dtype)], axis=0)
+        ein = jnp.take(x_pad, slot_tok, axis=0).reshape(E, C, d)
+
+        # ---- expert GEMMs (E, C, d) x (E, d, f) ----
+        g = jnp.einsum("ecd,edf->ecf", ein, p["w_gate"].astype(ein.dtype))
+        u = jnp.einsum("ecd,edf->ecf", ein, p["w_up"].astype(ein.dtype))
+        h = jax.nn.silu(g) * u
+        eout = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(ein.dtype))
+
+        # ---- combine (scatter-add back to tokens) ----
+        weighted = eout.reshape(E * C, d) * slot_gate[:, None].astype(eout.dtype)
+        y = jax.ops.segment_sum(weighted, slot_tok, num_segments=T + 1)[:T]
+        y = y.reshape(B, S, d).astype(x.dtype)
+
+        if self.n_shared:
+            y = y + MLP(self.d_model, self.d_ff_expert * self.n_shared, act=self.act)(p["shared"], x)
+
+        # Switch-style load-balance aux loss
+        me = jnp.mean(probs, axis=0)  # (E,)
+        ce = jnp.mean(
+            jax.nn.one_hot(eidx, E, dtype=jnp.float32).sum(axis=1), axis=0
+        )  # fraction routed per expert
+        aux = jnp.sum(me * ce) * E / k
+        return y, aux

@@ -1,0 +1,56 @@
+"""Normalization layers (computed in fp32, cast back)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from .module import Module, ParamSpec, ones_init, zeros_init
+
+
+@dataclasses.dataclass(frozen=True)
+class RMSNorm(Module):
+    d: int
+    eps: float = 1e-6
+    # gemma convention: weight stored as (1 + scale) with zero-init scale
+    zero_centered: bool = False
+    axis_name: str | None = None
+
+    def specs(self):
+        init = zeros_init() if self.zero_centered else ones_init()
+        return {"scale": ParamSpec((self.d,), (self.axis_name,), init)}
+
+    def __call__(self, p, x):
+        dtype = x.dtype
+        x32 = x.astype(jnp.float32)
+        var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+        y = x32 * jnp.reciprocal(jnp.sqrt(var + self.eps))
+        scale = p["scale"].astype(jnp.float32)
+        if self.zero_centered:
+            scale = 1.0 + scale
+        return (y * scale).astype(dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerNorm(Module):
+    d: int
+    eps: float = 1e-5
+    use_bias: bool = True
+    axis_name: str | None = None
+
+    def specs(self):
+        s = {"scale": ParamSpec((self.d,), (self.axis_name,), ones_init())}
+        if self.use_bias:
+            s["bias"] = ParamSpec((self.d,), (self.axis_name,), zeros_init())
+        return s
+
+    def __call__(self, p, x):
+        dtype = x.dtype
+        x32 = x.astype(jnp.float32)
+        mean = jnp.mean(x32, axis=-1, keepdims=True)
+        var = jnp.var(x32, axis=-1, keepdims=True)
+        y = (x32 - mean) * jnp.reciprocal(jnp.sqrt(var + self.eps))
+        y = y * p["scale"].astype(jnp.float32)
+        if self.use_bias:
+            y = y + p["bias"].astype(jnp.float32)
+        return y.astype(dtype)

@@ -1,0 +1,45 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, base: float = 10000.0):
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (base**exponent)  # (head_dim/2,)
+
+
+def apply_rope(x, positions, base: float = 10000.0):
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, base)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * inv  # (B, S, hd/2)
+    sin = jnp.sin(angles)[..., None, :]  # (B, S, 1, hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions, sections: tuple[int, ...], base: float = 10000.0):
+    """Multimodal RoPE (Qwen2-VL, arXiv:2409.12191).
+
+    x: (B, S, H, hd); positions: (B, S, 3) — (temporal, height, width) ids.
+    ``sections`` gives the per-component frequency split (sums to hd/2).
+    Text-only tokens carry identical t/h/w ids, reducing to standard RoPE.
+    """
+    hd = x.shape[-1]
+    assert sum(sections) == hd // 2, (sections, hd)
+    inv = rope_freqs(hd, base)  # (hd/2,)
+    # choose which positional stream feeds each frequency band
+    comp = jnp.concatenate(
+        [jnp.full((s,), i, dtype=jnp.int32) for i, s in enumerate(sections)]
+    )  # (hd/2,) values in {0,1,2}
+    idx = jnp.broadcast_to(comp[None, None, :], (*positions.shape[:2], comp.shape[0]))
+    pos = jnp.take_along_axis(positions.astype(jnp.float32), idx, axis=-1)  # (B, S, hd/2)
+    angles = pos * inv
+    sin = jnp.sin(angles)[..., None, :]
+    cos = jnp.cos(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

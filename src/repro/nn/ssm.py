@@ -1,0 +1,272 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060).
+
+``ssd_chunked`` is the matmul-rich chunked SSD algorithm (MXU-friendly);
+it doubles as the oracle for the Pallas kernel in ``repro.kernels.ssd``.
+``Mamba2Block`` is the full block: in_proj -> causal depthwise conv ->
+SSD -> gated RMSNorm -> out_proj, with a single-token ``decode`` path that
+carries (conv buffer, ssm state).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .module import Module, ParamSpec, lecun_init, normal_init, ones_init, zeros_init
+from .norm import RMSNorm
+
+
+def segsum(x):
+    """Stable 'segment sum': out[..., i, j] = sum_{j < k <= i} x[..., k].
+
+    Returns lower-triangular log-decay matrix; upper triangle = -inf.
+    x: (..., L) -> (..., L, L)
+    """
+    L = x.shape[-1]
+    x = jnp.broadcast_to(x[..., None], (*x.shape, L))  # [..., i, j] = x[..., i]
+    mask = jnp.tril(jnp.ones((L, L), bool), -1)
+    x = jnp.where(mask, x, 0.0)
+    x_segsum = jnp.cumsum(x, axis=-2)
+    mask = jnp.tril(jnp.ones((L, L), bool), 0)
+    return jnp.where(mask, x_segsum, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int = 128, return_state: bool = False):
+    """Chunked SSD scan.
+
+    x:  (b, s, h, p)   inputs per head
+    dt: (b, s, h)      positive step sizes (softplus already applied)
+    A:  (h,)           negative per-head decay
+    B:  (b, s, g, n)   input projections (g groups broadcast over h)
+    C:  (b, s, g, n)   output projections
+    Returns y: (b, s, h, p) (and the final state (b,h,p,n) if return_state).
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    s_orig = s
+    if s % chunk:  # pad with dt=0 steps (identity updates: no decay, no input)
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        s = s + pad
+    nc = s // chunk
+    rep = h // g
+
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = B.reshape(b, nc, chunk, g, n)
+    Cc = C.reshape(b, nc, chunk, g, n)
+    # broadcast groups to heads
+    Bh = jnp.repeat(Bc, rep, axis=3)  # (b, nc, l, h, n)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    dA = dtc * A  # (b, nc, l, h) negative
+    dA = jnp.moveaxis(dA, -1, 2)  # (b, nc, h, l)
+    dA_cum = jnp.cumsum(dA, axis=-1)  # (b, nc, h, l)
+
+    # ---- intra-chunk (quadratic within chunk, dense matmuls) ----
+    L = jnp.exp(segsum(dA))  # (b, nc, h, l, l)
+    scores = jnp.einsum("bclhn,bcshn->bchls", Ch, Bh)  # (b,nc,h,l,s)
+    y_intra = jnp.einsum("bchls,bcshp,bcsh->bclhp", scores * L, xc, dtc)
+
+    # ---- chunk states ----
+    decay_states = jnp.exp(dA_cum[..., -1:] - dA_cum)  # (b,nc,h,l)
+    states = jnp.einsum("bclhn,bchl,bclhp->bchpn", Bh, decay_states * jnp.moveaxis(dtc, -1, 2), xc)
+
+    # ---- inter-chunk recurrence over nc (associative scan-able; lax.scan here) ----
+    chunk_decay = jnp.exp(dA_cum[..., -1])  # (b, nc, h)
+
+    def step(hprev, inputs):
+        st, dec = inputs  # (b,h,p,n), (b,h)
+        hnew = hprev * dec[..., None, None] + st
+        return hnew, hprev
+
+    h0 = jnp.zeros((b, h, p, n), x.dtype)
+    h_final, h_prevs = jax.lax.scan(
+        step, h0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0))
+    )
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)  # (b, nc, h, p, n) state entering each chunk
+
+    # ---- inter-chunk output ----
+    decay_in = jnp.exp(dA_cum)  # (b,nc,h,l) decay from chunk start to position l
+    y_inter = jnp.einsum("bclhn,bchpn,bchl->bclhp", Ch, h_prevs, decay_in)
+
+    y = (y_intra + y_inter).reshape(b, s, h, p)[:, :s_orig]
+    if return_state:
+        return y, h_final
+    return y
+
+
+def ssd_decode_step(state, x_t, dt_t, A, B_t, C_t):
+    """Single-token SSD update.
+
+    state: (b, h, p, n); x_t: (b, h, p); dt_t: (b, h); B_t/C_t: (b, g, n)
+    Returns (y_t, new_state).
+    """
+    h, g = x_t.shape[1], B_t.shape[1]
+    rep = h // g
+    Bh = jnp.repeat(B_t, rep, axis=1)  # (b, h, n)
+    Ch = jnp.repeat(C_t, rep, axis=1)
+    dA = jnp.exp(dt_t * A)  # (b, h)
+    dBx = jnp.einsum("bh,bhn,bhp->bhpn", dt_t, Bh, x_t)
+    new_state = state * dA[..., None, None] + dBx
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch)
+    return y, new_state
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Block(Module):
+    d_model: int
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk: int = 128
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+
+    @property
+    def d_inner(self):
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self):
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self):
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+    def specs(self):
+        d, di = self.d_model, self.d_inner
+        H, gn = self.n_heads, self.n_groups * self.d_state
+        # separate projections (equivalent to the fused in_proj up to a
+        # column permutation) so each weight is cleanly TP-shardable —
+        # the fused width 2*di+2*g*n+H is generally not lane-divisible.
+        return {
+            "wz": ParamSpec((d, di), ("embed", "mlp"), lecun_init((-2,))),
+            "wx": ParamSpec((d, di), ("embed", "mlp"), lecun_init((-2,))),
+            "wB": ParamSpec((d, gn), ("embed", None), lecun_init((-2,))),
+            "wC": ParamSpec((d, gn), ("embed", None), lecun_init((-2,))),
+            "wdt": ParamSpec((d, H), ("embed", None), lecun_init((-2,))),
+            "conv_w": ParamSpec((self.d_conv, self.conv_dim), (None, None), normal_init(0.1)),
+            "conv_b": ParamSpec((self.conv_dim,), (None,), zeros_init()),
+            "A_log": ParamSpec((H,), (None,), _a_log_init(H)),
+            "D": ParamSpec((H,), (None,), ones_init()),
+            "dt_bias": ParamSpec((H,), (None,), _dt_bias_init(H, self.dt_min, self.dt_max)),
+            "norm": RMSNorm(di),
+            "out_proj": ParamSpec((di, d), ("mlp", "embed"), lecun_init((-2,))),
+        }
+
+    def _project(self, p, x):
+        """x (..., d) -> (z (..., di), xbc (..., conv_dim), dt (..., H))."""
+        w = lambda name: p[name].astype(x.dtype)
+        z = x @ w("wz")
+        xbc = jnp.concatenate([x @ w("wx"), x @ w("wB"), x @ w("wC")], axis=-1)
+        dt = x @ w("wdt")
+        return z, xbc, dt
+
+    def _conv(self, p, xbc):
+        """Causal depthwise conv over (B, S, conv_dim)."""
+        w = p["conv_w"].astype(xbc.dtype)  # (k, conv_dim)
+        k = self.d_conv
+        pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+        out = sum(pad[:, i : i + xbc.shape[1], :] * w[i] for i in range(k))
+        return jax.nn.silu(out + p["conv_b"].astype(xbc.dtype))
+
+    def __call__(self, p, x):
+        B_, S, _ = x.shape
+        di, g, n, H, P = self.d_inner, self.n_groups, self.d_state, self.n_heads, self.head_dim
+        z, xbc, dt = self._project(p, x)
+        xbc = self._conv(p, xbc)
+        xs = xbc[..., :di].reshape(B_, S, H, P)
+        Bmat = xbc[..., di : di + g * n].reshape(B_, S, g, n)
+        Cmat = xbc[..., di + g * n :].reshape(B_, S, g, n)
+        dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"]).astype(x.dtype)  # (B,S,H)
+        A = -jnp.exp(p["A_log"].astype(jnp.float32)).astype(x.dtype)  # (H,)
+        y = ssd_chunked(xs, dt, A, Bmat, Cmat, chunk=min(self.chunk, S))
+        y = y + xs * p["D"].astype(x.dtype)[None, None, :, None]
+        y = y.reshape(B_, S, di)
+        y = RMSNorm(di)(p["norm"], y) * jax.nn.silu(z)
+        return jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+
+    def prefill(self, p, x, cache_dtype=jnp.bfloat16):
+        """Forward over the prompt, returning output + (conv, ssm) state."""
+        B_, S, _ = x.shape
+        di, g, n, H, P = self.d_inner, self.n_groups, self.d_state, self.n_heads, self.head_dim
+        z, xbc_raw, dt = self._project(p, x)
+        xbc = self._conv(p, xbc_raw)
+        xs = xbc[..., :di].reshape(B_, S, H, P)
+        Bmat = xbc[..., di : di + g * n].reshape(B_, S, g, n)
+        Cmat = xbc[..., di + g * n :].reshape(B_, S, g, n)
+        dt_ = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"]).astype(x.dtype)
+        A = -jnp.exp(p["A_log"].astype(jnp.float32)).astype(x.dtype)
+        y, final_state = ssd_chunked(xs, dt_, A, Bmat, Cmat, chunk=min(self.chunk, S), return_state=True)
+        y = y + xs * p["D"].astype(x.dtype)[None, None, :, None]
+        y = y.reshape(B_, S, di)
+        y = RMSNorm(di)(p["norm"], y) * jax.nn.silu(z)
+        out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+        conv_tail = xbc_raw[:, -(self.d_conv - 1) :, :]
+        return out, {"conv": conv_tail.astype(cache_dtype), "ssm": final_state.astype(jnp.float32)}
+
+    # -- decode ---------------------------------------------------------------
+    def init_cache(self, batch: int, dtype=jnp.bfloat16):
+        return {
+            "conv": jnp.zeros((batch, self.d_conv - 1, self.conv_dim), dtype),
+            "ssm": jnp.zeros((batch, self.n_heads, self.head_dim, self.d_state), jnp.float32),
+        }
+
+    def abstract_cache(self, batch: int, dtype=jnp.bfloat16):
+        sds = jax.ShapeDtypeStruct
+        return {
+            "conv": sds((batch, self.d_conv - 1, self.conv_dim), dtype),
+            "ssm": sds((batch, self.n_heads, self.head_dim, self.d_state), jnp.float32),
+        }
+
+    def decode(self, p, x, cache):
+        """x: (B, 1, d) -> (y (B,1,d), cache)."""
+        B_ = x.shape[0]
+        di, g, n, H, P = self.d_inner, self.n_groups, self.d_state, self.n_heads, self.head_dim
+        z, xbc, dt = self._project(p, x)  # (B,1,...)
+        # conv ring buffer
+        window = jnp.concatenate([cache["conv"].astype(x.dtype), xbc], axis=1)  # (B, k, conv_dim)
+        w = p["conv_w"].astype(x.dtype)
+        conv_out = jnp.einsum("bkc,kc->bc", window, w) + p["conv_b"].astype(x.dtype)
+        xbc_t = jax.nn.silu(conv_out)  # (B, conv_dim)
+        new_conv = window[:, 1:, :]
+        xs = xbc_t[:, :di].reshape(B_, H, P)
+        Bmat = xbc_t[:, di : di + g * n].reshape(B_, g, n)
+        Cmat = xbc_t[:, di + g * n :].reshape(B_, g, n)
+        dt_t = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+        A = -jnp.exp(p["A_log"].astype(jnp.float32))
+        y, new_ssm = ssd_decode_step(
+            cache["ssm"], xs.astype(jnp.float32), dt_t, A, Bmat.astype(jnp.float32), Cmat.astype(jnp.float32)
+        )
+        y = y.astype(x.dtype) + xs * p["D"].astype(x.dtype)[None, :, None]
+        y = y.reshape(B_, 1, di)
+        y = RMSNorm(di)(p["norm"], y) * jax.nn.silu(z)
+        out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+        return out, {"conv": new_conv.astype(cache["conv"].dtype), "ssm": new_ssm}
+
+
+def _a_log_init(H):
+    def f(key, shape, dtype):
+        return jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)).astype(dtype)
+
+    return f
+
+
+def _dt_bias_init(H, dt_min, dt_max):
+    def f(key, shape, dtype):
+        u = jax.random.uniform(key, (H,), jnp.float32)
+        dt = jnp.exp(u * (math.log(dt_max) - math.log(dt_min)) + math.log(dt_min))
+        # inverse softplus
+        inv = dt + jnp.log(-jnp.expm1(-dt))
+        return inv.astype(dtype)
+
+    return f

@@ -1,0 +1,219 @@
+"""Fault-tolerant checkpointing (no orbax in this environment).
+
+Format: one zstd-compressed msgpack file per host process per step,
+``<dir>/step_<N>/shard_<proc>.ckpt`` + an atomically-renamed ``MANIFEST``
+committing the step. Properties needed at cluster scale:
+
+* **atomic commit** — a step is visible only after its MANIFEST rename;
+  a crash mid-write leaves the previous checkpoint intact.
+* **async save** — serialization happens on a writer thread after
+  ``jax.device_get`` (off the training critical path).
+* **keep-k GC** — bounded disk usage.
+* **elastic restore** — arrays are loaded host-side and re-placed with
+  *new* shardings, so a checkpoint written on one mesh restores onto a
+  differently-sized mesh (elastic scaling / failure recovery).
+* **integrity** — per-leaf checksums; a corrupt newest checkpoint falls
+  back to the previous one.
+"""
+from __future__ import annotations
+
+import os
+import queue
+import shutil
+import struct
+import threading
+import zlib
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard
+
+MANIFEST = "MANIFEST"
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _pack_array(a: np.ndarray) -> dict:
+    if a.dtype == jnp.bfloat16:
+        data = a.view(np.uint16).tobytes()
+        dtype = "bfloat16"
+    else:
+        data = a.tobytes()
+        dtype = a.dtype.str
+    return {
+        "dtype": dtype,
+        "shape": list(a.shape),
+        "crc": zlib.crc32(data),
+        "data": data,
+    }
+
+
+def _unpack_array(d: dict) -> np.ndarray:
+    data = d["data"]
+    if zlib.crc32(data) != d["crc"]:
+        raise IOError("checkpoint leaf checksum mismatch")
+    if d["dtype"] == "bfloat16":
+        a = np.frombuffer(data, np.uint16).reshape(d["shape"]).view(jnp.bfloat16)
+    else:
+        a = np.frombuffer(data, np.dtype(d["dtype"])).reshape(d["shape"])
+    return a
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any, extra: dict | None = None, process_index: int = 0, n_processes: int = 1):
+    """Synchronous save. Call on already-device_get'd host data for async."""
+    step_dir = os.path.join(ckpt_dir, f"step_{step:010d}")
+    os.makedirs(step_dir, exist_ok=True)
+    flat = _flatten(jax.device_get(tree))
+    payload = {
+        "step": step,
+        "extra": extra or {},
+        "arrays": {k: _pack_array(v) for k, v in flat.items()},
+    }
+    raw = msgpack.packb(payload, use_bin_type=True)
+    comp = zstandard.ZstdCompressor(level=3).compress(raw)
+    shard = os.path.join(step_dir, f"shard_{process_index:05d}.ckpt")
+    tmp = shard + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(struct.pack("<Q", len(raw)))
+        f.write(comp)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, shard)
+    # commit: manifest names the step (process 0 only on multihost)
+    if process_index == 0:
+        mtmp = os.path.join(ckpt_dir, MANIFEST + ".tmp")
+        with open(mtmp, "w") as f:
+            f.write(f"{step}\n{n_processes}\n")
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(mtmp, os.path.join(ckpt_dir, MANIFEST))
+    return shard
+
+
+def _load_shard(path: str) -> dict:
+    with open(path, "rb") as f:
+        rawlen = struct.unpack("<Q", f.read(8))[0]
+        comp = f.read()
+    raw = zstandard.ZstdDecompressor().decompress(comp, max_output_size=rawlen)
+    return msgpack.unpackb(raw, raw=False)
+
+
+def available_steps(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_"):
+            try:
+                steps.append(int(name.split("_")[1]))
+            except ValueError:
+                pass
+    return sorted(steps)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    mpath = os.path.join(ckpt_dir, MANIFEST)
+    if os.path.exists(mpath):
+        with open(mpath) as f:
+            return int(f.readline())
+    steps = available_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(
+    ckpt_dir: str,
+    template: Any,
+    step: int | None = None,
+    shardings: Any = None,
+    process_index: int = 0,
+):
+    """Restore into the structure of ``template``. ``shardings`` (matching
+    pytree of jax.sharding.Sharding or None) re-places arrays — possibly on
+    a different mesh than the one that wrote the checkpoint (elastic).
+    Falls back to the previous step if the newest shard is corrupt."""
+    candidates = [step] if step is not None else list(reversed(available_steps(ckpt_dir)))
+    last_err = None
+    for s in candidates:
+        shard = os.path.join(ckpt_dir, f"step_{s:010d}", f"shard_{process_index:05d}.ckpt")
+        try:
+            payload = _load_shard(shard)
+            arrays = {k: _unpack_array(v) for k, v in payload["arrays"].items()}
+            leaves_paths = jax.tree_util.tree_flatten_with_path(template)[0]
+            treedef = jax.tree.structure(template)
+            out = []
+            for path, leaf in leaves_paths:
+                key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+                if key not in arrays:
+                    raise KeyError(f"checkpoint missing leaf {key}")
+                a = arrays[key]
+                want_shape = tuple(leaf.shape)
+                if tuple(a.shape) != want_shape:
+                    raise ValueError(f"shape mismatch for {key}: {a.shape} vs {want_shape}")
+                out.append(a)
+            tree = jax.tree.unflatten(treedef, out)
+            if shardings is not None:
+                tree = jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)
+            else:
+                tree = jax.tree.map(jnp.asarray, tree)
+            return tree, payload["step"], payload.get("extra", {})
+        except Exception as e:  # corrupt/partial -> try older
+            last_err = e
+            continue
+    raise FileNotFoundError(f"no restorable checkpoint in {ckpt_dir}: {last_err}")
+
+
+def gc_checkpoints(ckpt_dir: str, keep: int = 3):
+    steps = available_steps(ckpt_dir)
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:010d}"), ignore_errors=True)
+
+
+class AsyncCheckpointer:
+    """Background writer thread; the train loop only pays device_get."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3, process_index: int = 0):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self.process_index = process_index
+        self.q: queue.Queue = queue.Queue(maxsize=2)
+        self.errors: list[Exception] = []
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        while True:
+            item = self.q.get()
+            try:
+                if item is None:
+                    return
+                step, tree, extra = item
+                save_checkpoint(self.ckpt_dir, step, tree, extra, self.process_index)
+                gc_checkpoints(self.ckpt_dir, self.keep)
+            except Exception as e:  # pragma: no cover
+                self.errors.append(e)
+            finally:
+                self.q.task_done()
+
+    def save(self, step: int, tree: Any, extra: dict | None = None):
+        host_tree = jax.device_get(tree)  # synchronous copy; write is async
+        self.q.put((step, host_tree, extra))
+
+    def wait(self):
+        """Block until all queued saves are durable; surface writer errors."""
+        self.q.join()
+        if self.errors:
+            raise self.errors[0]
+
+    def close(self):
+        self.wait()
+        self.q.put(None)
+        self._thread.join(timeout=10)

@@ -1,0 +1,70 @@
+"""Image-quality metrics from the paper (§III.B eq. 1-3) + detection IoU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mse(original, generated):
+    """Paper eq. (1). Images in [0, 255] convention for Table II parity."""
+    o = original.astype(jnp.float32)
+    g = generated.astype(jnp.float32)
+    return jnp.mean(jnp.square(o - g), axis=(-3, -2, -1))
+
+
+def psnr(original, generated, max_val: float = 255.0):
+    """Paper eq. (2): 10 log10((L-1)^2 / MSE)."""
+    m = mse(original, generated)
+    return 10.0 * jnp.log10(jnp.square(max_val) / jnp.maximum(m, 1e-12))
+
+
+def _gaussian_kernel(size: int = 11, sigma: float = 1.5):
+    x = jnp.arange(size, dtype=jnp.float32) - (size - 1) / 2.0
+    g = jnp.exp(-0.5 * jnp.square(x / sigma))
+    g = g / jnp.sum(g)
+    return jnp.outer(g, g)
+
+
+def ssim(original, generated, max_val: float = 255.0, size: int = 11, sigma: float = 1.5):
+    """Paper eq. (3), standard Gaussian-window SSIM, averaged over channels.
+
+    Inputs (B, H, W, C) in [0, max_val]."""
+    k1, k2 = 0.01, 0.03
+    c1, c2 = (k1 * max_val) ** 2, (k2 * max_val) ** 2
+    kern = _gaussian_kernel(size, sigma)[..., None, None]  # (s,s,1,1)
+
+    def filt(img):
+        B, H, W, C = img.shape
+        x = jnp.moveaxis(img, -1, 1).reshape(B * C, H, W, 1)
+        y = jax.lax.conv_general_dilated(
+            x, kern, (1, 1), "VALID", dimension_numbers=("NHWC", "HWIO", "NHWC")
+        )
+        return y.reshape(B, C, y.shape[1], y.shape[2]).transpose(0, 2, 3, 1)
+
+    o = original.astype(jnp.float32)
+    g = generated.astype(jnp.float32)
+    mu_o, mu_g = filt(o), filt(g)
+    var_o = filt(o * o) - mu_o**2
+    var_g = filt(g * g) - mu_g**2
+    cov = filt(o * g) - mu_o * mu_g
+    s = ((2 * mu_o * mu_g + c1) * (2 * cov + c2)) / (
+        (mu_o**2 + mu_g**2 + c1) * (var_o + var_g + c2)
+    )
+    return jnp.mean(s, axis=(-3, -2, -1))
+
+
+def to_uint8_range(x):
+    """[-1, 1] tanh output -> [0, 255]."""
+    return (jnp.clip(x, -1.0, 1.0) + 1.0) * 127.5
+
+
+def box_iou(a, b):
+    """a, b: (..., 4) as (x1, y1, x2, y2)."""
+    x1 = jnp.maximum(a[..., 0], b[..., 0])
+    y1 = jnp.maximum(a[..., 1], b[..., 1])
+    x2 = jnp.minimum(a[..., 2], b[..., 2])
+    y2 = jnp.minimum(a[..., 3], b[..., 3])
+    inter = jnp.maximum(x2 - x1, 0) * jnp.maximum(y2 - y1, 0)
+    area_a = jnp.maximum(a[..., 2] - a[..., 0], 0) * jnp.maximum(a[..., 3] - a[..., 1], 0)
+    area_b = jnp.maximum(b[..., 2] - b[..., 0], 0) * jnp.maximum(b[..., 3] - b[..., 1], 0)
+    return inter / jnp.maximum(area_a + area_b - inter, 1e-9)

@@ -1,0 +1,165 @@
+"""Optimizers from scratch (no optax in this environment).
+
+AdamW with fp32 moments, global-norm clipping, and schedule support.
+States are plain pytrees -> checkpointable/shardable like params
+(moments inherit each param's logical sharding axes).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+def constant_lr(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine(peak: float, warmup: int, total: int, floor: float = 0.0) -> Schedule:
+    def f(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + 0.5 * (peak - floor) * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+
+    return f
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype), tree), norm
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Schedule | float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip_norm: float | None = 1.0
+    # keep an fp32 master copy in the optimizer state so params (and hence
+    # FSDP all-gathers / grad reduce-scatters) can live in bf16 — halves
+    # the dominant collective traffic of FSDP training.
+    master_weights: bool = False
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else jnp.asarray(self.lr, jnp.float32)
+
+    def init(self, params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        st = {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+        if self.master_weights:
+            st["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+        return st
+
+    def abstract_state(self, abstract_params):
+        sds = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+        st = {
+            "m": jax.tree.map(sds, abstract_params),
+            "v": jax.tree.map(sds, abstract_params),
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        if self.master_weights:
+            st["master"] = jax.tree.map(sds, abstract_params)
+        return st
+
+    def update(self, grads, state, params):
+        step = state["step"] + 1
+        gnorm = jnp.zeros((), jnp.float32)
+        if self.grad_clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, self.grad_clip_norm)
+        b1, b2 = self.b1, self.b2
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+        lr = self._lr(step)
+
+        def upd(p, g, m, v, master=None):
+            g32 = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * jnp.square(g32)
+            mhat = m / bc1
+            vhat = v / bc2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            ref = master if master is not None else p.astype(jnp.float32)
+            if self.weight_decay:
+                delta = delta + self.weight_decay * ref
+            new_ref = ref - lr * delta
+            return new_ref.astype(p.dtype), m, v, new_ref
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(state["m"])
+        flat_v = jax.tree.leaves(state["v"])
+        flat_ma = jax.tree.leaves(state["master"]) if self.master_weights else [None] * len(flat_p)
+        out = [upd(*args) for args in zip(flat_p, flat_g, flat_m, flat_v, flat_ma)]
+        new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+        new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+        new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+        new_state = {"m": new_m, "v": new_v, "step": step}
+        if self.master_weights:
+            new_state["master"] = jax.tree.unflatten(treedef, [o[3] for o in out])
+        return new_p, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+@dataclasses.dataclass(frozen=True)
+class Adam(AdamW):
+    """Adam = AdamW with zero decoupled weight decay (pix2pix uses
+    Adam(2e-4, b1=0.5) per the paper's reference implementation)."""
+
+    weight_decay: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SGD:
+    lr: Schedule | float = 0.01
+    momentum: float = 0.9
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else jnp.asarray(self.lr, jnp.float32)
+
+    def init(self, params):
+        return {
+            "mom": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def abstract_state(self, abstract_params):
+        return {
+            "mom": jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), abstract_params),
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+
+    def update(self, grads, state, params):
+        step = state["step"] + 1
+        lr = self._lr(step)
+
+        def upd(p, g, m):
+            m = self.momentum * m + g.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * m).astype(p.dtype), m
+
+        flat_p, treedef = jax.tree.flatten(params)
+        out = [
+            upd(p, g, m)
+            for p, g, m in zip(flat_p, jax.tree.leaves(grads), jax.tree.leaves(state["mom"]))
+        ]
+        new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+        new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+        return new_p, {"mom": new_m, "step": step}, {"lr": lr}

@@ -1,0 +1,26 @@
+import os
+
+import jax
+import pytest
+
+# Smoke tests and benches run on ONE device; the dry-run alone forces 512
+# host devices (inside repro.launch.dryrun / subprocesses spawned here).
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.key(0)
+
+
+def run_subprocess(code: str, devices: int = 8, timeout: int = 480):
+    """Run a snippet in a subprocess with N fake devices (mesh tests)."""
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True, text=True, env=env, timeout=timeout)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-4000:]}"
+    return r.stdout

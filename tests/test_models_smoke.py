@@ -1,0 +1,93 @@
+"""Per-architecture smoke tests (assignment requirement): instantiate the
+REDUCED config of each family, run one forward + one train step on CPU,
+assert output shapes and no NaNs. The FULL configs are exercised only via
+the dry-run (ShapeDtypeStruct, no allocation)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_arch, build_model
+from repro.train.optimizer import AdamW
+from repro.train.steps import make_lm_train_step
+
+
+def _smoke_batch(spec, B=2, S=16):
+    cfg = spec.smoke
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, cfg.vocab, (B, S + 1)).astype(np.int32)
+    batch = {"tokens": jnp.asarray(toks[:, :-1]), "labels": jnp.asarray(toks[:, 1:])}
+    if spec.family == "whisper":
+        batch["frames"] = jnp.asarray(rng.normal(size=(B, cfg.n_frames, cfg.d_model)), jnp.float32)
+    if getattr(cfg, "mrope_sections", None):
+        pos = np.broadcast_to(np.arange(S, dtype=np.int32)[None, :, None], (B, S, 3))
+        batch["positions"] = jnp.asarray(pos)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_forward_and_train_step(arch):
+    spec = get_arch(arch)
+    cfg = spec.smoke
+    import dataclasses
+
+    cfg = dataclasses.replace(cfg, act_dtype=jnp.float32)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = _smoke_batch(spec)
+    B, S = batch["tokens"].shape
+
+    # forward
+    if spec.family == "whisper":
+        logits, aux = model(params, batch["frames"], batch["tokens"])
+    else:
+        logits, aux = model(params, batch["tokens"])
+    assert logits.shape == (B, S, cfg.vocab)
+    assert not bool(jnp.isnan(logits).any()), "NaN in logits"
+
+    # one train step
+    opt = AdamW(lr=1e-3)
+    step = jax.jit(make_lm_train_step(model, opt, loss_chunk=8))
+    params2, opt_state, metrics = step(params, opt.init(params), batch)
+    assert np.isfinite(float(metrics["loss"]))
+    # params changed
+    changed = any(
+        not np.allclose(a, b)
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params2))
+    )
+    assert changed
+
+
+@pytest.mark.parametrize("arch", ["gemma2_2b", "deepseek_v2_lite_16b", "mamba2_2_7b", "hymba_1_5b"])
+def test_arch_smoke_decode(arch):
+    """Prefill + decode consistency on the smoke configs."""
+    spec = get_arch(arch)
+    import dataclasses
+
+    cfg = dataclasses.replace(spec.smoke, act_dtype=jnp.float32)
+    if getattr(cfg, "moe", False):
+        # "dropping" MoE: full-batch forward may drop tokens past expert
+        # capacity while one-token decode never does; equality requires a
+        # no-drop capacity. Drop behaviour itself is covered in test_nn.
+        cfg = dataclasses.replace(cfg, capacity_factor=16.0)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    toks = jnp.asarray(np.random.default_rng(1).integers(0, cfg.vocab, (2, 8)), jnp.int32)
+    full, _ = model(params, toks)
+    caches = model.init_caches(2, 8, dtype=jnp.float32)
+    outs = []
+    for t in range(8):
+        lg, caches = model.decode_step(params, toks[:, t : t + 1], caches, t)
+        outs.append(lg)
+    dec = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(np.float32(full), np.float32(dec), atol=5e-2, rtol=1e-2)
+
+
+def test_param_count_estimates_close():
+    """Analytic n_params (used for 6ND) within 2% of actual param counts."""
+    for arch in ARCH_IDS:
+        spec = get_arch(arch)
+        model = build_model(spec.smoke)
+        actual = sum(int(np.prod(s.shape)) for s in jax.tree.leaves(model.abstract()))
+        est = spec.smoke.n_params()
+        assert abs(actual - est) / actual < 0.02, (arch, actual, est)

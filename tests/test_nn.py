@@ -1,0 +1,155 @@
+"""Unit tests for the nn layer: decode==full-forward consistency for every
+attention/SSM flavour, module system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import nn
+
+
+@pytest.fixture
+def key():
+    return jax.random.key(0)
+
+
+def test_linear_shapes_and_axes(key):
+    lin = nn.Linear(16, 32)
+    p = lin.init(key)
+    assert lin(p, jnp.ones((2, 16))).shape == (2, 32)
+    assert lin.axes() == {"w": ("embed", "mlp")}
+    ab = lin.abstract()
+    assert ab["w"].shape == (16, 32)
+
+
+def test_stacked_params(key):
+    st = nn.Stacked(nn.Linear(8, 8), 4)
+    p = st.init(key)
+    assert p["w"].shape == (4, 8, 8)
+    assert st.axes()["w"] == ("layers", "embed", "mlp")
+    # stacked layers must differ (independent rng per layer)
+    assert not np.allclose(p["w"][0], p["w"][1])
+
+
+def test_rmsnorm_unit_scale(key):
+    norm = nn.RMSNorm(64)
+    p = norm.init(key)
+    x = jax.random.normal(key, (4, 64)) * 10
+    y = norm(p, x)
+    rms = jnp.sqrt(jnp.mean(jnp.square(y), -1))
+    assert np.allclose(rms, 1.0, atol=1e-3)
+
+
+def _decode_matches_forward(attn, p, x, window=None, atol=2e-4):
+    B, S, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    full = attn(p, x, pos, window=window)
+    cache = attn.init_cache(B, S, dtype=jnp.float32)
+    outs = []
+    for t in range(S):
+        y, cache = attn.decode(p, x[:, t : t + 1], cache, t, window=window)
+        outs.append(y)
+    dec = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(np.float32(full), np.float32(dec), atol=atol)
+
+
+def test_gqa_decode_matches(key):
+    attn = nn.Attention(64, 8, 2, 16)
+    _decode_matches_forward(attn, attn.init(key), jax.random.normal(key, (2, 8, 64)))
+
+
+def test_gqa_softcap_window_decode_matches(key):
+    attn = nn.Attention(64, 4, 1, 16, softcap=30.0)
+    _decode_matches_forward(attn, attn.init(key), jax.random.normal(key, (2, 8, 64)), window=3)
+
+
+def test_ring_buffer_cache_matches(key):
+    """Window-sized (ring) cache must equal full-cache attention."""
+    attn = nn.Attention(32, 4, 2, 8)
+    p = attn.init(key)
+    x = jax.random.normal(key, (1, 10, 32))
+    pos = jnp.arange(10)[None]
+    full = attn(p, x, pos, window=4)
+    cache = attn.init_cache(1, 4, dtype=jnp.float32)  # ring = window size
+    outs = []
+    for t in range(10):
+        y, cache = attn.decode(p, x[:, t : t + 1], cache, t, window=4)
+        outs.append(y)
+    np.testing.assert_allclose(np.float32(full), np.float32(jnp.concatenate(outs, 1)), atol=2e-4)
+
+
+def test_mla_decode_and_absorb_match(key):
+    mla = nn.MLAAttention(64, 4, kv_lora=32, qk_nope_dim=16, qk_rope_dim=8, v_head_dim=16)
+    p = mla.init(key)
+    x = jax.random.normal(key, (2, 8, 64))
+    pos = jnp.broadcast_to(jnp.arange(8)[None], (2, 8))
+    full = mla(p, x, pos)
+    for absorb in (False, True):
+        m2 = nn.MLAAttention(64, 4, kv_lora=32, qk_nope_dim=16, qk_rope_dim=8, v_head_dim=16, absorb=absorb)
+        cache = m2.init_cache(2, 8, dtype=jnp.float32)
+        outs = []
+        for t in range(8):
+            y, cache = m2.decode(p, x[:, t : t + 1], cache, t)
+            outs.append(y)
+        np.testing.assert_allclose(np.float32(full), np.float32(jnp.concatenate(outs, 1)), atol=2e-4)
+
+
+def test_chunked_attention_matches_dense(key):
+    dense = nn.Attention(32, 4, 2, 8, attn_chunk=0)
+    chunked = nn.Attention(32, 4, 2, 8, attn_chunk=4)
+    p = dense.init(key)
+    x = jax.random.normal(key, (2, 16, 32))
+    pos = jnp.broadcast_to(jnp.arange(16)[None], (2, 16))
+    np.testing.assert_allclose(
+        np.float32(dense(p, x, pos, window=6)), np.float32(chunked(p, x, pos, window=6)), atol=2e-4
+    )
+
+
+def test_ssd_chunked_vs_naive_recurrence(key):
+    b, s, h, p_, g, n = 2, 16, 4, 8, 2, 8
+    x = jax.random.normal(key, (b, s, h, p_))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.key(1), (b, s, h)))
+    A = -jnp.exp(jax.random.normal(jax.random.key(2), (h,)))
+    B = jax.random.normal(jax.random.key(3), (b, s, g, n))
+    C = jax.random.normal(jax.random.key(4), (b, s, g, n))
+    state = jnp.zeros((b, h, p_, n))
+    Bh, Ch = jnp.repeat(B, h // g, 2), jnp.repeat(C, h // g, 2)
+    ys = []
+    for t in range(s):
+        y, state = nn.ssd_decode_step(state, x[:, t], dt[:, t], A, B[:, t], C[:, t])
+        ys.append(y)
+    naive = jnp.stack(ys, 1)
+    for chunk in (4, 8, 16, 5):  # incl. non-divisible (padding path)
+        out = nn.ssd_chunked(x, dt, A, B, C, chunk=chunk)
+        np.testing.assert_allclose(np.float32(out), np.float32(naive), atol=1e-4)
+
+
+def test_mamba_block_decode_matches(key):
+    mb = nn.Mamba2Block(32, d_state=16, head_dim=8, chunk=4)
+    p = mb.init(key)
+    x = jax.random.normal(key, (2, 8, 32))
+    full = mb(p, x)
+    cache = mb.init_cache(2, dtype=jnp.float32)
+    outs = []
+    for t in range(8):
+        y, cache = mb.decode(p, x[:, t : t + 1], cache)
+        outs.append(y)
+    np.testing.assert_allclose(np.float32(full), np.float32(jnp.concatenate(outs, 1)), atol=2e-3)
+
+
+def test_mrope_reduces_to_rope_for_text(key):
+    x = jax.random.normal(key, (2, 6, 4, 16))
+    pos = jnp.broadcast_to(jnp.arange(6)[None], (2, 6))
+    pos3 = jnp.broadcast_to(pos[..., None], (2, 6, 3))
+    a = nn.apply_rope(x, pos)
+    b = nn.apply_mrope(x, pos3, (3, 3, 2))
+    np.testing.assert_allclose(np.float32(a), np.float32(b), atol=1e-5)
+
+
+def test_conv_transpose_torch_semantics(key):
+    # out = stride*(in-1) + k - 2*pad
+    d = nn.ConvTranspose2D(3, 5, 4, 2, padding=1)
+    p = d.init(key)
+    assert d(p, jnp.ones((1, 8, 8, 3))).shape == (1, 16, 16, 5)
+    d0 = nn.ConvTranspose2D(3, 5, 4, 2, padding=0)
+    assert d0(d0.init(key), jnp.ones((1, 8, 8, 3))).shape == (1, 18, 18, 5)

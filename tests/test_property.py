@@ -1,0 +1,122 @@
+"""Hypothesis property tests on system invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro import core, nn
+from repro.core.constraints import DLA_ANALOGUE_CONSTRAINTS
+from repro.core.engine import jetson_orin_engines
+from repro.core.graph import LayerGraph, conv_meta, pointwise_meta
+from repro.models import Pix2PixConfig, Pix2PixGenerator
+from repro.train.optimizer import AdamW
+from repro.train.metrics import psnr, ssim, mse
+
+GPU, DLA = jetson_orin_engines(constraints_dla=DLA_ANALOGUE_CONSTRAINTS)
+
+
+@st.composite
+def layer_graphs(draw):
+    """Random conv/deconv chains with coherent shapes."""
+    n = draw(st.integers(3, 12))
+    h, c = 64, draw(st.sampled_from([3, 8, 16]))
+    layers = []
+    for i in range(n):
+        kind = draw(st.sampled_from(["conv", "deconv", "act", "bn"]))
+        if kind == "conv" and h >= 8:
+            co = draw(st.sampled_from([8, 16, 32]))
+            layers.append(conv_meta(i, f"conv{i}", 1, h, h, c, co, 4, 2, 1))
+            h, c = h // 2, co
+        elif kind == "deconv" and h <= 64:
+            co = draw(st.sampled_from([8, 16]))
+            pad = draw(st.sampled_from([0, 1]))
+            layers.append(conv_meta(i, f"deconv{i}", 1, h, h, c, co, 4, 2, pad, transposed=True))
+            h, c = 2 * h + (2 - 2 * pad), co
+        else:
+            layers.append(pointwise_meta(i, f"{kind}{i}", kind, (1, h, h, c)))
+    return LayerGraph("hyp", layers).renumber()
+
+
+@given(layer_graphs())
+@settings(max_examples=25, deadline=None)
+def test_surgery_removes_all_matched_illegality(g):
+    fixed, report = core.apply_surgery(g, DLA, "cropping")
+    ill, _ = core.check_graph(fixed, DLA)
+    # cropping fixes every deconv-padding violation; nothing else is illegal
+    assert not ill
+    # surgery preserves total conv/deconv compute flops
+    orig_flops = sum(l.flops for l in g if l.kind in ("conv", "deconv"))
+    new_deconv_flops = sum(l.flops for l in fixed if l.kind == "deconv")
+    assert new_deconv_flops <= orig_flops + 1e-6
+
+
+@given(layer_graphs(), layer_graphs())
+@settings(max_examples=15, deadline=None)
+def test_haxconn_invariants(ga, gb):
+    r = core.haxconn_schedule(ga, gb, DLA, GPU)
+    s = r.schedule
+    # partitions cover each model exactly once
+    assert 1 <= r.p_a < len(ga) and 1 <= r.p_b < len(gb)
+    # cycle >= each engine's busy time; idle fractions within [0,1]
+    for e in ("DLA", "GPU"):
+        assert s.cycle_time >= s.loads[e].busy - 1e-12
+        assert -1e-9 <= s.idle_fraction(e) <= 1.0
+    # optimal schedule can't be slower than a fixed midpoint schedule
+    mid = core.haxconn_schedule(ga, gb, DLA, GPU, fixed=(len(ga) // 2, len(gb) // 2))
+    assert s.cycle_time <= mid.schedule.cycle_time + 1e-12
+
+
+@given(
+    st.integers(0, 2**32 - 1),
+    st.sampled_from([16, 32]),
+    st.sampled_from([(4, 2, 1)]),
+)
+@settings(max_examples=10, deadline=None)
+def test_deconv_pad_equals_valid_plus_crop(seed, hw, ksp):
+    """The paper's eq.(6) == eq.(5)+(7) equivalence, exact."""
+    k, s, p = ksp
+    key = jax.random.key(seed)
+    x = jax.random.normal(key, (1, hw, hw, 4))
+    w = jax.random.normal(jax.random.key(seed ^ 1), (k, k, 4, 6)) * 0.2
+    pad = nn.ConvTranspose2D(4, 6, k, s, padding=p, use_bias=False)
+    nopad = nn.ConvTranspose2D(4, 6, k, s, padding=0, use_bias=False)
+    y_pad = pad({"w": w}, x)
+    y_crop = nn.Crop2D(p)(None, nopad({"w": w}, x))
+    np.testing.assert_allclose(np.float32(y_pad), np.float32(y_crop), atol=1e-5)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_pix2pix_padded_equals_cropping_weights_interchangeable(seed):
+    cfg_p = Pix2PixConfig(img_size=32, base=4, deconv_mode="padded")
+    cfg_c = dataclasses.replace(cfg_p, deconv_mode="cropping")
+    gp, gc = Pix2PixGenerator(cfg_p), Pix2PixGenerator(cfg_c)
+    params = gp.init(jax.random.key(seed))
+    x = jax.random.normal(jax.random.key(seed ^ 3), (1, 32, 32, 3))
+    np.testing.assert_allclose(np.float32(gp(params, x)), np.float32(gc(params, x)), atol=1e-5)
+
+
+@given(st.integers(0, 2**31 - 1), st.floats(1e-4, 1e-1))
+@settings(max_examples=10, deadline=None)
+def test_adamw_step_bounded(seed, lr):
+    """Adam update magnitude is bounded by ~lr per coordinate."""
+    opt = AdamW(lr=lr, grad_clip_norm=None, weight_decay=0.0)
+    p = {"w": jax.random.normal(jax.random.key(seed), (16,))}
+    st_ = opt.init(p)
+    g = {"w": jax.random.normal(jax.random.key(seed ^ 5), (16,)) * 100}
+    p2, st_, _ = opt.update(g, st_, p)
+    assert float(jnp.abs(p2["w"] - p["w"]).max()) <= 10.0 * lr + 1e-6
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_metric_identities(seed):
+    img = jax.random.uniform(jax.random.key(seed), (1, 32, 32, 1)) * 255
+    assert float(mse(img, img).mean()) == 0.0
+    assert float(ssim(img, img).mean()) > 0.99
+    assert float(psnr(img, img).mean()) > 80
+    noisy = img + jax.random.normal(jax.random.key(seed ^ 7), img.shape) * 25
+    assert float(ssim(img, noisy).mean()) < float(ssim(img, img).mean())
+    assert float(psnr(img, noisy).mean()) < 40

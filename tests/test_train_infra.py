@@ -1,0 +1,221 @@
+"""Training substrate: optimizer, checkpoint fault-tolerance, loop resume,
+straggler watchdog, GAN step, metrics, data pipeline."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import (
+    FailingIterator,
+    PhantomConfig,
+    Prefetcher,
+    detection_batches,
+    make_phantom_pair,
+    phantom_batches,
+    token_batches,
+)
+from repro.models import LMConfig, Pix2Pix, Pix2PixConfig, TransformerLM, YOLOv8, YOLOv8Config
+from repro.train import (
+    LoopConfig,
+    available_steps,
+    gc_checkpoints,
+    restore_checkpoint,
+    run_train_loop,
+    save_checkpoint,
+)
+from repro.train.optimizer import Adam, AdamW, SGD, warmup_cosine
+from repro.train.steps import make_lm_train_step, make_pix2pix_train_step, make_yolo_train_step
+
+
+def test_adamw_converges_quadratic():
+    opt = AdamW(lr=0.1)
+    p = {"w": jnp.array([3.0, -2.0])}
+    st = opt.init(p)
+    for _ in range(200):
+        p, st, _ = opt.update({"w": 2 * p["w"]}, st, p)
+    assert float(jnp.abs(p["w"]).max()) < 1e-2
+
+
+def test_warmup_cosine_schedule():
+    sched = warmup_cosine(1.0, 10, 100)
+    assert float(sched(jnp.asarray(5))) == pytest.approx(0.5)
+    assert float(sched(jnp.asarray(10))) == pytest.approx(1.0, abs=1e-2)
+    assert float(sched(jnp.asarray(100))) < 1e-3
+
+
+def test_sgd_momentum_descends():
+    opt = SGD(lr=0.05, momentum=0.5)
+    p = {"w": jnp.array([2.0])}
+    st = opt.init(p)
+    for _ in range(100):
+        p, st, _ = opt.update({"w": 2 * p["w"]}, st, p)
+    assert abs(float(p["w"][0])) < 0.1
+
+
+def test_lm_learns_synthetic_markov():
+    cfg = LMConfig(name="t", n_layers=2, d_model=64, n_q=4, n_kv=2, head_dim=16, d_ff=128,
+                   vocab=512, act_dtype=jnp.float32)
+    lm = TransformerLM(cfg)
+    p = lm.init(jax.random.key(1))
+    opt = AdamW(lr=3e-3)
+    st = opt.init(p)
+    step = jax.jit(make_lm_train_step(lm, opt, loss_chunk=32))
+    data = token_batches(8, 64, 512, seed=0)
+    first = None
+    for i in range(50):
+        batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+        p, st, m = step(p, st, batch)
+        if first is None:
+            first = float(m["ce"])
+    assert float(m["ce"]) < first - 0.5
+
+
+def test_microbatched_step_matches_full_batch():
+    cfg = LMConfig(name="t", n_layers=2, d_model=32, n_q=2, n_kv=2, head_dim=16, d_ff=64,
+                   vocab=128, act_dtype=jnp.float32)
+    lm = TransformerLM(cfg)
+    p = lm.init(jax.random.key(0))
+    opt = AdamW(lr=1e-3)
+    data = token_batches(8, 16, 128, seed=3)
+    batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+    p1, _, m1 = jax.jit(make_lm_train_step(lm, opt))(p, opt.init(p), batch)
+    p4, _, m4 = jax.jit(make_lm_train_step(lm, opt, n_micro=4))(p, opt.init(p), batch)
+    assert float(m1["ce"]) == pytest.approx(float(m4["ce"]), rel=1e-4)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)):
+        np.testing.assert_allclose(np.float32(a), np.float32(b), atol=2e-5)
+
+
+def test_gan_step_improves_l1():
+    cfg = Pix2PixConfig(img_size=32, base=8, deconv_mode="cropping")
+    model = Pix2Pix(cfg)
+    params = model.init(jax.random.key(0))
+    g_opt = Adam(lr=5e-4, b1=0.5)
+    d_opt = Adam(lr=5e-4, b1=0.5)
+    opt_state = {"g": g_opt.init(params["generator"]), "d": d_opt.init(params["discriminator"])}
+    step = jax.jit(make_pix2pix_train_step(model, g_opt, d_opt))
+    b = next(phantom_batches(2, PhantomConfig(img_size=32), seed=1))
+    batch = {"src": jnp.asarray(b["src"]), "dst": jnp.asarray(b["dst"])}
+    l1s = []
+    for i in range(10):
+        params, opt_state, m = step(params, opt_state, batch, jax.random.key(i))
+        l1s.append(float(m["g_l1"]))
+    assert l1s[-1] < l1s[0]
+
+
+def test_yolo_step_runs_and_descends():
+    cfg = YOLOv8Config(img_size=64)
+    model = YOLOv8(cfg)
+    params = model.init(jax.random.key(0))
+    opt = AdamW(lr=1e-3)
+    st = opt.init(params)
+    step = jax.jit(make_yolo_train_step(model, opt))
+    data = detection_batches(2, PhantomConfig(img_size=64, lesion_p=1.0), seed=0)
+    b = next(data)
+    batch = jax.tree.map(jnp.asarray, b)
+    losses = []
+    for _ in range(8):
+        params, st, m = step(params, st, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+
+
+# ---- checkpointing fault tolerance ----------------------------------------
+
+
+def _tree():
+    return {"a": jnp.arange(12.0).reshape(3, 4), "b": {"c": jnp.ones((2,), jnp.bfloat16)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    t = _tree()
+    save_checkpoint(str(tmp_path), 5, t)
+    got, step, _ = restore_checkpoint(str(tmp_path), t)
+    assert step == 5
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+
+def test_checkpoint_corruption_falls_back(tmp_path):
+    t = _tree()
+    save_checkpoint(str(tmp_path), 1, t)
+    save_checkpoint(str(tmp_path), 2, t)
+    shard = tmp_path / "step_0000000002" / "shard_00000.ckpt"
+    data = bytearray(shard.read_bytes())
+    data[50:60] = b"corrupted!"
+    shard.write_bytes(bytes(data))
+    _, step, _ = restore_checkpoint(str(tmp_path), t)
+    assert step == 1
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    save_checkpoint(str(tmp_path), 1, _tree())
+    bad = {"a": jnp.zeros((4, 4)), "b": {"c": jnp.ones((2,), jnp.bfloat16)}}
+    with pytest.raises(FileNotFoundError):
+        restore_checkpoint(str(tmp_path), bad)
+
+
+def test_checkpoint_gc(tmp_path):
+    for s in (1, 2, 3, 4):
+        save_checkpoint(str(tmp_path), s, _tree())
+    gc_checkpoints(str(tmp_path), keep=2)
+    assert available_steps(str(tmp_path)) == [3, 4]
+
+
+def test_loop_resume_and_crash_recovery(tmp_path):
+    cfg = LMConfig(name="t", n_layers=1, d_model=32, n_q=2, n_kv=2, head_dim=16, d_ff=64,
+                   vocab=128, act_dtype=jnp.float32)
+    lm = TransformerLM(cfg)
+    p = lm.init(jax.random.key(0))
+    opt = AdamW(lr=1e-3)
+    st = opt.init(p)
+    step = jax.jit(make_lm_train_step(lm, opt))
+    data = token_batches(2, 16, 128, seed=0)
+
+    def it():
+        while True:
+            yield {k: jnp.asarray(v) for k, v in next(data).items()}
+
+    d = str(tmp_path)
+    out = run_train_loop(step, p, st, it(), LoopConfig(8, d, ckpt_every=4, log_every=100), log_fn=lambda s: None)
+    assert out.step == 8
+    # resume
+    out2 = run_train_loop(step, p, st, it(), LoopConfig(12, d, ckpt_every=4, log_every=100), log_fn=lambda s: None)
+    assert out2.step == 12
+    # crash -> rescue checkpoint -> resume completes
+    with pytest.raises(RuntimeError):
+        run_train_loop(step, out2.params, out2.opt_state, FailingIterator(it(), 1),
+                       LoopConfig(20, d, ckpt_every=4, log_every=100), log_fn=lambda s: None)
+    out3 = run_train_loop(step, p, st, it(), LoopConfig(15, d, ckpt_every=4, log_every=100), log_fn=lambda s: None)
+    assert out3.step == 15
+
+
+def test_straggler_watchdog():
+    import time
+
+    calls = {"n": 0}
+
+    def slow_step(p, s, b):
+        calls["n"] += 1
+        if calls["n"] == 5:
+            time.sleep(0.25)
+        return p, s, {"loss": jnp.zeros(())}
+
+    def it():
+        while True:
+            yield {}
+
+    out = run_train_loop(slow_step, {"w": jnp.zeros(())}, {}, it(),
+                         LoopConfig(8, None, log_every=100, straggler_factor=3.0), log_fn=lambda s: None)
+    assert any(s[0] == 5 for s in out.straggler_events)
+
+
+def test_prefetcher_and_phantoms():
+    it = Prefetcher(phantom_batches(2, PhantomConfig(img_size=32), seed=0), depth=2)
+    b = next(it)
+    assert b["src"].shape == (2, 32, 32, 3)
+    assert b["src"].min() >= -1.0 and b["src"].max() <= 1.0
+    it.close()
+    ct, mri, boxes, labels = make_phantom_pair(np.random.default_rng(0), PhantomConfig(img_size=64, lesion_p=1.0))
+    assert boxes.shape[0] == 1 and 0 <= boxes[0][0] < boxes[0][2] <= 1
