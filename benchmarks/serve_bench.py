@@ -1,0 +1,101 @@
+"""Multi-stream serving benchmark: aggregate FPS and latency percentiles
+vs concurrent stream count, written to ``BENCH_serve.json`` so successive
+PRs have a perf trajectory to compare against.
+
+  PYTHONPATH=src python benchmarks/serve_bench.py --smoke
+  PYTHONPATH=src python benchmarks/serve_bench.py --streams 1,2,4,8 --frames 16
+
+Each run serves K Pix2Pix reconstruction streams plus one YOLOv8
+detection stream through the planned ``StreamExecutor`` on CPU; absolute
+numbers are container-dependent, the *shape* (FPS vs K, tail latency
+growth) is the tracked signal.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+
+
+def run_point(n_pix_streams: int, frames_per_stream: int, img: int, base: int, microbatch: int) -> dict:
+    import jax
+
+    from repro.serve import MultiStreamServer, build_pix_yolo_serving
+
+    models, plan, streams, _ = build_pix_yolo_serving(img=img, base=base, n_pix=n_pix_streams, n_yolo=1)
+    server = MultiStreamServer(models, plan, streams, max_queue=4, microbatch=microbatch)
+
+    t0 = time.perf_counter()
+    for t in range(frames_per_stream):
+        for s in streams:
+            server.submit(s.model_index, jax.random.normal(jax.random.key(t), (1, img, img, 3)))
+        server.pump()
+    server.drain()
+    wall = time.perf_counter() - t0
+    rep = server.report()
+    return {
+        "pix_streams": n_pix_streams,
+        "yolo_streams": 1,
+        "streams": len(streams),
+        "frames": rep["frames"],
+        "wall_s": wall,
+        "aggregate_fps": rep["frames"] / wall,
+        "latency_p50_ms": rep["latency_p50_ms"],
+        "latency_p99_ms": rep["latency_p99_ms"],
+        "planned_cycle_ms": plan.cycle_time * 1e3,
+        "planned_partitions": plan.partitions,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="tiny fast sweep for CI")
+    ap.add_argument("--streams", default=None, help="comma-separated pix-stream counts")
+    ap.add_argument("--frames", type=int, default=None, help="frames per stream")
+    ap.add_argument("--img", type=int, default=None)
+    ap.add_argument("--base", type=int, default=8)
+    ap.add_argument("--microbatch", type=int, default=2)
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args()
+
+    if args.smoke:
+        counts = [1, 2, 4]
+        frames = args.frames or 3
+        img = args.img or 32
+    else:
+        counts = [1, 2, 4, 8]
+        frames = args.frames or 12
+        img = args.img or 64
+    if args.streams:
+        counts = [int(x) for x in args.streams.split(",")]
+
+    results = []
+    for k in counts:
+        r = run_point(k, frames, img, args.base, args.microbatch)
+        results.append(r)
+        print(
+            f"streams={r['streams']:>2}  aggregate={r['aggregate_fps']:7.2f} FPS  "
+            f"p50={r['latency_p50_ms']:8.1f} ms  p99={r['latency_p99_ms']:8.1f} ms"
+        )
+
+    peak = max(results, key=lambda r: r["aggregate_fps"])
+    payload = {
+        "bench": "multi_stream_serve",
+        "smoke": bool(args.smoke),
+        "img_size": img,
+        "frames_per_stream": frames,
+        "microbatch": args.microbatch,
+        "platform": platform.platform(),
+        "aggregate_fps": peak["aggregate_fps"],
+        "latency_p50_ms": peak["latency_p50_ms"],
+        "latency_p99_ms": peak["latency_p99_ms"],
+        "results": results,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -20,12 +20,21 @@ from .constraints import (
     check_graph,
 )
 from .surgery import RULES, SurgeryReport, apply_surgery, substitute_pix2pix
-from .cost_model import graph_time, layer_time, segment_cost, transfer_time
+from .cost_model import (
+    balanced_partition_point,
+    graph_time,
+    layer_time,
+    segment_cost,
+    transfer_time,
+)
 from .scheduler import (
     HaxConnResult,
+    ModelRoute,
+    NModelPlan,
     Schedule,
     haxconn_schedule,
     naive_schedule,
+    nmodel_schedule,
     peer_utilization,
     standalone_schedule,
 )

@@ -99,3 +99,20 @@ def partition_boundary_bytes(graph: LayerGraph, p: int) -> float:
     if p <= 0 or p >= len(graph):
         return 0.0
     return graph[p - 1].boundary_bytes
+
+
+def balanced_partition_point(graph: LayerGraph, head_engine, tail_engine, candidates=None) -> int:
+    """Partition point that best balances head time on ``head_engine``
+    against tail time on ``tail_engine`` — the warm start for the N-model
+    planner's coordinate descent (and a decent heuristic on its own)."""
+    cands = list(candidates) if candidates is not None else list(range(1, len(graph)))
+    if not cands:
+        raise ValueError(f"{graph.model_name}: no interior partition point")
+    prefix = [0.0]
+    for l in graph:
+        prefix.append(prefix[-1] + layer_time(l, head_engine))
+    suffix = [0.0]
+    for l in reversed(list(graph)):
+        suffix.append(suffix[-1] + layer_time(l, tail_engine))
+    suffix.reverse()
+    return min(cands, key=lambda p: abs(prefix[p] - suffix[p]))

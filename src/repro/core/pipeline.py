@@ -83,7 +83,13 @@ class TickLog:
 
 
 class TwoModelPipeline:
-    """Steady-state double-buffered execution of a HaX-CoNN schedule."""
+    """Steady-state double-buffered execution of a HaX-CoNN schedule.
+
+    Thin wrapper over the generic ``serve.StreamExecutor``: the two-model
+    swap schedule is expressed as two counter-phased routes (A: con then
+    flex, B: flex then con) with one stream per model, which the executor
+    runs tick-for-tick as the original phase-1/phase-2 loop did.
+    """
 
     def __init__(
         self,
@@ -103,34 +109,32 @@ class TwoModelPipeline:
     def run_stream(self, frames_a, frames_b):
         """frames_*: lists of model inputs (equal length). Returns
         (outputs_a, outputs_b) in input order + populates ``self.log``."""
+        from ..serve.executor import StreamExecutor  # lazy: serve imports this module
+        from ..serve.streams import StreamSpec
+        from .scheduler import ModelRoute
+
         assert len(frames_a) == len(frames_b)
-        n = len(frames_a)
-        outs_a, outs_b = [], []
-        in_flight_a = in_flight_b = None
         la, lb = len(self.a.ops), len(self.b.ops)
-        for t in range(n + 1):
-            # phase 2 of previous frame (counter-phased on the peer engines)
-            if in_flight_a is not None:
-                st = self.a.run_segment(self.place_flex(in_flight_a), self.pa, la)
-                outs_a.append(self.a.finalize(st))
-                self.log.append(TickLog(t, "flex", f"A[{self.pa}:{la})#f{t-1}"))
-            if in_flight_b is not None:
-                st = self.b.run_segment(self.place_con(in_flight_b), self.pb, lb)
-                outs_b.append(self.b.finalize(st))
-                self.log.append(TickLog(t, "con", f"B[{self.pb}:{lb})#f{t-1}"))
-            # phase 1 of the current frame
-            if t < n:
-                in_flight_a = self.a.run_segment(
-                    self.place_con(self.a.init_state(frames_a[t])), 0, self.pa
-                )
-                self.log.append(TickLog(t, "con", f"A[0:{self.pa})#f{t}"))
-                in_flight_b = self.b.run_segment(
-                    self.place_flex(self.b.init_state(frames_b[t])), 0, self.pb
-                )
-                self.log.append(TickLog(t, "flex", f"B[0:{self.pb})#f{t}"))
-            else:
-                in_flight_a = in_flight_b = None
-        return outs_a, outs_b
+        routes = [
+            ModelRoute(self.a.name, self.pa, [(0, 0, self.pa), (1, self.pa, la)]),
+            ModelRoute(self.b.name, self.pb, [(1, 0, self.pb), (0, self.pb, lb)]),
+        ]
+        ex = StreamExecutor(
+            [self.a, self.b],
+            routes,
+            [StreamSpec("A", 0), StreamSpec("B", 1)],
+            max_queue=max(1, len(frames_a)),
+            place_fns=[self.place_con, self.place_flex],
+            engine_names=["con", "flex"],
+            model_labels=["A", "B"],
+        )
+        for fa, fb in zip(frames_a, frames_b):
+            ok = ex.submit(0, fa) and ex.submit(1, fb)
+            if not ok:
+                raise RuntimeError("pipeline frame queue refused a frame (depth mis-sized)")
+        outs = ex.run_until_drained()
+        self.log = ex.log
+        return outs["A"], outs["B"]
 
 
 def submesh_placers(mesh_devices, n_con: int):

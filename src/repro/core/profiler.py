@@ -15,6 +15,15 @@ import jax.numpy as jnp
 from .graph import LayerGraph
 
 
+def cost_analysis_dict(compiled) -> dict:
+    """Normalize ``compiled.cost_analysis()`` across jax versions: newer
+    releases return a one-element list of dicts, older ones the dict."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
 @functools.lru_cache(maxsize=512)
 def _conv_cost(in_shape, kernel, stride, padding, c_out, transposed, dtype_str):
     dtype = jnp.dtype(dtype_str)
@@ -40,7 +49,7 @@ def _conv_cost(in_shape, kernel, stride, padding, c_out, transposed, dtype_str):
             )
 
     compiled = jax.jit(f).lower(x, w).compile()
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled)
     return float(ca.get("flops", 0.0)), float(ca.get("bytes accessed", 0.0))
 
 

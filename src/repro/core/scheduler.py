@@ -19,10 +19,12 @@ Three scheduling modes, exactly as evaluated by the paper:
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import math
 
 from .cost_model import (
     SegmentCost,
+    balanced_partition_point,
     graph_time,
     partition_boundary_bytes,
     segment_cost,
@@ -247,3 +249,212 @@ def haxconn_schedule(
         ],
     )
     return HaxConnResult(sched, pa, pb, {"constrained": t_con, "flexible": t_flex})
+
+
+# ---------------------------------------------------------------------------
+# N-model generalization (multi-stream serving planner)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ModelRoute:
+    """Per-model execution route: ordered (engine_index, lo, hi) segments
+    covering [0, L). Model i's pair under E engines is
+    (i % E, (i+1) % E) — the counter-phased assignment that reduces to the
+    HaX-CoNN swap schedule at N=2, E=2."""
+
+    model: str
+    partition: int
+    segments: list[tuple[int, int, int]]  # (engine_index, lo, hi)
+
+
+@dataclasses.dataclass
+class NModelPlan:
+    schedule: Schedule
+    routes: list[ModelRoute]
+    partitions: list[int]
+    engine_times: dict[str, float]  # steady-state per-cycle occupancy
+    flex_index: int  # engine absorbing fallback work
+
+    @property
+    def cycle_time(self) -> float:
+        return self.schedule.cycle_time
+
+
+def _flex_engine_index(engines) -> int:
+    """The fallback target: fewest constraints, ties to the last engine
+    (callers conventionally list constrained engines first)."""
+    return min(range(len(engines)), key=lambda i: (len(engines[i].constraints), -i))
+
+
+def _model_pair(i: int, n_engines: int) -> tuple[int, int]:
+    return i % n_engines, (i + 1) % n_engines
+
+
+def _make_model_cost_fn(graphs, engines, allow_fallback, flex_idx):
+    """Memoized per-(model, partition) segment costs: a coordinate-descent
+    trial changes one model's point, so the other models' costs recur."""
+    cache: dict[tuple[int, int], tuple] = {}
+    E = len(engines)
+    flex = engines[flex_idx]
+
+    def cost(i: int, p: int):
+        key = (i, p)
+        if key not in cache:
+            g = graphs[i]
+            e1, e2 = _model_pair(i, E)
+            c1 = segment_cost(g, 0, p, engines[e1], flex, allow_fallback and e1 != flex_idx)
+            c2 = segment_cost(g, p, len(g), engines[e2], flex, allow_fallback and e2 != flex_idx)
+            x = transfer_time(partition_boundary_bytes(g, p), engines[e1]) if e1 != e2 else 0.0
+            cache[key] = (e1, e2, c1, c2, x)
+        return cache[key]
+
+    return cost
+
+
+def _evaluate_vector(graphs, engines, pvec, allow_fallback, flex_idx, cost_fn=None):
+    """Steady-state per-engine occupancy for one partition vector.
+
+    Accumulation mirrors ``_evaluate_pair`` term-for-term (segment elapsed
+    first, then partition transfers, then fallback steals) so that at
+    N=2/E=2 the floating-point cycle time is bit-identical to
+    ``haxconn_schedule`` and the argmin selects the same partitions.
+    """
+    if cost_fn is None:
+        cost_fn = _make_model_cost_fn(graphs, engines, allow_fallback, flex_idx)
+    E = len(engines)
+    t = [0.0] * E  # occupancy (compute + transfers + stalls charged here)
+    busy = [0.0] * E  # productive compute only
+    per_model = []
+    for i, p in enumerate(pvec):
+        e1, e2, c1, c2, x = cost_fn(i, p)
+        t[e1] += c1.elapsed
+        t[e2] += c2.elapsed
+        busy[e1] += c1.engine_busy
+        busy[e2] += c2.engine_busy
+        per_model.append((e1, e2, c1, c2, x))
+    for e1, e2, c1, c2, x in per_model:
+        if e1 != e2:
+            # the engine pair's shared link serializes on its first engine
+            t[min(e1, e2)] += x
+    for e1, e2, c1, c2, x in per_model:
+        t[flex_idx] += c1.peer_busy
+        t[flex_idx] += c2.peer_busy
+        busy[flex_idx] += c1.peer_busy + c2.peer_busy
+    cycle = max(t)
+    spread = cycle - min(t)
+    return (cycle, spread), t, busy, per_model
+
+
+def nmodel_schedule(
+    graphs: list[LayerGraph],
+    engines,
+    allow_fallback: bool = True,
+    stride: int = 1,
+    fixed: tuple[int, ...] | None = None,
+    exhaustive_limit: int = 20000,
+    descent_rounds: int = 8,
+) -> NModelPlan:
+    """Plan N staged models over E engines, one partition point per model.
+
+    Search: exhaustive over the Cartesian product of candidate points when
+    it is small (this covers N=2, where the result is provably identical to
+    ``haxconn_schedule``), else coordinate descent from a cost-balanced
+    start — each round sweeps every model's candidate list holding the
+    others fixed, until a fixed point.
+    """
+    graphs, engines = list(graphs), list(engines)
+    if not graphs:
+        raise ValueError("nmodel_schedule needs at least one model graph")
+    if not engines:
+        raise ValueError("nmodel_schedule needs at least one engine")
+    flex_idx = _flex_engine_index(engines)
+    if fixed is not None:
+        cands = [[p] for p in fixed]
+    else:
+        cands = [_candidate_points(g, stride) for g in graphs]
+    for i, c in enumerate(cands):
+        if not c:
+            raise ValueError(f"model {graphs[i].model_name} has no interior partition point")
+
+    cost_fn = _make_model_cost_fn(graphs, engines, allow_fallback, flex_idx)
+
+    def key_of(pvec):
+        return _evaluate_vector(graphs, engines, pvec, allow_fallback, flex_idx, cost_fn)[0]
+
+    n_candidates = math.prod(len(c) for c in cands)
+    if n_candidates <= exhaustive_limit:
+        best_key, best_pvec = None, None
+        for pvec in itertools.product(*cands):
+            k = key_of(pvec)
+            if best_key is None or k < best_key:
+                best_key, best_pvec = k, pvec
+    else:
+        pvec = [
+            balanced_partition_point(
+                g, engines[_model_pair(i, len(engines))[0]], engines[_model_pair(i, len(engines))[1]], cands[i]
+            )
+            for i, g in enumerate(graphs)
+        ]
+        best_pvec, best_key = tuple(pvec), key_of(tuple(pvec))
+        for _ in range(descent_rounds):
+            improved = False
+            for i in range(len(graphs)):
+                for p in cands[i]:
+                    trial = list(best_pvec)
+                    trial[i] = p
+                    k = key_of(tuple(trial))
+                    if k < best_key:
+                        best_key, best_pvec = k, tuple(trial)
+                        improved = True
+            if not improved:
+                break
+
+    (cycle, _), t, busy, per_model = _evaluate_vector(
+        graphs, engines, best_pvec, allow_fallback, flex_idx, cost_fn
+    )
+    loads = {e.name: EngineLoad(busy=b, stall=cycle - b) for e, b in zip(engines, busy)}
+    routes, segments, notes = [], [], []
+    n_fallback = 0
+    for i, (g, p) in enumerate(zip(graphs, best_pvec)):
+        e1, e2, c1, c2, x = per_model[i]
+        label = chr(ord("a") + i % 26)
+        routes.append(
+            ModelRoute(
+                model=g.model_name,
+                partition=p,
+                segments=[(e1, 0, p), (e2, p, len(g))],
+            )
+        )
+        segments.append((engines[e1].name, f"{label}1", c1.elapsed))
+        if x:
+            segments.append((engines[min(e1, e2)].name, "xfer", x))
+        segments.append((engines[e2].name, f"{label}2", c2.elapsed))
+        if c1.peer_busy + c2.peer_busy:
+            segments.append((engines[flex_idx].name, "fallback", c1.peer_busy + c2.peer_busy))
+        n_fallback += c1.n_fallback_runs + c2.n_fallback_runs
+        notes.append(
+            f"{g.model_name}: {engines[e1].name}[0:{p}) {engines[e2].name}[{p}:{len(g)})"
+        )
+    notes.append(f"fallback_runs={n_fallback}")
+    sched = Schedule(
+        kind="nmodel",
+        models=tuple(g.model_name for g in graphs),
+        engines=tuple(e.name for e in engines),
+        cycle_time=cycle,
+        loads=loads,
+        # instance-indexed keys: the same graph may be scheduled N times
+        # with different partition points
+        partitions={
+            f"{i}:{g.model_name}": (p, len(g)) for i, (g, p) in enumerate(zip(graphs, best_pvec))
+        },
+        segments=segments,
+        notes=notes,
+    )
+    return NModelPlan(
+        schedule=sched,
+        routes=routes,
+        partitions=list(best_pvec),
+        engine_times={e.name: ti for e, ti in zip(engines, t)},
+        flex_index=flex_idx,
+    )

@@ -1,0 +1,10 @@
+# Distribution layer: sharding rules + compressed data-parallel gradients.
+from .compress import make_compressed_dp_grad_fn, zeros_like_error
+from .sharding import (
+    batch_sharding,
+    default_rules,
+    spec_for_axes,
+    spec_for_axes_shaped,
+    tree_shardings,
+    tree_shardings_shaped,
+)

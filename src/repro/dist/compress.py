@@ -1,0 +1,56 @@
+"""Compressed data-parallel gradients with error feedback.
+
+Pod-scale all-reduce bandwidth is the scaling wall; the standard remedy
+is low-bit gradient exchange with per-tensor scales plus error feedback
+so the quantization residual re-enters the next step instead of being
+lost (1-bit Adam / PowerSGD lineage). ``make_compressed_dp_grad_fn``
+wraps a loss into a grad fn that (1) shards the batch over the data-like
+mesh axes, (2) adds the carried residual, (3) fake-quantizes to ``bits``
+with a per-tensor max scale (what the wire format would carry), and
+(4) returns the dequantized gradient + the new residual, split over
+``n_chunks`` carriers (one per pod in the hierarchical reduce).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def zeros_like_error(params, n_chunks: int):
+    """Fresh error-feedback state: one residual carrier per chunk/pod."""
+    return jax.tree.map(lambda x: jnp.zeros((n_chunks,) + x.shape, jnp.float32), params)
+
+
+def make_compressed_dp_grad_fn(loss_fn, mesh, batch_spec: P, bits: int = 8):
+    """Returns ``grad_fn(params, batch, err) -> (grad, new_err)``.
+
+    ``batch_spec``'s first entry names the mesh axes the batch dim shards
+    over (e.g. ``P(("pod", "data"))``). The dequantized gradient stays
+    within scale/2 of the true gradient per element (scale = max|g|/
+    (2^(bits-1)-1)); the residual is carried in ``new_err``.
+    """
+    levels = float(2 ** (bits - 1) - 1)
+    batch_axes = tuple(batch_spec)[0] if len(tuple(batch_spec)) else None
+
+    def _shard_batch(x):
+        spec = P(*((batch_axes,) + (None,) * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    def grad_fn(params, batch, err):
+        if mesh is not None and batch_axes is not None:
+            batch = jax.tree.map(_shard_batch, batch)
+        g = jax.grad(loss_fn)(params, batch)
+        g_leaves, treedef = jax.tree.flatten(g)
+        e_leaves = treedef.flatten_up_to(err)
+        out_g, out_e = [], []
+        for gi, ei in zip(g_leaves, e_leaves):
+            total = gi.astype(jnp.float32) + ei.sum(axis=0)
+            scale = jnp.maximum(jnp.max(jnp.abs(total)) / levels, 1e-20)
+            deq = jnp.round(total / scale) * scale  # fake-quantized exchange
+            resid = (total - deq) / ei.shape[0]
+            out_g.append(deq.astype(gi.dtype))
+            out_e.append(jnp.broadcast_to(resid[None], ei.shape).astype(ei.dtype))
+        return treedef.unflatten(out_g), treedef.unflatten(out_e)
+
+    return grad_fn

@@ -1,0 +1,107 @@
+"""Axis-name -> mesh-axis sharding rules (the levanter-style mapping).
+
+Params carry logical axis names (``Module.axes()``: "embed", "mlp",
+"heads", "vocab", ...). A *rule table* maps each name to the mesh axes it
+may shard over; ``spec_for_axes`` applies the table left-to-right, never
+reusing a mesh axis within one param, and ``_fit_spec`` drops proposed
+axes that do not divide the actual dimension (kv-head dims of size 1 on a
+16-way model axis, ragged vocab remainders, ...). Everything downstream
+consumes plain ``NamedSharding``s, so this works on any jax new enough to
+have them.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# logical param axes that carry the bulk of the bytes: shard these over
+# tensor-parallel + data (fsdp) mesh axes when model sharding is on
+_BIG_AXES = ("mlp", "vocab")
+# axes sharded over the tensor-parallel mesh axis only
+_MODEL_AXES = ("heads", "expert", "conv_out")
+_MODEL_MESH_NAMES = ("model", "tensor")
+
+
+def default_rules(shard_model: bool, mesh_axes: tuple[str, ...]) -> dict[str, tuple[str, ...] | None]:
+    """Rule table for a mesh. Mesh axes named 'model'/'tensor' are
+    tensor-parallel; everything else ('data', 'pod', 'fsdp', ...) is
+    data-like. Unlisted logical axes replicate."""
+    model = tuple(a for a in mesh_axes if a in _MODEL_MESH_NAMES)
+    data = tuple(a for a in mesh_axes if a not in _MODEL_MESH_NAMES)
+    rules: dict[str, tuple[str, ...] | None] = {"batch": data or None}
+    if shard_model:
+        for name in _BIG_AXES:
+            rules[name] = model + data
+        for name in _MODEL_AXES:
+            rules[name] = model or None
+    return rules
+
+
+def spec_for_axes(axes, rules) -> P:
+    """PartitionSpec for one param's logical axes; a mesh axis is consumed
+    by the first logical axis that claims it."""
+    used: set[str] = set()
+    out = []
+    for a in axes or ():
+        m = rules.get(a) if a is not None else None
+        if m is None:
+            out.append(None)
+            continue
+        m = (m,) if isinstance(m, str) else tuple(m)
+        m = tuple(x for x in m if x not in used)
+        used.update(m)
+        out.append(m if len(m) > 1 else (m[0] if m else None))
+    return P(*out)
+
+
+def _fit_spec(spec, shape, mesh):
+    """Drop proposed mesh axes that do not divide the dimension they
+    shard (trailing-first), so every sharding is actually placeable."""
+    sizes = dict(mesh.shape)
+    out = []
+    for entry, dim in zip(tuple(spec), shape):
+        if entry is None:
+            out.append(None)
+            continue
+        names = (entry,) if isinstance(entry, str) else tuple(entry)
+        while names and dim % math.prod(sizes[n] for n in names) != 0:
+            names = names[:-1]
+        out.append(names if len(names) > 1 else (names[0] if names else None))
+    out += [None] * (len(shape) - len(out))
+    return tuple(out)
+
+
+def spec_for_axes_shaped(axes, shape, mesh, rules) -> P:
+    return P(*_fit_spec(tuple(spec_for_axes(axes, rules)), shape, mesh))
+
+
+def _is_axes_leaf(x) -> bool:
+    return x is None or isinstance(x, tuple)
+
+
+def tree_shardings(mesh, axes_tree, rules):
+    """NamedSharding per param from logical axes alone (no divisibility
+    fitting — prefer ``tree_shardings_shaped``)."""
+    return jax.tree.map(
+        lambda ax: NamedSharding(mesh, spec_for_axes(ax, rules)), axes_tree, is_leaf=_is_axes_leaf
+    )
+
+
+def tree_shardings_shaped(mesh, axes_tree, shapes_tree, rules):
+    """NamedSharding per param, divisibility-fitted against the leaf
+    shapes (``jax.ShapeDtypeStruct`` or arrays)."""
+    return jax.tree.map(
+        lambda ax, sd: NamedSharding(mesh, spec_for_axes_shaped(ax, tuple(sd.shape), mesh, rules)),
+        axes_tree,
+        shapes_tree,
+        is_leaf=_is_axes_leaf,
+    )
+
+
+def batch_sharding(mesh, batch_size: int, rules) -> NamedSharding:
+    """Sharding for a batch leaf: leading dim over the data-like axes."""
+    fitted = _fit_spec((rules.get("batch"),), (batch_size,), mesh)
+    return NamedSharding(mesh, P(*fitted))

@@ -1,12 +1,17 @@
-"""Batched serving demo: prefill + greedy decode with the KV-cache paths
-the dry-run lowers at scale.
+"""Serving launchers.
+
+``lm`` (default): batched prefill + greedy decode with the KV-cache paths
+the dry-run lowers at scale. ``streams``: the N-model multi-stream
+serving subsystem — K frame streams over the planned engine routes.
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2_2b --tokens 16
+  PYTHONPATH=src python -m repro.launch.serve --mode streams --streams 4 --frames 6
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 import time
 
 import jax
@@ -16,13 +21,44 @@ import numpy as np
 from ..configs import get_arch, build_model
 
 
+def run_streams(args) -> None:
+    from ..serve import MultiStreamServer, build_pix_yolo_serving
+
+    models, plan, streams, _ = build_pix_yolo_serving(
+        img=args.img, base=args.base, n_pix=args.streams, n_yolo=args.yolo_streams
+    )
+    print(f"[serve] plan partitions={plan.partitions} cycle={plan.cycle_time*1e3:.2f} ms")
+    server = MultiStreamServer(
+        models, plan, streams, max_queue=args.queue_depth, microbatch=args.microbatch
+    )
+    for t in range(args.frames):
+        for s in streams:
+            server.submit(s.model_index, jax.random.normal(jax.random.key(t), (1, args.img, args.img, 3)))
+        server.pump()
+    server.drain()
+    print(json.dumps(server.report(), indent=2))
+
+
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=("lm", "streams"), default="lm")
     ap.add_argument("--arch", default="gemma2_2b")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--tokens", type=int, default=16)
+    # streams mode
+    ap.add_argument("--streams", type=int, default=4, help="Pix2Pix stream count")
+    ap.add_argument("--yolo-streams", type=int, default=1)
+    ap.add_argument("--frames", type=int, default=6, help="frames per stream")
+    ap.add_argument("--img", type=int, default=64)
+    ap.add_argument("--base", type=int, default=8)
+    ap.add_argument("--microbatch", type=int, default=2)
+    ap.add_argument("--queue-depth", type=int, default=4)
     args = ap.parse_args()
+
+    if args.mode == "streams":
+        run_streams(args)
+        return
 
     spec = get_arch(args.arch)
     cfg = dataclasses.replace(spec.smoke, act_dtype=jnp.float32)

@@ -1,0 +1,248 @@
+"""Generic tick-based multi-stream executor.
+
+Generalizes the two-model HaX-CoNN swap pipeline: N staged models, each
+with a planner-assigned route of (engine, lo, hi) segments, fed by K
+bounded per-stream frame queues. One *tick* is one steady-state cycle:
+
+  * every in-flight frame advances exactly one route segment (deepest
+    stage first — the double-buffered counter-phase), then
+  * each model admits up to ``microbatch`` queued frames (round-robin
+    over its streams) into stage 0.
+
+With N=2 and one stream per model this reproduces ``TwoModelPipeline``'s
+schedule tick-for-tick (pinned by test). On real hardware the per-engine
+segment calls dispatch asynchronously; on CPU they serialize but stay
+functionally identical — single-frame flights run the exact same op
+sequence as ``StagedModel.run_all``, so outputs are bit-exact.
+
+Micro-batching (``microbatch > 1``) admits up to that many same-model
+frames per tick so an engine runs one model's segment back-to-back for
+the whole group (one engine switch per group — what micro-batching buys
+on real hardware) while keeping every frame's math unchanged. With
+``merge_batches=True`` the group is additionally concatenated along the
+leading axis and the route runs once for the merged state; outputs are
+sliced back per frame. Only enable merging for batch-independent models —
+Pix2Pix's ``BatchNorm2D`` takes statistics over the batch axis, so
+merging changes its outputs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..core.pipeline import StagedModel, TickLog
+from ..core.scheduler import ModelRoute, NModelPlan
+from .streams import FrameQueue, StreamSpec
+
+
+@dataclasses.dataclass
+class FlightMember:
+    stream_index: int
+    frame_id: int
+    size: int  # leading-axis extent of this frame in the (possibly merged) state
+    t_submit: float
+    tick_submit: int
+
+
+@dataclasses.dataclass
+class Flight:
+    model_index: int
+    members: list[FlightMember]
+    state: Any
+    stage: int  # segments already executed
+
+
+@dataclasses.dataclass
+class Completion:
+    stream: str
+    frame_id: int
+    output: Any
+    tick_submit: int
+    tick_done: int
+    latency_s: float  # wall-clock submit -> completion
+
+
+class StreamExecutor:
+    """Drives N staged models over their planned routes for K streams."""
+
+    def __init__(
+        self,
+        models: list[StagedModel],
+        routes: list[ModelRoute] | NModelPlan,
+        streams: list[StreamSpec],
+        max_queue: int = 8,
+        microbatch: int = 1,
+        merge_batches: bool = False,
+        place_fns: list[Callable] | None = None,
+        engine_names: list[str] | None = None,
+        model_labels: list[str] | None = None,
+    ):
+        if isinstance(routes, NModelPlan):
+            if engine_names is None:
+                engine_names = list(routes.schedule.engines)
+            routes = routes.routes
+        if len(models) != len(routes):
+            raise ValueError(f"{len(models)} models but {len(routes)} routes")
+        for m, r in zip(models, routes):
+            hi = 0
+            for _, lo, seg_hi in r.segments:
+                if lo != hi:
+                    raise ValueError(f"route for {m.name} is not contiguous at {lo}")
+                hi = seg_hi
+            if hi != len(m.ops):
+                raise ValueError(f"route for {m.name} covers [0,{hi}) but model has {len(m.ops)} ops")
+        for s in streams:
+            if not 0 <= s.model_index < len(models):
+                raise ValueError(f"stream {s.name} references unknown model {s.model_index}")
+        if microbatch < 1:
+            raise ValueError("microbatch must be >= 1")
+        self.models = models
+        self.routes = routes
+        self.streams = streams
+        self.microbatch = microbatch
+        self.merge_batches = merge_batches
+        n_engines = max(e for r in routes for e, _, _ in r.segments) + 1
+        self.place_fns = place_fns or [lambda x: x] * n_engines
+        self.engine_names = engine_names or [f"E{i}" for i in range(n_engines)]
+        self.model_labels = model_labels or [m.name for m in models]
+        self.queues = [FrameQueue(max_queue) for _ in streams]
+        self.in_flight: list[Flight] = []
+        self.completions: list[Completion] = []
+        self.outputs: dict[str, list] = {s.name: [] for s in streams}
+        self.log: list[TickLog] = []
+        self.tick_count = 0
+        self._frame_ids = [0] * len(streams)
+        self._rr = [0] * len(models)  # round-robin cursor per model
+        self._streams_of = [
+            [i for i, s in enumerate(streams) if s.model_index == m] for m in range(len(models))
+        ]
+        self._max_stages = max(len(r.segments) for r in routes)
+
+    # -- submission ---------------------------------------------------------
+
+    def submit(self, stream: int | str, frame: Any) -> bool:
+        """Queue a frame on a stream; False = queue full (backpressure)."""
+        si = stream if isinstance(stream, int) else self._stream_index(stream)
+        fid = self._frame_ids[si]
+        if not self.queues[si].push((fid, frame, time.perf_counter())):
+            return False
+        self._frame_ids[si] += 1
+        return True
+
+    def _stream_index(self, name: str) -> int:
+        for i, s in enumerate(self.streams):
+            if s.name == name:
+                return i
+        raise KeyError(f"unknown stream {name!r}")
+
+    @property
+    def pending(self) -> int:
+        return sum(len(q) for q in self.queues) + sum(len(f.members) for f in self.in_flight)
+
+    # -- execution ----------------------------------------------------------
+
+    def _run_segment(self, flight: Flight):
+        model = self.models[flight.model_index]
+        eng, lo, hi = self.routes[flight.model_index].segments[flight.stage]
+        state = self.place_fns[eng](flight.state)
+        flight.state = model.run_segment(state, lo, hi)
+        flight.stage += 1
+        ids = ",".join(str(m.frame_id) for m in flight.members)
+        self.log.append(
+            TickLog(
+                self.tick_count,
+                self.engine_names[eng],
+                f"{self.model_labels[flight.model_index]}[{lo}:{hi})#f{ids}",
+            )
+        )
+
+    def _complete(self, flight: Flight):
+        model = self.models[flight.model_index]
+        out = model.finalize(flight.state)
+        now = time.perf_counter()
+        if len(flight.members) == 1:
+            sliced = [out]
+        else:
+            off, sliced = 0, []
+            for m in flight.members:
+                o = off
+                sliced.append(jax.tree.map(lambda a, o=o, n=m.size: a[o : o + n], out))
+                off += m.size
+        for m, o in zip(flight.members, sliced):
+            name = self.streams[m.stream_index].name
+            self.outputs[name].append(o)
+            self.completions.append(
+                Completion(
+                    stream=name,
+                    frame_id=m.frame_id,
+                    output=o,
+                    tick_submit=m.tick_submit,
+                    tick_done=self.tick_count,
+                    latency_s=now - m.t_submit,
+                )
+            )
+
+    def _admit(self, mi: int):
+        model = self.models[mi]
+        stream_idxs = self._streams_of[mi]
+        if not stream_idxs:
+            return
+        picked: list[tuple[int, int, Any, float]] = []
+        n = len(stream_idxs)
+        start = self._rr[mi]
+        for k in range(n):
+            if len(picked) >= self.microbatch:
+                break
+            si = stream_idxs[(start + k) % n]
+            if len(self.queues[si]):
+                fid, frame, t_sub = self.queues[si].pop()
+                picked.append((si, fid, frame, t_sub))
+        if not picked:
+            return
+        self._rr[mi] = (start + len(picked)) % n
+        members, states = [], []
+        for si, fid, frame, t_sub in picked:
+            size = int(frame.shape[0]) if hasattr(frame, "shape") and frame.shape else 1
+            members.append(FlightMember(si, fid, size, t_sub, self.tick_count))
+            states.append(model.init_state(frame))
+        if self.merge_batches and len(states) > 1:
+            merged = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *states)
+            flights = [Flight(model_index=mi, members=members, state=merged, stage=0)]
+        else:
+            flights = [
+                Flight(model_index=mi, members=[m], state=s, stage=0)
+                for m, s in zip(members, states)
+            ]
+        for flight in flights:
+            self._run_segment(flight)
+            if flight.stage == len(self.routes[mi].segments):
+                self._complete(flight)
+            else:
+                self.in_flight.append(flight)
+
+    def tick(self):
+        """One steady-state cycle: advance every in-flight frame one
+        segment (deepest first), then admit new frames into stage 0."""
+        for stage in range(self._max_stages - 1, 0, -1):
+            for mi in range(len(self.models)):
+                for flight in [
+                    f for f in self.in_flight if f.model_index == mi and f.stage == stage
+                ]:
+                    self._run_segment(flight)
+                    if flight.stage == len(self.routes[mi].segments):
+                        self._complete(flight)
+                        self.in_flight.remove(flight)
+        for mi in range(len(self.models)):
+            self._admit(mi)
+        self.tick_count += 1
+
+    def run_until_drained(self, max_ticks: int = 100000):
+        while self.pending:
+            if self.tick_count >= max_ticks:
+                raise RuntimeError(f"executor did not drain within {max_ticks} ticks")
+            self.tick()
+        return self.outputs

@@ -1,0 +1,64 @@
+"""Per-stream serving metrics: latency percentiles + throughput.
+
+Latencies are wall-clock submit→completion seconds as stamped by the
+executor. Percentiles use the nearest-rank method on the recorded sample
+(exact for the small counts a bench run produces; no interpolation
+surprises when comparing runs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+def percentile(samples: list[float], pct: float) -> float:
+    """Nearest-rank percentile; pct in [0, 100]."""
+    if not samples:
+        return math.nan
+    s = sorted(samples)
+    rank = max(1, math.ceil(pct / 100.0 * len(s)))
+    return s[min(rank, len(s)) - 1]
+
+
+@dataclasses.dataclass
+class StreamMetrics:
+    name: str
+    latencies_s: list[float] = dataclasses.field(default_factory=list)
+    completed: int = 0
+
+    def record(self, latency_s: float):
+        self.latencies_s.append(latency_s)
+        self.completed += 1
+
+    def summary(self) -> dict:
+        return {
+            "completed": self.completed,
+            "latency_p50_ms": percentile(self.latencies_s, 50) * 1e3,
+            "latency_p99_ms": percentile(self.latencies_s, 99) * 1e3,
+            "latency_mean_ms": (
+                sum(self.latencies_s) / len(self.latencies_s) * 1e3 if self.latencies_s else math.nan
+            ),
+        }
+
+
+class ServeMetrics:
+    """Aggregates completions across streams for one serving run."""
+
+    def __init__(self, stream_names: list[str]):
+        self.streams = {n: StreamMetrics(n) for n in stream_names}
+
+    def record(self, stream: str, latency_s: float):
+        self.streams[stream].record(latency_s)
+
+    def report(self, wall_s: float) -> dict:
+        all_lat = [l for m in self.streams.values() for l in m.latencies_s]
+        total = sum(m.completed for m in self.streams.values())
+        return {
+            "streams": len(self.streams),
+            "frames": total,
+            "wall_s": wall_s,
+            "aggregate_fps": total / wall_s if wall_s > 0 else math.inf,
+            "latency_p50_ms": percentile(all_lat, 50) * 1e3,
+            "latency_p99_ms": percentile(all_lat, 99) * 1e3,
+            "per_stream": {n: m.summary() for n, m in self.streams.items()},
+        }

@@ -1,0 +1,106 @@
+"""Multi-stream serving front end: request queue -> stream assignment ->
+executor -> metrics.
+
+``MultiStreamServer`` owns the planned ``StreamExecutor`` plus a global
+request queue. Requests name a *model* (not a stream); the server assigns
+each to the least-loaded stream bound to that model, pumps the executor
+when queues back up, and folds completions into per-stream latency /
+throughput metrics. This is the CPU-container stand-in for the paper's
+DeepStream app: the same code drives TPU submeshes when the staged
+models' ``place_fns`` put segments on real device subsets.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any
+
+from ..core.pipeline import StagedModel
+from ..core.scheduler import NModelPlan
+from .executor import StreamExecutor
+from .metrics import ServeMetrics
+from .streams import StreamSpec
+
+
+@dataclasses.dataclass
+class Request:
+    model_index: int
+    frame: Any
+
+
+class MultiStreamServer:
+    def __init__(
+        self,
+        models: list[StagedModel],
+        plan: NModelPlan,
+        streams: list[StreamSpec],
+        max_queue: int = 4,
+        microbatch: int = 1,
+        merge_batches: bool = False,
+        place_fns=None,
+    ):
+        self.executor = StreamExecutor(
+            models,
+            plan,
+            streams,
+            max_queue=max_queue,
+            microbatch=microbatch,
+            merge_batches=merge_batches,
+            place_fns=place_fns,
+        )
+        self.metrics = ServeMetrics([s.name for s in streams])
+        self._backlog: deque[Request] = deque()
+        self._recorded = 0
+        self._t0: float | None = None
+
+    # -- request intake -----------------------------------------------------
+
+    def submit(self, model_index: int, frame: Any):
+        """Enqueue one frame for a model; assignment + execution happen in
+        ``pump``/``drain``. Starts the wall clock on first submission."""
+        if self._t0 is None:
+            self._t0 = time.perf_counter()
+        self._backlog.append(Request(model_index, frame))
+
+    def _least_loaded_stream(self, model_index: int) -> int:
+        ex = self.executor
+        best, best_depth = -1, None
+        for si, s in enumerate(ex.streams):
+            if s.model_index != model_index:
+                continue
+            depth = len(ex.queues[si])
+            if best_depth is None or depth < best_depth:
+                best, best_depth = si, depth
+        if best < 0:
+            raise ValueError(f"no stream serves model index {model_index}")
+        return best
+
+    def pump(self):
+        """Move backlog into stream queues, ticking the executor whenever
+        the chosen queue pushes back; then fold new completions."""
+        while self._backlog:
+            req = self._backlog[0]
+            si = self._least_loaded_stream(req.model_index)
+            if self.executor.submit(si, req.frame):
+                self._backlog.popleft()
+            else:
+                self.executor.tick()  # backpressure: make room before retrying
+        self._fold_completions()
+
+    def drain(self):
+        self.pump()
+        self.executor.run_until_drained()
+        self._fold_completions()
+        return self.executor.outputs
+
+    def _fold_completions(self):
+        for c in self.executor.completions[self._recorded :]:
+            self.metrics.record(c.stream, c.latency_s)
+        self._recorded = len(self.executor.completions)
+
+    # -- reporting ----------------------------------------------------------
+
+    def report(self) -> dict:
+        wall = (time.perf_counter() - self._t0) if self._t0 is not None else 0.0
+        return self.metrics.report(wall)

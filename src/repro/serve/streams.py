@@ -1,0 +1,51 @@
+"""Per-stream frame queues with bounded depth and backpressure accounting.
+
+A *stream* is an independent frame source bound to one staged model (the
+paper's "camera"/"scan" analogue). The executor admits frames from these
+queues; when a queue is full ``push`` refuses the frame — callers either
+drop, retry after a tick, or propagate the backpressure upstream (the
+server blocks the producer loop on it).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamSpec:
+    """Binding of a named stream to a model index in the executor plan."""
+
+    name: str
+    model_index: int
+
+
+class FrameQueue:
+    """Bounded FIFO; refuses pushes past ``maxdepth`` instead of growing."""
+
+    def __init__(self, maxdepth: int):
+        if maxdepth < 1:
+            raise ValueError("queue depth must be >= 1")
+        self.maxdepth = maxdepth
+        self._q: deque = deque()
+        self.high_water = 0  # max depth ever observed (backpressure audit)
+        self.rejected = 0  # pushes refused while full
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    @property
+    def full(self) -> bool:
+        return len(self._q) >= self.maxdepth
+
+    def push(self, item: Any) -> bool:
+        if self.full:
+            self.rejected += 1
+            return False
+        self._q.append(item)
+        self.high_water = max(self.high_water, len(self._q))
+        return True
+
+    def pop(self) -> Any:
+        return self._q.popleft()

@@ -29,9 +29,22 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:  # compression is optional — fall back to uncompressed payloads
+    import zstandard
+except ImportError:  # pragma: no cover - exercised on zstd-less containers
+    zstandard = None
+
+HAVE_ZSTD = zstandard is not None
 
 MANIFEST = "MANIFEST"
+
+# shard header: <Q raw_len><B codec><payload>. Legacy shards (zstd-only
+# format) lack the codec byte; their payload always starts with the zstd
+# magic 0x28, which no codec id uses, so readers can tell them apart.
+CODEC_RAW = 0
+CODEC_ZSTD = 1
+_ZSTD_MAGIC_BYTE = 0x28
 
 
 def _flatten(tree) -> dict[str, np.ndarray]:
@@ -79,12 +92,15 @@ def save_checkpoint(ckpt_dir: str, step: int, tree: Any, extra: dict | None = No
         "arrays": {k: _pack_array(v) for k, v in flat.items()},
     }
     raw = msgpack.packb(payload, use_bin_type=True)
-    comp = zstandard.ZstdCompressor(level=3).compress(raw)
+    if HAVE_ZSTD:
+        codec, data = CODEC_ZSTD, zstandard.ZstdCompressor(level=3).compress(raw)
+    else:
+        codec, data = CODEC_RAW, raw
     shard = os.path.join(step_dir, f"shard_{process_index:05d}.ckpt")
     tmp = shard + ".tmp"
     with open(tmp, "wb") as f:
-        f.write(struct.pack("<Q", len(raw)))
-        f.write(comp)
+        f.write(struct.pack("<QB", len(raw), codec))
+        f.write(data)
         f.flush()
         os.fsync(f.fileno())
     os.replace(tmp, shard)
@@ -102,8 +118,23 @@ def save_checkpoint(ckpt_dir: str, step: int, tree: Any, extra: dict | None = No
 def _load_shard(path: str) -> dict:
     with open(path, "rb") as f:
         rawlen = struct.unpack("<Q", f.read(8))[0]
-        comp = f.read()
-    raw = zstandard.ZstdDecompressor().decompress(comp, max_output_size=rawlen)
+        head = f.read(1)
+        body = f.read()
+    if not head:
+        raise IOError(f"truncated checkpoint shard {path}")
+    codec = head[0]
+    if codec == _ZSTD_MAGIC_BYTE:  # legacy shard: payload starts right here
+        codec, body = CODEC_ZSTD, head + body
+    if codec == CODEC_RAW:
+        raw = body
+    elif codec == CODEC_ZSTD:
+        if not HAVE_ZSTD:
+            raise IOError(f"{path} is zstd-compressed but zstandard is not installed")
+        raw = zstandard.ZstdDecompressor().decompress(body, max_output_size=rawlen)
+    else:
+        raise IOError(f"unknown checkpoint codec {codec} in {path}")
+    if len(raw) != rawlen:
+        raise IOError(f"checkpoint payload length mismatch in {path}")
     return msgpack.unpackb(raw, raw=False)
 
 

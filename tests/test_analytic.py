@@ -27,7 +27,9 @@ def test_analytic_vs_hlo_forward_smoke():
         .lower(ab, jax.ShapeDtypeStruct((B, S), jnp.int32))
         .compile()
     )
-    hlo = float(c.cost_analysis()["flops"])
+    from repro.core.profiler import cost_analysis_dict
+
+    hlo = float(cost_analysis_dict(c)["flops"])
     analytic = B * S * fwd_flops_per_token(cfg, S, "train")
     # the analytic model counts causal-HALF attention (what a flash kernel
     # executes); XLA's dense-masked path does the full S^2 — so analytic may

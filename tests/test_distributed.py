@@ -2,6 +2,7 @@
 gradients, elastic checkpoint restore onto a different mesh (subprocesses
 with fake host devices)."""
 import numpy as np
+import pytest
 
 from conftest import run_subprocess
 
@@ -25,6 +26,7 @@ def test_sharding_rules_unit():
     assert len(flat) == len(set(flat))
 
 
+@pytest.mark.slow
 def test_mesh_sharded_train_step_matches_single_device():
     code = '''
 import jax, jax.numpy as jnp, numpy as np
@@ -47,13 +49,13 @@ step = make_lm_train_step(lm, opt)
 # single device reference
 p1, s1, m1 = jax.jit(step)(params, opt_state, batch)
 
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+# explicit NamedShardings only: works on every jax with jax.make_mesh
+mesh = jax.make_mesh((2, 4), ("data", "model"))
 rules = default_rules(True, mesh.axis_names)
 psh = tree_shardings_shaped(mesh, lm.axes(), jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params), rules)
 osh = {"m": psh, "v": psh, "step": NamedSharding(mesh, P())}
 bsh = batch_sharding(mesh, 8, rules)
-with jax.set_mesh(mesh):
-    p8, s8, m8 = jax.jit(step, in_shardings=(psh, osh, {"tokens": bsh, "labels": bsh}))(params, opt_state, batch)
+p8, s8, m8 = jax.jit(step, in_shardings=(psh, osh, {"tokens": bsh, "labels": bsh}))(params, opt_state, batch)
 assert abs(float(m1["loss"]) - float(m8["loss"])) < 1e-3, (float(m1["loss"]), float(m8["loss"]))
 for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p8)):
     np.testing.assert_allclose(np.float32(a), np.float32(b), atol=2e-3)
@@ -63,20 +65,20 @@ print("SHARDED==SINGLE OK")
     assert "SHARDED==SINGLE OK" in out
 
 
+@pytest.mark.slow
 def test_compressed_pod_gradients():
     code = '''
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro.dist import make_compressed_dp_grad_fn, zeros_like_error
-mesh = jax.make_mesh((2, 4), ("pod", "data"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = jax.make_mesh((2, 4), ("pod", "data"))
 def loss_fn(params, batch):
     return jnp.mean((batch["x"] @ params["w"] - batch["y"])**2)
 params = {"w": jnp.ones((8, 4))}
 batch = {"x": jax.random.normal(jax.random.key(0), (16, 8)),
          "y": jax.random.normal(jax.random.key(1), (16, 4))}
-with jax.set_mesh(mesh):
-    gf = jax.jit(make_compressed_dp_grad_fn(loss_fn, mesh, P(("pod", "data"))))
-    g, err = gf(params, batch, zeros_like_error(params, 2))
+gf = jax.jit(make_compressed_dp_grad_fn(loss_fn, mesh, P(("pod", "data"))))
+g, err = gf(params, batch, zeros_like_error(params, 2))
 g_ref = jax.grad(loss_fn)(params, batch)
 rel = float(jnp.abs(g["w"] - g_ref["w"]).max() / jnp.abs(g_ref["w"]).max())
 assert rel < 0.02, rel
@@ -90,6 +92,7 @@ print("COMPRESSED OK")
     assert "COMPRESSED OK" in out
 
 
+@pytest.mark.slow
 def test_elastic_restore_onto_different_mesh():
     code = '''
 import jax, jax.numpy as jnp, numpy as np, tempfile
@@ -97,11 +100,11 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.train import save_checkpoint, restore_checkpoint
 tree = {"w": jnp.arange(64.0).reshape(8, 8), "b": jnp.ones((8,))}
 with tempfile.TemporaryDirectory() as d:
-    mesh4 = jax.make_mesh((4,), ("data",), devices=jax.devices()[:4], axis_types=(jax.sharding.AxisType.Auto,))
+    mesh4 = jax.make_mesh((4,), ("data",), devices=jax.devices()[:4])
     t4 = jax.device_put(tree, NamedSharding(mesh4, P("data")))
     save_checkpoint(d, 7, t4)
     # restore onto an 8-way mesh (elastic scale-up)
-    mesh8 = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh8 = jax.make_mesh((8,), ("data",))
     sh8 = {"w": NamedSharding(mesh8, P("data")), "b": NamedSharding(mesh8, P())}
     got, step, _ = restore_checkpoint(d, tree, shardings=sh8)
     assert step == 7

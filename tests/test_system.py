@@ -5,6 +5,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro import core
 from repro.core.constraints import DLA_ANALOGUE_CONSTRAINTS
@@ -16,6 +17,7 @@ from repro.train.optimizer import Adam
 from repro.train.steps import make_pix2pix_train_step
 
 
+@pytest.mark.slow
 def test_end_to_end_reconstruction_and_diagnosis_pipeline():
     """Train a tiny GAN on phantoms, then run the scheduled two-model
     pipeline (GAN recon + YOLO detect) and check reconstruction quality
