@@ -1,14 +1,19 @@
 """Multi-stream serving benchmark: aggregate FPS and latency percentiles
 vs concurrent stream count, written to ``BENCH_serve.json`` so successive
-PRs have a perf trajectory to compare against.
+PRs have a perf trajectory to compare against (``benchmarks/trend.py``
+diffs two runs and gates CI on regressions).
 
   PYTHONPATH=src python benchmarks/serve_bench.py --smoke
   PYTHONPATH=src python benchmarks/serve_bench.py --streams 1,2,4,8 --frames 16
+  PYTHONPATH=src python benchmarks/serve_bench.py --cost measured --norm instance
 
 Each run serves K Pix2Pix reconstruction streams plus one YOLOv8
 detection stream through the planned ``StreamExecutor`` on CPU; absolute
 numbers are container-dependent, the *shape* (FPS vs K, tail latency
-growth) is the tracked signal.
+growth, overlapped-vs-serialized dispatch gap) is the tracked signal.
+The planner runs under the ``--cost`` provider (analytic roofline by
+default, XLA-measured per-layer costs with ``--cost measured``); the
+JSON records which provider and search mode produced every plan.
 """
 from __future__ import annotations
 
@@ -18,13 +23,44 @@ import platform
 import time
 
 
-def run_point(n_pix_streams: int, frames_per_stream: int, img: int, base: int, microbatch: int) -> dict:
+def build_models(img: int, base: int, norm: str, provider, search: str):
+    """Build the staged models + plan once per bench process: every point
+    reuses them, so jitted segment executables (cached on the models)
+    compile once during warmup instead of once per point."""
+    from repro.serve import build_pix_yolo_serving
+
+    models, plan, _, _ = build_pix_yolo_serving(
+        img=img, base=base, n_pix=1, n_yolo=1, norm=norm, cost=provider, search=search
+    )
+    return models, plan
+
+
+def run_point(
+    models,
+    plan,
+    n_pix_streams: int,
+    frames_per_stream: int,
+    img: int,
+    microbatch: int,
+    norm: str = "batch",
+    dispatch: str = "overlapped",
+    jit_segments: bool = True,
+) -> dict:
     import jax
 
-    from repro.serve import MultiStreamServer, build_pix_yolo_serving
+    from repro.serve import MultiStreamServer, StreamSpec, merge_flags_for
 
-    models, plan, streams, _ = build_pix_yolo_serving(img=img, base=base, n_pix=n_pix_streams, n_yolo=1)
-    server = MultiStreamServer(models, plan, streams, max_queue=4, microbatch=microbatch)
+    streams = [StreamSpec(f"mri-{i}", 0) for i in range(n_pix_streams)] + [StreamSpec("det-0", 1)]
+    server = MultiStreamServer(
+        models,
+        plan,
+        streams,
+        max_queue=4,
+        microbatch=microbatch,
+        merge_batches=merge_flags_for(models),
+        dispatch=dispatch,
+        jit_segments=jit_segments,
+    )
 
     t0 = time.perf_counter()
     for t in range(frames_per_stream):
@@ -43,6 +79,12 @@ def run_point(n_pix_streams: int, frames_per_stream: int, img: int, base: int, m
         "aggregate_fps": rep["frames"] / wall,
         "latency_p50_ms": rep["latency_p50_ms"],
         "latency_p99_ms": rep["latency_p99_ms"],
+        "overlap_efficiency": rep["overlap"]["overlap_efficiency"],
+        "dispatch": dispatch,
+        "norm": norm,
+        "merge_batches": merge_flags_for(models),
+        "cost_provider": plan.cost_provider,
+        "planner_search": plan.search,
         "planned_cycle_ms": plan.cycle_time * 1e3,
         "planned_partitions": plan.partitions,
     }
@@ -56,8 +98,21 @@ def main():
     ap.add_argument("--img", type=int, default=None)
     ap.add_argument("--base", type=int, default=8)
     ap.add_argument("--microbatch", type=int, default=2)
+    ap.add_argument("--cost", choices=("analytic", "measured", "blended"), default="analytic")
+    ap.add_argument("--cost-cache", default=None, help="JSON cache for measured layer timings")
+    ap.add_argument("--norm", choices=("batch", "instance", "group"), default="batch")
+    ap.add_argument("--search", choices=("auto", "exhaustive", "beam", "descent"), default="auto")
+    ap.add_argument(
+        "--skip-dispatch-compare",
+        action="store_true",
+        help="skip the overlapped-vs-serialized executor comparison point",
+    )
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args()
+
+    from repro.core.cost_model import make_cost_provider
+
+    provider = make_cost_provider(args.cost, cache_path=args.cost_cache)
 
     if args.smoke:
         counts = [1, 2, 4]
@@ -70,26 +125,95 @@ def main():
     if args.streams:
         counts = [int(x) for x in args.streams.split(",")]
 
+    models, plan = build_models(img, args.base, args.norm, provider, args.search)
+    # warm both executor configurations (jitted segment executables AND the
+    # eager per-op caches) at the widest stream count so the sweep measures
+    # steady state, not first-call tracing
+    warm_k = max(counts)
+    run_point(models, plan, warm_k, 1, img, args.microbatch, args.norm, "overlapped", True)
+    run_point(models, plan, warm_k, 1, img, args.microbatch, args.norm, "serialized", False)
+
     results = []
     for k in counts:
-        r = run_point(k, frames, img, args.base, args.microbatch)
+        r = run_point(models, plan, k, frames, img, args.microbatch, args.norm)
         results.append(r)
         print(
             f"streams={r['streams']:>2}  aggregate={r['aggregate_fps']:7.2f} FPS  "
-            f"p50={r['latency_p50_ms']:8.1f} ms  p99={r['latency_p99_ms']:8.1f} ms"
+            f"p50={r['latency_p50_ms']:8.1f} ms  p99={r['latency_p99_ms']:8.1f} ms  "
+            f"overlap={r['overlap_efficiency']:.3f}"
         )
 
     peak = max(results, key=lambda r: r["aggregate_fps"])
+
+    dispatch_compare = None
+    if not args.skip_dispatch_compare:
+        # three executor configurations at the peak stream count:
+        #   serialized+eager — the legacy per-op path with per-segment sync
+        #   serialized+jit   — fused segments, still synced per engine call
+        #   overlapped+jit   — the new default (async dispatch, resolve-only
+        #                      sync); vs serialized+jit isolates the overlap
+        #                      win, vs serialized+eager is the full refactor
+        k = peak["pix_streams"]
+        cmp_frames = max(frames, 8)  # tiny frame counts are too noisy to rank
+        configs = [
+            ("serialized_eager", "serialized", False),
+            ("serialized_jit", "serialized", True),
+            ("overlapped_jit", "overlapped", True),
+        ]
+        samples: dict[str, list[dict]] = {name: [] for name, _, _ in configs}
+        for _ in range(3):  # interleaved repeats cancel container drift
+            for name, dispatch, jit in configs:
+                samples[name].append(
+                    run_point(
+                        models, plan, k, cmp_frames, img, args.microbatch, args.norm,
+                        dispatch=dispatch, jit_segments=jit,
+                    )
+                )
+        med = {
+            name: sorted(rs, key=lambda r: r["aggregate_fps"])[len(rs) // 2]
+            for name, rs in samples.items()
+        }
+        dispatch_compare = {
+            "pix_streams": k,
+            "frames_per_stream": cmp_frames,
+            "repeats": 3,
+            "serialized_eager_fps": med["serialized_eager"]["aggregate_fps"],
+            "serialized_jit_fps": med["serialized_jit"]["aggregate_fps"],
+            "overlapped_jit_fps": med["overlapped_jit"]["aggregate_fps"],
+            "overlap_speedup": med["overlapped_jit"]["aggregate_fps"]
+            / med["serialized_jit"]["aggregate_fps"],
+            "total_speedup": med["overlapped_jit"]["aggregate_fps"]
+            / med["serialized_eager"]["aggregate_fps"],
+            "serialized_overlap_efficiency": med["serialized_jit"]["overlap_efficiency"],
+            "overlapped_overlap_efficiency": med["overlapped_jit"]["overlap_efficiency"],
+        }
+        print(
+            f"dispatch compare @ {k} pix streams (median of 3): "
+            f"serialized/eager={dispatch_compare['serialized_eager_fps']:.2f} "
+            f"serialized/jit={dispatch_compare['serialized_jit_fps']:.2f} "
+            f"overlapped/jit={dispatch_compare['overlapped_jit_fps']:.2f} FPS "
+            f"(overlap x{dispatch_compare['overlap_speedup']:.2f}, "
+            f"total x{dispatch_compare['total_speedup']:.2f})"
+        )
+
+    if args.cost_cache and hasattr(provider, "save"):
+        provider.save()  # measured AND blended both persist their timings
+
     payload = {
         "bench": "multi_stream_serve",
         "smoke": bool(args.smoke),
         "img_size": img,
         "frames_per_stream": frames,
         "microbatch": args.microbatch,
+        "norm": args.norm,
+        "cost_provider": args.cost,
+        "planner_search": results[0]["planner_search"] if results else args.search,
         "platform": platform.platform(),
         "aggregate_fps": peak["aggregate_fps"],
         "latency_p50_ms": peak["latency_p50_ms"],
         "latency_p99_ms": peak["latency_p99_ms"],
+        "overlap_efficiency": peak["overlap_efficiency"],
+        "dispatch_compare": dispatch_compare,
         "results": results,
     }
     with open(args.out, "w") as f:

@@ -1,0 +1,107 @@
+"""Serving-benchmark trend gate: compare the latest ``serve_bench`` run
+against the committed baseline and fail on aggregate-FPS regressions.
+
+  PYTHONPATH=src python benchmarks/trend.py --candidate BENCH_serve.new.json
+  PYTHONPATH=src python benchmarks/trend.py --candidate new.json --threshold 0.2 \
+      --history BENCH_history.jsonl
+
+Exit codes: 0 = within threshold (or configs incomparable — different
+image size / frame count / smoke tier are different workloads, not
+regressions), 2 = candidate peak FPS regressed more than ``--threshold``
+vs the baseline. ``--history`` appends one summary line per run so the
+trajectory across PRs/nights is greppable.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+COMPARABLE_KEYS = ("smoke", "img_size", "frames_per_stream", "microbatch", "norm", "cost_provider")
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def comparable(baseline: dict, candidate: dict) -> list[str]:
+    """Keys on which the two runs differ (empty = same workload)."""
+    return [
+        k for k in COMPARABLE_KEYS if baseline.get(k) != candidate.get(k)
+    ]
+
+
+def compare(baseline: dict, candidate: dict, threshold: float) -> tuple[bool, str]:
+    """Returns (ok, report). ``ok`` is False only for a real regression."""
+    lines = []
+    base_by_k = {r["pix_streams"]: r for r in baseline.get("results", [])}
+    for r in candidate.get("results", []):
+        b = base_by_k.get(r["pix_streams"])
+        if b is None:
+            continue
+        delta = r["aggregate_fps"] / b["aggregate_fps"] - 1.0
+        lines.append(
+            f"  streams={r['streams']:>2}  {b['aggregate_fps']:8.2f} -> {r['aggregate_fps']:8.2f} FPS "
+            f"({delta:+.1%})  p99 {b['latency_p99_ms']:7.1f} -> {r['latency_p99_ms']:7.1f} ms"
+        )
+    base_peak = baseline["aggregate_fps"]
+    cand_peak = candidate["aggregate_fps"]
+    ratio = cand_peak / base_peak if base_peak else float("inf")
+    lines.append(f"  peak: {base_peak:.2f} -> {cand_peak:.2f} FPS ({ratio - 1.0:+.1%})")
+    ok = ratio >= 1.0 - threshold
+    if not ok:
+        lines.append(f"  REGRESSION: peak FPS dropped more than {threshold:.0%}")
+    return ok, "\n".join(lines)
+
+
+def append_history(path: str, candidate: dict):
+    entry = {
+        k: candidate.get(k)
+        for k in (
+            "smoke",
+            "img_size",
+            "frames_per_stream",
+            "norm",
+            "cost_provider",
+            "planner_search",
+            "aggregate_fps",
+            "latency_p50_ms",
+            "latency_p99_ms",
+            "overlap_efficiency",
+            "platform",
+        )
+    }
+    if candidate.get("dispatch_compare"):
+        entry["overlap_speedup"] = candidate["dispatch_compare"].get("overlap_speedup")
+        entry["total_speedup"] = candidate["dispatch_compare"].get("total_speedup")
+    with open(path, "a") as f:
+        f.write(json.dumps(entry) + "\n")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="BENCH_serve.json", help="committed reference run")
+    ap.add_argument("--candidate", required=True, help="freshly produced run to vet")
+    ap.add_argument("--threshold", type=float, default=0.2, help="max tolerated peak-FPS drop")
+    ap.add_argument("--history", default=None, help="JSONL file to append the candidate summary to")
+    args = ap.parse_args()
+
+    baseline = load(args.baseline)
+    candidate = load(args.candidate)
+    if args.history:
+        append_history(args.history, candidate)
+
+    diffs = comparable(baseline, candidate)
+    if diffs:
+        print(f"[trend] runs not comparable (differ on {', '.join(diffs)}); skipping gate")
+        return 0
+    ok, report = compare(baseline, candidate, args.threshold)
+    print(f"[trend] {args.baseline} vs {args.candidate} (threshold {args.threshold:.0%})")
+    print(report)
+    return 0 if ok else 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

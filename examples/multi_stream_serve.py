@@ -1,15 +1,21 @@
 """N-model multi-stream serving: 4 Pix2Pix reconstruction streams + 1
 YOLOv8 detection stream, planned by ``nmodel_schedule`` and executed by
-the tick-based ``StreamExecutor`` (double buffering, bounded queues,
-micro-batched same-model frames).
+the tick-based ``StreamExecutor`` (overlapped dispatch, double buffering,
+bounded queues, micro-batched same-model frames).
 
 This is the production generalization of the paper's two-instance swap
 schedule: the planner balances the Pix2Pix/YOLO partition points across
-the engines, and the server fans K frame queues onto the planned routes.
+the engines — under the analytic roofline or XLA-measured per-layer
+costs (``--cost measured``) — and the server fans K frame queues onto
+the planned routes. ``--norm instance`` builds the batch-independent
+Pix2Pix variant so its streams are merge-micro-batched.
 
   PYTHONPATH=src python examples/multi_stream_serve.py
+  PYTHONPATH=src python examples/multi_stream_serve.py --cost measured --norm instance
 """
 from __future__ import annotations
+
+import argparse
 
 import jax
 import jax.numpy as jnp
@@ -18,52 +24,70 @@ from repro import core
 from repro.core.constraints import DLA_ANALOGUE_CONSTRAINTS
 from repro.core.engine import jetson_orin_engines
 from repro.models import Pix2PixConfig, Pix2PixGenerator, YOLOv8, YOLOv8Config
-from repro.serve import MultiStreamServer, build_pix_yolo_serving
-
-N_PIX_STREAMS = 4
-N_YOLO_STREAMS = 1
-FRAMES_PER_STREAM = 6
-IMG = 64
+from repro.serve import MultiStreamServer, build_pix_yolo_serving, merge_flags_for
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cost", choices=("analytic", "measured", "blended"), default="analytic")
+    ap.add_argument("--cost-cache", default=None, help="JSON cache for measured layer timings")
+    ap.add_argument("--dispatch", choices=("overlapped", "serialized"), default="overlapped")
+    ap.add_argument("--norm", choices=("batch", "instance", "group"), default="batch")
+    ap.add_argument("--streams", type=int, default=4, help="Pix2Pix stream count")
+    ap.add_argument("--yolo-streams", type=int, default=1)
+    ap.add_argument("--frames", type=int, default=6)
+    ap.add_argument("--img", type=int, default=64)
+    args = ap.parse_args()
+
+    provider = core.make_cost_provider(args.cost, cache_path=args.cost_cache)
     gpu, dla = jetson_orin_engines(constraints_dla=DLA_ANALOGUE_CONSTRAINTS)
 
     # planner view: full-size graphs (what deploys on the Jetson/TPU)
-    g_pix = Pix2PixGenerator(Pix2PixConfig(deconv_mode="cropping")).layer_graph()
+    g_pix = Pix2PixGenerator(Pix2PixConfig(deconv_mode="cropping", norm=args.norm)).layer_graph()
     g_yolo = YOLOv8(YOLOv8Config(img_size=256)).layer_graph()
-    plan_full = core.nmodel_schedule([g_pix, g_yolo], [dla, gpu])
-    print("== planner (full-size graphs, roofline cost model) ==")
+    plan_full = core.nmodel_schedule([g_pix, g_yolo], [dla, gpu], provider=provider)
+    print(f"== planner (full-size graphs, {plan_full.cost_provider} cost, {plan_full.search} search) ==")
     print(f"partitions: {plan_full.partitions}  cycle={plan_full.cycle_time*1e3:.2f} ms")
     print(plan_full.schedule.ascii_timeline())
 
     # executable view: small CPU-sized models, same machinery
-    (sm_pix, sm_yolo), plan, streams, _ = build_pix_yolo_serving(
-        img=IMG, n_pix=N_PIX_STREAMS, n_yolo=N_YOLO_STREAMS
+    models, plan, streams, _ = build_pix_yolo_serving(
+        img=args.img, n_pix=args.streams, n_yolo=args.yolo_streams, norm=args.norm, cost=provider
     )
+    if args.cost_cache and hasattr(provider, "save"):
+        provider.save()  # measured AND blended both persist their timings
+    sm_pix, sm_yolo = models
+    merge = merge_flags_for(models)
     server = MultiStreamServer(
-        [sm_pix, sm_yolo], plan, streams, max_queue=4, microbatch=2
+        models,
+        plan,
+        streams,
+        max_queue=4,
+        microbatch=2,
+        merge_batches=merge,
+        dispatch=args.dispatch,
     )
 
     frames = {
         s.name: [
-            jax.random.normal(jax.random.key(100 * si + t), (1, IMG, IMG, 3))
-            for t in range(FRAMES_PER_STREAM)
+            jax.random.normal(jax.random.key(100 * si + t), (1, args.img, args.img, 3))
+            for t in range(args.frames)
         ]
         for si, s in enumerate(streams)
     }
-    for t in range(FRAMES_PER_STREAM):
+    for t in range(args.frames):
         for s in streams:
             server.submit(s.model_index, frames[s.name][t])
         server.pump()
     outs = server.drain()
 
     rep = server.report()
-    print(f"\n== serving report ({len(streams)} streams) ==")
+    print(f"\n== serving report ({len(streams)} streams, {args.dispatch} dispatch, merge={merge}) ==")
     print(
         f"frames={rep['frames']} wall={rep['wall_s']:.2f}s "
         f"aggregate={rep['aggregate_fps']:.1f} FPS "
-        f"p50={rep['latency_p50_ms']:.1f} ms p99={rep['latency_p99_ms']:.1f} ms"
+        f"p50={rep['latency_p50_ms']:.1f} ms p99={rep['latency_p99_ms']:.1f} ms "
+        f"overlap_eff={rep['overlap']['overlap_efficiency']:.3f}"
     )
     for name, m in rep["per_stream"].items():
         print(

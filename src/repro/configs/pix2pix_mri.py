@@ -1,4 +1,6 @@
-"""The paper's own model: Pix2Pix CT->MRI (256x256), three variants."""
+"""The paper's own model: Pix2Pix CT->MRI (256x256), three deconv variants
+plus a batch-independent serving variant (instance norm instead of batch
+stats) that the multi-stream executor may merge-micro-batch."""
 import dataclasses
 
 from repro.models import Pix2PixConfig
@@ -8,5 +10,8 @@ FAMILY = "pix2pix"
 CONFIG = Pix2PixConfig(name="pix2pix-mri", img_size=256, deconv_mode="padded")
 CONFIG_CROPPING = dataclasses.replace(CONFIG, deconv_mode="cropping")
 CONFIG_CONV = dataclasses.replace(CONFIG, deconv_mode="conv")
+# batch-independent: per-frame outputs unaffected by merge_batches grouping
+CONFIG_MERGEABLE = dataclasses.replace(CONFIG_CROPPING, name="pix2pix-mri-in", norm="instance")
 
 SMOKE = Pix2PixConfig(name="pix2pix-smoke", img_size=64, base=8, deconv_mode="cropping")
+SMOKE_MERGEABLE = dataclasses.replace(SMOKE, name="pix2pix-smoke-in", norm="instance")

@@ -21,9 +21,15 @@ from .constraints import (
 )
 from .surgery import RULES, SurgeryReport, apply_surgery, substitute_pix2pix
 from .cost_model import (
+    ANALYTIC,
+    AnalyticCost,
+    BlendedCost,
+    CostProvider,
+    MeasuredCost,
     balanced_partition_point,
     graph_time,
     layer_time,
+    make_cost_provider,
     segment_cost,
     transfer_time,
 )

@@ -1,17 +1,26 @@
-"""Roofline cost model over layer graphs + engine specs.
+"""Cost providers + roofline cost model over layer graphs and engine specs.
 
 Per-layer time on an engine is the roofline max(flops/peak, bytes/bw);
 "inefficient" (but legal) layers pay a derate. Transfers between engines
 cost boundary_bytes / link_bw plus a fixed switch overhead — this is what
 makes fallback expensive and what the HaX-CoNN balance search trades off.
 
-The same estimates can be *profiled* instead of analytic: see
-``core.profiler`` which re-derives flops/bytes from XLA's
-``compiled.cost_analysis()`` per layer (the trtexec analogue).
+Where the flop/byte numbers come from is pluggable (the ``CostProvider``
+protocol): ``AnalyticCost`` uses the LayerMeta estimates as-built,
+``MeasuredCost`` re-derives them from XLA's ``compiled.cost_analysis()``
+per layer (the trtexec analogue, see ``core.profiler``) and caches the
+resulting per-(layer, engine, dtype) timings to a JSON file so repeated
+planning runs do not re-lower, and ``BlendedCost`` takes measured numbers
+where a measurement exists and falls back to analytic elsewhere. The
+scheduler and the partition heuristics consume only the provider
+interface, so one flag switches the whole plan->execute pipeline from
+paper-mode analytic planning to hardware-measured planning.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 
 from .constraints import Violation
 from .graph import LayerGraph, LayerMeta
@@ -20,14 +29,24 @@ SWITCH_OVERHEAD = 25e-6  # s; engine handoff latency (DeepStream/TensorRT-like)
 INEFFICIENT_DERATE = 0.5  # achieved fraction of engine flops on mis-aligned layers
 
 
-def layer_time(l: LayerMeta, engine) -> float:
+def _effective_flops(l: LayerMeta, engine) -> float:
     flops = engine.flops
     for v in engine.supports(l):
         if v.severity == "inefficient":
             flops = flops * INEFFICIENT_DERATE
-    t_c = l.flops / flops if flops else 0.0
-    t_m = l.bytes_accessed / engine.hbm_bw
+    return flops
+
+
+def _roofline(flops: float, bytes_accessed: float, l: LayerMeta, engine) -> float:
+    eff = _effective_flops(l, engine)
+    t_c = flops / eff if eff else 0.0
+    t_m = bytes_accessed / engine.hbm_bw
     return max(t_c, t_m)
+
+
+def layer_time(l: LayerMeta, engine) -> float:
+    """Analytic roofline layer time (the historical default path)."""
+    return _roofline(l.flops, l.bytes_accessed, l, engine)
 
 
 def transfer_time(nbytes: float, engine) -> float:
@@ -36,6 +55,160 @@ def transfer_time(nbytes: float, engine) -> float:
 
 def is_illegal(l: LayerMeta, engine) -> bool:
     return any(v.severity == "illegal" for v in engine.supports(l))
+
+
+# ---------------------------------------------------------------------------
+# Cost providers
+# ---------------------------------------------------------------------------
+
+
+class CostProvider:
+    """Source of per-layer timings for the planner.
+
+    Subclasses override ``layer_time``; ``available`` reports whether the
+    provider has a *measured* (non-analytic) number for a layer, which is
+    what ``BlendedCost`` keys its fallback on.
+    """
+
+    name = "base"
+
+    def layer_time(self, l: LayerMeta, engine) -> float:
+        raise NotImplementedError
+
+    def available(self, l: LayerMeta) -> bool:
+        return False
+
+    def describe(self) -> str:
+        return self.name
+
+
+class AnalyticCost(CostProvider):
+    """Roofline over the LayerMeta's analytic flop/byte estimates."""
+
+    name = "analytic"
+
+    def layer_time(self, l: LayerMeta, engine) -> float:
+        return layer_time(l, engine)
+
+
+ANALYTIC = AnalyticCost()
+
+
+class MeasuredCost(CostProvider):
+    """Roofline over XLA-measured flop/byte counts per layer.
+
+    Conv/deconv layers are lowered individually on ShapeDtypeStructs and
+    their ``cost_analysis()`` numbers replace the analytic estimates
+    (other kinds keep the analytic numbers — ``available`` reports which).
+    The derived per-(layer, engine, dtype) timing is cached in memory and,
+    when ``cache_path`` is given, persisted as JSON so later runs (and
+    other processes) skip the lowering entirely.
+    """
+
+    name = "measured"
+    _MEASURABLE = ("conv", "deconv")
+
+    def __init__(self, cache_path: str | None = None, dtype: str = "bfloat16"):
+        self.cache_path = cache_path
+        self.dtype = dtype
+        self._cache: dict[str, float] = {}
+        self.measure_count = 0  # lowerings performed by this instance
+        self.hits = 0
+        if cache_path and os.path.exists(cache_path):
+            with open(cache_path) as f:
+                payload = json.load(f)
+            if payload.get("dtype", dtype) != dtype:
+                raise ValueError(
+                    f"{cache_path}: cached dtype {payload.get('dtype')!r} != requested {dtype!r}"
+                )
+            self._cache = dict(payload.get("entries", {}))
+
+    def available(self, l: LayerMeta) -> bool:
+        return l.kind in self._MEASURABLE and l.attrs.get("groups", 1) == 1
+
+    def _key(self, l: LayerMeta, engine) -> str:
+        shape = "x".join(str(d) for d in l.in_shape)
+        a = l.attrs
+        sig = f"k{a.get('kernel', 1)}s{a.get('stride', 1)}p{a.get('padding', 0)}"
+        return f"{l.kind}|{shape}|{sig}|c{l.out_shape[-1]}|{engine.name}|{self.dtype}"
+
+    def _measure(self, l: LayerMeta) -> tuple[float, float]:
+        from .profiler import _conv_cost
+
+        self.measure_count += 1
+        return _conv_cost(
+            tuple(l.in_shape),
+            l.attrs.get("kernel", 1),
+            l.attrs.get("stride", 1),
+            l.attrs.get("padding", 0),
+            l.out_shape[-1],
+            l.kind == "deconv",
+            self.dtype,
+        )
+
+    def layer_time(self, l: LayerMeta, engine) -> float:
+        if not self.available(l):
+            return layer_time(l, engine)
+        key = self._key(l, engine)
+        if key in self._cache:
+            self.hits += 1
+            return self._cache[key]
+        flops, bytes_ = self._measure(l)
+        t = _roofline(flops or l.flops, bytes_ or l.bytes_accessed, l, engine)
+        self._cache[key] = t
+        return t
+
+    def save(self, path: str | None = None) -> str:
+        path = path or self.cache_path
+        if not path:
+            raise ValueError("MeasuredCost has no cache_path to save to")
+        payload = {"version": 1, "dtype": self.dtype, "entries": self._cache}
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        os.replace(tmp, path)
+        return path
+
+    @property
+    def cache_size(self) -> int:
+        return len(self._cache)
+
+
+class BlendedCost(CostProvider):
+    """Measured where a measurement exists, analytic everywhere else."""
+
+    name = "blended"
+
+    def __init__(self, measured: MeasuredCost | None = None, analytic: CostProvider | None = None):
+        self.measured = measured or MeasuredCost()
+        self.analytic = analytic or ANALYTIC
+
+    def available(self, l: LayerMeta) -> bool:
+        return self.measured.available(l)
+
+    def layer_time(self, l: LayerMeta, engine) -> float:
+        if self.measured.available(l):
+            return self.measured.layer_time(l, engine)
+        return self.analytic.layer_time(l, engine)
+
+    def save(self, path: str | None = None) -> str:
+        return self.measured.save(path)
+
+
+def make_cost_provider(name: str, cache_path: str | None = None, dtype: str = "bfloat16") -> CostProvider:
+    """Factory behind every ``--cost {analytic,measured,blended}`` flag."""
+    if name == "analytic":
+        return ANALYTIC
+    if name == "measured":
+        return MeasuredCost(cache_path=cache_path, dtype=dtype)
+    if name == "blended":
+        return BlendedCost(MeasuredCost(cache_path=cache_path, dtype=dtype))
+    raise ValueError(f"unknown cost provider {name!r} (want analytic|measured|blended)")
+
+
+# ---------------------------------------------------------------------------
+# Segment / graph costing (provider-parameterized)
+# ---------------------------------------------------------------------------
 
 
 @dataclasses.dataclass
@@ -56,7 +229,17 @@ class SegmentCost:
         return self.n_fallback_runs > 0
 
 
-def segment_cost(graph: LayerGraph, lo: int, hi: int, engine, peer, allow_fallback=True) -> SegmentCost:
+def segment_cost(
+    graph: LayerGraph,
+    lo: int,
+    hi: int,
+    engine,
+    peer,
+    allow_fallback=True,
+    provider: CostProvider | None = None,
+) -> SegmentCost:
+    if provider is None:
+        provider = ANALYTIC
     engine_busy = peer_busy = transfer = 0.0
     runs = 0
     prev_illegal = False
@@ -64,14 +247,14 @@ def segment_cost(graph: LayerGraph, lo: int, hi: int, engine, peer, allow_fallba
         l = graph[i]
         ill = allow_fallback and is_illegal(l, engine)
         if ill:
-            peer_busy += layer_time(l, peer)
+            peer_busy += provider.layer_time(l, peer)
             if not prev_illegal:
                 runs += 1
                 # hand the activation to the peer...
                 prev_bytes = graph[i - 1].boundary_bytes if i > lo else l.boundary_bytes
                 transfer += transfer_time(prev_bytes, engine)
         else:
-            engine_busy += layer_time(l, engine)
+            engine_busy += provider.layer_time(l, engine)
             if prev_illegal:
                 # ...and back
                 transfer += transfer_time(graph[i - 1].boundary_bytes, engine)
@@ -89,9 +272,11 @@ def segment_cost(graph: LayerGraph, lo: int, hi: int, engine, peer, allow_fallba
     )
 
 
-def graph_time(graph: LayerGraph, engine, peer=None, allow_fallback=True) -> SegmentCost:
+def graph_time(
+    graph: LayerGraph, engine, peer=None, allow_fallback=True, provider: CostProvider | None = None
+) -> SegmentCost:
     peer = peer or engine
-    return segment_cost(graph, 0, len(graph), engine, peer, allow_fallback=allow_fallback)
+    return segment_cost(graph, 0, len(graph), engine, peer, allow_fallback=allow_fallback, provider=provider)
 
 
 def partition_boundary_bytes(graph: LayerGraph, p: int) -> float:
@@ -101,18 +286,22 @@ def partition_boundary_bytes(graph: LayerGraph, p: int) -> float:
     return graph[p - 1].boundary_bytes
 
 
-def balanced_partition_point(graph: LayerGraph, head_engine, tail_engine, candidates=None) -> int:
+def balanced_partition_point(
+    graph: LayerGraph, head_engine, tail_engine, candidates=None, provider: CostProvider | None = None
+) -> int:
     """Partition point that best balances head time on ``head_engine``
     against tail time on ``tail_engine`` — the warm start for the N-model
-    planner's coordinate descent (and a decent heuristic on its own)."""
+    planner's local searches (and a decent heuristic on its own)."""
+    if provider is None:
+        provider = ANALYTIC
     cands = list(candidates) if candidates is not None else list(range(1, len(graph)))
     if not cands:
         raise ValueError(f"{graph.model_name}: no interior partition point")
     prefix = [0.0]
     for l in graph:
-        prefix.append(prefix[-1] + layer_time(l, head_engine))
+        prefix.append(prefix[-1] + provider.layer_time(l, head_engine))
     suffix = [0.0]
     for l in reversed(list(graph)):
-        suffix.append(suffix[-1] + layer_time(l, tail_engine))
+        suffix.append(suffix[-1] + provider.layer_time(l, tail_engine))
     suffix.reverse()
     return min(cands, key=lambda p: abs(prefix[p] - suffix[p]))

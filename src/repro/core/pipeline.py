@@ -32,6 +32,9 @@ class StagedModel:
     graph: LayerGraph
     init_state: Callable[[Any], dict]
     finalize: Callable[[dict], Any]
+    # per-frame outputs independent of batch companions (instance/group
+    # norm) — the precondition for merge_batches micro-batching
+    batch_independent: bool = False
 
     def __post_init__(self):
         assert len(self.ops) == len(self.graph), (
@@ -39,9 +42,30 @@ class StagedModel:
         )
 
     def run_segment(self, state, lo, hi):
-        for _, fn in self.ops[lo:hi]:
-            state = fn(self.params, state)
-        return state
+        return self.segment_fn(lo, hi)(self.params, state)
+
+    def segment_fn(self, lo, hi):
+        """Pure ``(params, state) -> state`` over ``ops[lo:hi)`` — the form
+        ``jax.jit`` (with state-buffer donation) accepts."""
+
+        def f(params, state):
+            for _, fn in self.ops[lo:hi]:
+                state = fn(params, state)
+            return state
+
+        return f
+
+    def jitted_segment_fn(self, lo, hi, donate: bool = False):
+        """Fused one-executable form of ``segment_fn``, cached on the model
+        so every executor over the same route shares the compilation."""
+        if not hasattr(self, "_jit_cache"):
+            self._jit_cache = {}
+        key = (lo, hi, donate)
+        if key not in self._jit_cache:
+            self._jit_cache[key] = jax.jit(
+                self.segment_fn(lo, hi), donate_argnums=(1,) if donate else ()
+            )
+        return self._jit_cache[key]
 
     def run_all(self, x):
         return self.finalize(self.run_segment(self.init_state(x), 0, len(self.ops)))
@@ -58,6 +82,7 @@ def pix2pix_staged(cfg, params, batch_dtype=None) -> StagedModel:
         graph=gen.layer_graph(),
         init_state=lambda x: {"x": x.astype(cfg.act_dtype), "skips": []},
         finalize=lambda s: s["x"],
+        batch_independent=cfg.batch_independent,
     )
 
 

@@ -12,9 +12,14 @@ Three scheduling modes, exactly as evaluated by the paper:
                         counter-phased across both engines so busy times
                         balance (Tables III–VI). The two partition points
                         are found by exact search over all O(L_A * L_B)
-                        candidates against the roofline cost model — the
-                        two-engine specialization of HaX-CoNN's SAT
-                        formulation, solved optimally.
+                        candidates against the cost model — the two-engine
+                        specialization of HaX-CoNN's SAT formulation,
+                        solved optimally.
+
+Every search takes a ``CostProvider`` (default: the analytic roofline),
+so the same planners run against XLA-measured per-layer costs — the
+HaX-CoNN observation that measured costs, not analytic ones, are what
+make engine-allocation decisions transfer to hardware.
 """
 from __future__ import annotations
 
@@ -23,6 +28,8 @@ import itertools
 import math
 
 from .cost_model import (
+    ANALYTIC,
+    CostProvider,
     SegmentCost,
     balanced_partition_point,
     graph_time,
@@ -89,8 +96,10 @@ class Schedule:
 # ---------------------------------------------------------------------------
 
 
-def standalone_schedule(graph: LayerGraph, engine, peer, allow_fallback=True) -> Schedule:
-    c = graph_time(graph, engine, peer, allow_fallback=allow_fallback)
+def standalone_schedule(
+    graph: LayerGraph, engine, peer, allow_fallback=True, provider: CostProvider | None = None
+) -> Schedule:
+    c = graph_time(graph, engine, peer, allow_fallback=allow_fallback, provider=provider)
     loads = {
         engine.name: EngineLoad(busy=c.engine_busy, stall=c.peer_busy + c.transfer),
         peer.name: EngineLoad(busy=c.peer_busy, stall=0.0),
@@ -110,10 +119,10 @@ def standalone_schedule(graph: LayerGraph, engine, peer, allow_fallback=True) ->
     return sched
 
 
-def peer_utilization(graph: LayerGraph, engine, peer) -> float:
+def peer_utilization(graph: LayerGraph, engine, peer, provider: CostProvider | None = None) -> float:
     """Fraction of the frame time the *peer* is busy serving fallbacks —
     the paper's Fig. 10 'GPU utilization of the DLA-assigned model'."""
-    c = graph_time(graph, engine, peer)
+    c = graph_time(graph, engine, peer, provider=provider)
     return c.peer_busy / c.elapsed if c.elapsed else 0.0
 
 
@@ -122,11 +131,13 @@ def peer_utilization(graph: LayerGraph, engine, peer) -> float:
 # ---------------------------------------------------------------------------
 
 
-def naive_schedule(graph_a: LayerGraph, graph_b: LayerGraph, constrained, flexible) -> Schedule:
+def naive_schedule(
+    graph_a: LayerGraph, graph_b: LayerGraph, constrained, flexible, provider: CostProvider | None = None
+) -> Schedule:
     """A runs whole on the constrained engine (DLA), B whole on the flexible
     one (GPU). A's fallbacks preempt the GPU and stretch both periods."""
-    ca = graph_time(graph_a, constrained, flexible)
-    tb = graph_time(graph_b, flexible, flexible, allow_fallback=False).engine_busy
+    ca = graph_time(graph_a, constrained, flexible, provider=provider)
+    tb = graph_time(graph_b, flexible, flexible, allow_fallback=False, provider=provider).engine_busy
     # GPU serves B plus A's fallback work each A-frame; A-frames take at
     # least ca.elapsed, so the steady-state GPU period per B frame:
     gpu_period = tb + ca.peer_busy * min(1.0, (tb + ca.peer_busy) / max(ca.elapsed, 1e-12))
@@ -168,13 +179,13 @@ def _candidate_points(graph: LayerGraph, stride: int = 1):
     return list(range(1, len(graph), stride))
 
 
-def _evaluate_pair(graph_a, graph_b, pa, pb, constrained, flexible, allow_fallback):
+def _evaluate_pair(graph_a, graph_b, pa, pb, constrained, flexible, allow_fallback, provider=None):
     la, lb = len(graph_a), len(graph_b)
-    ca1 = segment_cost(graph_a, 0, pa, constrained, flexible, allow_fallback)
-    ca2 = segment_cost(graph_a, pa, la, flexible, flexible, False)
+    ca1 = segment_cost(graph_a, 0, pa, constrained, flexible, allow_fallback, provider=provider)
+    ca2 = segment_cost(graph_a, pa, la, flexible, flexible, False, provider=provider)
     xa = transfer_time(partition_boundary_bytes(graph_a, pa), constrained)
-    cb1 = segment_cost(graph_b, 0, pb, flexible, flexible, False)
-    cb2 = segment_cost(graph_b, pb, lb, constrained, flexible, allow_fallback)
+    cb1 = segment_cost(graph_b, 0, pb, flexible, flexible, False, provider=provider)
+    cb2 = segment_cost(graph_b, pb, lb, constrained, flexible, allow_fallback, provider=provider)
     xb = transfer_time(partition_boundary_bytes(graph_b, pb), flexible)
     t_con = ca1.elapsed + cb2.elapsed + xa + xb
     t_flex = cb1.elapsed + ca2.elapsed + ca1.peer_busy + cb2.peer_busy
@@ -189,6 +200,7 @@ def haxconn_schedule(
     allow_fallback: bool = True,
     stride: int = 1,
     fixed: tuple[int, int] | None = None,
+    provider: CostProvider | None = None,
 ) -> HaxConnResult:
     """Exact search for the partition pair minimizing steady-state cycle time
     (or evaluation at a caller-``fixed`` (pa, pb) — e.g. the paper's
@@ -209,7 +221,7 @@ def haxconn_schedule(
     for pa in cand_a:
         for pb in cand_b:
             ca1, ca2, cb1, cb2, xa, xb, t_con, t_flex = _evaluate_pair(
-                graph_a, graph_b, pa, pb, constrained, flexible, allow_fallback
+                graph_a, graph_b, pa, pb, constrained, flexible, allow_fallback, provider
             )
             cycle = max(t_con, t_flex)
             idle = abs(t_con - t_flex)
@@ -275,6 +287,8 @@ class NModelPlan:
     partitions: list[int]
     engine_times: dict[str, float]  # steady-state per-cycle occupancy
     flex_index: int  # engine absorbing fallback work
+    cost_provider: str = "analytic"  # which CostProvider scored this plan
+    search: str = "exhaustive"  # exhaustive | beam | descent | fixed
 
     @property
     def cycle_time(self) -> float:
@@ -291,9 +305,9 @@ def _model_pair(i: int, n_engines: int) -> tuple[int, int]:
     return i % n_engines, (i + 1) % n_engines
 
 
-def _make_model_cost_fn(graphs, engines, allow_fallback, flex_idx):
-    """Memoized per-(model, partition) segment costs: a coordinate-descent
-    trial changes one model's point, so the other models' costs recur."""
+def _make_model_cost_fn(graphs, engines, allow_fallback, flex_idx, provider=None):
+    """Memoized per-(model, partition) segment costs: a search trial changes
+    one model's point, so the other models' costs recur."""
     cache: dict[tuple[int, int], tuple] = {}
     E = len(engines)
     flex = engines[flex_idx]
@@ -303,8 +317,8 @@ def _make_model_cost_fn(graphs, engines, allow_fallback, flex_idx):
         if key not in cache:
             g = graphs[i]
             e1, e2 = _model_pair(i, E)
-            c1 = segment_cost(g, 0, p, engines[e1], flex, allow_fallback and e1 != flex_idx)
-            c2 = segment_cost(g, p, len(g), engines[e2], flex, allow_fallback and e2 != flex_idx)
+            c1 = segment_cost(g, 0, p, engines[e1], flex, allow_fallback and e1 != flex_idx, provider=provider)
+            c2 = segment_cost(g, p, len(g), engines[e2], flex, allow_fallback and e2 != flex_idx, provider=provider)
             x = transfer_time(partition_boundary_bytes(g, p), engines[e1]) if e1 != e2 else 0.0
             cache[key] = (e1, e2, c1, c2, x)
         return cache[key]
@@ -346,6 +360,101 @@ def _evaluate_vector(graphs, engines, pvec, allow_fallback, flex_idx, cost_fn=No
     return (cycle, spread), t, busy, per_model
 
 
+def _candidate_deltas(cands, cost_fn, n_engines, flex_idx):
+    """Per-model candidate engine-occupancy contribution vectors.
+
+    Candidates whose *raw cost components* are identical to an earlier
+    candidate's are dropped (per-model cost monotonicity makes long flat
+    plateaus — e.g. zero-flop crop layers — common): identical components
+    accumulate identically in ``_evaluate_vector``'s fixed summation
+    order, so the earlier point ties every completion exactly and
+    precedes it in product order — the pruning never changes the argmin.
+    (Keying on the raw components rather than the summed delta matters:
+    equal float *sums* do not imply equal canonical keys.)
+    """
+    deltas = []
+    for i, cl in enumerate(cands):
+        seen, lst = set(), []
+        for ci, p in enumerate(cl):
+            e1, e2, c1, c2, x = cost_fn(i, p)
+            raw = (c1.elapsed, c2.elapsed, x, c1.peer_busy, c2.peer_busy)
+            if raw in seen:
+                continue
+            seen.add(raw)
+            d = [0.0] * n_engines
+            d[e1] += c1.elapsed
+            d[e2] += c2.elapsed
+            if e1 != e2:
+                d[min(e1, e2)] += x
+            d[flex_idx] += c1.peer_busy + c2.peer_busy
+            lst.append((ci, p, tuple(d)))
+        deltas.append(lst)
+    return deltas
+
+
+def _beam_search(cands, cost_fn, n_engines, flex_idx, key_of, beam_width):
+    """Beam search over partition vectors.
+
+    States carry the partial per-engine occupancy (monotonically growing —
+    every candidate contribution is nonnegative, so a partial cycle lower-
+    bounds every completion) and the tuple of candidate indices, which is
+    exactly the vector's rank in ``itertools.product`` order. When the beam
+    never truncates, the surviving set *is* the full product and the final
+    argmin (canonical key, then product order) is bit-identical to the
+    exhaustive search.
+    """
+    deltas = _candidate_deltas(cands, cost_fn, n_engines, flex_idx)
+    # Lookahead for the truncation ordering: each unplaced model must add at
+    # least its elementwise-min contribution to every engine, so ranking
+    # partial states by max(occupancy + suffix_min) compares lower bounds on
+    # their completions instead of raw (counter-phase-biased) partial cycles.
+    suffix_min = [(0.0,) * n_engines]
+    for lst in reversed(deltas):
+        m = tuple(min(d[e] for _, _, d in lst) for e in range(n_engines))
+        suffix_min.append(tuple(a + b for a, b in zip(suffix_min[-1], m)))
+    suffix_min.reverse()
+    beam = [((), (), (0.0,) * n_engines)]  # (idx_tuple, pvec, occupancy)
+    for level, lst in enumerate(deltas):
+        nxt = [
+            (idx + (ci,), pvec + (p,), tuple(o + dd for o, dd in zip(occ, d)))
+            for idx, pvec, occ in beam
+            for ci, p, d in lst
+        ]
+        if len(nxt) > beam_width:
+            rest = suffix_min[level + 1]
+
+            def rank(s):
+                bound = [o + r for o, r in zip(s[2], rest)]
+                return (max(bound), max(bound) - min(bound), s[0])
+
+            nxt.sort(key=rank)
+            nxt = nxt[:beam_width]
+        beam = nxt
+    _, best_pvec, _ = min(beam, key=lambda s: (key_of(s[1]), s[0]))
+    return best_pvec, key_of(best_pvec)
+
+
+def _coordinate_descent(start_pvec, cands, key_of, rounds):
+    """Sweep every model's candidate list holding the others fixed, until a
+    fixed point — used as the legacy search mode and as the cheap local
+    polish after beam search (strict improvement only, so it can never
+    leave a beam optimum for a tie)."""
+    best_pvec, best_key = tuple(start_pvec), key_of(tuple(start_pvec))
+    for _ in range(rounds):
+        improved = False
+        for i in range(len(cands)):
+            for p in cands[i]:
+                trial = list(best_pvec)
+                trial[i] = p
+                k = key_of(tuple(trial))
+                if k < best_key:
+                    best_key, best_pvec = k, tuple(trial)
+                    improved = True
+        if not improved:
+            break
+    return best_pvec, best_key
+
+
 def nmodel_schedule(
     graphs: list[LayerGraph],
     engines,
@@ -354,20 +463,41 @@ def nmodel_schedule(
     fixed: tuple[int, ...] | None = None,
     exhaustive_limit: int = 20000,
     descent_rounds: int = 8,
+    provider: CostProvider | None = None,
+    search: str = "auto",
+    beam_width: int = 64,
 ) -> NModelPlan:
     """Plan N staged models over E engines, one partition point per model.
 
-    Search: exhaustive over the Cartesian product of candidate points when
-    it is small (this covers N=2, where the result is provably identical to
-    ``haxconn_schedule``), else coordinate descent from a cost-balanced
-    start — each round sweeps every model's candidate list holding the
-    others fixed, until a fixed point.
+    ``search`` modes:
+
+    * ``"auto"``       — exhaustive over the Cartesian product of candidate
+                         points when it is small (this covers N=2, where the
+                         result is provably identical to ``haxconn_schedule``),
+                         else beam search.
+    * ``"exhaustive"`` — force the full product scan.
+    * ``"beam"``       — beam search over partition vectors (width
+                         ``beam_width``), pruning identical-contribution
+                         candidates, followed by a coordinate-descent
+                         polish from the beam's best vector. The legacy
+                         balanced warm start is kept as a restart seed, so
+                         the beam planner is structurally never worse than
+                         the old coordinate descent.
+    * ``"descent"``    — the legacy coordinate descent from a cost-balanced
+                         start (kept as a comparison baseline).
+
+    Plans record which provider scored them (``plan.cost_provider``) and
+    which search produced them (``plan.search``).
     """
     graphs, engines = list(graphs), list(engines)
     if not graphs:
         raise ValueError("nmodel_schedule needs at least one model graph")
     if not engines:
         raise ValueError("nmodel_schedule needs at least one engine")
+    if search not in ("auto", "exhaustive", "beam", "descent"):
+        raise ValueError(f"unknown search mode {search!r}")
+    if provider is None:
+        provider = ANALYTIC
     flex_idx = _flex_engine_index(engines)
     if fixed is not None:
         cands = [[p] for p in fixed]
@@ -377,38 +507,48 @@ def nmodel_schedule(
         if not c:
             raise ValueError(f"model {graphs[i].model_name} has no interior partition point")
 
-    cost_fn = _make_model_cost_fn(graphs, engines, allow_fallback, flex_idx)
+    cost_fn = _make_model_cost_fn(graphs, engines, allow_fallback, flex_idx, provider)
+
+    key_cache: dict[tuple, tuple] = {}
 
     def key_of(pvec):
-        return _evaluate_vector(graphs, engines, pvec, allow_fallback, flex_idx, cost_fn)[0]
+        pvec = tuple(pvec)
+        if pvec not in key_cache:
+            key_cache[pvec] = _evaluate_vector(graphs, engines, pvec, allow_fallback, flex_idx, cost_fn)[0]
+        return key_cache[pvec]
 
     n_candidates = math.prod(len(c) for c in cands)
-    if n_candidates <= exhaustive_limit:
+    if fixed is not None:
+        mode = "fixed"
+    elif search == "auto":
+        mode = "exhaustive" if n_candidates <= exhaustive_limit else "beam"
+    else:
+        mode = search
+    if mode in ("exhaustive", "fixed"):
         best_key, best_pvec = None, None
         for pvec in itertools.product(*cands):
             k = key_of(pvec)
             if best_key is None or k < best_key:
                 best_key, best_pvec = k, pvec
     else:
-        pvec = [
+        balanced = [
             balanced_partition_point(
-                g, engines[_model_pair(i, len(engines))[0]], engines[_model_pair(i, len(engines))[1]], cands[i]
+                g,
+                engines[_model_pair(i, len(engines))[0]],
+                engines[_model_pair(i, len(engines))[1]],
+                cands[i],
+                provider=provider,
             )
             for i, g in enumerate(graphs)
         ]
-        best_pvec, best_key = tuple(pvec), key_of(tuple(pvec))
-        for _ in range(descent_rounds):
-            improved = False
-            for i in range(len(graphs)):
-                for p in cands[i]:
-                    trial = list(best_pvec)
-                    trial[i] = p
-                    k = key_of(tuple(trial))
-                    if k < best_key:
-                        best_key, best_pvec = k, tuple(trial)
-                        improved = True
-            if not improved:
-                break
+        if mode == "beam":
+            best_pvec, best_key = _beam_search(cands, cost_fn, len(engines), flex_idx, key_of, beam_width)
+            best_pvec, best_key = _coordinate_descent(best_pvec, cands, key_of, descent_rounds)
+            restart = _coordinate_descent(balanced, cands, key_of, descent_rounds)
+            if restart[1] < best_key:
+                best_pvec, best_key = restart
+        else:  # descent
+            best_pvec, best_key = _coordinate_descent(balanced, cands, key_of, descent_rounds)
 
     (cycle, _), t, busy, per_model = _evaluate_vector(
         graphs, engines, best_pvec, allow_fallback, flex_idx, cost_fn
@@ -437,6 +577,7 @@ def nmodel_schedule(
             f"{g.model_name}: {engines[e1].name}[0:{p}) {engines[e2].name}[{p}:{len(g)})"
         )
     notes.append(f"fallback_runs={n_fallback}")
+    notes.append(f"search={mode} cost={provider.name}")
     sched = Schedule(
         kind="nmodel",
         models=tuple(g.model_name for g in graphs),
@@ -457,4 +598,6 @@ def nmodel_schedule(
         partitions=list(best_pvec),
         engine_times={e.name: ti for e, ti in zip(engines, t)},
         flex_index=flex_idx,
+        cost_provider=provider.name,
+        search=mode,
     )

@@ -179,6 +179,24 @@ def analytic_bytes(spec: ArchSpec, shape_name: str, n_chips: int) -> float:
     return param_traffic + cache / n_chips
 
 
+def graph_cost_rows(graph, engines, provider=None) -> list[dict]:
+    """Per-layer timing table for a layer graph under a ``CostProvider`` —
+    the layer-graph analogue of the arch-level analytic model above, and
+    the quickest way to see where measured costs diverge from analytic
+    ones (``python -m repro.launch.analytic --cost measured``)."""
+    from ..core.cost_model import ANALYTIC
+
+    provider = provider or ANALYTIC
+    rows = []
+    for l in graph:
+        row = {"layer": l.name, "kind": l.kind, "flops": l.flops}
+        for e in engines:
+            row[f"t_{e.name}_us"] = provider.layer_time(l, e) * 1e6
+        row["measured"] = provider.available(l)
+        rows.append(row)
+    return rows
+
+
 def analytic_flops(spec: ArchSpec, shape_name: str, remat: bool = True) -> float:
     """Total executed flops for one step of the cell (global)."""
     cfg = spec.config
@@ -204,3 +222,48 @@ def analytic_flops(spec: ArchSpec, shape_name: str, remat: bool = True) -> float
             factor = 4.0
         return fwd * factor
     return fwd
+
+
+def main() -> None:
+    """Planner-view cost report for the paper's serving pair: graph totals
+    and the N-model schedule under the selected provider.
+
+      PYTHONPATH=src python -m repro.launch.analytic --cost measured --per-layer
+    """
+    import argparse
+    import json
+
+    from ..core.constraints import DLA_ANALOGUE_CONSTRAINTS
+    from ..core.cost_model import make_cost_provider
+    from ..core.engine import jetson_orin_engines
+    from ..core.scheduler import nmodel_schedule
+    from ..models import Pix2PixConfig, Pix2PixGenerator, YOLOv8, YOLOv8Config
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cost", choices=("analytic", "measured", "blended"), default="analytic")
+    ap.add_argument("--cost-cache", default=None, help="JSON cache for measured layer timings")
+    ap.add_argument("--img", type=int, default=256)
+    ap.add_argument("--per-layer", action="store_true", help="dump the per-layer table")
+    args = ap.parse_args()
+
+    provider = make_cost_provider(args.cost, cache_path=args.cost_cache)
+    gpu, dla = jetson_orin_engines(constraints_dla=DLA_ANALOGUE_CONSTRAINTS)
+    g_pix = Pix2PixGenerator(Pix2PixConfig(img_size=args.img, deconv_mode="cropping")).layer_graph()
+    g_yolo = YOLOv8(YOLOv8Config(img_size=args.img)).layer_graph()
+    plan = nmodel_schedule([g_pix, g_yolo], [dla, gpu], provider=provider)
+    if args.cost_cache and hasattr(provider, "save"):
+        provider.save()  # measured AND blended both persist their timings
+    print(
+        f"[analytic] cost={plan.cost_provider} search={plan.search} "
+        f"partitions={plan.partitions} cycle={plan.cycle_time*1e3:.3f} ms "
+        f"aggregate={plan.schedule.aggregate_fps:.1f} FPS"
+    )
+    print(plan.schedule.ascii_timeline())
+    if args.per_layer:
+        for graph in (g_pix, g_yolo):
+            print(f"\n# {graph.model_name}")
+            print(json.dumps(graph_cost_rows(graph, (dla, gpu), provider), indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -3,9 +3,13 @@
 ``lm`` (default): batched prefill + greedy decode with the KV-cache paths
 the dry-run lowers at scale. ``streams``: the N-model multi-stream
 serving subsystem — K frame streams over the planned engine routes.
+``--cost`` switches the planner between paper-mode analytic costs and
+XLA-measured per-layer costs; ``--dispatch serialized`` restores the
+per-segment-synchronized executor for comparison.
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2_2b --tokens 16
   PYTHONPATH=src python -m repro.launch.serve --mode streams --streams 4 --frames 6
+  PYTHONPATH=src python -m repro.launch.serve --mode streams --cost measured --norm instance
 """
 from __future__ import annotations
 
@@ -22,14 +26,33 @@ from ..configs import get_arch, build_model
 
 
 def run_streams(args) -> None:
-    from ..serve import MultiStreamServer, build_pix_yolo_serving
+    from ..core.cost_model import make_cost_provider
+    from ..serve import MultiStreamServer, build_pix_yolo_serving, merge_flags_for
 
+    provider = make_cost_provider(args.cost, cache_path=args.cost_cache)
     models, plan, streams, _ = build_pix_yolo_serving(
-        img=args.img, base=args.base, n_pix=args.streams, n_yolo=args.yolo_streams
+        img=args.img,
+        base=args.base,
+        n_pix=args.streams,
+        n_yolo=args.yolo_streams,
+        norm=args.norm,
+        cost=provider,
     )
-    print(f"[serve] plan partitions={plan.partitions} cycle={plan.cycle_time*1e3:.2f} ms")
+    if args.cost_cache and hasattr(provider, "save"):
+        provider.save()  # measured AND blended both persist their timings
+    print(
+        f"[serve] plan partitions={plan.partitions} cycle={plan.cycle_time*1e3:.2f} ms "
+        f"search={plan.search} cost={plan.cost_provider}"
+    )
     server = MultiStreamServer(
-        models, plan, streams, max_queue=args.queue_depth, microbatch=args.microbatch
+        models,
+        plan,
+        streams,
+        max_queue=args.queue_depth,
+        microbatch=args.microbatch,
+        merge_batches=merge_flags_for(models),
+        dispatch=args.dispatch,
+        jit_segments=not args.no_jit_segments,
     )
     for t in range(args.frames):
         for s in streams:
@@ -54,6 +77,11 @@ def main():
     ap.add_argument("--base", type=int, default=8)
     ap.add_argument("--microbatch", type=int, default=2)
     ap.add_argument("--queue-depth", type=int, default=4)
+    ap.add_argument("--cost", choices=("analytic", "measured", "blended"), default="analytic")
+    ap.add_argument("--cost-cache", default=None, help="JSON cache for measured layer timings")
+    ap.add_argument("--dispatch", choices=("overlapped", "serialized"), default="overlapped")
+    ap.add_argument("--norm", choices=("batch", "instance", "group"), default="batch")
+    ap.add_argument("--no-jit-segments", action="store_true", help="eager per-op dispatch")
     args = ap.parse_args()
 
     if args.mode == "streams":

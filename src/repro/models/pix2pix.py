@@ -26,6 +26,8 @@ from ..nn import (
     Conv2D,
     ConvTranspose2D,
     Crop2D,
+    GroupNorm2D,
+    InstanceNorm2D,
     Module,
     leaky_relu,
 )
@@ -42,10 +44,29 @@ class Pix2PixConfig:
     out_channels: int = 3
     deconv_mode: str = "padded"  # padded | cropping | conv
     deconv_backend: str = "xla"  # "xla" | "pallas" (phase-decomposed kernel)
+    # "batch" is the TF-tutorial original (batch stats at inference too);
+    # "instance"/"group" are batch-independent, so merged micro-batches
+    # (serve.StreamExecutor merge_batches) leave every frame's math intact
+    norm: str = "batch"  # batch | instance | group
+    norm_groups: int = 8
     base: int = 64
     dropout_rate: float = 0.5
     lambda_l1: float = 100.0
     act_dtype: Any = jnp.float32
+
+    @property
+    def batch_independent(self) -> bool:
+        """True when per-frame outputs do not depend on batch companions."""
+        return self.norm in ("instance", "group")
+
+    def norm2d(self, ch: int):
+        if self.norm == "batch":
+            return BatchNorm2D(ch)
+        if self.norm == "instance":
+            return InstanceNorm2D(ch)
+        if self.norm == "group":
+            return GroupNorm2D(ch, groups=math.gcd(self.norm_groups, ch))
+        raise ValueError(f"unknown norm {self.norm!r} (want batch|instance|group)")
 
     @property
     def n_downs(self):
@@ -106,12 +127,12 @@ class Pix2PixGenerator(Module):
         for i, ch in enumerate(c.down_channels()):
             blk = {"conv": Conv2D(c_prev, ch, 4, 2, padding=1, use_bias=False)}
             if i != 0:
-                blk["bn"] = BatchNorm2D(ch)
+                blk["bn"] = c.norm2d(ch)
             downs.append(blk)
             c_prev = ch
         ups = []
         for i, ch in enumerate(c.up_channels()):
-            blk = {"up": UpBlockDeconv(c_prev, ch, c.deconv_mode, backend=c.deconv_backend), "bn": BatchNorm2D(ch)}
+            blk = {"up": UpBlockDeconv(c_prev, ch, c.deconv_mode, backend=c.deconv_backend), "bn": c.norm2d(ch)}
             ups.append(blk)
             c_prev = ch * 2  # skip concat
         final = UpBlockDeconv(c_prev, c.out_channels, c.deconv_mode, use_bias=True, backend=c.deconv_backend)
@@ -125,14 +146,14 @@ class Pix2PixGenerator(Module):
         for i, ch in enumerate(c.down_channels()):
             x = Conv2D(c_prev, ch, 4, 2, padding=1, use_bias=False)(p["downs"][i]["conv"], x)
             if i != 0:
-                x = BatchNorm2D(ch)(p["downs"][i]["bn"], x)
+                x = c.norm2d(ch)(p["downs"][i]["bn"], x)
             x = leaky_relu(x)
             skips.append(x)
             c_prev = ch
         skips = skips[:-1][::-1]
         for i, ch in enumerate(c.up_channels()):
             x = UpBlockDeconv(c_prev, ch, c.deconv_mode, backend=c.deconv_backend)(p["ups"][i]["up"], x)
-            x = BatchNorm2D(ch)(p["ups"][i]["bn"], x)
+            x = c.norm2d(ch)(p["ups"][i]["bn"], x)
             if train and i < 3 and rng is not None:
                 keep = 1.0 - c.dropout_rate
                 mask = jax.random.bernoulli(jax.random.fold_in(rng, i), keep, x.shape)
@@ -218,7 +239,7 @@ def generator_ops(cfg: Pix2PixConfig):
     def mk_down_bn(i, ch):
         def f(p, s):
             s = dict(s)
-            s["x"] = BatchNorm2D(ch)(p["downs"][i]["bn"], s["x"])
+            s["x"] = cfg.norm2d(ch)(p["downs"][i]["bn"], s["x"])
             return s
 
         return f
@@ -273,7 +294,7 @@ def generator_ops(cfg: Pix2PixConfig):
     def mk_up_bn(i, ch):
         def f(p, s):
             s = dict(s)
-            s["x"] = BatchNorm2D(ch)(p["ups"][i]["bn"], s["x"])
+            s["x"] = cfg.norm2d(ch)(p["ups"][i]["bn"], s["x"])
             return s
 
         return f

@@ -11,7 +11,7 @@ from .module import (
     conv_init,
 )
 from .linear import Linear, MultiLinear, OutputLinear
-from .norm import RMSNorm, LayerNorm
+from .norm import RMSNorm, LayerNorm, GroupNorm2D, InstanceNorm2D
 from .embed import Embedding
 from .attention import Attention, MLAAttention, causal_window_mask
 from .mlp import MLP

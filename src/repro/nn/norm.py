@@ -32,6 +32,65 @@ class RMSNorm(Module):
 
 
 @dataclasses.dataclass(frozen=True)
+class InstanceNorm2D(Module):
+    """Per-sample, per-channel statistics over (H, W) on NHWC tensors.
+
+    Batch-independent drop-in for ``BatchNorm2D``'s batch-stats inference
+    behaviour (identical math at batch size 1): a model built with it can
+    be micro-batched with ``merge_batches`` without changing any frame's
+    outputs."""
+
+    c: int
+    eps: float = 1e-5
+
+    def specs(self):
+        return {
+            "scale": ParamSpec((self.c,), ("conv_out",), ones_init()),
+            "bias": ParamSpec((self.c,), ("conv_out",), zeros_init()),
+        }
+
+    def __call__(self, p, x):
+        dtype = x.dtype
+        x32 = x.astype(jnp.float32)
+        mean = jnp.mean(x32, axis=(1, 2), keepdims=True)
+        var = jnp.var(x32, axis=(1, 2), keepdims=True)
+        y = (x32 - mean) * jnp.reciprocal(jnp.sqrt(var + self.eps))
+        return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupNorm2D(Module):
+    """Per-sample statistics over (H, W, C/groups) on NHWC tensors.
+
+    ``groups=1`` is layer-norm-over-space, ``groups=c`` is instance norm;
+    batch-independent for any group count."""
+
+    c: int
+    groups: int = 8
+    eps: float = 1e-5
+
+    def __post_init__(self):
+        if self.c % self.groups:
+            raise ValueError(f"channels {self.c} not divisible by groups {self.groups}")
+
+    def specs(self):
+        return {
+            "scale": ParamSpec((self.c,), ("conv_out",), ones_init()),
+            "bias": ParamSpec((self.c,), ("conv_out",), zeros_init()),
+        }
+
+    def __call__(self, p, x):
+        dtype = x.dtype
+        b, h, w, _ = x.shape
+        x32 = x.astype(jnp.float32).reshape(b, h, w, self.groups, self.c // self.groups)
+        mean = jnp.mean(x32, axis=(1, 2, 4), keepdims=True)
+        var = jnp.var(x32, axis=(1, 2, 4), keepdims=True)
+        y = (x32 - mean) * jnp.reciprocal(jnp.sqrt(var + self.eps))
+        y = y.reshape(b, h, w, self.c)
+        return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(dtype)
+
+
+@dataclasses.dataclass(frozen=True)
 class LayerNorm(Module):
     d: int
     eps: float = 1e-5

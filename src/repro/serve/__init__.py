@@ -1,6 +1,6 @@
 # Multi-stream serving: N staged models over E engines with K frame streams.
-from .demo import build_pix_yolo_serving
+from .demo import build_pix_yolo_serving, merge_flags_for
 from .executor import Completion, Flight, StreamExecutor
-from .metrics import ServeMetrics, StreamMetrics, percentile
+from .metrics import ServeMetrics, StreamMetrics, TickStats, overlap_summary, percentile
 from .server import MultiStreamServer, Request
 from .streams import FrameQueue, StreamSpec

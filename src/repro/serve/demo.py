@@ -1,32 +1,56 @@
 """Shared construction for the Pix2Pix + YOLO serving demos: one place
 builds the staged models, the N-model plan, and the stream specs that the
-example, the launch CLI, and the benchmark all drive."""
+example, the launch CLI, and the benchmark all drive.
+
+``cost`` selects the planner's CostProvider (``analytic`` — the paper's
+roofline — or ``measured``/``blended`` for XLA-measured per-layer costs),
+``norm`` selects the Pix2Pix norm layer (``instance``/``group`` build the
+batch-independent variant whose streams the executor may merge-batch).
+"""
 from __future__ import annotations
 
 import jax
 
 from ..core.constraints import DLA_ANALOGUE_CONSTRAINTS
+from ..core.cost_model import CostProvider, make_cost_provider
 from ..core.engine import jetson_orin_engines
 from ..core.pipeline import pix2pix_staged, yolo_staged
 from ..core.scheduler import nmodel_schedule
 from .streams import StreamSpec
 
 
-def build_pix_yolo_serving(img: int = 64, base: int = 8, n_pix: int = 4, n_yolo: int = 1, seed: int = 0):
+def build_pix_yolo_serving(
+    img: int = 64,
+    base: int = 8,
+    n_pix: int = 4,
+    n_yolo: int = 1,
+    seed: int = 0,
+    norm: str = "batch",
+    cost: str | CostProvider = "analytic",
+    search: str = "auto",
+):
     """Returns ``(models, plan, streams, (gpu, dla))`` for ``n_pix``
     Pix2Pix reconstruction streams + ``n_yolo`` YOLOv8 detection streams
     over the calibrated Jetson engine pair."""
     from ..models import Pix2PixConfig, Pix2PixGenerator, YOLOv8, YOLOv8Config
 
+    provider = cost if isinstance(cost, CostProvider) else make_cost_provider(cost)
     gpu, dla = jetson_orin_engines(constraints_dla=DLA_ANALOGUE_CONSTRAINTS)
-    cfg = Pix2PixConfig(img_size=img, base=base, deconv_mode="cropping")
+    cfg = Pix2PixConfig(img_size=img, base=base, deconv_mode="cropping", norm=norm)
     gen = Pix2PixGenerator(cfg)
     sm_pix = pix2pix_staged(cfg, {"generator": gen.init(jax.random.key(seed))})
     ycfg = YOLOv8Config(img_size=img)
     ym = YOLOv8(ycfg)
     sm_yolo = yolo_staged(ycfg, ym.init(jax.random.key(seed + 1)))
-    plan = nmodel_schedule([sm_pix.graph, sm_yolo.graph], [dla, gpu])
+    plan = nmodel_schedule([sm_pix.graph, sm_yolo.graph], [dla, gpu], provider=provider, search=search)
     streams = [StreamSpec(f"mri-{i}", 0) for i in range(n_pix)] + [
         StreamSpec(f"det-{i}", 1) for i in range(n_yolo)
     ]
     return [sm_pix, sm_yolo], plan, streams, (gpu, dla)
+
+
+def merge_flags_for(models) -> list[bool]:
+    """Per-model ``merge_batches`` flags: merge only batch-independent
+    staged models (Pix2Pix with instance/group norm; never YOLO, whose
+    BatchNorm takes batch statistics)."""
+    return [m.batch_independent for m in models]

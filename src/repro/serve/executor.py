@@ -1,29 +1,44 @@
-"""Generic tick-based multi-stream executor.
+"""Generic tick-based multi-stream executor with overlapped dispatch.
 
 Generalizes the two-model HaX-CoNN swap pipeline: N staged models, each
 with a planner-assigned route of (engine, lo, hi) segments, fed by K
-bounded per-stream frame queues. One *tick* is one steady-state cycle:
+bounded per-stream frame queues. One *tick* is one steady-state cycle in
+two phases:
 
-  * every in-flight frame advances exactly one route segment (deepest
-    stage first — the double-buffered counter-phase), then
-  * each model admits up to ``microbatch`` queued frames (round-robin
-    over its streams) into stage 0.
+  * **issue** — every in-flight frame advances exactly one route segment
+    (deepest stage first — the double-buffered counter-phase), then each
+    model admits up to ``microbatch`` queued frames (round-robin over its
+    streams) into stage 0. In the default ``dispatch="overlapped"`` mode
+    the segment computations are only *dispatched* (JAX async dispatch):
+    the host keeps issuing the other engines' segments while earlier ones
+    compute, so counter-phased engines genuinely overlap. With
+    ``jit_segments=True`` each (model, stage) segment is additionally
+    fused into one jitted executable — one dispatch per engine call
+    instead of one per op — with the state buffers donated on backends
+    that support donation (shapes permitting), so a segment writes in
+    place.
+  * **resolve** — frames whose route finished are completed: the host
+    blocks on the finalized outputs (the only synchronization point of
+    the tick), slices merged groups apart, and stamps latencies.
 
-With N=2 and one stream per model this reproduces ``TwoModelPipeline``'s
-schedule tick-for-tick (pinned by test). On real hardware the per-engine
-segment calls dispatch asynchronously; on CPU they serialize but stay
-functionally identical — single-frame flights run the exact same op
-sequence as ``StagedModel.run_all``, so outputs are bit-exact.
+``dispatch="serialized"`` instead synchronizes after *every* segment
+call — each engine call completes before the next is issued, the
+pre-overlap behaviour kept as the measurable baseline. Both modes run
+the exact same op sequence per frame as ``StagedModel.run_all``, so
+outputs are bit-exact vs the monolithic models and identical across
+modes (pinned by test). Per-tick host wall/blocked time is recorded in
+``tick_stats`` (see ``metrics.TickStats.overlap_efficiency``).
 
 Micro-batching (``microbatch > 1``) admits up to that many same-model
 frames per tick so an engine runs one model's segment back-to-back for
 the whole group (one engine switch per group — what micro-batching buys
 on real hardware) while keeping every frame's math unchanged. With
-``merge_batches=True`` the group is additionally concatenated along the
-leading axis and the route runs once for the merged state; outputs are
-sliced back per frame. Only enable merging for batch-independent models —
-Pix2Pix's ``BatchNorm2D`` takes statistics over the batch axis, so
-merging changes its outputs.
+``merge_batches`` (a bool for all models or one flag per model) the
+group is additionally concatenated along the leading axis and the route
+runs once for the merged state; outputs are sliced back per frame. Only
+enable merging for batch-independent models — Pix2Pix's ``BatchNorm2D``
+takes statistics over the batch axis, so merging changes its outputs
+(use ``Pix2PixConfig(norm="instance")`` for a batch-independent variant).
 """
 from __future__ import annotations
 
@@ -36,6 +51,7 @@ import jax.numpy as jnp
 
 from ..core.pipeline import StagedModel, TickLog
 from ..core.scheduler import ModelRoute, NModelPlan
+from .metrics import TickStats
 from .streams import FrameQueue, StreamSpec
 
 
@@ -76,10 +92,12 @@ class StreamExecutor:
         streams: list[StreamSpec],
         max_queue: int = 8,
         microbatch: int = 1,
-        merge_batches: bool = False,
+        merge_batches: bool | list[bool] = False,
         place_fns: list[Callable] | None = None,
         engine_names: list[str] | None = None,
         model_labels: list[str] | None = None,
+        dispatch: str = "overlapped",
+        jit_segments: bool = False,
     ):
         if isinstance(routes, NModelPlan):
             if engine_names is None:
@@ -100,11 +118,19 @@ class StreamExecutor:
                 raise ValueError(f"stream {s.name} references unknown model {s.model_index}")
         if microbatch < 1:
             raise ValueError("microbatch must be >= 1")
+        if dispatch not in ("overlapped", "serialized"):
+            raise ValueError(f"dispatch must be 'overlapped' or 'serialized', got {dispatch!r}")
         self.models = models
         self.routes = routes
         self.streams = streams
         self.microbatch = microbatch
-        self.merge_batches = merge_batches
+        self.dispatch = dispatch
+        if isinstance(merge_batches, bool):
+            self.merge_batches = [merge_batches] * len(models)
+        else:
+            if len(merge_batches) != len(models):
+                raise ValueError(f"{len(merge_batches)} merge flags but {len(models)} models")
+            self.merge_batches = list(merge_batches)
         n_engines = max(e for r in routes for e, _, _ in r.segments) + 1
         self.place_fns = place_fns or [lambda x: x] * n_engines
         self.engine_names = engine_names or [f"E{i}" for i in range(n_engines)]
@@ -114,6 +140,7 @@ class StreamExecutor:
         self.completions: list[Completion] = []
         self.outputs: dict[str, list] = {s.name: [] for s in streams}
         self.log: list[TickLog] = []
+        self.tick_stats: list[TickStats] = []
         self.tick_count = 0
         self._frame_ids = [0] * len(streams)
         self._rr = [0] * len(models)  # round-robin cursor per model
@@ -121,6 +148,17 @@ class StreamExecutor:
             [i for i, s in enumerate(streams) if s.model_index == m] for m in range(len(models))
         ]
         self._max_stages = max(len(r.segments) for r in routes)
+        self._blocked_s = 0.0  # block_until_ready time inside the current tick
+        self._segments_issued = 0
+        # jit fuses each route segment into one executable (one dispatch per
+        # engine call instead of one per op). Off by default: XLA fusion may
+        # flip low-order bits vs the eager op sequence, and the executor's
+        # baseline contract is bit-exactness vs StagedModel.run_all.
+        self.jit_segments = jit_segments
+        # donation needs backend support; the CPU client ignores donated
+        # buffers (and warns), so only donate segment state buffers off-CPU
+        self._donate = jax.default_backend() not in ("cpu",)
+        self._seg_fns: dict[tuple[int, int], Callable] = {}
 
     # -- submission ---------------------------------------------------------
 
@@ -145,12 +183,38 @@ class StreamExecutor:
 
     # -- execution ----------------------------------------------------------
 
+    def _block(self, x):
+        """block_until_ready with the wait charged to this tick's stats."""
+        t0 = time.perf_counter()
+        x = jax.block_until_ready(x)
+        self._blocked_s += time.perf_counter() - t0
+        return x
+
+    def _segment_runner(self, mi: int, stage: int) -> Callable:
+        key = (mi, stage)
+        fn = self._seg_fns.get(key)
+        if fn is None:
+            model = self.models[mi]
+            _, lo, hi = self.routes[mi].segments[stage]
+            if self.jit_segments:
+                # cached on the model: executors over the same route share
+                # one compiled executable per (segment, shape)
+                fn = model.jitted_segment_fn(lo, hi, donate=self._donate)
+            else:
+                fn = model.segment_fn(lo, hi)
+            self._seg_fns[key] = fn
+        return fn
+
     def _run_segment(self, flight: Flight):
+        """Issue one route segment for a flight. In overlapped mode this
+        only dispatches the computation (async); serialized mode waits for
+        it — the per-engine-call sync the refactor removed."""
         model = self.models[flight.model_index]
         eng, lo, hi = self.routes[flight.model_index].segments[flight.stage]
         state = self.place_fns[eng](flight.state)
-        flight.state = model.run_segment(state, lo, hi)
+        flight.state = self._segment_runner(flight.model_index, flight.stage)(model.params, state)
         flight.stage += 1
+        self._segments_issued += 1
         ids = ",".join(str(m.frame_id) for m in flight.members)
         self.log.append(
             TickLog(
@@ -159,10 +223,12 @@ class StreamExecutor:
                 f"{self.model_labels[flight.model_index]}[{lo}:{hi})#f{ids}",
             )
         )
+        if self.dispatch == "serialized":
+            self._block(flight.state)
 
     def _complete(self, flight: Flight):
         model = self.models[flight.model_index]
-        out = model.finalize(flight.state)
+        out = self._block(model.finalize(flight.state))
         now = time.perf_counter()
         if len(flight.members) == 1:
             sliced = [out]
@@ -186,11 +252,13 @@ class StreamExecutor:
                 )
             )
 
-    def _admit(self, mi: int):
+    def _admit(self, mi: int) -> list[Flight]:
+        """Admit queued frames for model ``mi`` into stage 0; returns the
+        flights that already finished their route (single-segment models)."""
         model = self.models[mi]
         stream_idxs = self._streams_of[mi]
         if not stream_idxs:
-            return
+            return []
         picked: list[tuple[int, int, Any, float]] = []
         n = len(stream_idxs)
         start = self._rr[mi]
@@ -202,14 +270,14 @@ class StreamExecutor:
                 fid, frame, t_sub = self.queues[si].pop()
                 picked.append((si, fid, frame, t_sub))
         if not picked:
-            return
+            return []
         self._rr[mi] = (start + len(picked)) % n
         members, states = [], []
         for si, fid, frame, t_sub in picked:
             size = int(frame.shape[0]) if hasattr(frame, "shape") and frame.shape else 1
             members.append(FlightMember(si, fid, size, t_sub, self.tick_count))
             states.append(model.init_state(frame))
-        if self.merge_batches and len(states) > 1:
+        if self.merge_batches[mi] and len(states) > 1:
             merged = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *states)
             flights = [Flight(model_index=mi, members=members, state=merged, stage=0)]
         else:
@@ -217,16 +285,24 @@ class StreamExecutor:
                 Flight(model_index=mi, members=[m], state=s, stage=0)
                 for m, s in zip(members, states)
             ]
+        done = []
         for flight in flights:
             self._run_segment(flight)
             if flight.stage == len(self.routes[mi].segments):
-                self._complete(flight)
+                done.append(flight)
             else:
                 self.in_flight.append(flight)
+        return done
 
     def tick(self):
-        """One steady-state cycle: advance every in-flight frame one
-        segment (deepest first), then admit new frames into stage 0."""
+        """One steady-state cycle. Issue phase: advance every in-flight
+        frame one segment (deepest first), then admit new frames into
+        stage 0 — all dispatched without waiting in overlapped mode.
+        Resolve phase: block on (only) the frames whose route finished."""
+        t_start = time.perf_counter()
+        self._blocked_s = 0.0
+        self._segments_issued = 0
+        done: list[Flight] = []
         for stage in range(self._max_stages - 1, 0, -1):
             for mi in range(len(self.models)):
                 for flight in [
@@ -234,10 +310,20 @@ class StreamExecutor:
                 ]:
                     self._run_segment(flight)
                     if flight.stage == len(self.routes[mi].segments):
-                        self._complete(flight)
+                        done.append(flight)
                         self.in_flight.remove(flight)
         for mi in range(len(self.models)):
-            self._admit(mi)
+            done.extend(self._admit(mi))
+        for flight in done:
+            self._complete(flight)
+        self.tick_stats.append(
+            TickStats(
+                tick=self.tick_count,
+                wall_s=time.perf_counter() - t_start,
+                blocked_s=self._blocked_s,
+                segments=self._segments_issued,
+            )
+        )
         self.tick_count += 1
 
     def run_until_drained(self, max_ticks: int = 100000):
@@ -246,3 +332,9 @@ class StreamExecutor:
                 raise RuntimeError(f"executor did not drain within {max_ticks} ticks")
             self.tick()
         return self.outputs
+
+    def overlap_efficiency(self) -> float:
+        """Aggregate fraction of tick time the host was not blocked."""
+        from .metrics import overlap_summary
+
+        return overlap_summary(self.tick_stats)["overlap_efficiency"]

@@ -37,8 +37,10 @@ class MultiStreamServer:
         streams: list[StreamSpec],
         max_queue: int = 4,
         microbatch: int = 1,
-        merge_batches: bool = False,
+        merge_batches: bool | list[bool] = False,
         place_fns=None,
+        dispatch: str = "overlapped",
+        jit_segments: bool = False,
     ):
         self.executor = StreamExecutor(
             models,
@@ -48,10 +50,13 @@ class MultiStreamServer:
             microbatch=microbatch,
             merge_batches=merge_batches,
             place_fns=place_fns,
+            dispatch=dispatch,
+            jit_segments=jit_segments,
         )
         self.metrics = ServeMetrics([s.name for s in streams])
         self._backlog: deque[Request] = deque()
         self._recorded = 0
+        self._recorded_ticks = 0
         self._t0: float | None = None
 
     # -- request intake -----------------------------------------------------
@@ -98,9 +103,14 @@ class MultiStreamServer:
         for c in self.executor.completions[self._recorded :]:
             self.metrics.record(c.stream, c.latency_s)
         self._recorded = len(self.executor.completions)
+        for t in self.executor.tick_stats[self._recorded_ticks :]:
+            self.metrics.record_tick(t)
+        self._recorded_ticks = len(self.executor.tick_stats)
 
     # -- reporting ----------------------------------------------------------
 
     def report(self) -> dict:
         wall = (time.perf_counter() - self._t0) if self._t0 is not None else 0.0
-        return self.metrics.report(wall)
+        rep = self.metrics.report(wall)
+        rep["dispatch"] = self.executor.dispatch
+        return rep

@@ -1,0 +1,216 @@
+"""The measured-cost planning stack: CostProvider implementations and the
+beam-search N-model planner.
+
+Pins the PR's load-bearing guarantees: (a) beam search is bit-identical
+to exhaustive search on small N/E spaces, (b) beam search is never worse
+than the legacy coordinate descent on the N=3/N=4 benchmark graphs,
+(c) MeasuredCost round-trips its per-(layer, engine, dtype) timing cache
+through JSON, and (d) providers thread through the whole cost stack."""
+import dataclasses
+
+import pytest
+
+from repro.core.constraints import DLA_ANALOGUE_CONSTRAINTS
+from repro.core.cost_model import (
+    ANALYTIC,
+    AnalyticCost,
+    BlendedCost,
+    MeasuredCost,
+    graph_time,
+    layer_time,
+    make_cost_provider,
+    segment_cost,
+)
+from repro.core.engine import EngineSpec, jetson_orin_engines
+from repro.core.graph import LayerGraph
+from repro.core.scheduler import nmodel_schedule
+from repro.models import Pix2PixConfig, Pix2PixGenerator, YOLOv8, YOLOv8Config
+
+
+@pytest.fixture(scope="module")
+def engines():
+    return jetson_orin_engines(constraints_dla=DLA_ANALOGUE_CONSTRAINTS)
+
+
+@pytest.fixture(scope="module")
+def pix_graph():
+    return Pix2PixGenerator(Pix2PixConfig(deconv_mode="cropping")).layer_graph()
+
+
+@pytest.fixture(scope="module")
+def yolo_graph():
+    return YOLOv8(YOLOv8Config(img_size=256)).layer_graph()
+
+
+def _slice_graph(graph, n, name):
+    return LayerGraph(name, [l.clone() for l in list(graph)[:n]]).renumber()
+
+
+# ---- cost providers --------------------------------------------------------
+
+
+def test_analytic_provider_is_default(pix_graph, engines):
+    gpu, dla = engines
+    base = segment_cost(pix_graph, 0, len(pix_graph), dla, gpu)
+    via = segment_cost(pix_graph, 0, len(pix_graph), dla, gpu, provider=AnalyticCost())
+    assert base.elapsed == via.elapsed
+    assert ANALYTIC.layer_time(pix_graph[0], gpu) == layer_time(pix_graph[0], gpu)
+
+
+def test_make_cost_provider_names():
+    assert make_cost_provider("analytic").name == "analytic"
+    assert make_cost_provider("measured").name == "measured"
+    assert make_cost_provider("blended").name == "blended"
+    with pytest.raises(ValueError):
+        make_cost_provider("vibes")
+
+
+@pytest.fixture(scope="module")
+def tiny_graph():
+    # 8x8 images: a handful of conv/deconv layers with near-instant lowering
+    return Pix2PixGenerator(Pix2PixConfig(img_size=8, base=4, deconv_mode="cropping")).layer_graph()
+
+
+def test_measured_cost_cache_roundtrip(tmp_path, tiny_graph, engines):
+    gpu, dla = engines
+    path = str(tmp_path / "timings.json")
+    mc = MeasuredCost(cache_path=path)
+    times = [mc.layer_time(l, dla) for l in tiny_graph]
+    n_measurable = sum(mc.available(l) for l in tiny_graph)
+    assert n_measurable > 0
+    assert mc.measure_count == n_measurable
+    assert all(t > 0 for t in times)
+    assert mc.save() == path
+
+    # a fresh instance serves every measurable layer from the JSON cache
+    mc2 = MeasuredCost(cache_path=path)
+    assert mc2.cache_size == n_measurable
+    times2 = [mc2.layer_time(l, dla) for l in tiny_graph]
+    assert times2 == times
+    assert mc2.measure_count == 0
+    assert mc2.hits == n_measurable
+    # engine is part of the key: the GPU timing is a fresh measurement
+    mc2.layer_time(tiny_graph[0], gpu)
+    assert mc2.measure_count == 0 or mc2.cache_size > n_measurable
+
+
+def test_measured_cost_dtype_mismatch_rejected(tmp_path):
+    path = str(tmp_path / "timings.json")
+    mc = MeasuredCost(cache_path=path, dtype="bfloat16")
+    mc._cache["x"] = 1.0
+    mc.save()
+    with pytest.raises(ValueError):
+        MeasuredCost(cache_path=path, dtype="float32")
+
+
+def test_blended_falls_back_to_analytic(tiny_graph, engines):
+    gpu, _ = engines
+    blended = BlendedCost()
+    for l in tiny_graph:
+        t = blended.layer_time(l, gpu)
+        if not blended.available(l):
+            assert t == layer_time(l, gpu)  # bn/act/crop: analytic fallback
+        else:
+            assert t == blended.measured.layer_time(l, gpu)
+
+
+def test_measured_provider_plans_end_to_end(tiny_graph, engines):
+    gpu, dla = engines
+    mc = MeasuredCost()
+    plan = nmodel_schedule([tiny_graph, tiny_graph], [dla, gpu], provider=mc)
+    assert plan.cost_provider == "measured"
+    assert plan.cycle_time > 0
+    assert all(0 < p < len(tiny_graph) for p in plan.partitions)
+    assert any(n.startswith("search=") for n in plan.schedule.notes)
+
+
+# ---- beam search vs exhaustive (small spaces, bit-identical) ---------------
+
+
+def _third_engine():
+    return EngineSpec("AUX", 1, 0.9e12, 80e9, 32e9, ())
+
+
+@pytest.mark.parametrize("n_models", [1, 2, 3])
+@pytest.mark.parametrize("n_engines", [1, 2, 3])
+def test_beam_equals_exhaustive_small_spaces(n_models, n_engines, pix_graph, yolo_graph, engines):
+    """A non-truncating beam (width >= the candidate product) enumerates the
+    exact product in product order, so its argmin — including every
+    tie-break — is bit-identical to the exhaustive scan on any space."""
+    import math
+
+    gpu, dla = engines
+    engine_sets = {1: [gpu], 2: [dla, gpu], 3: [dla, gpu, _third_engine()]}
+    gs = [
+        _slice_graph(pix_graph, 7, "pixA"),
+        _slice_graph(yolo_graph, 6, "yoloB"),
+        _slice_graph(pix_graph, 8, "pixC"),
+    ][:n_models]
+    width = math.prod(len(g) - 1 for g in gs)
+    ex = nmodel_schedule(gs, engine_sets[n_engines], search="exhaustive")
+    bm = nmodel_schedule(gs, engine_sets[n_engines], search="beam", beam_width=width)
+    assert bm.partitions == ex.partitions
+    assert bm.cycle_time == ex.cycle_time
+    assert bm.engine_times == ex.engine_times
+    assert bm.search == "beam" and ex.search == "exhaustive"
+    # the default (truncating) width still matches the optimum cycle time
+    bm_default = nmodel_schedule(gs, engine_sets[n_engines], search="beam")
+    assert bm_default.cycle_time <= ex.cycle_time or bm_default.cycle_time == pytest.approx(
+        ex.cycle_time
+    )
+
+
+def test_beam_equals_exhaustive_with_fallback_graphs(engines):
+    """Padded graphs exercise the fallback/peer-steal terms of the key."""
+    gpu, dla = engines
+    g = Pix2PixGenerator(Pix2PixConfig(deconv_mode="padded")).layer_graph()
+    gs = [_slice_graph(g, 9, "padA"), _slice_graph(g, 11, "padB")]
+    ex = nmodel_schedule(gs, [dla, gpu], search="exhaustive")
+    bm = nmodel_schedule(gs, [dla, gpu], search="beam")
+    assert bm.partitions == ex.partitions
+    assert bm.cycle_time == ex.cycle_time
+
+
+# ---- beam search vs coordinate descent (benchmark graphs) ------------------
+
+
+@pytest.mark.parametrize("case", ["3pix", "3mixed", "4pix", "4mixed", "4mixed2"])
+def test_beam_never_worse_than_descent(case, pix_graph, yolo_graph, engines):
+    gpu, dla = engines
+    gp = Pix2PixGenerator(Pix2PixConfig(deconv_mode="padded")).layer_graph()
+    graphs = {
+        "3pix": [pix_graph] * 3,
+        "3mixed": [pix_graph, yolo_graph, gp],
+        "4pix": [pix_graph] * 4,
+        "4mixed": [pix_graph, yolo_graph, pix_graph, yolo_graph],
+        "4mixed2": [gp, yolo_graph, pix_graph, pix_graph],
+    }[case]
+    descent = nmodel_schedule(graphs, [dla, gpu], search="descent")
+    beam = nmodel_schedule(graphs, [dla, gpu], search="beam")
+    assert beam.cycle_time <= descent.cycle_time
+    assert beam.search == "beam" and descent.search == "descent"
+
+
+def test_auto_mode_selects_beam_beyond_exhaustive_limit(pix_graph, engines):
+    gpu, dla = engines
+    plan = nmodel_schedule([pix_graph] * 3, [dla, gpu])
+    assert plan.search == "beam"
+    small = _slice_graph(pix_graph, 7, "small")
+    plan2 = nmodel_schedule([small, small], [dla, gpu])
+    assert plan2.search == "exhaustive"
+
+
+def test_provider_threads_into_balanced_and_graph_time(tiny_graph, engines):
+    gpu, dla = engines
+    mc = MeasuredCost()
+    t_analytic = graph_time(tiny_graph, dla, gpu).elapsed
+    t_measured = graph_time(tiny_graph, dla, gpu, provider=mc).elapsed
+    assert t_measured > 0 and t_analytic > 0
+    assert t_measured != t_analytic  # XLA numbers differ from the analytic model
+
+
+def test_dataclass_plan_records_provider(pix_graph, engines):
+    gpu, dla = engines
+    plan = nmodel_schedule([pix_graph, pix_graph], [dla, gpu])
+    assert plan.cost_provider == "analytic"
+    assert dataclasses.asdict(plan.schedule)  # schedule remains serializable
