@@ -1,25 +1,40 @@
 """Multi-stream serving benchmark: aggregate FPS and latency percentiles
-vs concurrent stream count, written to ``BENCH_serve.json`` so successive
-PRs have a perf trajectory to compare against (``benchmarks/trend.py``
-diffs two runs and gates CI on regressions).
+vs concurrent stream count, plus the online re-planning
+perturbation-recovery scenario, written to ``BENCH_serve.json`` so
+successive PRs have a perf trajectory to compare against
+(``benchmarks/trend.py`` diffs two runs and gates CI on regressions).
 
   PYTHONPATH=src python benchmarks/serve_bench.py --smoke
   PYTHONPATH=src python benchmarks/serve_bench.py --streams 1,2,4,8 --frames 16
   PYTHONPATH=src python benchmarks/serve_bench.py --cost measured --norm instance
+  PYTHONPATH=src python benchmarks/serve_bench.py --smoke --skew 4
 
 Each run serves K Pix2Pix reconstruction streams plus one YOLOv8
 detection stream through the planned ``StreamExecutor`` on CPU; absolute
 numbers are container-dependent, the *shape* (FPS vs K, tail latency
-growth, overlapped-vs-serialized dispatch gap) is the tracked signal.
-The planner runs under the ``--cost`` provider (analytic roofline by
-default, XLA-measured per-layer costs with ``--cost measured``); the
-JSON records which provider and search mode produced every plan.
+growth, overlapped-vs-serialized dispatch gap, recovery ratio) is the
+tracked signal. The planner runs under the ``--cost`` provider (analytic
+roofline by default, XLA-measured per-layer costs with ``--cost
+measured``); the JSON records which provider and search mode produced
+every plan.
+
+The **perturbation-recovery scenario** calibrates an attached
+``Replanner``, injects a ``--skew``x cost skew on the engine carrying the
+most movable work (a host-side stall proportional to each segment's
+calibrated wall time — a thermally throttled engine looks exactly like
+this), and tracks per-window FPS while the drift detector fires and
+hot-swaps re-planned routes in. Recorded: the recovery curve, the swap
+events, a zero-dropped-frames check, and an output-equality check vs an
+unperturbed run on the final plan from the start (within the jitted
+fusion tolerance).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import platform
+import socket
 import time
 
 
@@ -90,6 +105,180 @@ def run_point(
     }
 
 
+def _movable_skew_engine(plan, graphs, engines):
+    """Pick the perturbation target: the engine with the most *movable*
+    planned work (current analytic occupancy minus the minimum any plan
+    must leave there given the counter-phased pair structure). Skewing an
+    engine whose share is already minimal tests nothing — the planner has
+    nowhere to move it."""
+    from repro.core.cost_model import ANALYTIC
+
+    E = len(engines)
+    current = [0.0] * E
+    minimum = [0.0] * E
+    for mi, segs in enumerate(plan.ir.segments):
+        g = graphs[mi]
+        e1, e2 = mi % E, (mi + 1) % E
+        for seg in segs:
+            current[seg.engine] += sum(
+                ANALYTIC.layer_time(g[i], engines[seg.engine]) for i in range(seg.lo, seg.hi)
+            )
+        minimum[e1] += ANALYTIC.layer_time(g[0], engines[e1])
+        minimum[e2] += ANALYTIC.layer_time(g[len(g) - 1], engines[e2])
+    movable = [c - m for c, m in zip(current, minimum)]
+    return max(range(E), key=lambda e: movable[e])
+
+
+def run_replan_scenario(
+    img: int,
+    base: int,
+    norm: str,
+    skew: float = 3.0,
+    n_pix: int = 2,
+    frames_per_window: int = 8,
+    warm_windows: int = 3,
+    pre_windows: int = 3,
+    post_windows: int = 6,
+) -> dict:
+    """Perturbation-recovery: calibrate, skew one engine, watch the
+    replanner restore throughput with zero dropped frames."""
+    import jax
+    import numpy as np
+
+    from repro.core.constraints import DLA_ANALOGUE_CONSTRAINTS
+    from repro.core.cost_model import ANALYTIC
+    from repro.core.engine import jetson_orin_engines
+    from repro.serve import ReplanConfig, StreamExecutor, build_pix_yolo_serving, build_replanner
+
+    models, plan, streams, _ = build_pix_yolo_serving(
+        img=img, base=base, n_pix=n_pix, n_yolo=1, norm=norm
+    )
+    graphs = [m.graph for m in models]
+    gpu, dla = jetson_orin_engines(constraints_dla=DLA_ANALOGUE_CONSTRAINTS)
+    engines = [dla, gpu]  # plan order (see build_pix_yolo_serving)
+    skew_idx = _movable_skew_engine(plan, graphs, engines)
+    skew_name = engines[skew_idx].name
+
+    pert = {"on": False, "calib": 0.0}
+    span_cache: dict[tuple, float] = {}
+
+    def analytic_span(seg):
+        key = (seg.model_index, seg.engine, seg.lo, seg.hi)
+        if key not in span_cache:
+            g = graphs[seg.model_index]
+            e = engines[seg.engine]
+            span_cache[key] = sum(ANALYTIC.layer_time(g[i], e) for i in range(seg.lo, seg.hi))
+        return span_cache[key]
+
+    def delay_fn(seg):
+        # a skew x slowdown of one engine: every segment placed there
+        # stalls for (skew-1) x its calibrated wall time, however the
+        # active plan slices the spans
+        if not pert["on"] or seg.engine != skew_idx:
+            return 0.0
+        return (skew - 1.0) * pert["calib"] * analytic_span(seg)
+
+    # the scenario owns calibration: warmup_obs is effectively disabled so
+    # the baseline comes only from the explicit calibrate() below (never
+    # from still-settling compile-era scales), and the EMA is given enough
+    # hysteresis ticks to converge before the planner reads it
+    replanner = build_replanner(
+        models,
+        config=ReplanConfig(warmup_obs=10**9, ema_alpha=0.35, hysteresis=4),
+    )
+    ex = StreamExecutor(models, plan, streams, max_queue=8, segment_delay_fn=delay_fn)
+
+    frames: dict[str, list] = {s.name: [] for s in streams}
+    submitted = 0
+
+    def run_window(wi: int) -> float:
+        nonlocal submitted
+        t0 = time.perf_counter()
+        c0 = len(ex.completions)
+        for t in range(frames_per_window):
+            for i, s in enumerate(streams):
+                f = jax.random.normal(jax.random.key(100_000 * wi + 997 * i + t), (1, img, img, 3))
+                assert ex.submit(i, f), "queue refused a frame (zero-drop violated)"
+                frames[s.name].append(f)
+                submitted += 1
+            ex.tick()
+        ex.run_until_drained()
+        return (len(ex.completions) - c0) / (time.perf_counter() - t0)
+
+    # 1. warm the executor alone (jit compiles), then attach + calibrate
+    for wi in range(warm_windows):
+        run_window(wi)
+    replanner.attach(ex)
+    run_window(warm_windows)  # feed the EMA with steady-state observations
+    run_window(warm_windows + 1)
+    replanner.calibrate()
+
+    # 2. pre-perturbation reference
+    pre = [run_window(100 + wi) for wi in range(pre_windows)]
+    pre_fps = sorted(pre)[len(pre) // 2]
+
+    # 3. perturb + recovery curve
+    pert["calib"] = replanner.online.scale(skew_name)
+    pert["on"] = True
+    windows = []
+    for wi in range(post_windows):
+        fps = run_window(200 + wi)
+        windows.append(
+            {
+                "window": wi,
+                "fps": fps,
+                "vs_pre": fps / pre_fps,
+                "swaps": sum(e.swapped for e in replanner.events),
+                "plan_revision": ex.plan_revision,
+                "partitions": list(ex.plan.partitions),
+            }
+        )
+    # recovered = windows strictly after the swap count stabilized (the
+    # window containing the last swap still pays detection + warmup)
+    final_swaps = windows[-1]["swaps"] if windows else 0
+    settle = next((i for i, w in enumerate(windows) if w["swaps"] == final_swaps), 0)
+    post_swap = [w["fps"] for w in windows[settle + 1 :]] or [windows[-1]["fps"]]
+    recovered_fps = sorted(post_swap)[len(post_swap) // 2]
+
+    # 4. zero-drop + output equality vs the final plan run from the start
+    zero_drop = len(ex.completions) == submitted
+    ref = StreamExecutor(models, ex.plan, streams, max_queue=8)
+    outputs_match = True
+    n_frames = len(frames[streams[0].name])
+    for t in range(n_frames):
+        for i, s in enumerate(streams):
+            assert ref.submit(i, frames[s.name][t])
+        ref.tick()
+        if (t + 1) % frames_per_window == 0:
+            ref.run_until_drained()  # mirror the scenario's window boundaries
+    ref_outs = ref.run_until_drained()
+    for s in streams:
+        for a, b in zip(ex.outputs[s.name], ref_outs[s.name]):
+            for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+                if not np.allclose(np.asarray(la), np.asarray(lb), atol=2e-3, rtol=1e-2):
+                    outputs_match = False
+
+    rep = replanner.summary()
+    return {
+        "skew": skew,
+        "skew_engine": skew_name,
+        "initial_partitions": list(plan.partitions),
+        "final_partitions": list(ex.plan.partitions),
+        "plan_revision": ex.plan_revision,
+        "pre_fps": pre_fps,
+        "perturbed_fps": min(w["fps"] for w in windows) if windows else float("nan"),
+        "recovered_fps": recovered_fps,
+        "recovery_ratio": recovered_fps / pre_fps,
+        "zero_drop": zero_drop,
+        "outputs_match_final_plan": outputs_match,
+        "windows": windows,
+        "swaps": rep["swaps"],
+        "replans": rep["replans"],
+        "scales": rep["scales"],
+        "events": rep["events"],
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true", help="tiny fast sweep for CI")
@@ -107,6 +296,12 @@ def main():
         action="store_true",
         help="skip the overlapped-vs-serialized executor comparison point",
     )
+    ap.add_argument(
+        "--skip-replan-scenario",
+        action="store_true",
+        help="skip the online re-planning perturbation-recovery scenario",
+    )
+    ap.add_argument("--skew", type=float, default=3.0, help="perturbation cost skew factor")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args()
 
@@ -196,6 +391,20 @@ def main():
             f"total x{dispatch_compare['total_speedup']:.2f})"
         )
 
+    replan_scenario = None
+    if not args.skip_replan_scenario:
+        replan_scenario = run_replan_scenario(img, args.base, args.norm, skew=args.skew)
+        print(
+            f"replan scenario: skew x{args.skew} on {replan_scenario['skew_engine']}  "
+            f"pre={replan_scenario['pre_fps']:.2f} FPS  "
+            f"dip={replan_scenario['perturbed_fps']:.2f}  "
+            f"recovered={replan_scenario['recovered_fps']:.2f} "
+            f"({replan_scenario['recovery_ratio']:.1%} of pre)  "
+            f"swaps={replan_scenario['swaps']}  "
+            f"zero_drop={replan_scenario['zero_drop']}  "
+            f"outputs_match={replan_scenario['outputs_match_final_plan']}"
+        )
+
     if args.cost_cache and hasattr(provider, "save"):
         provider.save()  # measured AND blended both persist their timings
 
@@ -209,13 +418,23 @@ def main():
         "cost_provider": args.cost,
         "planner_search": results[0]["planner_search"] if results else args.search,
         "platform": platform.platform(),
+        "hostname": socket.gethostname(),
         "aggregate_fps": peak["aggregate_fps"],
         "latency_p50_ms": peak["latency_p50_ms"],
         "latency_p99_ms": peak["latency_p99_ms"],
         "overlap_efficiency": peak["overlap_efficiency"],
         "dispatch_compare": dispatch_compare,
+        "replan_scenario": replan_scenario,
         "results": results,
     }
+    import jax
+
+    # runner identity for the per-machine trend store: BENCH_MACHINE lets
+    # CI pin a stable key (ephemeral runners get a fresh hostname per job,
+    # which would never match its own history)
+    payload["machine"] = os.environ.get(
+        "BENCH_MACHINE", f"{payload['hostname']}|{jax.default_backend()}"
+    )
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)
     print(f"wrote {args.out}")

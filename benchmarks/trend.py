@@ -1,15 +1,23 @@
 """Serving-benchmark trend gate: compare the latest ``serve_bench`` run
-against the committed baseline and fail on aggregate-FPS regressions.
+against a baseline and fail on aggregate-FPS regressions.
 
   PYTHONPATH=src python benchmarks/trend.py --candidate BENCH_serve.new.json
   PYTHONPATH=src python benchmarks/trend.py --candidate new.json --threshold 0.2 \
-      --history BENCH_history.jsonl
+      --history BENCH_history.jsonl --against-history
+
+The ``--history`` JSONL file is a keyed per-machine trend store: every
+run appends one summary line keyed by ``machine`` (hostname + jax
+backend) plus the workload keys. With ``--against-history`` the gate
+compares the candidate against the most recent history entry from the
+*same machine and workload* — like-for-like runners — and only falls
+back to the committed ``--baseline`` when that machine has no history
+yet (fresh runner class, first nightly). Without the flag the committed
+baseline is used directly (the pre-store behaviour).
 
 Exit codes: 0 = within threshold (or configs incomparable — different
 image size / frame count / smoke tier are different workloads, not
 regressions), 2 = candidate peak FPS regressed more than ``--threshold``
-vs the baseline. ``--history`` appends one summary line per run so the
-trajectory across PRs/nights is greppable.
+vs the chosen baseline.
 """
 from __future__ import annotations
 
@@ -20,10 +28,25 @@ import sys
 
 COMPARABLE_KEYS = ("smoke", "img_size", "frames_per_stream", "microbatch", "norm", "cost_provider")
 
+HISTORY_KEYS = COMPARABLE_KEYS + (
+    "machine",
+    "planner_search",
+    "aggregate_fps",
+    "latency_p50_ms",
+    "latency_p99_ms",
+    "overlap_efficiency",
+    "platform",
+)
+
 
 def load(path: str) -> dict:
     with open(path) as f:
         return json.load(f)
+
+
+def machine_key(payload: dict) -> str:
+    """Runner identity: hostname + backend (set by serve_bench)."""
+    return payload.get("machine") or f"{payload.get('hostname', 'unknown')}|unknown"
 
 
 def comparable(baseline: dict, candidate: dict) -> list[str]:
@@ -56,28 +79,41 @@ def compare(baseline: dict, candidate: dict, threshold: float) -> tuple[bool, st
     return ok, "\n".join(lines)
 
 
-def append_history(path: str, candidate: dict):
-    entry = {
-        k: candidate.get(k)
-        for k in (
-            "smoke",
-            "img_size",
-            "frames_per_stream",
-            "norm",
-            "cost_provider",
-            "planner_search",
-            "aggregate_fps",
-            "latency_p50_ms",
-            "latency_p99_ms",
-            "overlap_efficiency",
-            "platform",
-        )
-    }
+def history_entry(candidate: dict) -> dict:
+    entry = {k: candidate.get(k) for k in HISTORY_KEYS}
+    entry["machine"] = machine_key(candidate)
     if candidate.get("dispatch_compare"):
         entry["overlap_speedup"] = candidate["dispatch_compare"].get("overlap_speedup")
         entry["total_speedup"] = candidate["dispatch_compare"].get("total_speedup")
+    if candidate.get("replan_scenario"):
+        rs = candidate["replan_scenario"]
+        entry["replan_recovery_ratio"] = rs.get("recovery_ratio")
+        entry["replan_swaps"] = rs.get("swaps")
+    return entry
+
+
+def append_history(path: str, candidate: dict):
     with open(path, "a") as f:
-        f.write(json.dumps(entry) + "\n")
+        f.write(json.dumps(history_entry(candidate)) + "\n")
+
+
+def load_history(path: str) -> list[dict]:
+    try:
+        with open(path) as f:
+            return [json.loads(line) for line in f if line.strip()]
+    except FileNotFoundError:
+        return []
+
+
+def latest_from_history(entries: list[dict], candidate: dict) -> dict | None:
+    """Most recent entry from the same machine on the same workload."""
+    key = machine_key(candidate)
+    same = [
+        e
+        for e in entries
+        if e.get("machine") == key and not comparable(e, candidate)
+    ]
+    return same[-1] if same else None
 
 
 def main() -> int:
@@ -85,12 +121,30 @@ def main() -> int:
     ap.add_argument("--baseline", default="BENCH_serve.json", help="committed reference run")
     ap.add_argument("--candidate", required=True, help="freshly produced run to vet")
     ap.add_argument("--threshold", type=float, default=0.2, help="max tolerated peak-FPS drop")
-    ap.add_argument("--history", default=None, help="JSONL file to append the candidate summary to")
+    ap.add_argument("--history", default=None, help="JSONL per-machine trend store to append to")
+    ap.add_argument(
+        "--against-history",
+        action="store_true",
+        help="gate vs this machine's latest same-workload history entry "
+        "(falls back to --baseline when the machine has no history)",
+    )
     args = ap.parse_args()
 
-    baseline = load(args.baseline)
     candidate = load(args.candidate)
+    baseline = load(args.baseline)
+    base_desc = args.baseline
+    if args.against_history and args.history:
+        hist = latest_from_history(load_history(args.history), candidate)
+        if hist is not None:
+            baseline = hist
+            base_desc = f"{args.history}:{machine_key(candidate)}"
+        else:
+            print(
+                f"[trend] no history for machine {machine_key(candidate)!r}; "
+                f"falling back to {args.baseline}"
+            )
     if args.history:
+        # append after selecting the baseline so a run never gates on itself
         append_history(args.history, candidate)
 
     diffs = comparable(baseline, candidate)
@@ -98,7 +152,7 @@ def main() -> int:
         print(f"[trend] runs not comparable (differ on {', '.join(diffs)}); skipping gate")
         return 0
     ok, report = compare(baseline, candidate, args.threshold)
-    print(f"[trend] {args.baseline} vs {args.candidate} (threshold {args.threshold:.0%})")
+    print(f"[trend] {base_desc} vs {args.candidate} (threshold {args.threshold:.0%})")
     print(report)
     return 0 if ok else 2
 

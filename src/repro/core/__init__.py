@@ -26,6 +26,7 @@ from .cost_model import (
     BlendedCost,
     CostProvider,
     MeasuredCost,
+    OnlineCost,
     balanced_partition_point,
     graph_time,
     layer_time,
@@ -33,6 +34,7 @@ from .cost_model import (
     segment_cost,
     transfer_time,
 )
+from .plan_ir import PlanIR, PlanSegment, ir_from_routes, make_plan_ir
 from .scheduler import (
     HaxConnResult,
     ModelRoute,

@@ -98,15 +98,22 @@ class MeasuredCost(CostProvider):
     """Roofline over XLA-measured flop/byte counts per layer.
 
     Conv/deconv layers are lowered individually on ShapeDtypeStructs and
-    their ``cost_analysis()`` numbers replace the analytic estimates
-    (other kinds keep the analytic numbers — ``available`` reports which).
-    The derived per-(layer, engine, dtype) timing is cached in memory and,
-    when ``cache_path`` is given, persisted as JSON so later runs (and
-    other processes) skip the lowering entirely.
+    their ``cost_analysis()`` numbers replace the analytic estimates;
+    pointwise/norm/concat-style kinds go through a generic elementwise
+    lowering (``profiler._elementwise_cost``), so every segment of the
+    serving graphs is covered by a measurement. Composite graph-level
+    kinds (c2f, sppf, head, ...) keep the analytic numbers —
+    ``available`` reports which. The derived per-(layer, engine, dtype)
+    timing is cached in memory and, when ``cache_path`` is given,
+    persisted as JSON so later runs (and other processes) skip the
+    lowering entirely.
     """
 
     name = "measured"
     _MEASURABLE = ("conv", "deconv")
+    # elementwise kinds measured via the generic lowering in core.profiler
+    # (kept as a literal so importing cost_model does not pull in jax)
+    _ELEMENTWISE = ("act", "tanh", "bn", "norm", "concat", "crop", "pad", "pool", "dropout")
 
     def __init__(self, cache_path: str | None = None, dtype: str = "bfloat16"):
         self.cache_path = cache_path
@@ -124,7 +131,13 @@ class MeasuredCost(CostProvider):
             self._cache = dict(payload.get("entries", {}))
 
     def available(self, l: LayerMeta) -> bool:
-        return l.kind in self._MEASURABLE and l.attrs.get("groups", 1) == 1
+        if l.kind in self._MEASURABLE:
+            return l.attrs.get("groups", 1) == 1
+        return l.kind in self._ELEMENTWISE
+
+    def coverage(self, graph: LayerGraph) -> float:
+        """Fraction of a graph's layers served by a measurement."""
+        return sum(self.available(l) for l in graph) / max(len(graph), 1)
 
     def _key(self, l: LayerMeta, engine) -> str:
         shape = "x".join(str(d) for d in l.in_shape)
@@ -133,18 +146,20 @@ class MeasuredCost(CostProvider):
         return f"{l.kind}|{shape}|{sig}|c{l.out_shape[-1]}|{engine.name}|{self.dtype}"
 
     def _measure(self, l: LayerMeta) -> tuple[float, float]:
-        from .profiler import _conv_cost
+        from .profiler import _conv_cost, _elementwise_cost
 
         self.measure_count += 1
-        return _conv_cost(
-            tuple(l.in_shape),
-            l.attrs.get("kernel", 1),
-            l.attrs.get("stride", 1),
-            l.attrs.get("padding", 0),
-            l.out_shape[-1],
-            l.kind == "deconv",
-            self.dtype,
-        )
+        if l.kind in self._MEASURABLE:
+            return _conv_cost(
+                tuple(l.in_shape),
+                l.attrs.get("kernel", 1),
+                l.attrs.get("stride", 1),
+                l.attrs.get("padding", 0),
+                l.out_shape[-1],
+                l.kind == "deconv",
+                self.dtype,
+            )
+        return _elementwise_cost(l.kind, tuple(l.in_shape), self.dtype)
 
     def layer_time(self, l: LayerMeta, engine) -> float:
         if not self.available(l):
@@ -195,15 +210,92 @@ class BlendedCost(CostProvider):
         return self.measured.save(path)
 
 
+class OnlineCost(CostProvider):
+    """Live-calibrated costs: a base provider scaled by a decayed weighted
+    ratio of observed vs expected per-segment wall time, one per engine.
+
+    The serving executor reports ``(engine, observed_wall_s, expected_s)``
+    per profiled segment (``expected_s`` always in *base-provider* units,
+    re-derived from the graphs — never from a previously-scaled plan, so
+    the calibration is a fixed base->wall mapping that survives plan
+    hot-swaps). The scale is ``EMA(observed) / EMA(expected)`` rather
+    than ``EMA(observed/expected)``: numerator and denominator decay
+    together, so a sample's influence is proportional to its expected
+    magnitude — near-empty spans whose wall is pure host overhead (ratios
+    in the thousands) cannot swing the calibration, while heavyweight
+    segments dominate it. ``layer_time`` then returns ``base *
+    scale(engine)``: the planner ranks engines by what they actually
+    deliver right now, which is exactly the signal the re-planner needs
+    when thermal state or co-located load skews one engine. On this CPU
+    container the scales double as the analytic-units -> wall-clock
+    calibration.
+    """
+
+    name = "online"
+
+    def __init__(self, base: CostProvider | None = None, alpha: float = 0.35):
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError(f"EMA alpha must be in (0, 1], got {alpha}")
+        self.base = base or ANALYTIC
+        self.alpha = alpha
+        self._num: dict[str, float] = {}  # decayed observed-wall sum
+        self._den: dict[str, float] = {}  # decayed expected sum
+        self.observations = 0
+
+    def observe(self, engine_name: str, observed_s: float, expected_s: float):
+        """Fold one (observed wall, expected base-units) sample."""
+        if observed_s <= 0.0 or expected_s <= 0.0:
+            return
+        a = self.alpha
+        if engine_name not in self._num:
+            self._num[engine_name] = observed_s
+            self._den[engine_name] = expected_s
+        else:
+            self._num[engine_name] = (1.0 - a) * self._num[engine_name] + a * observed_s
+            self._den[engine_name] = (1.0 - a) * self._den[engine_name] + a * expected_s
+        self.observations += 1
+
+    def scale(self, engine_name: str) -> float:
+        den = self._den.get(engine_name, 0.0)
+        return self._num[engine_name] / den if den > 0 else 1.0
+
+    def calibrated(self, engine_names) -> bool:
+        return all(e in self._num for e in engine_names)
+
+    def snapshot(self) -> dict[str, float]:
+        return {name: self.scale(name) for name in self._num}
+
+    def layer_time(self, l: LayerMeta, engine) -> float:
+        return self.base.layer_time(l, engine) * self.scale(engine.name)
+
+    def available(self, l: LayerMeta) -> bool:
+        return self.base.available(l)
+
+    def describe(self) -> str:
+        scales = ", ".join(f"{k}x{v:.3g}" for k, v in sorted(self.snapshot().items()))
+        return f"online({self.base.name}; {scales or 'uncalibrated'})"
+
+    def save(self, path: str | None = None) -> str:
+        """Persist the wrapped provider's timing cache (measured/blended
+        bases feed the JSON cache; analytic has nothing to save)."""
+        if hasattr(self.base, "save"):
+            return self.base.save(path)
+        raise ValueError(f"OnlineCost over {self.base.name!r} has no timing cache to save")
+
+
 def make_cost_provider(name: str, cache_path: str | None = None, dtype: str = "bfloat16") -> CostProvider:
-    """Factory behind every ``--cost {analytic,measured,blended}`` flag."""
+    """Factory behind every ``--cost {analytic,measured,blended,online}``
+    flag. ``online`` wraps the blended (measured-with-analytic-fallback)
+    provider in the live EMA calibrator the re-planning runtime feeds."""
     if name == "analytic":
         return ANALYTIC
     if name == "measured":
         return MeasuredCost(cache_path=cache_path, dtype=dtype)
     if name == "blended":
         return BlendedCost(MeasuredCost(cache_path=cache_path, dtype=dtype))
-    raise ValueError(f"unknown cost provider {name!r} (want analytic|measured|blended)")
+    if name == "online":
+        return OnlineCost(BlendedCost(MeasuredCost(cache_path=cache_path, dtype=dtype)))
+    raise ValueError(f"unknown cost provider {name!r} (want analytic|measured|blended|online)")
 
 
 # ---------------------------------------------------------------------------

@@ -136,22 +136,31 @@ class TwoModelPipeline:
         (outputs_a, outputs_b) in input order + populates ``self.log``."""
         from ..serve.executor import StreamExecutor  # lazy: serve imports this module
         from ..serve.streams import StreamSpec
-        from .scheduler import ModelRoute
+        from .plan_ir import make_plan_ir
 
         assert len(frames_a) == len(frames_b)
         la, lb = len(self.a.ops), len(self.b.ops)
-        routes = [
-            ModelRoute(self.a.name, self.pa, [(0, 0, self.pa), (1, self.pa, la)]),
-            ModelRoute(self.b.name, self.pb, [(1, 0, self.pb), (0, self.pb, lb)]),
-        ]
+        # the scheduler's typed IR drives the executor; rebuild it from the
+        # (possibly caller-overridden) partition points
+        ir = self.plan.ir
+        if ir is None or ir.partitions != [self.pa, self.pb]:
+            ir = make_plan_ir(
+                (self.a.name, self.b.name),
+                ("con", "flex"),
+                [[(0, 0, self.pa), (1, self.pa, la)], [(1, 0, self.pb), (0, self.pb, lb)]],
+                kind="haxconn",
+            )
         ex = StreamExecutor(
             [self.a, self.b],
-            routes,
+            ir,
             [StreamSpec("A", 0), StreamSpec("B", 1)],
             max_queue=max(1, len(frames_a)),
             place_fns=[self.place_con, self.place_flex],
             engine_names=["con", "flex"],
             model_labels=["A", "B"],
+            # the two-model pipeline is the paper-faithful correctness
+            # harness: keep the eager op sequence (bit-exact vs run_all)
+            jit_segments=False,
         )
         for fa, fb in zip(frames_a, frames_b):
             ok = ex.submit(0, fa) and ex.submit(1, fb)

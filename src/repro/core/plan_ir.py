@@ -1,0 +1,244 @@
+"""Segment-level plan IR — the single contract between planners and the
+serve stack.
+
+Every scheduler (``haxconn_schedule``, ``nmodel_schedule``, standalone /
+naive) emits a typed ``PlanIR``: per model, an ordered tuple of
+``PlanSegment``s (layer span, engine binding, expected cost under the
+provider that scored the plan). The executor consumes *only* this IR —
+it never reaches into scheduler-internal dicts or ``StagedModel``
+structure — which is what makes live plan hot-swap possible: a new IR
+with the same (models, layer counts) signature can replace the running
+one at a frame boundary, and in-flight frames finish on a snapshot of
+the segments they were admitted under.
+
+``expected_cost`` is recorded in the *scoring provider's* units (the
+analytic roofline's seconds, or calibrated wall seconds when an
+``OnlineCost`` provider scored the plan). The re-planning runtime never
+compares observations against these numbers directly — it re-derives
+base-unit expectations from the graphs — so swapping between plans
+scored by different providers cannot skew the drift detector.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanSegment:
+    """One contiguous layer span of one model bound to one engine."""
+
+    model_index: int
+    stage: int  # position in the model's route
+    engine: int  # engine index into PlanIR.engine_names
+    lo: int
+    hi: int  # layer span [lo, hi)
+    expected_cost: float = 0.0  # scoring-provider seconds for this span
+
+    @property
+    def span(self) -> tuple[int, int]:
+        return (self.lo, self.hi)
+
+    def describe(self, engine_names: Sequence[str] | None = None) -> str:
+        eng = engine_names[self.engine] if engine_names else f"E{self.engine}"
+        return f"m{self.model_index}[{self.lo}:{self.hi})@{eng}"
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanIR:
+    """Typed segment-level plan: what runs where, and what it should cost."""
+
+    models: tuple[str, ...]
+    engine_names: tuple[str, ...]
+    segments: tuple[tuple[PlanSegment, ...], ...]  # per model, route order
+    expected_cycle: float = 0.0  # scoring-provider steady-state cycle
+    cost_provider: str = "analytic"
+    search: str = "none"
+    kind: str = "manual"  # haxconn | nmodel | standalone | naive | manual
+    revision: int = 0  # bumped on every hot-swap
+
+    def __post_init__(self):
+        if len(self.segments) != len(self.models):
+            raise ValueError(
+                f"plan has {len(self.models)} models but {len(self.segments)} segment routes"
+            )
+        for mi, segs in enumerate(self.segments):
+            if not segs:
+                raise ValueError(f"model {mi} ({self.models[mi]}) has an empty route")
+            prev = segs[0].lo
+            if segs[0].lo != 0:
+                raise ValueError(f"model {mi} route starts at {segs[0].lo}, not 0")
+            for si, s in enumerate(segs):
+                if s.model_index != mi or s.stage != si:
+                    raise ValueError(f"segment {s} mis-indexed at route position ({mi}, {si})")
+                if s.lo != prev:
+                    raise ValueError(f"model {mi} route is not contiguous at layer {s.lo}")
+                if s.hi <= s.lo:
+                    raise ValueError(f"model {mi} has an empty/reversed span [{s.lo},{s.hi})")
+                if not 0 <= s.engine < len(self.engine_names):
+                    raise ValueError(f"segment {s} binds unknown engine {s.engine}")
+                prev = s.hi
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def n_models(self) -> int:
+        return len(self.models)
+
+    @property
+    def n_engines(self) -> int:
+        return len(self.engine_names)
+
+    @property
+    def n_layers(self) -> tuple[int, ...]:
+        return tuple(segs[-1].hi for segs in self.segments)
+
+    @property
+    def partitions(self) -> list[int]:
+        """First-stage boundary per model (the planner's partition point)."""
+        return [segs[0].hi for segs in self.segments]
+
+    def route(self, model_index: int) -> tuple[PlanSegment, ...]:
+        return self.segments[model_index]
+
+    def engine_spans(self, engine: int) -> list[PlanSegment]:
+        return [s for segs in self.segments for s in segs if s.engine == engine]
+
+    def validate_against(self, n_layers: Sequence[int]):
+        """Check the IR covers exactly the given per-model layer counts —
+        the executor's admission contract (and the hot-swap precondition)."""
+        if len(n_layers) != len(self.models):
+            raise ValueError(f"plan has {len(self.models)} models, executor has {len(n_layers)}")
+        for mi, (segs, n) in enumerate(zip(self.segments, n_layers)):
+            if segs[-1].hi != n:
+                raise ValueError(
+                    f"model {mi} ({self.models[mi]}): plan covers [0,{segs[-1].hi}) "
+                    f"but the staged model has {n} ops"
+                )
+
+    def with_revision(self, revision: int) -> "PlanIR":
+        return dataclasses.replace(self, revision=revision)
+
+    def describe(self) -> str:
+        lines = [
+            f"PlanIR[{self.kind}] rev={self.revision} cycle={self.expected_cycle * 1e3:.3f}ms "
+            f"cost={self.cost_provider} search={self.search}"
+        ]
+        for mi, segs in enumerate(self.segments):
+            spans = " -> ".join(
+                f"{self.engine_names[s.engine]}[{s.lo}:{s.hi})" for s in segs
+            )
+            lines.append(f"  {self.models[mi]}: {spans}")
+        return "\n".join(lines)
+
+    # -- serialization -------------------------------------------------------
+
+    def to_json(self) -> str:
+        return json.dumps(
+            {
+                "version": 1,
+                "models": list(self.models),
+                "engine_names": list(self.engine_names),
+                "segments": [
+                    [
+                        {
+                            "engine": s.engine,
+                            "lo": s.lo,
+                            "hi": s.hi,
+                            "expected_cost": s.expected_cost,
+                        }
+                        for s in segs
+                    ]
+                    for segs in self.segments
+                ],
+                "expected_cycle": self.expected_cycle,
+                "cost_provider": self.cost_provider,
+                "search": self.search,
+                "kind": self.kind,
+                "revision": self.revision,
+            },
+            indent=2,
+        )
+
+    @classmethod
+    def from_json(cls, text: str) -> "PlanIR":
+        d = json.loads(text)
+        segments = tuple(
+            tuple(
+                PlanSegment(
+                    model_index=mi,
+                    stage=si,
+                    engine=int(s["engine"]),
+                    lo=int(s["lo"]),
+                    hi=int(s["hi"]),
+                    expected_cost=float(s.get("expected_cost", 0.0)),
+                )
+                for si, s in enumerate(segs)
+            )
+            for mi, segs in enumerate(d["segments"])
+        )
+        return cls(
+            models=tuple(d["models"]),
+            engine_names=tuple(d["engine_names"]),
+            segments=segments,
+            expected_cycle=float(d.get("expected_cycle", 0.0)),
+            cost_provider=d.get("cost_provider", "analytic"),
+            search=d.get("search", "none"),
+            kind=d.get("kind", "manual"),
+            revision=int(d.get("revision", 0)),
+        )
+
+
+def make_plan_ir(
+    model_names: Sequence[str],
+    engine_names: Sequence[str],
+    spans: Sequence[Sequence[tuple[int, int, int, float] | tuple[int, int, int]]],
+    expected_cycle: float = 0.0,
+    cost_provider: str = "analytic",
+    search: str = "none",
+    kind: str = "manual",
+) -> PlanIR:
+    """Build a PlanIR from per-model ``(engine, lo, hi[, expected_cost])``
+    span lists — the one constructor every scheduler emit path goes
+    through."""
+    segments = tuple(
+        tuple(
+            PlanSegment(
+                model_index=mi,
+                stage=si,
+                engine=int(sp[0]),
+                lo=int(sp[1]),
+                hi=int(sp[2]),
+                expected_cost=float(sp[3]) if len(sp) > 3 else 0.0,
+            )
+            for si, sp in enumerate(model_spans)
+        )
+        for mi, model_spans in enumerate(spans)
+    )
+    return PlanIR(
+        models=tuple(model_names),
+        engine_names=tuple(engine_names),
+        segments=segments,
+        expected_cycle=expected_cycle,
+        cost_provider=cost_provider,
+        search=search,
+        kind=kind,
+    )
+
+
+def ir_from_routes(routes, model_names=None, engine_names=None, kind: str = "manual") -> PlanIR:
+    """Adapt legacy ``ModelRoute`` lists (scheduler-dict era) to the IR.
+
+    Kept so executor call sites that hand-build routes keep working; new
+    code should consume a scheduler's ``.ir`` directly.
+    """
+    names = list(model_names) if model_names else [getattr(r, "model", f"m{i}") for i, r in enumerate(routes)]
+    n_engines = max(e for r in routes for e, _, _ in r.segments) + 1
+    engines = list(engine_names) if engine_names else [f"E{i}" for i in range(n_engines)]
+    return make_plan_ir(
+        names,
+        engines,
+        [[(e, lo, hi) for e, lo, hi in r.segments] for r in routes],
+        kind=kind,
+    )

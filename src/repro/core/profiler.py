@@ -24,6 +24,66 @@ def cost_analysis_dict(compiled) -> dict:
     return ca or {}
 
 
+def _elementwise_fn(kind: str):
+    """Representative lowering per non-conv layer kind. All of these are
+    memory-bound elementwise/shuffle ops, so one op per kind is enough for
+    XLA's byte/flop accounting to replace the analytic estimate."""
+    if kind in ("act",):
+        return lambda x: jax.nn.leaky_relu(x, 0.2)
+    if kind in ("tanh",):
+        return jnp.tanh
+    if kind in ("bn", "norm"):
+        # inference-time normalization is a per-channel affine
+        def bn(x):
+            g = jnp.ones((x.shape[-1],), x.dtype)
+            b = jnp.zeros((x.shape[-1],), x.dtype)
+            return x * g + b
+
+        return bn
+    if kind == "concat":
+        # the graph meta's shape is the concatenated result; lower the
+        # concat of its two halves along the channel axis
+        def cat(x):
+            h = x.shape[-1] // 2
+            return jnp.concatenate([x[..., :h], x[..., h or 1 :]], axis=-1)
+
+        return cat
+    if kind in ("crop", "pad"):
+        def crop(x):
+            if x.ndim >= 3 and x.shape[1] > 2 and x.shape[2] > 2:
+                return x[:, 1:-1, 1:-1, ...]
+            return x * jnp.asarray(1.0, x.dtype)
+
+        return crop
+    if kind == "pool":
+        def pool(x):
+            return jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 1, 1, 1), "SAME"
+            )
+
+        return pool
+    if kind == "dropout":
+        return lambda x: x * jnp.asarray(1.0, x.dtype)  # inference passthrough
+    return None
+
+
+ELEMENTWISE_KINDS = ("act", "tanh", "bn", "norm", "concat", "crop", "pad", "pool", "dropout")
+
+
+@functools.lru_cache(maxsize=2048)
+def _elementwise_cost(kind, in_shape, dtype_str):
+    """XLA-measured (flops, bytes) for one elementwise-ish layer. Returns
+    transcendentals folded into flops (tanh etc. count there)."""
+    fn = _elementwise_fn(kind)
+    if fn is None:
+        return 0.0, 0.0
+    x = jax.ShapeDtypeStruct(tuple(in_shape), jnp.dtype(dtype_str))
+    compiled = jax.jit(fn).lower(x).compile()
+    ca = cost_analysis_dict(compiled)
+    flops = float(ca.get("flops", 0.0)) + float(ca.get("transcendentals", 0.0))
+    return flops, float(ca.get("bytes accessed", 0.0))
+
+
 @functools.lru_cache(maxsize=512)
 def _conv_cost(in_shape, kernel, stride, padding, c_out, transposed, dtype_str):
     dtype = jnp.dtype(dtype_str)
@@ -54,8 +114,9 @@ def _conv_cost(in_shape, kernel, stride, padding, c_out, transposed, dtype_str):
 
 
 def profile_graph(graph: LayerGraph, dtype=jnp.bfloat16) -> LayerGraph:
-    """Return a copy of ``graph`` with XLA-measured flops/bytes on conv and
-    deconv layers (other kinds keep analytic estimates)."""
+    """Return a copy of ``graph`` with XLA-measured flops/bytes on conv,
+    deconv, and elementwise (pointwise/norm/concat/...) layers; composite
+    kinds (c2f, sppf, head, ...) keep analytic estimates."""
     out = []
     for l in graph:
         if l.kind in ("conv", "deconv"):
@@ -68,6 +129,9 @@ def profile_graph(graph: LayerGraph, dtype=jnp.bfloat16) -> LayerGraph:
                 l.kind == "deconv",
                 jnp.dtype(dtype).name,
             )
+            nl = l.clone(flops=flops or l.flops, bytes_accessed=bytes_ or l.bytes_accessed)
+        elif l.kind in ELEMENTWISE_KINDS:
+            flops, bytes_ = _elementwise_cost(l.kind, tuple(l.in_shape), jnp.dtype(dtype).name)
             nl = l.clone(flops=flops or l.flops, bytes_accessed=bytes_ or l.bytes_accessed)
         else:
             nl = l.clone()

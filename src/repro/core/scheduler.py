@@ -38,6 +38,7 @@ from .cost_model import (
     transfer_time,
 )
 from .graph import LayerGraph
+from .plan_ir import PlanIR, make_plan_ir
 
 
 @dataclasses.dataclass
@@ -61,6 +62,9 @@ class Schedule:
     partitions: dict[str, tuple[int, int]] | None = None  # model -> (to_peer, back)
     notes: list[str] = dataclasses.field(default_factory=list)
     segments: list[tuple] = dataclasses.field(default_factory=list)  # (engine, label, dur)
+    # the typed segment-level plan the serve stack consumes (every
+    # scheduler emits one; None only for hand-built Schedule objects)
+    ir: PlanIR | None = None
 
     @property
     def aggregate_fps(self):
@@ -115,6 +119,14 @@ def standalone_schedule(
         loads=loads,
         segments=segs,
         notes=[f"fallback_runs={c.n_fallback_runs}"],
+        ir=make_plan_ir(
+            (graph.model_name,),
+            (engine.name, peer.name),
+            [[(0, 0, len(graph), c.elapsed)]],
+            expected_cycle=c.elapsed,
+            cost_provider=(provider or ANALYTIC).name,
+            kind="standalone",
+        ),
     )
     return sched
 
@@ -159,6 +171,14 @@ def naive_schedule(
             (flexible.name, "fallback", ca.peer_busy),
         ],
         notes=[f"A fallback runs={ca.n_fallback_runs}"],
+        ir=make_plan_ir(
+            (graph_a.model_name, graph_b.model_name),
+            (constrained.name, flexible.name),
+            [[(0, 0, len(graph_a), ca.elapsed)], [(1, 0, len(graph_b), tb)]],
+            expected_cycle=max(gpu_period, dla_period),
+            cost_provider=(provider or ANALYTIC).name,
+            kind="naive",
+        ),
     )
 
 
@@ -173,6 +193,10 @@ class HaxConnResult:
     p_a: int  # A: [0, p_a) on constrained engine, [p_a, L) on flexible
     p_b: int  # B: [0, p_b) on flexible engine,  [p_b, L) on constrained
     phase: dict[str, float]
+
+    @property
+    def ir(self) -> PlanIR:
+        return self.schedule.ir
 
 
 def _candidate_points(graph: LayerGraph, stride: int = 1):
@@ -259,6 +283,18 @@ def haxconn_schedule(
             f"B: flexible[0:{pb}) constrained[{pb}:{lb})",
             f"fallback_runs={ca1.n_fallback_runs + cb2.n_fallback_runs}",
         ],
+        ir=make_plan_ir(
+            (graph_a.model_name, graph_b.model_name),
+            (constrained.name, flexible.name),
+            [
+                [(0, 0, pa, ca1.elapsed), (1, pa, la, ca2.elapsed)],
+                [(1, 0, pb, cb1.elapsed), (0, pb, lb, cb2.elapsed)],
+            ],
+            expected_cycle=cycle,
+            cost_provider=(provider or ANALYTIC).name,
+            search="fixed" if fixed else "exhaustive",
+            kind="haxconn",
+        ),
     )
     return HaxConnResult(sched, pa, pb, {"constrained": t_con, "flexible": t_flex})
 
@@ -289,6 +325,7 @@ class NModelPlan:
     flex_index: int  # engine absorbing fallback work
     cost_provider: str = "analytic"  # which CostProvider scored this plan
     search: str = "exhaustive"  # exhaustive | beam | descent | fixed
+    ir: PlanIR | None = None  # the typed plan the serve stack consumes
 
     @property
     def cycle_time(self) -> float:
@@ -554,7 +591,7 @@ def nmodel_schedule(
         graphs, engines, best_pvec, allow_fallback, flex_idx, cost_fn
     )
     loads = {e.name: EngineLoad(busy=b, stall=cycle - b) for e, b in zip(engines, busy)}
-    routes, segments, notes = [], [], []
+    routes, segments, notes, ir_spans = [], [], [], []
     n_fallback = 0
     for i, (g, p) in enumerate(zip(graphs, best_pvec)):
         e1, e2, c1, c2, x = per_model[i]
@@ -566,6 +603,7 @@ def nmodel_schedule(
                 segments=[(e1, 0, p), (e2, p, len(g))],
             )
         )
+        ir_spans.append([(e1, 0, p, c1.elapsed), (e2, p, len(g), c2.elapsed)])
         segments.append((engines[e1].name, f"{label}1", c1.elapsed))
         if x:
             segments.append((engines[min(e1, e2)].name, "xfer", x))
@@ -578,6 +616,15 @@ def nmodel_schedule(
         )
     notes.append(f"fallback_runs={n_fallback}")
     notes.append(f"search={mode} cost={provider.name}")
+    ir = make_plan_ir(
+        tuple(g.model_name for g in graphs),
+        tuple(e.name for e in engines),
+        ir_spans,
+        expected_cycle=cycle,
+        cost_provider=provider.name,
+        search=mode,
+        kind="nmodel",
+    )
     sched = Schedule(
         kind="nmodel",
         models=tuple(g.model_name for g in graphs),
@@ -591,6 +638,7 @@ def nmodel_schedule(
         },
         segments=segments,
         notes=notes,
+        ir=ir,
     )
     return NModelPlan(
         schedule=sched,
@@ -600,4 +648,5 @@ def nmodel_schedule(
         flex_index=flex_idx,
         cost_provider=provider.name,
         search=mode,
+        ir=ir,
     )

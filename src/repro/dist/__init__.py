@@ -1,10 +1,13 @@
 # Distribution layer: sharding rules + compressed data-parallel gradients.
 from .compress import make_compressed_dp_grad_fn, zeros_like_error
 from .sharding import (
+    TrainShardings,
     batch_sharding,
     default_rules,
+    opt_state_shardings,
     spec_for_axes,
     spec_for_axes_shaped,
+    train_shardings,
     tree_shardings,
     tree_shardings_shaped,
 )

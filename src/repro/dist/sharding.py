@@ -11,6 +11,7 @@ have them.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from typing import Any
 
@@ -105,3 +106,47 @@ def batch_sharding(mesh, batch_size: int, rules) -> NamedSharding:
     """Sharding for a batch leaf: leading dim over the data-like axes."""
     fitted = _fit_spec((rules.get("batch"),), (batch_size,), mesh)
     return NamedSharding(mesh, P(*fitted))
+
+
+def opt_state_shardings(mesh, params_shardings, opt_state):
+    """Shardings for an optimizer-state pytree, derived from the param
+    shardings: any sub-tree structurally identical to the params (AdamW's
+    moments, master weights, ...) inherits them; everything else (step
+    counters, scalars) replicates. No hand-rolled ``{"m": psh, ...}``."""
+    replicated = NamedSharding(mesh, P())
+    pstruct = jax.tree.structure(params_shardings)
+
+    def branch(sub):
+        if jax.tree.structure(sub) == pstruct:
+            return params_shardings
+        return jax.tree.map(lambda _: replicated, sub)
+
+    if isinstance(opt_state, dict):
+        return {k: branch(v) for k, v in opt_state.items()}
+    return branch(opt_state)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainShardings:
+    """The full sharding plumbing of one train launch."""
+
+    params: Any
+    opt_state: Any
+    batch: NamedSharding
+    rules: dict
+
+
+def train_shardings(mesh, axes_tree, abstract_params, opt_state, batch_size: int, rules=None):
+    """One-call config plumbing for a sharded train launch: divisibility-
+    fitted param shardings (``tree_shardings_shaped``), structurally
+    derived optimizer-state shardings, and the batch sharding — explicit
+    ``NamedSharding``s only, so this works on every jax new enough to
+    have them (no mesh context manager required)."""
+    rules = rules if rules is not None else default_rules(True, mesh.axis_names)
+    psh = tree_shardings_shaped(mesh, axes_tree, abstract_params, rules)
+    return TrainShardings(
+        params=psh,
+        opt_state=opt_state_shardings(mesh, psh, opt_state),
+        batch=batch_sharding(mesh, batch_size, rules),
+        rules=rules,
+    )

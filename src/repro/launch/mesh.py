@@ -15,6 +15,17 @@ import math
 import jax
 
 
+def _make_mesh(shape, axes, devices):
+    """jax.make_mesh across versions: ``axis_types`` (and AxisType) only
+    exist on newer jax — everything downstream uses explicit
+    NamedShardings, for which the default (auto) axis types are right."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes, devices=devices, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+        )
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
@@ -25,18 +36,11 @@ def make_production_mesh(*, multi_pod: bool = False):
             f"need {n} devices for mesh {shape}; have {len(devices)} "
             "(dry-run sets --xla_force_host_platform_device_count=512)"
         )
-    return jax.make_mesh(
-        shape, axes, devices=devices, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _make_mesh(shape, axes, devices)
 
 
 def make_host_mesh(model_parallel: int = 1):
     """Small mesh over whatever devices exist (tests / examples)."""
     n = len(jax.devices())
     dp = max(1, n // model_parallel)
-    return jax.make_mesh(
-        (dp, model_parallel),
-        ("data", "model"),
-        devices=jax.devices()[: dp * model_parallel],
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return _make_mesh((dp, model_parallel), ("data", "model"), jax.devices()[: dp * model_parallel])

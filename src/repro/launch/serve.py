@@ -27,7 +27,13 @@ from ..configs import get_arch, build_model
 
 def run_streams(args) -> None:
     from ..core.cost_model import make_cost_provider
-    from ..serve import MultiStreamServer, build_pix_yolo_serving, merge_flags_for
+    from ..serve import (
+        MultiStreamServer,
+        ReplanConfig,
+        build_pix_yolo_serving,
+        build_replanner,
+        merge_flags_for,
+    )
 
     provider = make_cost_provider(args.cost, cache_path=args.cost_cache)
     models, plan, streams, _ = build_pix_yolo_serving(
@@ -44,6 +50,19 @@ def run_streams(args) -> None:
         f"[serve] plan partitions={plan.partitions} cycle={plan.cycle_time*1e3:.2f} ms "
         f"search={plan.search} cost={plan.cost_provider}"
     )
+    replanner = None
+    if args.replan:
+        replanner = build_replanner(
+            models,
+            config=ReplanConfig(
+                drift_threshold=args.replan_threshold,
+                hysteresis=args.replan_hysteresis,
+                cooldown_ticks=args.replan_cooldown,
+                profile_every=args.profile_every,
+                background=args.replan_background,
+            ),
+            cost=provider,
+        )
     server = MultiStreamServer(
         models,
         plan,
@@ -53,6 +72,7 @@ def run_streams(args) -> None:
         merge_batches=merge_flags_for(models),
         dispatch=args.dispatch,
         jit_segments=not args.no_jit_segments,
+        replanner=replanner,
     )
     for t in range(args.frames):
         for s in streams:
@@ -77,11 +97,24 @@ def main():
     ap.add_argument("--base", type=int, default=8)
     ap.add_argument("--microbatch", type=int, default=2)
     ap.add_argument("--queue-depth", type=int, default=4)
-    ap.add_argument("--cost", choices=("analytic", "measured", "blended"), default="analytic")
+    ap.add_argument(
+        "--cost", choices=("analytic", "measured", "blended", "online"), default="analytic"
+    )
     ap.add_argument("--cost-cache", default=None, help="JSON cache for measured layer timings")
     ap.add_argument("--dispatch", choices=("overlapped", "serialized"), default="overlapped")
     ap.add_argument("--norm", choices=("batch", "instance", "group"), default="batch")
     ap.add_argument("--no-jit-segments", action="store_true", help="eager per-op dispatch")
+    # online re-planning runtime
+    ap.add_argument(
+        "--replan", action="store_true", help="watch live segment costs and hot-swap the plan"
+    )
+    ap.add_argument("--replan-threshold", type=float, default=0.5, help="relative drift to fire on")
+    ap.add_argument("--replan-hysteresis", type=int, default=3, help="consecutive drifting ticks")
+    ap.add_argument("--replan-cooldown", type=int, default=10, help="min ticks between swaps")
+    ap.add_argument("--profile-every", type=int, default=2, help="segment-profiling cadence (ticks)")
+    ap.add_argument(
+        "--replan-background", action="store_true", help="run the planner in a worker thread"
+    )
     args = ap.parse_args()
 
     if args.mode == "streams":

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 
 from ..configs import get_arch, build_model
 from ..data import Prefetcher, token_batches
-from ..dist.sharding import batch_sharding, default_rules, tree_shardings_shaped
+from ..dist.sharding import train_shardings
 from ..train import LoopConfig, run_train_loop
 from ..train.optimizer import AdamW, warmup_cosine
 from ..train.steps import make_lm_train_step
@@ -55,34 +55,38 @@ def main():
         if args.production_mesh
         else make_host_mesh(args.model_parallel)
     )
-    rules = default_rules(True, mesh.axis_names)
 
     params = model.init(jax.random.key(0))
     opt = AdamW(lr=warmup_cosine(args.lr, 50, args.steps), weight_decay=0.01)
     opt_state = opt.init(params)
     step = make_lm_train_step(model, opt, n_micro=args.n_micro)
 
+    # all sharding plumbing in one call: fitted param shardings, optimizer
+    # state derived structurally, batch over the data-like axes. Explicit
+    # NamedShardings only — no mesh context manager, so this runs on every
+    # jax that has jax.make_mesh.
     abstract = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
-    psh = tree_shardings_shaped(mesh, model.axes(), abstract, rules)
-    osh = {"m": psh, "v": psh, "step": jax.NamedSharding(mesh, jax.sharding.PartitionSpec())}
-    bsh = batch_sharding(mesh, args.batch, rules)
-    with jax.set_mesh(mesh):
-        params = jax.device_put(params, psh)
-        opt_state = jax.device_put(opt_state, osh)
-        jstep = jax.jit(step, in_shardings=(psh, osh, {"tokens": bsh, "labels": bsh}), donate_argnums=(0, 1))
+    sh = train_shardings(mesh, model.axes(), abstract, opt_state, args.batch)
+    params = jax.device_put(params, sh.params)
+    opt_state = jax.device_put(opt_state, sh.opt_state)
+    jstep = jax.jit(
+        step,
+        in_shardings=(sh.params, sh.opt_state, {"tokens": sh.batch, "labels": sh.batch}),
+        donate_argnums=(0, 1),
+    )
 
-        data = Prefetcher(
-            token_batches(args.batch, args.seq, cfg.vocab, seed=jax.process_index()),
-            transform=lambda b: {k: jax.device_put(jnp.asarray(v), bsh) for k, v in b.items()},
-        )
-        out = run_train_loop(
-            jstep,
-            params,
-            opt_state,
-            data,
-            LoopConfig(args.steps, args.ckpt_dir, ckpt_every=args.ckpt_every, log_every=20),
-            shardings={"params": psh, "opt_state": osh},
-        )
+    data = Prefetcher(
+        token_batches(args.batch, args.seq, cfg.vocab, seed=jax.process_index()),
+        transform=lambda b: {k: jax.device_put(jnp.asarray(v), sh.batch) for k, v in b.items()},
+    )
+    out = run_train_loop(
+        jstep,
+        params,
+        opt_state,
+        data,
+        LoopConfig(args.steps, args.ckpt_dir, ckpt_every=args.ckpt_every, log_every=20),
+        shardings={"params": sh.params, "opt_state": sh.opt_state},
+    )
     print(f"[train] finished at step {out.step}; stragglers={len(out.straggler_events)}")
 
 

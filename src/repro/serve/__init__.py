@@ -1,6 +1,16 @@
-# Multi-stream serving: N staged models over E engines with K frame streams.
-from .demo import build_pix_yolo_serving, merge_flags_for
-from .executor import Completion, Flight, StreamExecutor
-from .metrics import ServeMetrics, StreamMetrics, TickStats, overlap_summary, percentile
+# Multi-stream serving: N staged models over E engines with K frame streams,
+# planned through the segment-level PlanIR and re-planned live by the
+# drift-watching Replanner.
+from .demo import build_pix_yolo_serving, build_replanner, merge_flags_for
+from .executor import Completion, Flight, SegmentObservation, StreamExecutor, SwapEvent
+from .metrics import (
+    ServeMetrics,
+    StreamMetrics,
+    TickStats,
+    overlap_summary,
+    percentile,
+    segment_summary,
+)
+from .replanner import ReplanConfig, ReplanEvent, Replanner
 from .server import MultiStreamServer, Request
 from .streams import FrameQueue, StreamSpec

@@ -49,6 +49,19 @@ def build_pix_yolo_serving(
     return [sm_pix, sm_yolo], plan, streams, (gpu, dla)
 
 
+def build_replanner(models, config=None, cost: str | CostProvider = "analytic"):
+    """Replanner over the same graphs + engine pair (in plan order:
+    ``[dla, gpu]``) that ``build_pix_yolo_serving`` planned with — attach
+    it to the server/executor to close the online re-planning loop."""
+    from .replanner import Replanner
+
+    provider = cost if isinstance(cost, CostProvider) else make_cost_provider(cost)
+    gpu, dla = jetson_orin_engines(constraints_dla=DLA_ANALOGUE_CONSTRAINTS)
+    return Replanner(
+        [m.graph for m in models], [dla, gpu], config=config, base_provider=provider
+    )
+
+
 def merge_flags_for(models) -> list[bool]:
     """Per-model ``merge_batches`` flags: merge only batch-independent
     staged models (Pix2Pix with instance/group norm; never YOLO, whose

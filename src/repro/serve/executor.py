@@ -1,9 +1,13 @@
-"""Generic tick-based multi-stream executor with overlapped dispatch.
+"""Generic tick-based multi-stream executor with overlapped dispatch and
+live plan hot-swap.
 
 Generalizes the two-model HaX-CoNN swap pipeline: N staged models, each
-with a planner-assigned route of (engine, lo, hi) segments, fed by K
-bounded per-stream frame queues. One *tick* is one steady-state cycle in
-two phases:
+with a planner-assigned route of ``PlanSegment``s (layer span + engine
+binding), fed by K bounded per-stream frame queues. The executor consumes
+*only* the typed ``core.plan_ir.PlanIR`` — scheduler results
+(``NModelPlan``, ``HaxConnResult``) and legacy ``ModelRoute`` lists are
+normalized to an IR at construction, and nothing downstream reaches into
+scheduler internals. One *tick* is one steady-state cycle in two phases:
 
   * **issue** — every in-flight frame advances exactly one route segment
     (deepest stage first — the double-buffered counter-phase), then each
@@ -12,33 +16,49 @@ two phases:
     the segment computations are only *dispatched* (JAX async dispatch):
     the host keeps issuing the other engines' segments while earlier ones
     compute, so counter-phased engines genuinely overlap. With
-    ``jit_segments=True`` each (model, stage) segment is additionally
-    fused into one jitted executable — one dispatch per engine call
-    instead of one per op — with the state buffers donated on backends
-    that support donation (shapes permitting), so a segment writes in
-    place.
+    ``jit_segments=True`` (the default) each (model, span) segment is
+    additionally fused into one jitted executable — one dispatch per
+    engine call instead of one per op — with the state buffers donated on
+    backends that support donation, so a segment writes in place. XLA
+    fusion may flip low-order bits vs the eager op sequence; pass
+    ``jit_segments=False`` for the bit-exact-vs-``run_all`` baseline.
   * **resolve** — frames whose route finished are completed: the host
     blocks on the finalized outputs (the only synchronization point of
     the tick), slices merged groups apart, and stamps latencies.
 
+**Plan hot-swap** (the online re-planning runtime): ``swap_plan(new_ir)``
+replaces the active plan at a frame boundary — between ticks, or at the
+end of the tick that called it. Each flight snapshots its route at
+admission, so in-flight frames finish on the plan they started under
+while new admissions take the new routes: zero dropped frames, no
+ordering change, and (routes being a pure re-orchestration of the same
+op sequence) outputs equal to an unswapped run. ``prepare_plan(new_ir)``
+pre-executes the new plan's segment executables on zero-filled states of
+the shapes seen so far — the double-buffered staged-weights warmup that
+keeps compilation off the hot path before the swap.
+
+**Per-segment observation**: with ``profile_every=k``, every k-th tick is
+a *profiled* tick — each segment call is individually synchronized and
+its wall time recorded as a ``SegmentObservation`` (and pushed to the
+``on_segment`` callback). That is the live cost feedback the
+``serve.replanner`` folds into its ``OnlineCost`` EMA; non-profiled ticks
+keep full overlap. ``segment_delay_fn`` injects an extra per-segment cost
+on its engine (perturbation harness for the recovery benchmark): stalls
+accrue per engine and the tick pays the slowest engine's total once,
+overlapped with the async compute — a slowed *parallel* engine looks
+exactly like this — while profiled observations report the engine-virtual
+wall (compute + stall) so the drift detector sees the slowdown.
+
 ``dispatch="serialized"`` instead synchronizes after *every* segment
-call — each engine call completes before the next is issued, the
-pre-overlap behaviour kept as the measurable baseline. Both modes run
-the exact same op sequence per frame as ``StagedModel.run_all``, so
-outputs are bit-exact vs the monolithic models and identical across
-modes (pinned by test). Per-tick host wall/blocked time is recorded in
-``tick_stats`` (see ``metrics.TickStats.overlap_efficiency``).
+call — the pre-overlap behaviour kept as the measurable baseline. Both
+modes run the exact same op sequence per frame as ``StagedModel.run_all``.
+Per-tick host wall/blocked time is recorded in ``tick_stats`` (see
+``metrics.TickStats.overlap_efficiency``).
 
 Micro-batching (``microbatch > 1``) admits up to that many same-model
-frames per tick so an engine runs one model's segment back-to-back for
-the whole group (one engine switch per group — what micro-batching buys
-on real hardware) while keeping every frame's math unchanged. With
-``merge_batches`` (a bool for all models or one flag per model) the
-group is additionally concatenated along the leading axis and the route
-runs once for the merged state; outputs are sliced back per frame. Only
-enable merging for batch-independent models — Pix2Pix's ``BatchNorm2D``
-takes statistics over the batch axis, so merging changes its outputs
-(use ``Pix2PixConfig(norm="instance")`` for a batch-independent variant).
+frames per tick; with ``merge_batches`` the group is concatenated along
+the leading axis and the route runs once for the merged state (only for
+batch-independent models — see ``Pix2PixConfig(norm="instance")``).
 """
 from __future__ import annotations
 
@@ -50,7 +70,8 @@ import jax
 import jax.numpy as jnp
 
 from ..core.pipeline import StagedModel, TickLog
-from ..core.scheduler import ModelRoute, NModelPlan
+from ..core.plan_ir import PlanIR, PlanSegment, ir_from_routes
+from ..core.scheduler import NModelPlan
 from .metrics import TickStats
 from .streams import FrameQueue, StreamSpec
 
@@ -70,6 +91,8 @@ class Flight:
     members: list[FlightMember]
     state: Any
     stage: int  # segments already executed
+    route: tuple[PlanSegment, ...]  # snapshot of the plan at admission
+    revision: int  # plan revision the flight was admitted under
 
 
 @dataclasses.dataclass
@@ -82,13 +105,47 @@ class Completion:
     latency_s: float  # wall-clock submit -> completion
 
 
+@dataclasses.dataclass(frozen=True)
+class SegmentObservation:
+    """One profiled segment execution — the executor's live cost signal."""
+
+    tick: int
+    model_index: int
+    stage: int
+    engine: int
+    lo: int
+    hi: int
+    wall_s: float  # dispatch + sync wall time of this segment call
+    batch: int  # leading-axis frames in the flight (merged groups > 1)
+    revision: int  # plan revision the segment ran under
+
+
+@dataclasses.dataclass(frozen=True)
+class SwapEvent:
+    tick: int
+    revision: int
+    partitions: tuple[int, ...]
+    expected_cycle: float
+
+
+def _as_plan_ir(plan, engine_names=None) -> PlanIR:
+    """Normalize every accepted plan form to the IR contract."""
+    if isinstance(plan, PlanIR):
+        return plan
+    if isinstance(plan, NModelPlan):
+        return plan.ir
+    if hasattr(plan, "ir") and isinstance(getattr(plan, "ir"), PlanIR):
+        return plan.ir  # HaxConnResult / Schedule
+    return ir_from_routes(plan, engine_names=engine_names)
+
+
 class StreamExecutor:
     """Drives N staged models over their planned routes for K streams."""
 
     def __init__(
         self,
         models: list[StagedModel],
-        routes: list[ModelRoute] | NModelPlan,
+        plan: PlanIR | NModelPlan | list,
         streams: list[StreamSpec],
         max_queue: int = 8,
         microbatch: int = 1,
@@ -97,22 +154,15 @@ class StreamExecutor:
         engine_names: list[str] | None = None,
         model_labels: list[str] | None = None,
         dispatch: str = "overlapped",
-        jit_segments: bool = False,
+        jit_segments: bool = True,
+        profile_every: int = 0,
+        on_segment: Callable[[SegmentObservation], None] | None = None,
+        segment_delay_fn: Callable[[PlanSegment], float] | None = None,
     ):
-        if isinstance(routes, NModelPlan):
-            if engine_names is None:
-                engine_names = list(routes.schedule.engines)
-            routes = routes.routes
-        if len(models) != len(routes):
-            raise ValueError(f"{len(models)} models but {len(routes)} routes")
-        for m, r in zip(models, routes):
-            hi = 0
-            for _, lo, seg_hi in r.segments:
-                if lo != hi:
-                    raise ValueError(f"route for {m.name} is not contiguous at {lo}")
-                hi = seg_hi
-            if hi != len(m.ops):
-                raise ValueError(f"route for {m.name} covers [0,{hi}) but model has {len(m.ops)} ops")
+        ir = _as_plan_ir(plan, engine_names)
+        if len(models) != ir.n_models:
+            raise ValueError(f"{len(models)} models but plan routes {ir.n_models}")
+        ir.validate_against([len(m.ops) for m in models])
         for s in streams:
             if not 0 <= s.model_index < len(models):
                 raise ValueError(f"stream {s.name} references unknown model {s.model_index}")
@@ -120,8 +170,10 @@ class StreamExecutor:
             raise ValueError("microbatch must be >= 1")
         if dispatch not in ("overlapped", "serialized"):
             raise ValueError(f"dispatch must be 'overlapped' or 'serialized', got {dispatch!r}")
+        if profile_every < 0:
+            raise ValueError("profile_every must be >= 0 (0 = no segment profiling)")
         self.models = models
-        self.routes = routes
+        self.plan = ir
         self.streams = streams
         self.microbatch = microbatch
         self.dispatch = dispatch
@@ -131,9 +183,9 @@ class StreamExecutor:
             if len(merge_batches) != len(models):
                 raise ValueError(f"{len(merge_batches)} merge flags but {len(models)} models")
             self.merge_batches = list(merge_batches)
-        n_engines = max(e for r in routes for e, _, _ in r.segments) + 1
+        n_engines = ir.n_engines
         self.place_fns = place_fns or [lambda x: x] * n_engines
-        self.engine_names = engine_names or [f"E{i}" for i in range(n_engines)]
+        self.engine_names = list(engine_names) if engine_names else list(ir.engine_names)
         self.model_labels = model_labels or [m.name for m in models]
         self.queues = [FrameQueue(max_queue) for _ in streams]
         self.in_flight: list[Flight] = []
@@ -147,18 +199,26 @@ class StreamExecutor:
         self._streams_of = [
             [i for i, s in enumerate(streams) if s.model_index == m] for m in range(len(models))
         ]
-        self._max_stages = max(len(r.segments) for r in routes)
         self._blocked_s = 0.0  # block_until_ready time inside the current tick
         self._segments_issued = 0
-        # jit fuses each route segment into one executable (one dispatch per
-        # engine call instead of one per op). Off by default: XLA fusion may
-        # flip low-order bits vs the eager op sequence, and the executor's
-        # baseline contract is bit-exactness vs StagedModel.run_all.
+        # live cost feedback + re-planning hooks
+        self.profile_every = profile_every
+        self.on_segment = on_segment
+        self.on_tick: Callable[["StreamExecutor"], None] | None = None
+        self.segment_delay_fn = segment_delay_fn
+        self._tick_delay: dict[int, float] = {}  # engine -> accrued stall this tick
+        self.segment_obs: list[SegmentObservation] = []
+        self.swap_events: list[SwapEvent] = []
+        self._profiling_tick = False
+        # stage-0 state structs seen per model (for prepare_plan warmups)
+        self._state_structs: dict[int, list] = {m: [] for m in range(len(models))}
         self.jit_segments = jit_segments
         # donation needs backend support; the CPU client ignores donated
         # buffers (and warns), so only donate segment state buffers off-CPU
         self._donate = jax.default_backend() not in ("cpu",)
-        self._seg_fns: dict[tuple[int, int], Callable] = {}
+        # keyed by (model, lo, hi): hot-swapped plans whose spans coincide
+        # with an old plan's reuse the same (possibly compiled) runner
+        self._seg_fns: dict[tuple[int, int, int], Callable] = {}
 
     # -- submission ---------------------------------------------------------
 
@@ -181,6 +241,66 @@ class StreamExecutor:
     def pending(self) -> int:
         return sum(len(q) for q in self.queues) + sum(len(f.members) for f in self.in_flight)
 
+    # -- plan hot-swap ------------------------------------------------------
+
+    @property
+    def plan_revision(self) -> int:
+        return self.plan.revision
+
+    def swap_plan(self, new_ir: PlanIR) -> int:
+        """Install a new plan at the next frame boundary (new admissions).
+
+        In-flight frames keep their admission-time route snapshots, so the
+        swap drops nothing and changes no frame's op sequence — only where
+        future segments run. Returns the new plan revision.
+        """
+        if tuple(new_ir.models) != tuple(self.plan.models):
+            raise ValueError(
+                f"swap changes the model set {self.plan.models} -> {new_ir.models}"
+            )
+        if new_ir.n_engines > len(self.place_fns):
+            raise ValueError(
+                f"swap needs {new_ir.n_engines} engines but executor has {len(self.place_fns)}"
+            )
+        new_ir.validate_against([len(m.ops) for m in self.models])
+        rev = self.plan.revision + 1
+        self.plan = new_ir.with_revision(rev)
+        self.swap_events.append(
+            SwapEvent(
+                tick=self.tick_count,
+                revision=rev,
+                partitions=tuple(new_ir.partitions),
+                expected_cycle=new_ir.expected_cycle,
+            )
+        )
+        self.log.append(TickLog(self.tick_count, "*", f"swap->rev{rev} p={new_ir.partitions}"))
+        return rev
+
+    def prepare_plan(self, new_ir: PlanIR) -> int:
+        """Warm the new plan's segment executables off the hot path.
+
+        For every stage-0 state shape seen so far, abstractly threads the
+        state through the new routes and runs each segment once on zeros —
+        seeding the jit caches (double-buffered executables: the old
+        plan's stay valid for in-flight frames). Returns the number of
+        segment executions warmed; silently skips models that have not
+        seen a frame yet.
+        """
+        new_ir.validate_against([len(m.ops) for m in self.models])
+        warmed = 0
+        for mi, segs in enumerate(new_ir.segments):
+            model = self.models[mi]
+            for _, struct in self._state_structs[mi]:
+                state = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), struct)
+                for seg in segs:
+                    key = (mi, seg.lo, seg.hi)
+                    if key not in self._seg_fns:
+                        self._seg_fns[key] = self._make_runner(mi, seg.lo, seg.hi)
+                    state = self._seg_fns[key](model.params, state)
+                    warmed += 1
+                jax.block_until_ready(state)
+        return warmed
+
     # -- execution ----------------------------------------------------------
 
     def _block(self, x):
@@ -190,29 +310,44 @@ class StreamExecutor:
         self._blocked_s += time.perf_counter() - t0
         return x
 
-    def _segment_runner(self, mi: int, stage: int) -> Callable:
-        key = (mi, stage)
+    def _make_runner(self, mi: int, lo: int, hi: int) -> Callable:
+        model = self.models[mi]
+        if self.jit_segments:
+            # cached on the model: executors over the same span share one
+            # compiled executable per (segment, shape)
+            return model.jitted_segment_fn(lo, hi, donate=self._donate)
+        return model.segment_fn(lo, hi)
+
+    def _segment_runner(self, mi: int, seg: PlanSegment) -> Callable:
+        key = (mi, seg.lo, seg.hi)
         fn = self._seg_fns.get(key)
         if fn is None:
-            model = self.models[mi]
-            _, lo, hi = self.routes[mi].segments[stage]
-            if self.jit_segments:
-                # cached on the model: executors over the same route share
-                # one compiled executable per (segment, shape)
-                fn = model.jitted_segment_fn(lo, hi, donate=self._donate)
-            else:
-                fn = model.segment_fn(lo, hi)
+            fn = self._make_runner(mi, seg.lo, seg.hi)
             self._seg_fns[key] = fn
         return fn
 
     def _run_segment(self, flight: Flight):
         """Issue one route segment for a flight. In overlapped mode this
         only dispatches the computation (async); serialized mode waits for
-        it — the per-engine-call sync the refactor removed."""
-        model = self.models[flight.model_index]
-        eng, lo, hi = self.routes[flight.model_index].segments[flight.stage]
+        it. Profiled ticks synchronize per segment to stamp a wall-time
+        observation (the live cost feedback)."""
+        seg = flight.route[flight.stage]
+        eng = seg.engine
+        t0 = time.perf_counter()
         state = self.place_fns[eng](flight.state)
-        flight.state = self._segment_runner(flight.model_index, flight.stage)(model.params, state)
+        flight.state = self._segment_runner(flight.model_index, seg)(
+            self.models[flight.model_index].params, state
+        )
+        d = 0.0
+        if self.segment_delay_fn is not None:
+            d = self.segment_delay_fn(seg)
+            if d > 0:
+                # simulated engine slowdown: engines stall concurrently on
+                # real hardware, so the stall accrues to this engine's
+                # per-tick total (paid as max over engines at tick end)
+                # instead of sleeping inline, which would serialize
+                # stalls that genuinely overlap
+                self._tick_delay[eng] = self._tick_delay.get(eng, 0.0) + d
         flight.stage += 1
         self._segments_issued += 1
         ids = ",".join(str(m.frame_id) for m in flight.members)
@@ -220,10 +355,28 @@ class StreamExecutor:
             TickLog(
                 self.tick_count,
                 self.engine_names[eng],
-                f"{self.model_labels[flight.model_index]}[{lo}:{hi})#f{ids}",
+                f"{self.model_labels[flight.model_index]}[{seg.lo}:{seg.hi})#f{ids}",
             )
         )
-        if self.dispatch == "serialized":
+        if self._profiling_tick:
+            self._block(flight.state)
+            obs = SegmentObservation(
+                tick=self.tick_count,
+                model_index=flight.model_index,
+                stage=seg.stage,
+                engine=eng,
+                lo=seg.lo,
+                hi=seg.hi,
+                # the engine-virtual wall: what this span costs on its
+                # (possibly slowed) engine
+                wall_s=time.perf_counter() - t0 + d,
+                batch=sum(m.size for m in flight.members),
+                revision=flight.revision,
+            )
+            self.segment_obs.append(obs)
+            if self.on_segment is not None:
+                self.on_segment(obs)
+        elif self.dispatch == "serialized":
             self._block(flight.state)
 
     def _complete(self, flight: Flight):
@@ -252,9 +405,18 @@ class StreamExecutor:
                 )
             )
 
+    def _note_state_struct(self, mi: int, state):
+        struct = jax.tree.map(lambda x: jax.ShapeDtypeStruct(jnp.shape(x), jnp.result_type(x)), state)
+        flat, treedef = jax.tree.flatten(struct)
+        key = (treedef, tuple((s.shape, s.dtype) for s in flat))
+        known = self._state_structs[mi]
+        if key not in [k for k, _ in known]:
+            known.append((key, struct))
+
     def _admit(self, mi: int) -> list[Flight]:
-        """Admit queued frames for model ``mi`` into stage 0; returns the
-        flights that already finished their route (single-segment models)."""
+        """Admit queued frames for model ``mi`` into stage 0 of the
+        *current* plan; returns the flights that already finished their
+        route (single-segment models)."""
         model = self.models[mi]
         stream_idxs = self._streams_of[mi]
         if not stream_idxs:
@@ -277,18 +439,24 @@ class StreamExecutor:
             size = int(frame.shape[0]) if hasattr(frame, "shape") and frame.shape else 1
             members.append(FlightMember(si, fid, size, t_sub, self.tick_count))
             states.append(model.init_state(frame))
+        route = self.plan.route(mi)
+        rev = self.plan.revision
         if self.merge_batches[mi] and len(states) > 1:
             merged = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *states)
-            flights = [Flight(model_index=mi, members=members, state=merged, stage=0)]
+            flights = [
+                Flight(model_index=mi, members=members, state=merged, stage=0, route=route, revision=rev)
+            ]
         else:
             flights = [
-                Flight(model_index=mi, members=[m], state=s, stage=0)
+                Flight(model_index=mi, members=[m], state=s, stage=0, route=route, revision=rev)
                 for m, s in zip(members, states)
             ]
+        for flight in flights:
+            self._note_state_struct(mi, flight.state)
         done = []
         for flight in flights:
             self._run_segment(flight)
-            if flight.stage == len(self.routes[mi].segments):
+            if flight.stage == len(flight.route):
                 done.append(flight)
             else:
                 self.in_flight.append(flight)
@@ -302,18 +470,35 @@ class StreamExecutor:
         t_start = time.perf_counter()
         self._blocked_s = 0.0
         self._segments_issued = 0
+        self._profiling_tick = self.profile_every > 0 and self.tick_count % self.profile_every == 0
+        if self._profiling_tick and self.in_flight:
+            # drain the async dispatch queue before timing anything: without
+            # this barrier the first profiled segment absorbs the previous
+            # tick's in-flight work and its wall time is attributed to the
+            # wrong (model, engine, span) — poisoning the cost calibration
+            for f in self.in_flight:
+                self._block(f.state)
         done: list[Flight] = []
-        for stage in range(self._max_stages - 1, 0, -1):
+        # deepest stage first; route lengths may differ across plan
+        # revisions, so the depth bound comes from the live flights
+        max_stages = max((len(f.route) for f in self.in_flight), default=1)
+        for stage in range(max_stages - 1, 0, -1):
             for mi in range(len(self.models)):
                 for flight in [
                     f for f in self.in_flight if f.model_index == mi and f.stage == stage
                 ]:
                     self._run_segment(flight)
-                    if flight.stage == len(self.routes[mi].segments):
+                    if flight.stage == len(flight.route):
                         done.append(flight)
                         self.in_flight.remove(flight)
         for mi in range(len(self.models)):
             done.extend(self._admit(mi))
+        if self._tick_delay:
+            # pay the slowest engine's accrued stall once per tick, before
+            # resolving: concurrent engines' stalls overlap each other and
+            # the still-async dispatched compute
+            time.sleep(max(self._tick_delay.values()))
+            self._tick_delay.clear()
         for flight in done:
             self._complete(flight)
         self.tick_stats.append(
@@ -325,6 +510,10 @@ class StreamExecutor:
             )
         )
         self.tick_count += 1
+        if self.on_tick is not None:
+            # frame boundary: the replanner's chance to observe drift and
+            # hot-swap before the next admission
+            self.on_tick(self)
 
     def run_until_drained(self, max_ticks: int = 100000):
         while self.pending:

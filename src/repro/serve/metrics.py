@@ -50,6 +50,27 @@ def overlap_summary(ticks: list[TickStats]) -> dict:
     }
 
 
+def segment_summary(observations) -> dict:
+    """Aggregate profiled per-segment wall times by (model, engine, span).
+
+    The executor's profiled ticks produce ``SegmentObservation``s; this is
+    the report-side rollup — mean/p50 wall per distinct segment binding,
+    so a serving report shows where each plan revision actually spent its
+    time (the same numbers the replanner's EMA consumes).
+    """
+    by_seg: dict[tuple, list[float]] = {}
+    for o in observations:
+        by_seg.setdefault((o.model_index, o.engine, o.lo, o.hi), []).append(o.wall_s)
+    return {
+        f"m{mi}@E{eng}[{lo}:{hi})": {
+            "samples": len(ws),
+            "wall_mean_ms": sum(ws) / len(ws) * 1e3,
+            "wall_p50_ms": percentile(ws, 50) * 1e3,
+        }
+        for (mi, eng, lo, hi), ws in sorted(by_seg.items())
+    }
+
+
 def percentile(samples: list[float], pct: float) -> float:
     """Nearest-rank percentile; pct in [0, 100]."""
     if not samples:

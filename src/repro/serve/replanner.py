@@ -1,0 +1,314 @@
+"""Online re-planning control loop: drift detection + live plan hot-swap.
+
+The paper's engine allocation is only optimal while the per-layer costs
+it was planned against still hold; on real edge deployments they drift
+with batch size, thermal state, and co-located load. The ``Replanner``
+closes the loop:
+
+  1. **observe** — the executor's profiled ticks emit per-segment wall
+     times (``SegmentObservation``). Observations accumulate per (tick,
+     engine) and fold into an ``OnlineCost`` EMA as one magnitude-weighted
+     (engine -> sum observed / sum expected) ratio per profiled tick —
+     big segments dominate, so host-overhead noise on near-empty spans
+     cannot swing the scale. *Expected* is re-derived from the graphs
+     under the base provider — a fixed base-units -> wall-clock
+     calibration that survives plan swaps regardless of which provider
+     scored the active plan.
+  2. **detect** — after calibration (every engine seen ``warmup_obs``
+     times), per-engine drift is the relative change of its scale vs the
+     calibration snapshot. The detector requires ``hysteresis``
+     consecutive ticks above ``drift_threshold`` (noise stays quiet) and
+     ``cooldown_ticks`` between swaps (no thrashing).
+  3. **re-plan** — the beam-search planner re-runs on the live-calibrated
+     costs. The refreshed costs also re-score the *current* partitions
+     (``fixed=`` evaluation), and the swap only happens if the new plan's
+     predicted cycle beats that by ``min_improvement``.
+  4. **swap** — ``executor.prepare_plan`` warms the new segment
+     executables on zero states (off the hot path), then
+     ``executor.swap_plan`` installs the plan at the frame boundary:
+     in-flight frames finish on their admitted routes, zero drops.
+
+``background=True`` runs step 3 in a worker thread on a snapshot of the
+scales — the hot loop only pays for the swap itself; the default is
+synchronous for deterministic tests. Attach to any ``StreamExecutor``
+via ``attach`` (sets ``profile_every``, ``on_segment``, ``on_tick``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Sequence
+
+from ..core.cost_model import ANALYTIC, CostProvider, OnlineCost
+from ..core.scheduler import nmodel_schedule
+from .executor import SegmentObservation, StreamExecutor
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplanConfig:
+    """Knobs of the drift detector + re-plan loop (see module docstring)."""
+
+    drift_threshold: float = 0.6  # relative scale change that counts as drift
+    hysteresis: int = 3  # consecutive drifting ticks required to fire
+    cooldown_ticks: int = 10  # min ticks between plan swaps
+    min_improvement: float = 0.05  # predicted cycle gain required to swap
+    ema_alpha: float = 0.25  # OnlineCost EMA coefficient
+    warmup_obs: int = 8  # per-engine folded ticks before auto-calibration
+    profile_every: int = 2  # executor segment-profiling cadence (ticks)
+    search: str = "auto"  # planner search mode for re-plans
+    beam_width: int = 64
+    background: bool = False  # plan in a worker thread (off the hot path)
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplanEvent:
+    tick: int
+    drift: dict[str, float]
+    old_partitions: tuple[int, ...]
+    new_partitions: tuple[int, ...]
+    old_cycle: float  # current partitions re-scored under live costs
+    new_cycle: float  # candidate plan under live costs
+    swapped: bool
+    revision: int  # executor plan revision after the event
+
+
+class Replanner:
+    """Watches one executor's live segment costs and hot-swaps its plan."""
+
+    def __init__(
+        self,
+        graphs: Sequence,
+        engines: Sequence,
+        config: ReplanConfig | None = None,
+        base_provider: CostProvider | None = None,
+        allow_fallback: bool = True,
+    ):
+        self.graphs = list(graphs)
+        self.engines = list(engines)
+        self.config = config or ReplanConfig()
+        if isinstance(base_provider, OnlineCost):
+            # reuse the caller's OnlineCost (e.g. --cost online planned the
+            # initial routes with it) instead of double-wrapping: the same
+            # instance then receives the live observations, so later
+            # planning calls through the caller's handle see the scales
+            self.online = base_provider
+            self.online.alpha = self.config.ema_alpha
+        else:
+            self.online = OnlineCost(base_provider or ANALYTIC, alpha=self.config.ema_alpha)
+        self.allow_fallback = allow_fallback
+        self.events: list[ReplanEvent] = []
+        self._baseline: dict[str, float] = {}  # calibration snapshot of scales
+        self._obs_count: dict[str, int] = {}
+        self._tick_acc: dict[str, list[float]] = {}  # engine -> [wall, expected]
+        self._above = 0  # consecutive drifting ticks (hysteresis counter)
+        self._last_swap_tick: int | None = None
+        self._expected_cache: dict[tuple[int, int, int, int], float] = {}
+        self._job: threading.Thread | None = None
+        self._job_result: list = []
+
+    # -- wiring -------------------------------------------------------------
+
+    def attach(self, executor: StreamExecutor) -> StreamExecutor:
+        """Wire the feedback loop into an executor (observer + tick hook)."""
+        if executor.plan.n_engines != len(self.engines):
+            raise ValueError(
+                f"replanner has {len(self.engines)} engines but plan uses {executor.plan.n_engines}"
+            )
+        executor.profile_every = max(1, self.config.profile_every)
+        executor.on_segment = self.observe
+        executor.on_tick = self.maybe_replan
+        return executor
+
+    # -- observation --------------------------------------------------------
+
+    def _expected_base(self, model_index: int, engine: int, lo: int, hi: int) -> float:
+        """Base-provider cost of graph[lo:hi) on the engine — the fixed
+        denominator of the wall-clock calibration (never a scaled plan's
+        expected_cost, which would drift with each re-plan)."""
+        key = (model_index, engine, lo, hi)
+        t = self._expected_cache.get(key)
+        if t is None:
+            g = self.graphs[model_index]
+            e = self.engines[engine]
+            t = sum(self.online.base.layer_time(g[i], e) for i in range(lo, hi))
+            self._expected_cache[key] = t
+        return t
+
+    def observe(self, obs: SegmentObservation):
+        """Accumulate one profiled segment into the current tick's
+        per-engine (wall, expected) sums; ``_fold_tick`` turns each sum
+        pair into one magnitude-weighted EMA sample at the frame boundary
+        (per-segment ratios on near-empty spans are all host overhead —
+        summing first keeps them from swinging the scale)."""
+        expected = self._expected_base(obs.model_index, obs.engine, obs.lo, obs.hi)
+        # merged flights run the span once for the whole group; normalize
+        # to a per-frame observation so microbatching doesn't read as drift
+        wall = obs.wall_s / max(obs.batch, 1)
+        name = self.engines[obs.engine].name
+        acc = self._tick_acc.setdefault(name, [0.0, 0.0])
+        acc[0] += wall
+        acc[1] += expected
+
+    def _fold_tick(self):
+        for name, (wall, expected) in self._tick_acc.items():
+            self.online.observe(name, wall, expected)
+            self._obs_count[name] = self._obs_count.get(name, 0) + 1
+        self._tick_acc.clear()
+
+    # -- drift detection ----------------------------------------------------
+
+    @property
+    def calibrated(self) -> bool:
+        return bool(self._baseline)
+
+    def _try_calibrate(self):
+        names = [e.name for e in self.engines]
+        if all(self._obs_count.get(n, 0) >= self.config.warmup_obs for n in names):
+            self._baseline = self.online.snapshot()
+
+    def drift(self) -> dict[str, float]:
+        """Per-engine relative scale change vs the calibration snapshot."""
+        if not self._baseline:
+            return {}
+        out = {}
+        for name, base in self._baseline.items():
+            cur = self.online.scale(name)
+            out[name] = abs(cur / base - 1.0) if base > 0 else 0.0
+        return out
+
+    def _rebaseline(self):
+        self._baseline = self.online.snapshot()
+        self._above = 0
+
+    def calibrate(self):
+        """Snapshot the current scales as the drift baseline now — callers
+        that control warmup (benches) use this right after it, once
+        compile-time walls have washed out of the EMA, instead of waiting
+        for ``warmup_obs`` folded ticks."""
+        self._fold_tick()
+        self._rebaseline()
+
+    # -- the control loop ---------------------------------------------------
+
+    def _plan(self, online: OnlineCost):
+        return nmodel_schedule(
+            self.graphs,
+            self.engines,
+            allow_fallback=self.allow_fallback,
+            provider=online,
+            search=self.config.search,
+            beam_width=self.config.beam_width,
+        )
+
+    def _score_fixed(self, partitions, online: OnlineCost) -> float:
+        return nmodel_schedule(
+            self.graphs,
+            self.engines,
+            allow_fallback=self.allow_fallback,
+            fixed=tuple(partitions),
+            provider=online,
+        ).cycle_time
+
+    def _snapshot_online(self) -> OnlineCost:
+        snap = OnlineCost(self.online.base, alpha=self.online.alpha)
+        snap._num = dict(self.online._num)
+        snap._den = dict(self.online._den)
+        return snap
+
+    def maybe_replan(self, executor: StreamExecutor) -> ReplanEvent | None:
+        """Called at every frame boundary (executor ``on_tick``)."""
+        cfg = self.config
+        self._fold_tick()
+        if not self._baseline:
+            self._try_calibrate()
+            return None
+        # harvest a finished background planning job first
+        if self._job is not None:
+            if self._job.is_alive():
+                return None
+            self._job = None
+            if self._job_result:
+                return self._finish(executor, *self._job_result.pop())
+            return None
+        d = self.drift()
+        if d and max(d.values()) > cfg.drift_threshold:
+            self._above += 1
+        else:
+            self._above = 0
+            return None
+        if self._above < cfg.hysteresis:
+            return None
+        tick = executor.tick_count
+        if self._last_swap_tick is not None and tick - self._last_swap_tick < cfg.cooldown_ticks:
+            return None
+        if cfg.background:
+            online = self._snapshot_online()
+            cur = list(executor.plan.partitions)
+
+            def job():
+                plan = self._plan(online)
+                old_cycle = self._score_fixed(cur, online)
+                self._job_result.append((plan, old_cycle, dict(d)))
+
+            self._job = threading.Thread(target=job, daemon=True)
+            self._job.start()
+            return None
+        online = self._snapshot_online()
+        plan = self._plan(online)
+        old_cycle = self._score_fixed(executor.plan.partitions, online)
+        return self._finish(executor, plan, old_cycle, dict(d))
+
+    def _finish(self, executor: StreamExecutor, plan, old_cycle: float, drift) -> ReplanEvent:
+        cfg = self.config
+        old_partitions = tuple(executor.plan.partitions)
+        improves = plan.cycle_time < old_cycle * (1.0 - cfg.min_improvement)
+        changes = tuple(plan.ir.partitions) != old_partitions
+        swapped = improves and changes
+        if swapped:
+            executor.prepare_plan(plan.ir)
+            executor.swap_plan(plan.ir)
+            self._last_swap_tick = executor.tick_count
+            self._rebaseline()
+        else:
+            # plan already as good as it gets under the drifted costs: stop
+            # re-firing on the same signal until it changes again
+            self._rebaseline()
+            self._last_swap_tick = executor.tick_count
+        ev = ReplanEvent(
+            tick=executor.tick_count,
+            drift=drift,
+            old_partitions=old_partitions,
+            new_partitions=tuple(plan.ir.partitions),
+            old_cycle=old_cycle,
+            new_cycle=plan.cycle_time,
+            swapped=swapped,
+            revision=executor.plan.revision,
+        )
+        self.events.append(ev)
+        return ev
+
+    # -- reporting ----------------------------------------------------------
+
+    def summary(self) -> dict:
+        return {
+            "calibrated": self.calibrated,
+            "observations": self.online.observations,
+            "scales": self.online.snapshot(),
+            "baseline": dict(self._baseline),
+            "drift": self.drift(),
+            "replans": len(self.events),
+            "swaps": sum(e.swapped for e in self.events),
+            "events": [
+                {
+                    "tick": e.tick,
+                    "drift": {k: round(v, 4) for k, v in e.drift.items()},
+                    "old_partitions": list(e.old_partitions),
+                    "new_partitions": list(e.new_partitions),
+                    "old_cycle": e.old_cycle,
+                    "new_cycle": e.new_cycle,
+                    "swapped": e.swapped,
+                    "revision": e.revision,
+                }
+                for e in self.events
+            ],
+        }

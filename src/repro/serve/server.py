@@ -8,6 +8,11 @@ when queues back up, and folds completions into per-stream latency /
 throughput metrics. This is the CPU-container stand-in for the paper's
 DeepStream app: the same code drives TPU submeshes when the staged
 models' ``place_fns`` put segments on real device subsets.
+
+Pass a ``serve.Replanner`` to close the online re-planning loop: the
+server wires it into the executor (profiled ticks feed the ``OnlineCost``
+EMA, the drift detector hot-swaps plans at frame boundaries) and folds
+its state — per-engine scales, drift, swap events — into ``report()``.
 """
 from __future__ import annotations
 
@@ -17,9 +22,11 @@ from collections import deque
 from typing import Any
 
 from ..core.pipeline import StagedModel
+from ..core.plan_ir import PlanIR
 from ..core.scheduler import NModelPlan
 from .executor import StreamExecutor
-from .metrics import ServeMetrics
+from .metrics import ServeMetrics, segment_summary
+from .replanner import Replanner
 from .streams import StreamSpec
 
 
@@ -33,14 +40,15 @@ class MultiStreamServer:
     def __init__(
         self,
         models: list[StagedModel],
-        plan: NModelPlan,
+        plan: PlanIR | NModelPlan | list,
         streams: list[StreamSpec],
         max_queue: int = 4,
         microbatch: int = 1,
         merge_batches: bool | list[bool] = False,
         place_fns=None,
         dispatch: str = "overlapped",
-        jit_segments: bool = False,
+        jit_segments: bool = True,
+        replanner: Replanner | None = None,
     ):
         self.executor = StreamExecutor(
             models,
@@ -53,6 +61,9 @@ class MultiStreamServer:
             dispatch=dispatch,
             jit_segments=jit_segments,
         )
+        self.replanner = replanner
+        if replanner is not None:
+            replanner.attach(self.executor)
         self.metrics = ServeMetrics([s.name for s in streams])
         self._backlog: deque[Request] = deque()
         self._recorded = 0
@@ -113,4 +124,8 @@ class MultiStreamServer:
         wall = (time.perf_counter() - self._t0) if self._t0 is not None else 0.0
         rep = self.metrics.report(wall)
         rep["dispatch"] = self.executor.dispatch
+        rep["plan_revision"] = self.executor.plan_revision
+        if self.replanner is not None:
+            rep["replan"] = self.replanner.summary()
+            rep["segments"] = segment_summary(self.executor.segment_obs)
         return rep

@@ -1,0 +1,421 @@
+"""The online re-planning runtime: plan IR, live cost feedback, hot-swap.
+
+Pins the new spine contracts: (a) every scheduler emits a valid typed
+``PlanIR`` and the executor consumes only the IR, (b) a mid-stream plan
+hot-swap preserves frame ordering and output equality vs an unswapped
+run with zero dropped frames (in-flight frames finish on their admitted
+routes), (c) ``OnlineCost`` is a magnitude-weighted calibration that
+noise on near-empty spans cannot swing, and (d) the drift detector fires
+under a sustained injected cost perturbation and stays quiet (hysteresis)
+under transient noise."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+from repro.core.constraints import DLA_ANALOGUE_CONSTRAINTS
+from repro.core.cost_model import ANALYTIC, OnlineCost
+from repro.core.engine import EngineSpec, jetson_orin_engines
+from repro.core.graph import LayerGraph, pointwise_meta
+from repro.core.pipeline import StagedModel
+from repro.core.plan_ir import PlanIR, PlanSegment, ir_from_routes, make_plan_ir
+from repro.core.scheduler import ModelRoute, nmodel_schedule
+from repro.models import Pix2PixConfig, Pix2PixGenerator, YOLOv8, YOLOv8Config
+from repro.serve import ReplanConfig, Replanner, StreamExecutor, StreamSpec
+from repro.serve.executor import SegmentObservation
+
+
+@pytest.fixture(scope="module")
+def engines():
+    gpu, dla = jetson_orin_engines(constraints_dla=DLA_ANALOGUE_CONSTRAINTS)
+    return gpu, dla
+
+
+@pytest.fixture(scope="module")
+def staged_pair():
+    cfg = Pix2PixConfig(img_size=32, base=8, deconv_mode="cropping")
+    gen = Pix2PixGenerator(cfg)
+    sm_pix = core.pix2pix_staged(cfg, {"generator": gen.init(jax.random.key(0))})
+    ycfg = YOLOv8Config(img_size=32)
+    ym = YOLOv8(ycfg)
+    sm_yolo = core.yolo_staged(ycfg, ym.init(jax.random.key(1)))
+    return sm_pix, sm_yolo
+
+
+def _toy_staged(n_layers=6, name="toy", flops=1e9):
+    ops = [(f"mul{i}", lambda p, s: {"x": s["x"] * 1.5 + 0.5}) for i in range(n_layers)]
+    graph = LayerGraph(
+        name,
+        [pointwise_meta(i, f"mul{i}", "act", (1, 64), flops_per_elem=flops / 64) for i in range(n_layers)],
+    ).renumber()
+    return StagedModel(
+        name=name,
+        ops=ops,
+        params=None,
+        graph=graph,
+        init_state=lambda x: {"x": x},
+        finalize=lambda s: s["x"],
+    )
+
+
+def _toy_engines():
+    e0 = EngineSpec("E0", 1, 1.0e12, 500e9, 50e9, ())
+    e1 = EngineSpec("E1", 1, 1.0e12, 500e9, 50e9, ())
+    return [e0, e1]
+
+
+# ---- PlanIR ----------------------------------------------------------------
+
+
+def test_plan_ir_validation_rejects_malformed():
+    ok = make_plan_ir(("m",), ("E0", "E1"), [[(0, 0, 3), (1, 3, 6)]])
+    assert ok.partitions == [3] and ok.n_layers == (6,)
+    with pytest.raises(ValueError):  # gap
+        make_plan_ir(("m",), ("E0",), [[(0, 0, 3), (0, 4, 6)]])
+    with pytest.raises(ValueError):  # does not start at 0
+        make_plan_ir(("m",), ("E0",), [[(0, 1, 6)]])
+    with pytest.raises(ValueError):  # empty span
+        make_plan_ir(("m",), ("E0",), [[(0, 0, 0)]])
+    with pytest.raises(ValueError):  # unknown engine
+        make_plan_ir(("m",), ("E0",), [[(3, 0, 6)]])
+    with pytest.raises(ValueError):  # routes != models
+        PlanIR(models=("a", "b"), engine_names=("E0",), segments=((PlanSegment(0, 0, 0, 0, 6),),))
+    with pytest.raises(ValueError):  # coverage mismatch vs the staged model
+        ok.validate_against([7])
+    ok.validate_against([6])
+
+
+def test_plan_ir_json_roundtrip_and_revision():
+    ir = make_plan_ir(
+        ("a", "b"),
+        ("DLA", "GPU"),
+        [[(0, 0, 2, 1e-3), (1, 2, 5, 2e-3)], [(1, 0, 3, 0.5e-3), (0, 3, 4, 0.1e-3)]],
+        expected_cycle=3e-3,
+        cost_provider="analytic",
+        search="beam",
+        kind="nmodel",
+    )
+    back = PlanIR.from_json(ir.to_json())
+    assert back == ir
+    assert ir.with_revision(3).revision == 3
+    assert ir.partitions == [2, 3]
+    assert [s.lo for s in ir.engine_spans(0)] == [0, 3]
+    assert "DLA" in ir.describe()
+
+
+def test_ir_from_routes_legacy_adapter():
+    routes = [ModelRoute("toy", 2, [(0, 0, 2), (1, 2, 6)])]
+    ir = ir_from_routes(routes, engine_names=["con", "flex"])
+    assert ir.models == ("toy",)
+    assert ir.engine_names == ("con", "flex")
+    assert ir.partitions == [2]
+
+
+def test_every_scheduler_emits_ir(engines):
+    gpu, dla = engines
+    g = Pix2PixGenerator(Pix2PixConfig(deconv_mode="cropping")).layer_graph()
+    y = YOLOv8(YOLOv8Config(img_size=256)).layer_graph()
+    plan = nmodel_schedule([g, y], [dla, gpu])
+    assert plan.ir.kind == "nmodel" and plan.ir.partitions == plan.partitions
+    assert plan.ir.expected_cycle == plan.cycle_time
+    assert plan.ir.engine_names == ("DLA", "GPU")
+    hx = core.haxconn_schedule(g, y, dla, gpu)
+    assert hx.ir.kind == "haxconn" and hx.ir.partitions == [hx.p_a, hx.p_b]
+    alone = core.standalone_schedule(g, dla, gpu)
+    assert alone.ir.kind == "standalone" and alone.ir.n_layers == (len(g),)
+    naive = core.naive_schedule(g, y, dla, gpu)
+    assert naive.ir.kind == "naive" and naive.ir.n_layers == (len(g), len(y))
+    for ir in (plan.ir, hx.ir, alone.ir, naive.ir):
+        ir.validate_against(list(ir.n_layers))
+
+
+def test_executor_consumes_ir_directly():
+    sm = _toy_staged()
+    ir = make_plan_ir((sm.name,), ("E0", "E1"), [[(0, 0, 3), (1, 3, 6)]])
+    ex = StreamExecutor([sm], ir, [StreamSpec("s0", 0)], max_queue=4)
+    assert ex.plan is ir and ex.plan_revision == 0
+    assert ex.submit(0, jnp.ones((1, 64)))
+    outs = ex.run_until_drained()
+    np.testing.assert_array_equal(np.asarray(outs["s0"][0]), np.asarray(sm.run_all(jnp.ones((1, 64)))))
+
+
+# ---- hot swap --------------------------------------------------------------
+
+
+def test_hot_swap_mid_stream_preserves_order_and_outputs():
+    """Swap while frames are in flight: zero drops, per-stream FIFO order,
+    outputs bit-exact vs an unswapped run (eager segments), and in-flight
+    frames finish on the route they were admitted under."""
+    sm = _toy_staged()
+    ir_a = make_plan_ir((sm.name,), ("E0", "E1"), [[(0, 0, 3), (1, 3, 6)]])
+    ir_b = make_plan_ir((sm.name,), ("E0", "E1"), [[(0, 0, 1), (1, 1, 6)]])
+    streams = [StreamSpec("s0", 0), StreamSpec("s1", 0)]
+    frames = {s.name: [jnp.full((1, 64), float(3 * i + t)) for t in range(4)] for i, s in enumerate(streams)}
+
+    def run(swap_at=None):
+        ex = StreamExecutor([sm], ir_a, streams, max_queue=8, jit_segments=False)
+        for t in range(4):
+            for i, s in enumerate(streams):
+                assert ex.submit(i, frames[s.name][t])
+        ticks = 0
+        while ex.pending:
+            if swap_at is not None and ticks == swap_at:
+                assert ex.in_flight, "swap must happen with frames in flight"
+                ex.swap_plan(ir_b)
+            ex.tick()
+            ticks += 1
+        return ex
+
+    ex_plain = run()
+    ex_swap = run(swap_at=2)
+    assert ex_swap.plan_revision == 1
+    assert [e.revision for e in ex_swap.swap_events] == [1]
+    # zero drops + identical outputs in identical per-stream order
+    for s in streams:
+        assert len(ex_swap.outputs[s.name]) == len(frames[s.name])
+        for a, b in zip(ex_plain.outputs[s.name], ex_swap.outputs[s.name]):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for s in streams:
+        fids = [c.frame_id for c in ex_swap.completions if c.stream == s.name]
+        assert fids == sorted(fids)
+    # in-flight frames at the swap finished on the old [0:3)/[3:6) spans;
+    # post-swap admissions took the new [0:1)/[1:6) spans
+    spans = [e.work.split("[")[1].split(")")[0] for e in ex_swap.log if "[" in e.work]
+    assert any(sp == "3:6" for sp in spans) and any(sp == "1:6" for sp in spans)
+
+
+def test_hot_swap_pix_models_tolerance(staged_pair, engines):
+    """Same mid-stream swap on the real serving pair under the default
+    jitted path: outputs within the fusion tolerance of the unswapped run."""
+    sm_pix, sm_yolo = staged_pair
+    gpu, dla = engines
+    plan = nmodel_schedule([sm_pix.graph, sm_yolo.graph], [dla, gpu])
+    p0, p1 = plan.partitions
+    alt = nmodel_schedule(
+        [sm_pix.graph, sm_yolo.graph], [dla, gpu], fixed=(max(1, p0 + 10), max(1, p1 // 2))
+    )
+    streams = [StreamSpec("mri-0", 0), StreamSpec("det-0", 1)]
+    frames = {
+        s.name: [jax.random.normal(jax.random.key(41 * i + t), (1, 32, 32, 3)) for t in range(3)]
+        for i, s in enumerate(streams)
+    }
+
+    def run(swap):
+        ex = StreamExecutor([sm_pix, sm_yolo], plan, streams, max_queue=8)
+        for t in range(3):
+            for i, s in enumerate(streams):
+                assert ex.submit(i, frames[s.name][t])
+        ex.tick()
+        if swap:
+            warmed = ex.prepare_plan(alt.ir)
+            assert warmed > 0  # stage-0 shapes were seen, so warmup ran
+            ex.swap_plan(alt.ir)
+        ex.run_until_drained()
+        return ex
+
+    ex_plain, ex_swap = run(False), run(True)
+    assert ex_swap.plan.partitions == alt.partitions
+    for s in streams:
+        for a, b in zip(ex_plain.outputs[s.name], ex_swap.outputs[s.name]):
+            for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+                np.testing.assert_allclose(np.asarray(la), np.asarray(lb), atol=2e-3, rtol=1e-2)
+
+
+def test_swap_plan_rejects_mismatched_models():
+    sm = _toy_staged()
+    ir = make_plan_ir((sm.name,), ("E0", "E1"), [[(0, 0, 3), (1, 3, 6)]])
+    ex = StreamExecutor([sm], ir, [StreamSpec("s0", 0)])
+    with pytest.raises(ValueError):
+        ex.swap_plan(make_plan_ir(("other",), ("E0", "E1"), [[(0, 0, 6)]]))
+    with pytest.raises(ValueError):  # wrong layer coverage
+        ex.swap_plan(make_plan_ir((sm.name,), ("E0", "E1"), [[(0, 0, 5)]]))
+    assert ex.prepare_plan(ir) == 0  # no frame seen yet -> nothing to warm
+
+
+# ---- per-segment observation ----------------------------------------------
+
+
+def test_profiled_ticks_emit_segment_observations():
+    sm = _toy_staged()
+    ir = make_plan_ir((sm.name,), ("E0", "E1"), [[(0, 0, 3), (1, 3, 6)]])
+    ex = StreamExecutor([sm], ir, [StreamSpec("s0", 0)], profile_every=1)
+    seen = []
+    ex.on_segment = seen.append
+    for t in range(3):
+        ex.submit(0, jnp.ones((1, 64)) * t)
+    ex.run_until_drained()
+    assert ex.segment_obs and seen == ex.segment_obs
+    for o in ex.segment_obs:
+        assert o.wall_s > 0 and (o.lo, o.hi) in ((0, 3), (3, 6))
+        assert o.revision == 0 and o.batch == 1
+
+
+# ---- OnlineCost ------------------------------------------------------------
+
+
+def test_online_cost_weighted_calibration(engines):
+    gpu, _ = engines
+    oc = OnlineCost(ANALYTIC, alpha=0.5)
+    layer = pointwise_meta(0, "x", "act", (1, 1024), flops_per_elem=1e6)
+    base = ANALYTIC.layer_time(layer, gpu)
+    assert oc.scale("GPU") == 1.0 and oc.layer_time(layer, gpu) == base
+    for _ in range(20):
+        oc.observe("GPU", 2e-3, 1e-3)  # heavyweight samples: 2x
+    assert oc.scale("GPU") == pytest.approx(2.0)
+    # near-empty spans with absurd per-sample ratios (pure host overhead)
+    # interleaved with the heavyweight samples barely move the weighted
+    # scale — a ratio-of-EMAs would have exploded toward 1e6
+    for _ in range(10):
+        oc.observe("GPU", 1e-4, 1e-9)  # ratio 1e5 but negligible magnitude
+        oc.observe("GPU", 2e-3, 1e-3)
+    assert oc.scale("GPU") == pytest.approx(2.0, rel=0.2)
+    assert oc.layer_time(layer, gpu) == pytest.approx(base * oc.scale("GPU"))
+    assert oc.available(layer) == ANALYTIC.available(layer)
+    with pytest.raises(ValueError):
+        oc.save()  # analytic base has no timing cache
+    with pytest.raises(ValueError):
+        OnlineCost(alpha=0.0)
+
+
+def test_make_cost_provider_online():
+    from repro.core.cost_model import make_cost_provider
+
+    oc = make_cost_provider("online")
+    assert oc.name == "online" and oc.base.name == "blended"
+
+
+# ---- drift detector + replan loop ------------------------------------------
+
+
+def _toy_serving(delay=None, config=None):
+    sm = _toy_staged(n_layers=8)
+    engines = _toy_engines()
+    plan = nmodel_schedule([sm.graph], engines)
+    rp = Replanner([sm.graph], engines, config or ReplanConfig())
+    ex = StreamExecutor([sm], plan, [StreamSpec("s0", 0)], max_queue=8, segment_delay_fn=delay)
+    return sm, engines, plan, rp, ex
+
+
+def _feed(rp, ex, walls):
+    """Feed one synthetic profiled tick ({engine_index: wall_s}) and step.
+    The single toy model's stage index equals its engine index."""
+    for eng, wall in walls.items():
+        seg = ex.plan.route(0)[eng]
+        rp.observe(
+            SegmentObservation(
+                tick=ex.tick_count, model_index=0, stage=seg.stage, engine=seg.engine,
+                lo=seg.lo, hi=seg.hi, wall_s=wall, batch=1, revision=ex.plan_revision,
+            )
+        )
+    return rp.maybe_replan(ex)
+
+
+def test_drift_detector_fires_under_sustained_skew():
+    cfg = ReplanConfig(drift_threshold=0.5, hysteresis=3, cooldown_ticks=2, warmup_obs=2, min_improvement=0.01)
+    sm, engines, plan, rp, ex = _toy_serving(config=cfg)
+    e0 = rp._expected_base(0, 0, *plan.ir.route(0)[0].span)
+    e1 = rp._expected_base(0, 1, *plan.ir.route(0)[1].span)
+    # calibration: both engines run at 100x their analytic speed estimate
+    for _ in range(4):
+        assert _feed(rp, ex, {0: 100 * e0, 1: 100 * e1}) is None
+    assert rp.calibrated
+    base_drift = max(rp.drift().values())
+    assert base_drift == pytest.approx(0.0, abs=1e-6)
+    # engine 0 suddenly runs 4x slower: fires after `hysteresis` ticks
+    events = []
+    for k in range(cfg.hysteresis + 1):
+        ev = _feed(rp, ex, {0: 400 * e0, 1: 100 * e1})
+        if ev:
+            events.append(ev)
+    assert len(events) == 1
+    ev = events[0]
+    assert ev.drift["E0"] > cfg.drift_threshold
+    assert ev.swapped  # moving work off E0 predicts a better cycle
+    assert ex.plan_revision == 1
+    assert ev.new_partitions != ev.old_partitions
+    # the new plan puts less work on the slowed engine
+    old_e0 = sum(s.hi - s.lo for s in plan.ir.engine_spans(0))
+    new_e0 = sum(s.hi - s.lo for s in ex.plan.engine_spans(0))
+    assert new_e0 < old_e0
+
+
+def test_drift_detector_quiet_under_transient_noise():
+    cfg = ReplanConfig(
+        drift_threshold=0.5, hysteresis=3, cooldown_ticks=2, warmup_obs=2, ema_alpha=0.5
+    )
+    sm, engines, plan, rp, ex = _toy_serving(config=cfg)
+    e0 = rp._expected_base(0, 0, *plan.ir.route(0)[0].span)
+    e1 = rp._expected_base(0, 1, *plan.ir.route(0)[1].span)
+    for _ in range(4):
+        _feed(rp, ex, {0: 100 * e0, 1: 100 * e1})
+    assert rp.calibrated
+    # transient spikes with quiet ticks in between: the EMA decays below
+    # the threshold before the hysteresis count fills, so it never fires
+    for _ in range(5):
+        assert _feed(rp, ex, {0: 400 * e0, 1: 100 * e1}) is None  # spike...
+        for _ in range(3):
+            assert _feed(rp, ex, {0: 100 * e0, 1: 100 * e1}) is None  # ...decay
+    assert rp.events == [] and ex.plan_revision == 0
+
+
+def test_replan_loop_end_to_end_recovers_partitions():
+    """Full loop with real executor ticks: a sustained injected slowdown on
+    one engine triggers a swap that shifts layers off it, with zero
+    dropped frames."""
+    sm = _toy_staged(n_layers=10, name="toy10")
+    engines_t = _toy_engines()
+    plan = nmodel_schedule([sm.graph], engines_t)
+    pert = {"on": False}
+
+    def delay(seg):
+        # engine 1 suddenly stalls ~1ms per carried layer
+        return 1e-3 * (seg.hi - seg.lo) if pert["on"] and seg.engine == 1 else 0.0
+
+    cfg = ReplanConfig(
+        drift_threshold=1.0, hysteresis=2, cooldown_ticks=4, profile_every=1,
+        ema_alpha=0.5, min_improvement=0.01,
+    )
+    rp = Replanner([sm.graph], engines_t, cfg)
+    ex = StreamExecutor([sm], plan, [StreamSpec("s0", 0)], max_queue=8, segment_delay_fn=delay)
+    rp.attach(ex)
+    submitted = 0
+
+    def window(n, seed):
+        nonlocal submitted
+        for t in range(n):
+            assert ex.submit(0, jnp.ones((1, 64)) * (seed + t))
+            ex.tick()
+            submitted += 1
+        ex.run_until_drained()
+
+    window(10, 0)
+    rp.calibrate()
+    window(6, 100)
+    pert["on"] = True
+    window(30, 200)
+    assert any(e.swapped for e in rp.events), rp.summary()
+    old_e1 = sum(s.hi - s.lo for s in plan.ir.engine_spans(1))
+    new_e1 = sum(s.hi - s.lo for s in ex.plan.engine_spans(1))
+    assert new_e1 < old_e1  # work moved off the stalled engine
+    assert len(ex.completions) == submitted  # zero drops
+    assert len(ex.outputs["s0"]) == submitted
+
+
+def test_replanner_summary_and_config_validation():
+    sm, engines, plan, rp, ex = _toy_serving()
+    rp.attach(ex)
+    s = rp.summary()
+    assert s["replans"] == 0 and s["swaps"] == 0 and not s["calibrated"]
+    with pytest.raises(ValueError):
+        Replanner([sm.graph], _toy_engines()[:1]).attach(ex)  # engine count mismatch
+
+
+def test_schedule_dataclass_still_serializable(engines):
+    gpu, dla = engines
+    g = Pix2PixGenerator(Pix2PixConfig(img_size=16, base=4, deconv_mode="cropping")).layer_graph()
+    plan = nmodel_schedule([g, g], [dla, gpu])
+    d = dataclasses.asdict(plan.schedule)
+    assert d["ir"]["models"] == (g.model_name, g.model_name)

@@ -3,7 +3,14 @@
 Pins the load-bearing invariants: (a) the N-model planner degenerates to
 the paper's two-model HaX-CoNN schedule exactly, (b) the tick-based
 executor is a pure re-orchestration — outputs bit-exact vs the monolithic
-models — and (c) bounded queues actually bound (backpressure)."""
+models on the eager path (``jit_segments=False``), within the fusion
+tolerance on the default jitted path — and (c) bounded queues actually
+bound (backpressure).
+
+``jit_segments=True`` is the executor default: XLA fusion of a segment
+may flip low-order bits vs the eager op sequence, so default-path output
+pins are *tolerance* pins (the observed drift ceiling on these 32x32
+models is sub-1e-3 absolute); the eager path keeps the bit-exact pins."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -103,12 +110,26 @@ def _assert_outputs_bit_exact(outs, frames, sm_pix, sm_yolo, streams):
                 np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+def _assert_outputs_close(outs, frames, sm_pix, sm_yolo, streams, atol=2e-3, rtol=1e-2):
+    """Tolerance pin for the default jitted path: fusion reassociates f32
+    reductions; sub-1e-3 abs drift is the observed ceiling on these
+    32x32 models."""
+    for s in streams:
+        sm = sm_pix if s.model_index == 0 else sm_yolo
+        assert len(outs[s.name]) == len(frames[s.name])
+        for f, o in zip(frames[s.name], outs[s.name]):
+            ref = sm.run_all(f)
+            for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(o)):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=atol, rtol=rtol)
+
+
 def test_executor_bit_exact_three_streams(staged_pair, engines):
     """3 concurrent streams through the planned routes produce outputs
-    bit-exact vs StagedModel.run_all, in per-stream submission order."""
+    bit-exact vs StagedModel.run_all, in per-stream submission order
+    (eager segment path — the pure-re-orchestration pin)."""
     sm_pix, sm_yolo = staged_pair
     plan, streams = _plan_and_streams(sm_pix, sm_yolo, engines)
-    ex = StreamExecutor([sm_pix, sm_yolo], plan, streams, max_queue=8)
+    ex = StreamExecutor([sm_pix, sm_yolo], plan, streams, max_queue=8, jit_segments=False)
     frames = {
         s.name: [jax.random.normal(jax.random.key(10 * i + t), (1, 32, 32, 3)) for t in range(3)]
         for i, s in enumerate(streams)
@@ -131,7 +152,9 @@ def test_executor_microbatch_admits_groups_and_stays_exact(staged_pair, engines)
     switch per group) without changing any frame's math."""
     sm_pix, sm_yolo = staged_pair
     plan, streams = _plan_and_streams(sm_pix, sm_yolo, engines)
-    ex = StreamExecutor([sm_pix, sm_yolo], plan, streams, max_queue=8, microbatch=2)
+    ex = StreamExecutor(
+        [sm_pix, sm_yolo], plan, streams, max_queue=8, microbatch=2, jit_segments=False
+    )
     frames = {
         s.name: [jax.random.normal(jax.random.key(7 * i + t), (1, 32, 32, 3)) for t in range(2)]
         for i, s in enumerate(streams)
@@ -219,7 +242,9 @@ def _run_executor(sm_pix, sm_yolo, plan, streams, frames, **kw):
 
 def test_overlapped_matches_serialized_bit_exact(staged_pair, engines):
     """Overlapped dispatch is a pure re-orchestration: outputs identical to
-    the per-segment-synchronized path on the 2-model pipeline."""
+    the per-segment-synchronized path (both default to the same jitted
+    segment executables, so the comparison stays bit-exact); vs the eager
+    monolithic models the default path holds the fusion tolerance pin."""
     sm_pix, sm_yolo = staged_pair
     plan, streams = _plan_and_streams(sm_pix, sm_yolo, engines)
     frames = {
@@ -232,12 +257,29 @@ def test_overlapped_matches_serialized_bit_exact(staged_pair, engines):
         for a, b in zip(outs_ser[s.name], outs_ovl[s.name]):
             for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
                 np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
-    # and both stay bit-exact vs the monolithic models
-    _assert_outputs_bit_exact(outs_ovl, frames, sm_pix, sm_yolo, streams)
+    # vs the monolithic eager models: tolerance pin (jit default)
+    _assert_outputs_close(outs_ovl, frames, sm_pix, sm_yolo, streams)
     # per-tick overlap stats were recorded and are sane
     assert len(ex_ovl.tick_stats) == ex_ovl.tick_count
     assert all(t.wall_s >= t.blocked_s >= 0 for t in ex_ovl.tick_stats)
     assert 0.0 <= ex_ovl.overlap_efficiency() <= 1.0
+
+
+def test_jit_segments_default_and_eager_modes_agree(staged_pair, engines):
+    """jit_segments defaults to True; the eager opt-out stays bit-exact vs
+    run_all and the two paths agree within the fusion tolerance."""
+    sm_pix, sm_yolo = staged_pair
+    plan, streams = _plan_and_streams(sm_pix, sm_yolo, engines)
+    ex = StreamExecutor([sm_pix, sm_yolo], plan, streams)
+    assert ex.jit_segments is True
+    frames = {
+        s.name: [jax.random.normal(jax.random.key(31 * i + t), (1, 32, 32, 3)) for t in range(2)]
+        for i, s in enumerate(streams)
+    }
+    _, outs_eager = _run_executor(sm_pix, sm_yolo, plan, streams, frames, jit_segments=False)
+    _assert_outputs_bit_exact(outs_eager, frames, sm_pix, sm_yolo, streams)
+    _, outs_jit = _run_executor(sm_pix, sm_yolo, plan, streams, frames)
+    _assert_outputs_close(outs_jit, frames, sm_pix, sm_yolo, streams)
 
 
 def test_executor_rejects_unknown_dispatch(staged_pair, engines):
@@ -256,7 +298,7 @@ def test_jit_segments_outputs_close(staged_pair, engines):
         s.name: [jax.random.normal(jax.random.key(29 * i + t), (1, 32, 32, 3)) for t in range(2)]
         for i, s in enumerate(streams)
     }
-    _, outs_eager = _run_executor(sm_pix, sm_yolo, plan, streams, frames)
+    _, outs_eager = _run_executor(sm_pix, sm_yolo, plan, streams, frames, jit_segments=False)
     _, outs_jit = _run_executor(sm_pix, sm_yolo, plan, streams, frames, jit_segments=True)
     for s in streams:
         for a, b in zip(outs_eager[s.name], outs_jit[s.name]):
@@ -298,11 +340,12 @@ def test_merge_batches_instance_norm_pix2pix(engines):
         for i, s in enumerate(streams):
             assert ex.submit(i, frames[s.name][t])
     outs = ex.run_until_drained()
+    # default jitted path: fusion tolerance pin vs the monolithic models
     for s in streams:
         sm = sm_pix if s.model_index == 0 else sm_yolo
         for f, o in zip(frames[s.name], outs[s.name]):
             for la, lb in zip(jax.tree.leaves(sm.run_all(f)), jax.tree.leaves(o)):
-                np.testing.assert_allclose(np.asarray(la), np.asarray(lb), atol=1e-5)
+                np.testing.assert_allclose(np.asarray(la), np.asarray(lb), atol=2e-3, rtol=1e-2)
     # the two pix streams really ran merged: a tick-0 segment covers both
     merged = [e for e in ex.log if e.tick == 0 and "#f0,0" in e.work]
     assert merged, "expected a merged two-frame flight at tick 0"
