@@ -1,8 +1,10 @@
 """Multi-stream serving benchmark: aggregate FPS and latency percentiles
-vs concurrent stream count, plus the online re-planning
-perturbation-recovery scenario, written to ``BENCH_serve.json`` so
-successive PRs have a perf trajectory to compare against
-(``benchmarks/trend.py`` diffs two runs and gates CI on regressions).
+vs concurrent stream count, the coarse-vs-fine planning-granularity
+comparison (composite vs expanded primitive cut points: plan cost and
+measured FPS), plus the online re-planning perturbation-recovery
+scenario, written to ``BENCH_serve.json`` so successive PRs have a perf
+trajectory to compare against (``benchmarks/trend.py`` diffs two runs
+and gates CI on regressions).
 
   PYTHONPATH=src python benchmarks/serve_bench.py --smoke
   PYTHONPATH=src python benchmarks/serve_bench.py --streams 1,2,4,8 --frames 16
@@ -103,6 +105,69 @@ def run_point(
         "planned_cycle_ms": plan.cycle_time * 1e3,
         "planned_partitions": plan.partitions,
     }
+
+
+def run_granularity_compare(
+    img: int, base: int, norm: str, frames: int, microbatch: int, stride: int = 1
+) -> dict:
+    """Coarse-vs-fine planning granularity on the YOLO+Pix2Pix pair.
+
+    Plans the same model pair at composite-node granularity and at
+    expanded (primitive, stage-callable-legal) granularity, re-scores the
+    coarse plan's cut points on the expanded graphs so the analytic costs
+    are like-for-like, and measures end-to-end FPS for both through the
+    executor. At ``stride=1`` (the recorded default) the fine planner
+    searches a superset of the coarse cut points, so its analytic cost is
+    never worse; ``stride > 1`` thins the fine candidate set (it may drop
+    the coarse boundaries), so the ratio then measures what the
+    tractability knob costs, not the never-worse guarantee."""
+    from repro.core.constraints import DLA_ANALOGUE_CONSTRAINTS
+    from repro.core.engine import jetson_orin_engines
+    from repro.core.scheduler import nmodel_schedule
+    from repro.serve import build_pix_yolo_serving
+
+    gpu, dla = jetson_orin_engines(constraints_dla=DLA_ANALOGUE_CONSTRAINTS)
+    models_c, plan_c, _, _ = build_pix_yolo_serving(img=img, base=base, n_pix=1, n_yolo=1, norm=norm)
+    models_f, plan_f, _, _ = build_pix_yolo_serving(
+        img=img, base=base, n_pix=1, n_yolo=1, norm=norm, granularity="fine", stride=stride
+    )
+    fine_graphs = [m.graph for m in models_f]
+    coarse_on_fine = nmodel_schedule(
+        fine_graphs,
+        [dla, gpu],
+        fixed=tuple(g.fine_cut(p) for g, p in zip(fine_graphs, plan_c.partitions)),
+    )
+    # warm both stacks, then measure interleaved medians (container drift
+    # between a single coarse run and a single fine run easily exceeds the
+    # granularity effect)
+    k = 2
+    for models, plan in ((models_c, plan_c), (models_f, plan_f)):
+        run_point(models, plan, k, 1, img, microbatch, norm)
+    cs, fs = [], []
+    for _ in range(3):
+        cs.append(run_point(models_c, plan_c, k, frames, img, microbatch, norm))
+        fs.append(run_point(models_f, plan_f, k, frames, img, microbatch, norm))
+    r_coarse = sorted(cs, key=lambda r: r["aggregate_fps"])[len(cs) // 2]
+    r_fine = sorted(fs, key=lambda r: r["aggregate_fps"])[len(fs) // 2]
+    out = {
+        "stride": stride,
+        "repeats": 3,
+        "coarse_partitions": plan_c.partitions,
+        "fine_partitions": plan_f.partitions,
+        "fine_coarse_spans": [
+            [[s.lo, s.hi, s.coarse_lo, s.coarse_hi] for s in segs] for segs in plan_f.ir.segments
+        ],
+        "coarse_plan_cycle_ms": plan_c.cycle_time * 1e3,
+        "coarse_plan_cycle_ms_rescored_fine": coarse_on_fine.cycle_time * 1e3,
+        "fine_plan_cycle_ms": plan_f.cycle_time * 1e3,
+        "plan_cost_ratio": plan_f.cycle_time / coarse_on_fine.cycle_time,
+        "coarse_fps": r_coarse["aggregate_fps"],
+        "fine_fps": r_fine["aggregate_fps"],
+        "fps_ratio": r_fine["aggregate_fps"] / r_coarse["aggregate_fps"],
+        "coarse_latency_p50_ms": r_coarse["latency_p50_ms"],
+        "fine_latency_p50_ms": r_fine["latency_p50_ms"],
+    }
+    return out
 
 
 def _movable_skew_engine(plan, graphs, engines):
@@ -301,6 +366,17 @@ def main():
         action="store_true",
         help="skip the online re-planning perturbation-recovery scenario",
     )
+    ap.add_argument(
+        "--skip-granularity-compare",
+        action="store_true",
+        help="skip the coarse-vs-fine planning granularity comparison",
+    )
+    ap.add_argument(
+        "--granularity-stride",
+        type=int,
+        default=1,
+        help="fine-granularity candidate stride for the comparison point",
+    )
     ap.add_argument("--skew", type=float, default=3.0, help="perturbation cost skew factor")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args()
@@ -391,6 +467,19 @@ def main():
             f"total x{dispatch_compare['total_speedup']:.2f})"
         )
 
+    granularity_compare = None
+    if not args.skip_granularity_compare:
+        granularity_compare = run_granularity_compare(
+            img, args.base, args.norm, max(frames, 8), args.microbatch, args.granularity_stride
+        )
+        print(
+            f"granularity compare: coarse plan {granularity_compare['coarse_plan_cycle_ms_rescored_fine']:.3f} ms "
+            f"vs fine plan {granularity_compare['fine_plan_cycle_ms']:.3f} ms "
+            f"(x{1.0 / granularity_compare['plan_cost_ratio']:.2f} analytic)  "
+            f"FPS {granularity_compare['coarse_fps']:.2f} -> {granularity_compare['fine_fps']:.2f} "
+            f"(x{granularity_compare['fps_ratio']:.2f} measured)"
+        )
+
     replan_scenario = None
     if not args.skip_replan_scenario:
         replan_scenario = run_replan_scenario(img, args.base, args.norm, skew=args.skew)
@@ -424,6 +513,7 @@ def main():
         "latency_p99_ms": peak["latency_p99_ms"],
         "overlap_efficiency": peak["overlap_efficiency"],
         "dispatch_compare": dispatch_compare,
+        "granularity_compare": granularity_compare,
         "replan_scenario": replan_scenario,
         "results": results,
     }

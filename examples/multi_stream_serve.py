@@ -16,6 +16,7 @@ hot-swaps re-planned routes at frame boundaries (zero dropped frames).
   PYTHONPATH=src python examples/multi_stream_serve.py
   PYTHONPATH=src python examples/multi_stream_serve.py --cost measured --norm instance
   PYTHONPATH=src python examples/multi_stream_serve.py --replan
+  PYTHONPATH=src python examples/multi_stream_serve.py --granularity fine
 """
 from __future__ import annotations
 
@@ -48,6 +49,12 @@ def main():
     ap.add_argument("--frames", type=int, default=6)
     ap.add_argument("--img", type=int, default=64)
     ap.add_argument("--replan", action="store_true", help="online re-planning runtime")
+    ap.add_argument(
+        "--granularity",
+        choices=("coarse", "fine"),
+        default="coarse",
+        help="plan at composite-node or expanded (primitive) granularity",
+    )
     args = ap.parse_args()
 
     provider = core.make_cost_provider(args.cost, cache_path=args.cost_cache)
@@ -56,6 +63,8 @@ def main():
     # planner view: full-size graphs (what deploys on the Jetson/TPU)
     g_pix = Pix2PixGenerator(Pix2PixConfig(deconv_mode="cropping", norm=args.norm)).layer_graph()
     g_yolo = YOLOv8(YOLOv8Config(img_size=256)).layer_graph()
+    if args.granularity == "fine":
+        g_pix, g_yolo = g_pix.expand(), g_yolo.expand()
     plan_full = core.nmodel_schedule([g_pix, g_yolo], [dla, gpu], provider=provider)
     print(f"== planner (full-size graphs, {plan_full.cost_provider} cost, {plan_full.search} search) ==")
     print(f"partitions: {plan_full.partitions}  cycle={plan_full.cycle_time*1e3:.2f} ms")
@@ -63,7 +72,8 @@ def main():
 
     # executable view: small CPU-sized models, same machinery
     models, plan, streams, _ = build_pix_yolo_serving(
-        img=args.img, n_pix=args.streams, n_yolo=args.yolo_streams, norm=args.norm, cost=provider
+        img=args.img, n_pix=args.streams, n_yolo=args.yolo_streams, norm=args.norm,
+        cost=provider, granularity=args.granularity,
     )
     if args.cost_cache and hasattr(provider, "save"):
         provider.save()  # measured AND blended both persist their timings

@@ -30,11 +30,14 @@ INEFFICIENT_DERATE = 0.5  # achieved fraction of engine flops on mis-aligned lay
 
 
 def _effective_flops(l: LayerMeta, engine) -> float:
-    flops = engine.flops
-    for v in engine.supports(l):
-        if v.severity == "inefficient":
-            flops = flops * INEFFICIENT_DERATE
-    return flops
+    """Engine flops achievable on this layer: derated once when any
+    'inefficient' violation applies. The derate is deliberately NOT
+    compounded per violation — hierarchical metas report one violation
+    per mis-aligned primitive, and compounding would derate a composite
+    by 0.5^k instead of the 0.5 a mis-aligned block actually costs."""
+    if any(v.severity == "inefficient" for v in engine.supports(l)):
+        return engine.flops * INEFFICIENT_DERATE
+    return engine.flops
 
 
 def _roofline(flops: float, bytes_accessed: float, l: LayerMeta, engine) -> float:
@@ -102,18 +105,21 @@ class MeasuredCost(CostProvider):
     pointwise/norm/concat-style kinds go through a generic elementwise
     lowering (``profiler._elementwise_cost``), so every segment of the
     serving graphs is covered by a measurement. Composite graph-level
-    kinds (c2f, sppf, head, ...) keep the analytic numbers —
-    ``available`` reports which. The derived per-(layer, engine, dtype)
-    timing is cached in memory and, when ``cache_path`` is given,
-    persisted as JSON so later runs (and other processes) skip the
-    lowering entirely.
+    kinds (c2f, sppf, head, ...) are costed by *expansion*: when the meta
+    carries a primitive decomposition (``LayerMeta.sublayers``), its time
+    is the sum of the measured primitive times — ``coverage()`` reaches
+    1.0 on the YOLO graph. Composites without a decomposition keep the
+    analytic numbers; ``available`` reports which. The derived
+    per-(layer, engine, dtype) timing is cached in memory and, when
+    ``cache_path`` is given, persisted as JSON so later runs (and other
+    processes) skip the lowering entirely.
     """
 
     name = "measured"
     _MEASURABLE = ("conv", "deconv")
     # elementwise kinds measured via the generic lowering in core.profiler
     # (kept as a literal so importing cost_model does not pull in jax)
-    _ELEMENTWISE = ("act", "tanh", "bn", "norm", "concat", "crop", "pad", "pool", "dropout")
+    _ELEMENTWISE = ("act", "tanh", "bn", "norm", "concat", "crop", "pad", "pool", "dropout", "add")
 
     def __init__(self, cache_path: str | None = None, dtype: str = "bfloat16"):
         self.cache_path = cache_path
@@ -131,12 +137,18 @@ class MeasuredCost(CostProvider):
             self._cache = dict(payload.get("entries", {}))
 
     def available(self, l: LayerMeta) -> bool:
+        if l.sublayers:
+            # composite graph-level kinds (c2f/sppf/head/...) are costed by
+            # expansion: measurable iff every primitive in their
+            # decomposition is
+            return all(self.available(p) for p in l.sublayers)
         if l.kind in self._MEASURABLE:
             return l.attrs.get("groups", 1) == 1
         return l.kind in self._ELEMENTWISE
 
     def coverage(self, graph: LayerGraph) -> float:
-        """Fraction of a graph's layers served by a measurement."""
+        """Fraction of a graph's layers served by a measurement (composites
+        count as covered when their whole decomposition is)."""
         return sum(self.available(l) for l in graph) / max(len(graph), 1)
 
     def _key(self, l: LayerMeta, engine) -> str:
@@ -164,6 +176,8 @@ class MeasuredCost(CostProvider):
     def layer_time(self, l: LayerMeta, engine) -> float:
         if not self.available(l):
             return layer_time(l, engine)
+        if l.sublayers:
+            return sum(self.layer_time(p, engine) for p in l.sublayers)
         key = self._key(l, engine)
         if key in self._cache:
             self.hits += 1
@@ -282,11 +296,64 @@ class OnlineCost(CostProvider):
             return self.base.save(path)
         raise ValueError(f"OnlineCost over {self.base.name!r} has no timing cache to save")
 
+    # -- calibration persistence (warm-start across process restarts) -------
 
-def make_cost_provider(name: str, cache_path: str | None = None, dtype: str = "bfloat16") -> CostProvider:
+    def save_calibration(self, path: str) -> str:
+        """Write the learned per-engine EMA state to JSON. The decayed
+        (observed, expected) sums are stored — not just their ratio — so a
+        restarted process resumes the EMA with the same sample weighting
+        it shut down with."""
+        payload = {
+            "version": 1,
+            "alpha": self.alpha,
+            "base": self.base.name,
+            "engines": {
+                name: {"num": self._num[name], "den": self._den[name]} for name in self._num
+            },
+        }
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        os.replace(tmp, path)
+        return path
+
+    def load_calibration(self, path: str) -> "OnlineCost":
+        """Warm-start the per-engine scales from a ``save_calibration``
+        JSON. Returns self; raises on version/shape mismatch and when the
+        calibration was learned over a *different base provider* — scales
+        are EMA(wall)/EMA(base-units), so analytic-base scales are
+        meaningless to a measured-base calibrator and vice versa."""
+        with open(path) as f:
+            payload = json.load(f)
+        if payload.get("version") != 1:
+            raise ValueError(f"{path}: unsupported calibration version {payload.get('version')!r}")
+        saved_base = payload.get("base", self.base.name)
+        if saved_base != self.base.name:
+            raise ValueError(
+                f"{path}: calibration was learned over base provider {saved_base!r} "
+                f"but this OnlineCost wraps {self.base.name!r} — the scales are in "
+                "different units; re-calibrate instead of warm-starting"
+            )
+        for name, st in payload.get("engines", {}).items():
+            num, den = float(st["num"]), float(st["den"])
+            if num <= 0 or den <= 0:
+                raise ValueError(f"{path}: non-positive EMA state for engine {name!r}")
+            self._num[name] = num
+            self._den[name] = den
+        return self
+
+
+def make_cost_provider(
+    name: str,
+    cache_path: str | None = None,
+    dtype: str = "bfloat16",
+    calibration_path: str | None = None,
+) -> CostProvider:
     """Factory behind every ``--cost {analytic,measured,blended,online}``
     flag. ``online`` wraps the blended (measured-with-analytic-fallback)
-    provider in the live EMA calibrator the re-planning runtime feeds."""
+    provider in the live EMA calibrator the re-planning runtime feeds;
+    ``calibration_path`` (when the file exists) warm-starts its per-engine
+    scales from a previous process's ``save_calibration`` JSON."""
     if name == "analytic":
         return ANALYTIC
     if name == "measured":
@@ -294,7 +361,10 @@ def make_cost_provider(name: str, cache_path: str | None = None, dtype: str = "b
     if name == "blended":
         return BlendedCost(MeasuredCost(cache_path=cache_path, dtype=dtype))
     if name == "online":
-        return OnlineCost(BlendedCost(MeasuredCost(cache_path=cache_path, dtype=dtype)))
+        online = OnlineCost(BlendedCost(MeasuredCost(cache_path=cache_path, dtype=dtype)))
+        if calibration_path and os.path.exists(calibration_path):
+            online.load_calibration(calibration_path)
+        return online
     raise ValueError(f"unknown cost provider {name!r} (want analytic|measured|blended|online)")
 
 
@@ -386,7 +456,7 @@ def balanced_partition_point(
     planner's local searches (and a decent heuristic on its own)."""
     if provider is None:
         provider = ANALYTIC
-    cands = list(candidates) if candidates is not None else list(range(1, len(graph)))
+    cands = list(candidates) if candidates is not None else graph.cut_points()
     if not cands:
         raise ValueError(f"{graph.model_name}: no interior partition point")
     prefix = [0.0]

@@ -47,12 +47,19 @@ class EngineSpec:
         return self.peak_flops * self.efficiency
 
     def supports(self, layer) -> list:
-        """Return the list of violated constraints for a layer (empty = legal)."""
+        """Return the list of violated constraints for a layer (empty = legal).
+
+        Composite metas (hierarchical graphs) are checked through their
+        primitive decomposition too: a ``c2f`` block containing one
+        illegal primitive is illegal as a whole at coarse granularity —
+        the planner must expand it to route around the primitive."""
         out = []
         for c in self.constraints:
             v = c.check(layer)
             if v is not None:
                 out.append(v)
+        for sub in getattr(layer, "sublayers", None) or ():
+            out.extend(self.supports(sub))
         return out
 
 

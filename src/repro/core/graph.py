@@ -5,6 +5,18 @@ A ``LayerGraph`` is a linear sequence of ``LayerMeta`` nodes (the paper
 schedules at layer-sequence granularity; skip connections are captured as
 extra tensor traffic on the node, which is what matters for transfer
 costing at partition points).
+
+The graph is *hierarchical*: a node may carry ``sublayers`` — a
+primitive-only decomposition of a composite block (YOLO ``c2f``/``sppf``/
+``head``). ``expand()``/``flatten()`` produce an ``ExpandedGraph`` whose
+nodes are all primitives, with an index map back to the coarse nodes, so
+the planner can place cuts *inside* composites and the measured-cost
+provider can measure them. Cut legality lives on the metas
+(``attrs["cut_after"]``): a partition after layer ``p-1`` is legal only
+where the model exposes an executable stage boundary — interior
+primitives of one fused stage callable (e.g. the conv inside a
+conv+bn+silu block) refuse cuts. ``cut_points()`` is the single source
+of candidate partition points for every scheduler.
 """
 from __future__ import annotations
 
@@ -17,7 +29,7 @@ from typing import Any
 class LayerMeta:
     idx: int
     name: str
-    kind: str  # conv | deconv | crop | bn | act | pool | pad | concat | tanh | dropout | matmul | attn | moe | ssd | norm | embed | other
+    kind: str  # conv | deconv | crop | bn | act | add | pool | pad | concat | tanh | dropout | matmul | attn | moe | ssd | norm | embed | c2f | sppf | head | other
     in_shape: tuple[int, ...]
     out_shape: tuple[int, ...]
     attrs: dict[str, Any] = dataclasses.field(default_factory=dict)
@@ -27,9 +39,31 @@ class LayerMeta:
     # bytes that must move to the next layer if a partition is placed after
     # this node (activation + any live skip tensors)
     boundary_bytes: float = 0.0
+    # primitive decomposition of a composite node (None = already primitive).
+    # Composite flop/byte/param totals are the sums over the decomposition,
+    # so expansion conserves them exactly.
+    sublayers: list["LayerMeta"] | None = None
+
+    @property
+    def is_composite(self) -> bool:
+        return bool(self.sublayers)
+
+    @property
+    def cut_after(self) -> bool:
+        """Whether a partition directly after this layer is executable."""
+        return bool(self.attrs.get("cut_after", True))
+
+    def primitives(self) -> list["LayerMeta"]:
+        """The recursive primitive-only decomposition ([self] if primitive)."""
+        if not self.sublayers:
+            return [self]
+        return [p for sub in self.sublayers for p in sub.primitives()]
 
     def clone(self, **kw):
-        d = dataclasses.asdict(self)
+        d = {f.name: getattr(self, f.name) for f in dataclasses.fields(self)}
+        d["attrs"] = dict(self.attrs)
+        if self.sublayers is not None:
+            d["sublayers"] = [s.clone() for s in self.sublayers]
         d.update(kw)
         return LayerMeta(**d)
 
@@ -61,6 +95,81 @@ class LayerGraph:
         for i, l in enumerate(self.layers):
             l.idx = i
         return self
+
+    def cut_points(self, stride: int = 1) -> list[int]:
+        """Legal interior partition points, optionally strided.
+
+        A point ``p`` (cut after layer ``p-1``) is legal when the layer
+        before it allows cuts (``cut_after``); on expanded graphs that is
+        exactly the set of stage-callable boundaries. ``stride > 1`` keeps
+        every stride-th legal point — the knob that keeps the beam search
+        tractable on fine-grained graphs.
+        """
+        pts = [p for p in range(1, len(self.layers)) if self.layers[p - 1].cut_after]
+        return pts[::stride] if stride > 1 else pts
+
+    def expand(self) -> "ExpandedGraph":
+        """Primitive-only view of this graph with an index map back to it.
+
+        Each composite node is replaced by its (recursively flattened)
+        primitive decomposition; primitive nodes pass through. The last
+        primitive of every coarse node always permits a cut — the coarse
+        partition points remain a subset of the expanded ones.
+        """
+        fine: list[LayerMeta] = []
+        coarse_of: list[int] = []
+        spans: list[tuple[int, int]] = []
+        for ci, l in enumerate(self.layers):
+            lo = len(fine)
+            for p in l.primitives():
+                c = p.clone()
+                c.sublayers = None
+                fine.append(c)
+                coarse_of.append(ci)
+            fine[-1].attrs["cut_after"] = True
+            spans.append((lo, len(fine)))
+        g = ExpandedGraph(
+            model_name=f"{self.model_name}[expanded]",
+            layers=fine,
+            coarse=self,
+            coarse_of=tuple(coarse_of),
+            spans=tuple(spans),
+        )
+        return g.renumber()
+
+    def flatten(self) -> "ExpandedGraph":
+        """Alias for :meth:`expand` (the decomposition is stored flat, so
+        one expansion is already primitive-only)."""
+        return self.expand()
+
+
+@dataclasses.dataclass
+class ExpandedGraph(LayerGraph):
+    """A primitive-only ``LayerGraph`` remembering its coarse origin.
+
+    ``coarse_of[i]`` is the coarse node that produced fine layer ``i``;
+    ``spans[c]`` is the fine half-open span of coarse node ``c``. The two
+    maps let planners report fine cuts in coarse terms (PlanIR coarse
+    spans) and translate coarse plans onto the fine graph for
+    like-for-like comparison.
+    """
+
+    coarse: LayerGraph | None = None
+    coarse_of: tuple[int, ...] = ()
+    spans: tuple[tuple[int, int], ...] = ()
+
+    def fine_cut(self, coarse_p: int) -> int:
+        """Expanded index of a coarse partition point (cut after coarse
+        node ``coarse_p - 1``)."""
+        if coarse_p <= 0:
+            return 0
+        return self.spans[coarse_p - 1][1]
+
+    def coarse_span(self, lo: int, hi: int) -> tuple[int, int]:
+        """Smallest coarse span [clo, chi) covering fine span [lo, hi)."""
+        if hi <= lo:
+            raise ValueError(f"empty fine span [{lo},{hi})")
+        return (self.coarse_of[lo], self.coarse_of[hi - 1] + 1)
 
 
 def _size(shape):

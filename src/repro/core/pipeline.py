@@ -35,21 +35,61 @@ class StagedModel:
     # per-frame outputs independent of batch companions (instance/group
     # norm) — the precondition for merge_batches micro-batching
     batch_independent: bool = False
+    # layer span [lo, hi) each op covers when the graph is finer than the
+    # op list (expanded graphs: one op per *stage callable*, several
+    # primitive layers per op). None = ops align 1:1 with graph layers.
+    op_spans: list[tuple[int, int]] | None = None
 
     def __post_init__(self):
-        assert len(self.ops) == len(self.graph), (
-            f"{self.name}: ops ({len(self.ops)}) must align with layer graph ({len(self.graph)})"
-        )
+        if self.op_spans is None:
+            assert len(self.ops) == len(self.graph), (
+                f"{self.name}: ops ({len(self.ops)}) must align with layer graph ({len(self.graph)})"
+            )
+        else:
+            assert len(self.op_spans) == len(self.ops), (
+                f"{self.name}: {len(self.op_spans)} op spans for {len(self.ops)} ops"
+            )
+            pos = 0
+            for lo, hi in self.op_spans:
+                assert lo == pos and hi > lo, f"{self.name}: op spans must partition the graph"
+                pos = hi
+            assert pos == len(self.graph), (
+                f"{self.name}: op spans cover [0,{pos}) but the graph has {len(self.graph)} layers"
+            )
+            self._op_start = {lo: i for i, (lo, _) in enumerate(self.op_spans)}
+            self._op_end = {hi: i + 1 for i, (_, hi) in enumerate(self.op_spans)}
+
+    @property
+    def n_layers(self) -> int:
+        """Layer count of the planning graph — the unit PlanIR spans use."""
+        return len(self.graph)
+
+    def op_range(self, lo, hi) -> tuple[int, int]:
+        """Map a layer span [lo, hi) to the op range that executes it.
+
+        With ``op_spans`` the span must start and end on stage-callable
+        boundaries — exactly the cuts ``LayerGraph.cut_points`` declares
+        legal; anything else raises."""
+        if self.op_spans is None:
+            return lo, hi
+        try:
+            return self._op_start[lo], self._op_end[hi]
+        except KeyError:
+            raise ValueError(
+                f"{self.name}: layer span [{lo},{hi}) does not align with stage boundaries"
+            ) from None
 
     def run_segment(self, state, lo, hi):
         return self.segment_fn(lo, hi)(self.params, state)
 
     def segment_fn(self, lo, hi):
-        """Pure ``(params, state) -> state`` over ``ops[lo:hi)`` — the form
-        ``jax.jit`` (with state-buffer donation) accepts."""
+        """Pure ``(params, state) -> state`` over the ops executing layers
+        ``[lo, hi)`` — the form ``jax.jit`` (with state-buffer donation)
+        accepts."""
+        olo, ohi = self.op_range(lo, hi)
 
         def f(params, state):
-            for _, fn in self.ops[lo:hi]:
+            for _, fn in self.ops[olo:ohi]:
                 state = fn(params, state)
             return state
 
@@ -68,35 +108,69 @@ class StagedModel:
         return self._jit_cache[key]
 
     def run_all(self, x):
-        return self.finalize(self.run_segment(self.init_state(x), 0, len(self.ops)))
+        return self.finalize(self.run_segment(self.init_state(x), 0, self.n_layers))
 
 
-def pix2pix_staged(cfg, params, batch_dtype=None) -> StagedModel:
+def stage_ops_from_graph(graph: LayerGraph) -> tuple[list[tuple[str, Callable]], list[tuple[int, int]]]:
+    """Fine-grained (op, span) lists from a coarse graph whose metas carry
+    ``attrs["stages"]`` callables — one executable op per stage, spanning
+    that stage's primitive layers in the *expanded* graph."""
+    ops, spans, pos = [], [], 0
+    for l in graph:
+        stages = l.attrs.get("stages")
+        if not stages:
+            raise ValueError(f"{l.name}: no stage callables; cannot stage at fine granularity")
+        for sname, nprims, fn in stages:
+            ops.append((sname, fn))
+            spans.append((pos, pos + nprims))
+            pos += nprims
+    return ops, spans
+
+
+def pix2pix_staged(cfg, params, batch_dtype=None, granularity: str = "coarse") -> StagedModel:
     from ..models.pix2pix import Pix2PixGenerator, generator_ops
 
     gen = Pix2PixGenerator(cfg)
+    graph = gen.layer_graph()
+    if granularity == "fine":
+        # the pix graph is already primitive-only; the expanded view keeps
+        # the coarse index map so plans annotate coarse spans uniformly
+        graph = graph.expand()
     return StagedModel(
         name=f"pix2pix[{cfg.deconv_mode}]",
         ops=generator_ops(cfg),
         params=params["generator"] if "generator" in params else params,
-        graph=gen.layer_graph(),
+        graph=graph,
         init_state=lambda x: {"x": x.astype(cfg.act_dtype), "skips": []},
         finalize=lambda s: s["x"],
         batch_independent=cfg.batch_independent,
     )
 
 
-def yolo_staged(cfg, params) -> StagedModel:
+def yolo_staged(cfg, params, granularity: str = "coarse") -> StagedModel:
+    """YOLO staged model at ``coarse`` (one op per composite node) or
+    ``fine`` granularity (expanded primitive graph, one op per sub-block
+    stage callable — cuts inside ``c2f``/``sppf``/``head`` become
+    executable)."""
     from ..models.yolov8 import YOLOv8
 
+    if granularity not in ("coarse", "fine"):
+        raise ValueError(f"granularity must be 'coarse' or 'fine', got {granularity!r}")
     m = YOLOv8(cfg)
+    coarse = m.layer_graph()
+    if granularity == "fine":
+        ops, spans = stage_ops_from_graph(coarse)
+        graph, op_spans = coarse.expand(), spans
+    else:
+        ops, graph, op_spans = m.staged_ops(coarse), coarse, None
     return StagedModel(
         name=cfg.name,
-        ops=m.staged_ops(),
+        ops=ops,
         params=params,
-        graph=m.layer_graph(),
+        graph=graph,
         init_state=lambda x: {"x": x.astype(cfg.act_dtype)},
         finalize=lambda s: {"p3": s["o3"], "p4": s["o4"], "p5": s["o5"]},
+        op_spans=op_spans,
     )
 
 
@@ -139,7 +213,7 @@ class TwoModelPipeline:
         from .plan_ir import make_plan_ir
 
         assert len(frames_a) == len(frames_b)
-        la, lb = len(self.a.ops), len(self.b.ops)
+        la, lb = self.a.n_layers, self.b.n_layers
         # the scheduler's typed IR drives the executor; rebuild it from the
         # (possibly caller-overridden) partition points
         ir = self.plan.ir

@@ -27,7 +27,14 @@ from typing import Sequence
 
 @dataclasses.dataclass(frozen=True)
 class PlanSegment:
-    """One contiguous layer span of one model bound to one engine."""
+    """One contiguous layer span of one model bound to one engine.
+
+    ``lo``/``hi`` index the plan's graph — *expanded* (primitive) indices
+    for fine-granularity plans. ``coarse_lo``/``coarse_hi`` then record
+    the smallest coarse-node span covering it (-1/-1 when the plan was
+    made on a coarse graph and the two index spaces coincide), so reports
+    and operators can read fine cuts in model-block terms.
+    """
 
     model_index: int
     stage: int  # position in the model's route
@@ -35,14 +42,25 @@ class PlanSegment:
     lo: int
     hi: int  # layer span [lo, hi)
     expected_cost: float = 0.0  # scoring-provider seconds for this span
+    coarse_lo: int = -1  # coarse-node span covering [lo, hi); -1 = n/a
+    coarse_hi: int = -1
 
     @property
     def span(self) -> tuple[int, int]:
         return (self.lo, self.hi)
 
+    @property
+    def coarse_span(self) -> tuple[int, int] | None:
+        if self.coarse_lo < 0:
+            return None
+        return (self.coarse_lo, self.coarse_hi)
+
     def describe(self, engine_names: Sequence[str] | None = None) -> str:
         eng = engine_names[self.engine] if engine_names else f"E{self.engine}"
-        return f"m{self.model_index}[{self.lo}:{self.hi})@{eng}"
+        base = f"m{self.model_index}[{self.lo}:{self.hi})@{eng}"
+        if self.coarse_lo >= 0:
+            base += f"~c[{self.coarse_lo}:{self.coarse_hi})"
+        return base
 
 
 @dataclasses.dataclass(frozen=True)
@@ -147,6 +165,8 @@ class PlanIR:
                             "lo": s.lo,
                             "hi": s.hi,
                             "expected_cost": s.expected_cost,
+                            "coarse_lo": s.coarse_lo,
+                            "coarse_hi": s.coarse_hi,
                         }
                         for s in segs
                     ]
@@ -173,6 +193,8 @@ class PlanIR:
                     lo=int(s["lo"]),
                     hi=int(s["hi"]),
                     expected_cost=float(s.get("expected_cost", 0.0)),
+                    coarse_lo=int(s.get("coarse_lo", -1)),
+                    coarse_hi=int(s.get("coarse_hi", -1)),
                 )
                 for si, s in enumerate(segs)
             )
@@ -198,22 +220,36 @@ def make_plan_ir(
     cost_provider: str = "analytic",
     search: str = "none",
     kind: str = "manual",
+    graphs: Sequence | None = None,
 ) -> PlanIR:
     """Build a PlanIR from per-model ``(engine, lo, hi[, expected_cost])``
     span lists — the one constructor every scheduler emit path goes
-    through."""
-    segments = tuple(
-        tuple(
-            PlanSegment(
-                model_index=mi,
-                stage=si,
-                engine=int(sp[0]),
-                lo=int(sp[1]),
-                hi=int(sp[2]),
-                expected_cost=float(sp[3]) if len(sp) > 3 else 0.0,
-            )
-            for si, sp in enumerate(model_spans)
+    through. When ``graphs`` carries expanded graphs (anything exposing
+    ``coarse_span``), each segment is annotated with the coarse-node span
+    its fine span covers."""
+
+    def _coarse(mi, lo, hi):
+        g = graphs[mi] if graphs is not None and mi < len(graphs) else None
+        if g is None or not hasattr(g, "coarse_span"):
+            return -1, -1
+        return g.coarse_span(lo, hi)
+
+    def _segment(mi, si, sp):
+        lo, hi = int(sp[1]), int(sp[2])
+        clo, chi = _coarse(mi, lo, hi)
+        return PlanSegment(
+            model_index=mi,
+            stage=si,
+            engine=int(sp[0]),
+            lo=lo,
+            hi=hi,
+            expected_cost=float(sp[3]) if len(sp) > 3 else 0.0,
+            coarse_lo=clo,
+            coarse_hi=chi,
         )
+
+    segments = tuple(
+        tuple(_segment(mi, si, sp) for si, sp in enumerate(model_spans))
         for mi, model_spans in enumerate(spans)
     )
     return PlanIR(

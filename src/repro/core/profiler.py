@@ -64,10 +64,12 @@ def _elementwise_fn(kind: str):
         return pool
     if kind == "dropout":
         return lambda x: x * jnp.asarray(1.0, x.dtype)  # inference passthrough
+    if kind == "add":
+        return lambda x: x + x  # residual merge (two reads, one write)
     return None
 
 
-ELEMENTWISE_KINDS = ("act", "tanh", "bn", "norm", "concat", "crop", "pad", "pool", "dropout")
+ELEMENTWISE_KINDS = ("act", "tanh", "bn", "norm", "concat", "crop", "pad", "pool", "dropout", "add")
 
 
 @functools.lru_cache(maxsize=2048)
@@ -113,27 +115,41 @@ def _conv_cost(in_shape, kernel, stride, padding, c_out, transposed, dtype_str):
     return float(ca.get("flops", 0.0)), float(ca.get("bytes accessed", 0.0))
 
 
+def _profile_layer(l, dtype_name: str):
+    """Measured clone of one meta. Composites are profiled through their
+    primitive decomposition and their totals become the measured sums, so
+    profiling a coarse hierarchical graph and profiling its expansion
+    agree layer-for-layer."""
+    if l.sublayers:
+        subs = [_profile_layer(p, dtype_name) for p in l.sublayers]
+        return l.clone(
+            sublayers=subs,
+            flops=sum(p.flops for p in subs),
+            bytes_accessed=sum(p.bytes_accessed for p in subs),
+        )
+    if l.kind in ("conv", "deconv"):
+        flops, bytes_ = _conv_cost(
+            tuple(l.in_shape),
+            l.attrs.get("kernel", 1),
+            l.attrs.get("stride", 1),
+            l.attrs.get("padding", 0),
+            l.out_shape[-1],
+            l.kind == "deconv",
+            dtype_name,
+        )
+        return l.clone(flops=flops or l.flops, bytes_accessed=bytes_ or l.bytes_accessed)
+    if l.kind in ELEMENTWISE_KINDS:
+        flops, bytes_ = _elementwise_cost(l.kind, tuple(l.in_shape), dtype_name)
+        return l.clone(flops=flops or l.flops, bytes_accessed=bytes_ or l.bytes_accessed)
+    return l.clone()
+
+
 def profile_graph(graph: LayerGraph, dtype=jnp.bfloat16) -> LayerGraph:
     """Return a copy of ``graph`` with XLA-measured flops/bytes on conv,
     deconv, and elementwise (pointwise/norm/concat/...) layers; composite
-    kinds (c2f, sppf, head, ...) keep analytic estimates."""
-    out = []
-    for l in graph:
-        if l.kind in ("conv", "deconv"):
-            flops, bytes_ = _conv_cost(
-                tuple(l.in_shape),
-                l.attrs.get("kernel", 1),
-                l.attrs.get("stride", 1),
-                l.attrs.get("padding", 0),
-                l.out_shape[-1],
-                l.kind == "deconv",
-                jnp.dtype(dtype).name,
-            )
-            nl = l.clone(flops=flops or l.flops, bytes_accessed=bytes_ or l.bytes_accessed)
-        elif l.kind in ELEMENTWISE_KINDS:
-            flops, bytes_ = _elementwise_cost(l.kind, tuple(l.in_shape), jnp.dtype(dtype).name)
-            nl = l.clone(flops=flops or l.flops, bytes_accessed=bytes_ or l.bytes_accessed)
-        else:
-            nl = l.clone()
-        out.append(nl)
+    kinds (c2f, sppf, head, ...) are measured through their primitive
+    decomposition (undecomposed composites keep analytic estimates).
+    Works on coarse and expanded graphs alike."""
+    name = jnp.dtype(dtype).name
+    out = [_profile_layer(l, name) for l in graph]
     return LayerGraph(graph.model_name + "[profiled]", out).renumber()

@@ -126,6 +126,7 @@ def standalone_schedule(
             expected_cycle=c.elapsed,
             cost_provider=(provider or ANALYTIC).name,
             kind="standalone",
+            graphs=(graph,),
         ),
     )
     return sched
@@ -178,6 +179,7 @@ def naive_schedule(
             expected_cycle=max(gpu_period, dla_period),
             cost_provider=(provider or ANALYTIC).name,
             kind="naive",
+            graphs=(graph_a, graph_b),
         ),
     )
 
@@ -200,7 +202,11 @@ class HaxConnResult:
 
 
 def _candidate_points(graph: LayerGraph, stride: int = 1):
-    return list(range(1, len(graph), stride))
+    """Legal partition points: every interior point on plain graphs, only
+    stage-callable boundaries on expanded (fine-grained) graphs — the
+    legality mask lives on the metas (``LayerGraph.cut_points``). The
+    stride knob thins the legal set to keep the beam tractable."""
+    return graph.cut_points(stride)
 
 
 def _evaluate_pair(graph_a, graph_b, pa, pb, constrained, flexible, allow_fallback, provider=None):
@@ -294,6 +300,7 @@ def haxconn_schedule(
             cost_provider=(provider or ANALYTIC).name,
             search="fixed" if fixed else "exhaustive",
             kind="haxconn",
+            graphs=(graph_a, graph_b),
         ),
     )
     return HaxConnResult(sched, pa, pb, {"constrained": t_con, "flexible": t_flex})
@@ -624,6 +631,7 @@ def nmodel_schedule(
         cost_provider=provider.name,
         search=mode,
         kind="nmodel",
+        graphs=graphs,
     )
     sched = Schedule(
         kind="nmodel",

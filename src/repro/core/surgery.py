@@ -128,7 +128,15 @@ class SurgeryReport:
 
 def apply_surgery(graph: LayerGraph, engine, rule_name: str = "cropping"):
     """Rewrite every layer of ``graph`` that is illegal on ``engine`` using
-    ``rule``. Returns (new_graph, SurgeryReport)."""
+    ``rule``. Returns (new_graph, SurgeryReport).
+
+    Hierarchical graphs are rewritten at primitive granularity: when any
+    node carries a composite decomposition, the pass runs on the expanded
+    (primitive-only) graph — surgery rules match primitives, never
+    composite kinds, so an illegal primitive buried inside a composite is
+    only reachable there."""
+    if any(l.is_composite for l in graph):
+        graph = graph.expand()
     rule = RULES[rule_name]
     new_layers: list[LayerMeta] = []
     replaced = []

@@ -244,13 +244,22 @@ def main() -> None:
     ap.add_argument("--cost-cache", default=None, help="JSON cache for measured layer timings")
     ap.add_argument("--img", type=int, default=256)
     ap.add_argument("--per-layer", action="store_true", help="dump the per-layer table")
+    ap.add_argument(
+        "--granularity",
+        choices=("coarse", "fine"),
+        default="coarse",
+        help="plan at composite-node or expanded (primitive) granularity",
+    )
+    ap.add_argument("--stride", type=int, default=1, help="keep every k-th legal cut point")
     args = ap.parse_args()
 
     provider = make_cost_provider(args.cost, cache_path=args.cost_cache)
     gpu, dla = jetson_orin_engines(constraints_dla=DLA_ANALOGUE_CONSTRAINTS)
     g_pix = Pix2PixGenerator(Pix2PixConfig(img_size=args.img, deconv_mode="cropping")).layer_graph()
     g_yolo = YOLOv8(YOLOv8Config(img_size=args.img)).layer_graph()
-    plan = nmodel_schedule([g_pix, g_yolo], [dla, gpu], provider=provider)
+    if args.granularity == "fine":
+        g_pix, g_yolo = g_pix.expand(), g_yolo.expand()
+    plan = nmodel_schedule([g_pix, g_yolo], [dla, gpu], provider=provider, stride=args.stride)
     if args.cost_cache and hasattr(provider, "save"):
         provider.save()  # measured AND blended both persist their timings
     print(

@@ -10,12 +10,16 @@ per-segment-synchronized executor for comparison.
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2_2b --tokens 16
   PYTHONPATH=src python -m repro.launch.serve --mode streams --streams 4 --frames 6
   PYTHONPATH=src python -m repro.launch.serve --mode streams --cost measured --norm instance
+  PYTHONPATH=src python -m repro.launch.serve --mode streams --granularity fine
+  PYTHONPATH=src python -m repro.launch.serve --mode streams --cost online --replan \
+      --calibration-cache calib.json   # scales persist across restarts
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import json
+import os
 import time
 
 import jax
@@ -26,7 +30,7 @@ from ..configs import get_arch, build_model
 
 
 def run_streams(args) -> None:
-    from ..core.cost_model import make_cost_provider
+    from ..core.cost_model import OnlineCost, make_cost_provider
     from ..serve import (
         MultiStreamServer,
         ReplanConfig,
@@ -35,7 +39,11 @@ def run_streams(args) -> None:
         merge_flags_for,
     )
 
-    provider = make_cost_provider(args.cost, cache_path=args.cost_cache)
+    provider = make_cost_provider(
+        args.cost, cache_path=args.cost_cache, calibration_path=args.calibration_cache
+    )
+    if isinstance(provider, OnlineCost) and provider.snapshot():
+        print(f"[serve] warm-started calibration: {provider.describe()}")
     models, plan, streams, _ = build_pix_yolo_serving(
         img=args.img,
         base=args.base,
@@ -43,12 +51,14 @@ def run_streams(args) -> None:
         n_yolo=args.yolo_streams,
         norm=args.norm,
         cost=provider,
+        granularity=args.granularity,
+        stride=args.planner_stride,
     )
     if args.cost_cache and hasattr(provider, "save"):
         provider.save()  # measured AND blended both persist their timings
     print(
         f"[serve] plan partitions={plan.partitions} cycle={plan.cycle_time*1e3:.2f} ms "
-        f"search={plan.search} cost={plan.cost_provider}"
+        f"search={plan.search} cost={plan.cost_provider} granularity={args.granularity}"
     )
     replanner = None
     if args.replan:
@@ -59,10 +69,26 @@ def run_streams(args) -> None:
                 hysteresis=args.replan_hysteresis,
                 cooldown_ticks=args.replan_cooldown,
                 profile_every=args.profile_every,
+                stride=args.planner_stride,
                 background=args.replan_background,
             ),
             cost=provider,
         )
+        if (
+            args.calibration_cache
+            and os.path.exists(args.calibration_cache)
+            and not replanner.online.snapshot()
+        ):
+            # non-online base providers wrap a fresh OnlineCost inside the
+            # replanner; warm-start that one too, so --calibration-cache
+            # survives restarts for every --cost mode
+            try:
+                replanner.load_calibration(args.calibration_cache)
+                print(f"[serve] warm-started replanner calibration: {replanner.online.describe()}")
+            except ValueError as e:
+                # scales learned under a different base provider are in
+                # different units — re-calibrate live instead
+                print(f"[serve] calibration cache not applicable, re-calibrating: {e}")
     server = MultiStreamServer(
         models,
         plan,
@@ -79,6 +105,14 @@ def run_streams(args) -> None:
             server.submit(s.model_index, jax.random.normal(jax.random.key(t), (1, args.img, args.img, 3)))
         server.pump()
     server.drain()
+    if args.calibration_cache and replanner is not None and replanner.online.snapshot():
+        # persist the learned per-engine scales so the next process
+        # warm-starts its calibration instead of re-learning it
+        replanner.online.save_calibration(args.calibration_cache)
+        print(f"[serve] saved calibration -> {args.calibration_cache}")
+    elif args.calibration_cache and isinstance(provider, OnlineCost) and provider.snapshot():
+        provider.save_calibration(args.calibration_cache)
+        print(f"[serve] saved calibration -> {args.calibration_cache}")
     print(json.dumps(server.report(), indent=2))
 
 
@@ -101,6 +135,23 @@ def main():
         "--cost", choices=("analytic", "measured", "blended", "online"), default="analytic"
     )
     ap.add_argument("--cost-cache", default=None, help="JSON cache for measured layer timings")
+    ap.add_argument(
+        "--granularity",
+        choices=("coarse", "fine"),
+        default="coarse",
+        help="plan at composite-node or expanded (primitive) granularity",
+    )
+    ap.add_argument(
+        "--planner-stride",
+        type=int,
+        default=1,
+        help="keep every k-th legal cut point (fine-granularity beam tractability knob)",
+    )
+    ap.add_argument(
+        "--calibration-cache",
+        default=None,
+        help="JSON file persisting OnlineCost per-engine scales across restarts",
+    )
     ap.add_argument("--dispatch", choices=("overlapped", "serialized"), default="overlapped")
     ap.add_argument("--norm", choices=("batch", "instance", "group"), default="batch")
     ap.add_argument("--no-jit-segments", action="store_true", help="eager per-op dispatch")

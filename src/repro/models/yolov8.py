@@ -15,7 +15,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from ..core.graph import LayerGraph, LayerMeta, conv_meta
+from ..core.graph import LayerGraph, LayerMeta, conv_meta, pointwise_meta
 from ..nn import BatchNorm2D, Conv2D, Module, max_pool
 
 
@@ -218,135 +218,282 @@ class YOLOv8(Module):
         return {"p3": o3, "p4": o4, "p5": o5}
 
     # ---- per-node executable ops aligned with layer_graph ----------------------
-    def staged_ops(self):
-        cfg = self.cfg
-        c1, c2, c3, c4, c5 = self._dims()
-        n = cfg.n
+    def staged_ops(self, graph: LayerGraph | None = None):
+        """Coarse per-node ops: each op composes its node's stage callables,
+        so the coarse executor runs the exact same primitive sequence the
+        fine-grained (expanded) executor does — bit-exact in eager mode.
+        Pass an already-built ``layer_graph()`` to avoid rebuilding it."""
 
-        def upd(key, fn, src="x"):
+        def composed(stages):
             def f(p, s):
-                s = dict(s)
-                s[key] = fn(p, s[src] if isinstance(src, str) else src(s))
+                for _, _, fn in stages:
+                    s = fn(p, s)
                 return s
 
             return f
 
-        ops = [
-            ("stem", upd("x", lambda p, v: ConvBlock(3, c1, 3, 2)(p["stem"], v))),
-            ("down2", upd("x", lambda p, v: ConvBlock(c1, c2, 3, 2)(p["down2"], v))),
-            ("c2f_2", upd("x", lambda p, v: C2f(c2, c2, n(3))(p["c2f_2"], v))),
-            ("down3", upd("x", lambda p, v: ConvBlock(c2, c3, 3, 2)(p["down3"], v))),
-            ("c2f_3", upd("f3", lambda p, v: C2f(c3, c3, n(6))(p["c2f_3"], v))),
-            ("down4", upd("x", lambda p, v: ConvBlock(c3, c4, 3, 2)(p["down4"], v), src="f3")),
-            ("c2f_4", upd("f4", lambda p, v: C2f(c4, c4, n(6))(p["c2f_4"], v))),
-            ("down5", upd("x", lambda p, v: ConvBlock(c4, c5, 3, 2)(p["down5"], v), src="f4")),
-            ("c2f_5", upd("x", lambda p, v: C2f(c5, c5, n(3))(p["c2f_5"], v))),
-            ("sppf", upd("f5", lambda p, v: SPPF(c5)(p["sppf"], v))),
-            (
-                "n_c2f_4",
-                upd(
-                    "u4",
-                    lambda p, v: C2f(c5 + c4, c4, n(3), shortcut=False)(p["n_c2f_4"], v),
-                    src=lambda s: jnp.concatenate([_upsample2(s["f5"]), s["f4"]], -1),
-                ),
-            ),
-            (
-                "n_c2f_3",
-                upd(
-                    "u3",
-                    lambda p, v: C2f(c4 + c3, c3, n(3), shortcut=False)(p["n_c2f_3"], v),
-                    src=lambda s: jnp.concatenate([_upsample2(s["u4"]), s["f3"]], -1),
-                ),
-            ),
-            ("n_down3", upd("x", lambda p, v: ConvBlock(c3, c3, 3, 2)(p["n_down3"], v), src="u3")),
-            (
-                "n_c2f_4b",
-                upd(
-                    "d4",
-                    lambda p, v: C2f(c3 + c4, c4, n(3), shortcut=False)(p["n_c2f_4b"], v),
-                    src=lambda s: jnp.concatenate([s["x"], s["u4"]], -1),
-                ),
-            ),
-            ("n_down4", upd("x", lambda p, v: ConvBlock(c4, c4, 3, 2)(p["n_down4"], v), src="d4")),
-            (
-                "n_c2f_5b",
-                upd(
-                    "d5",
-                    lambda p, v: C2f(c4 + c5, c5, n(3), shortcut=False)(p["n_c2f_5b"], v),
-                    src=lambda s: jnp.concatenate([s["x"], s["f5"]], -1),
-                ),
-            ),
-            ("head3", upd("o3", lambda p, v: DetectHead(c3, cfg.n_classes, cfg.reg_max)(p["head3"], v), src="u3")),
-            ("head4", upd("o4", lambda p, v: DetectHead(c4, cfg.n_classes, cfg.reg_max)(p["head4"], v), src="d4")),
-            ("head5", upd("o5", lambda p, v: DetectHead(c5, cfg.n_classes, cfg.reg_max)(p["head5"], v), src="d5")),
-        ]
-        return ops
+        graph = graph if graph is not None else self.layer_graph()
+        return [(l.name, composed(l.attrs["stages"])) for l in graph]
 
-    # ---- coarse layer graph for the scheduler ---------------------------------
+    # ---- hierarchical layer graph for the scheduler ----------------------------
     def layer_graph(self, batch: int = 1, dtype_bytes: int = 2) -> LayerGraph:
+        """Coarse graph whose composite nodes (`c2f`/`sppf`/`head` and the
+        fused conv blocks) carry (a) their primitive-only ``sublayers``
+        decomposition — flop/byte/param totals are the decomposition sums,
+        so ``expand()`` conserves them exactly — and (b) executable
+        ``stages`` callables in ``attrs`` so cuts at any stage boundary of
+        the expanded graph are runnable. Interior primitives of one stage
+        refuse cuts (``cut_after=False``); boundary bytes on interior
+        points charge the *live set* (e.g. the accumulated skip tensors
+        inside ``c2f``), not just the flowing activation."""
         cfg = self.cfg
         c1, c2, c3, c4, c5 = self._dims()
         n = cfg.n
-        s = cfg.img_size
         layers: list[LayerMeta] = []
 
-        def block(name, kind, h, c_in, c_out, flops, params):
+        def act_bytes(h, c):
+            return float(dtype_bytes * batch * h * h * c)
+
+        def node(name, kind, in_shape, out_shape, stages, attrs=None):
+            """Composite meta from its stages: totals are sums over prims."""
+            prims = [p for _, ps, _ in stages for p in ps]
+            a = dict(attrs or {})
+            a["stages"] = [(sn, len(ps), fn) for sn, ps, fn in stages]
             layers.append(
                 LayerMeta(
                     idx=len(layers),
                     name=name,
                     kind=kind,
-                    in_shape=(batch, h, h, c_in),
-                    out_shape=(batch, h, h, c_out),
-                    flops=flops,
-                    bytes_accessed=dtype_bytes * batch * h * h * (c_in + c_out) + 4 * params,
-                    params=params,
-                    boundary_bytes=dtype_bytes * batch * h * h * c_out,
+                    in_shape=in_shape,
+                    out_shape=out_shape,
+                    attrs=a,
+                    flops=sum(p.flops for p in prims),
+                    bytes_accessed=sum(p.bytes_accessed for p in prims),
+                    params=sum(p.params for p in prims),
+                    boundary_bytes=float(dtype_bytes * math.prod(out_shape)),
+                    sublayers=prims,
                 )
             )
 
-        def conv_fl(h, cin, cout, k, stride=1):
-            return 2.0 * batch * (h / stride) ** 2 * cout * k * k * cin
+        def cb_prims(scope, h_in, c_in, c_out, k, stride, live_extra=0.0):
+            """ConvBlock primitives (conv+bn+silu); ``live_extra`` bytes of
+            companion tensors stay live across every interior cut point."""
+            cm = conv_meta(
+                0, f"{scope}.conv", batch, h_in, h_in, c_in, c_out, k, stride, k // 2, dtype_bytes
+            )
+            h_out = cm.out_shape[1]
+            shape = (batch, h_out, h_out, c_out)
+            bn = pointwise_meta(0, f"{scope}.bn", "bn", shape, dtype_bytes, 2.0, 2 * c_out)
+            act = pointwise_meta(0, f"{scope}.silu", "act", shape, dtype_bytes)
+            for m in (cm, bn, act):
+                m.boundary_bytes += live_extra
+                m.attrs["cut_after"] = False
+            return [cm, bn, act], h_out
 
-        def c2f_fl(h, cin, cout, nb):
-            ch = cout // 2
-            f = conv_fl(h, cin, cout, 1) + conv_fl(h, (2 + nb) * ch, cout, 1)
-            f += nb * 2 * conv_fl(h, ch, ch, 3)
-            pr = cin * cout + (2 + nb) * ch * cout + nb * 2 * 9 * ch * ch
-            return f, pr
+        def end_stage(prims):
+            prims[-1].attrs["cut_after"] = True
+            return prims
 
-        h = s
-        block("stem", "conv", h, 3, c1, conv_fl(h, 3, c1, 3, 2), 9 * 3 * c1)
-        h //= 2
-        plan = [
-            ("down2", "conv", c1, c2, 2), ("c2f_2", "c2f", c2, c2, n(3)),
-            ("down3", "conv", c2, c3, 2), ("c2f_3", "c2f", c3, c3, n(6)),
-            ("down4", "conv", c3, c4, 2), ("c2f_4", "c2f", c4, c4, n(6)),
-            ("down5", "conv", c4, c5, 2), ("c2f_5", "c2f", c5, c5, n(3)),
-        ]
-        for name, kind, cin, cout, arg in plan:
-            if kind == "conv":
-                block(name, "conv", h, cin, cout, conv_fl(h, cin, cout, 3, 2), 9 * cin * cout)
-                h //= 2
-            else:
-                f, pr = c2f_fl(h, cin, cout, arg)
-                block(name, "c2f", h, cin, cout, f, pr)
-        f, pr = c2f_fl(h, c5, c5, 1)
-        block("sppf", "sppf", h, c5, c5, f * 0.6, c5 * c5 // 2 * 5)
-        f, pr = c2f_fl(h * 2, c5 + c4, c4, n(3))
-        block("n_c2f_4", "c2f", h * 2, c5 + c4, c4, f, pr)
-        f, pr = c2f_fl(h * 4, c4 + c3, c3, n(3))
-        block("n_c2f_3", "c2f", h * 4, c4 + c3, c3, f, pr)
-        block("n_down3", "conv", h * 4, c3, c3, conv_fl(h * 4, c3, c3, 3, 2), 9 * c3 * c3)
-        f, pr = c2f_fl(h * 2, c3 + c4, c4, n(3))
-        block("n_c2f_4b", "c2f", h * 2, c3 + c4, c4, f, pr)
-        block("n_down4", "conv", h * 2, c4, c4, conv_fl(h * 2, c4, c4, 3, 2), 9 * c4 * c4)
-        f, pr = c2f_fl(h, c4 + c5, c5, n(3))
-        block("n_c2f_5b", "c2f", h, c4 + c5, c5, f, pr)
-        for hn, (name, cin) in zip((h * 4, h * 2, h), (("head3", c3), ("head4", c4), ("head5", c5))):
-            c_box = max(16, cin, cfg.reg_max * 4)
-            fl = 2 * conv_fl(hn, cin, c_box, 3) + conv_fl(hn, c_box, 4 * cfg.reg_max, 1)
-            fl += 2 * conv_fl(hn, cin, cin, 3) + conv_fl(hn, cin, cfg.n_classes, 1)
-            pr = 9 * cin * c_box + 9 * c_box * c_box + 9 * cin * cin * 2
-            block(name, "head", hn, cin, 4 * cfg.reg_max + cfg.n_classes, fl, pr)
+        def conv_node(name, h_in, c_in, c_out, src="x", dst="x"):
+            prims, h_out = cb_prims(name, h_in, c_in, c_out, 3, 2)
+
+            def fn(p, s, ci=c_in, co=c_out, key=name, sk=src, d=dst):
+                s = dict(s)
+                s[d] = ConvBlock(ci, co, 3, 2)(p[key], s[sk])
+                return s
+
+            node(
+                name,
+                "conv",
+                (batch, h_in, h_in, c_in),
+                prims[0].out_shape,
+                [(name, end_stage(prims), fn)],
+                attrs={"kernel": 3, "stride": 2, "padding": 1},
+            )
+            return h_out
+
+        def c2f_node(name, h, c_in, c_out, nb, shortcut, src, dst, cat=None):
+            c_h = c_out // 2
+            tmp = "_" + name
+            stages = []
+            cv1_prims = []
+            if cat is not None:
+                cc = pointwise_meta(
+                    0, f"{name}.in_concat", "concat", (batch, h, h, c_in), dtype_bytes, 0.0
+                )
+                cc.attrs["cut_after"] = False
+                cv1_prims.append(cc)
+            blk, _ = cb_prims(f"{name}.cv1", h, c_in, c_out, 1, 1)
+            cv1_prims += blk
+            src_compute = cat if cat is not None else (lambda p, s, sk=src: s[sk])
+
+            def cv1_fn(p, s, ci=c_in, co=c_out, key=name, t=tmp, sc=src_compute):
+                s = dict(s)
+                y = ConvBlock(ci, co, 1)(p[key]["cv1"], sc(p, s))
+                y1, y2 = jnp.split(y, 2, axis=-1)
+                s[t] = [y1, y2]
+                return s
+
+            stages.append((f"{name}.cv1", end_stage(cv1_prims), cv1_fn))
+            for i in range(nb):
+                # outs[0:2+i] stay live across the bottleneck — the interior
+                # skip tensors a cut inside c2f must move
+                live = act_bytes(h, (2 + i) * c_h)
+                p1, _ = cb_prims(f"{name}.bn{i}.cv1", h, c_h, c_h, 3, 1, live_extra=live)
+                p2, _ = cb_prims(f"{name}.bn{i}.cv2", h, c_h, c_h, 3, 1, live_extra=live)
+                prims = p1 + p2
+                if shortcut:
+                    add = pointwise_meta(
+                        0, f"{name}.bn{i}.add", "add", (batch, h, h, c_h), dtype_bytes
+                    )
+                    add.boundary_bytes += live
+                    add.attrs["cut_after"] = False
+                    prims.append(add)
+
+                def bn_fn(p, s, key=name, i=i, ch=c_h, sc=shortcut, t=tmp):
+                    s = dict(s)
+                    outs = list(s[t])
+                    outs.append(Bottleneck(ch, sc)(p[key]["bn"][i], outs[-1]))
+                    s[t] = outs
+                    return s
+
+                stages.append((f"{name}.bn{i}", end_stage(prims), bn_fn))
+            cat_m = pointwise_meta(
+                0, f"{name}.cat", "concat", (batch, h, h, (2 + nb) * c_h), dtype_bytes, 0.0
+            )
+            cat_m.attrs["cut_after"] = False
+            blk2, _ = cb_prims(f"{name}.cv2", h, (2 + nb) * c_h, c_out, 1, 1)
+
+            def cv2_fn(p, s, key=name, ch=c_h, nb=nb, co=c_out, t=tmp, d=dst):
+                s = dict(s)
+                y = ConvBlock((2 + nb) * ch, co, 1)(p[key]["cv2"], jnp.concatenate(s[t], -1))
+                del s[t]
+                s[d] = y
+                return s
+
+            stages.append((f"{name}.cv2", end_stage([cat_m] + blk2), cv2_fn))
+            node(name, "c2f", (batch, h, h, c_in), (batch, h, h, c_out), stages)
+
+        def sppf_node(name, h, c, src, dst):
+            c_h = c // 2
+            tmp = "_" + name
+            stages = []
+            blk, _ = cb_prims(f"{name}.cv1", h, c, c_h, 1, 1)
+
+            def cv1_fn(p, s, key=name, cc=c, ch=c_h, t=tmp, sk=src):
+                s = dict(s)
+                s[t] = [ConvBlock(cc, ch, 1)(p[key]["cv1"], s[sk])]
+                return s
+
+            stages.append((f"{name}.cv1", end_stage(blk), cv1_fn))
+            for i in range(3):
+                pm = pointwise_meta(
+                    0, f"{name}.pool{i + 1}", "pool", (batch, h, h, c_h), dtype_bytes, 25.0
+                )
+                pm.attrs.update({"window": 5, "stride": 1})
+                pm.boundary_bytes += act_bytes(h, (i + 1) * c_h)  # pooled pyramid stays live
+
+                def pool_fn(p, s, t=tmp):
+                    s = dict(s)
+                    s[t] = s[t] + [max_pool(s[t][-1], 5, 1, padding=2)]
+                    return s
+
+                stages.append((f"{name}.pool{i + 1}", end_stage([pm]), pool_fn))
+            cat_m = pointwise_meta(0, f"{name}.cat", "concat", (batch, h, h, 4 * c_h), dtype_bytes, 0.0)
+            cat_m.attrs["cut_after"] = False
+            blk2, _ = cb_prims(f"{name}.cv2", h, 4 * c_h, c, 1, 1)
+
+            def cv2_fn(p, s, key=name, cc=c, ch=c_h, t=tmp, d=dst):
+                s = dict(s)
+                y = ConvBlock(4 * ch, cc, 1)(p[key]["cv2"], jnp.concatenate(s[t], -1))
+                del s[t]
+                s[d] = y
+                return s
+
+            stages.append((f"{name}.cv2", end_stage([cat_m] + blk2), cv2_fn))
+            node(name, "sppf", (batch, h, h, c), (batch, h, h, c), stages)
+
+        def head_node(name, h, c_in, src, dst):
+            rm, ncl = cfg.reg_max, cfg.n_classes
+            c2_ = max(16, c_in, rm * 4)
+            c3_ = max(c_in, min(ncl, 100))
+            tb, tc = f"_{name}.b", f"_{name}.c"
+            stages = []
+
+            def cb_stage(sname, sub, ci, co, read, write, live):
+                prims, _ = cb_prims(f"{name}.{sname}", h, ci, co, 3, 1, live_extra=live)
+
+                def fn(p, s, key=name, sub=sub, ci=ci, co=co, r=read, w=write):
+                    s = dict(s)
+                    s[w] = ConvBlock(ci, co, 3)(p[key][sub], s[r])
+                    return s
+
+                stages.append((f"{name}.{sname}", end_stage(prims), fn))
+
+            def conv1_stage(sname, sub, ci, co, read, write, live):
+                cm = conv_meta(0, f"{name}.{sname}", batch, h, h, ci, co, 1, 1, 0, dtype_bytes)
+                cm.boundary_bytes += live
+
+                def fn(p, s, key=name, sub=sub, ci=ci, co=co, r=read, w=write):
+                    s = dict(s)
+                    s[w] = Conv2D(ci, co, 1, 1, padding=0)(p[key][sub], s[r])
+                    return s
+
+                stages.append((f"{name}.{sname}", end_stage([cm]), fn))
+
+            src_live = act_bytes(h, c_in)  # cls branch still reads the head input
+            cb_stage("box1", "box1", c_in, c2_, src, tb, src_live)
+            cb_stage("box2", "box2", c2_, c2_, tb, tb, src_live)
+            conv1_stage("box3", "box3", c2_, 4 * rm, tb, tb, src_live)
+            box_live = act_bytes(h, 4 * rm)  # the finished box branch stays live
+            cb_stage("cls1", "cls1", c_in, c3_, src, tc, box_live)
+            cb_stage("cls2", "cls2", c3_, c3_, tc, tc, box_live)
+            conv1_stage("cls3", "cls3", c3_, ncl, tc, tc, box_live)
+            out_m = pointwise_meta(
+                0, f"{name}.cat", "concat", (batch, h, h, 4 * rm + ncl), dtype_bytes, 0.0
+            )
+
+            def out_fn(p, s, b=tb, c=tc, d=dst):
+                s = dict(s)
+                s[d] = jnp.concatenate([s[b], s[c]], axis=-1)
+                del s[b]
+                del s[c]
+                return s
+
+            stages.append((f"{name}.out", end_stage([out_m]), out_fn))
+            node(name, "head", (batch, h, h, c_in), (batch, h, h, 4 * rm + ncl), stages)
+
+        h = cfg.img_size
+        h = conv_node("stem", h, 3, c1)
+        h = conv_node("down2", h, c1, c2)
+        c2f_node("c2f_2", h, c2, c2, n(3), True, "x", "x")
+        h = conv_node("down3", h, c2, c3)
+        c2f_node("c2f_3", h, c3, c3, n(6), True, "x", "f3")
+        h = conv_node("down4", h, c3, c4, src="f3")
+        c2f_node("c2f_4", h, c4, c4, n(6), True, "x", "f4")
+        h = conv_node("down5", h, c4, c5, src="f4")
+        c2f_node("c2f_5", h, c5, c5, n(3), True, "x", "x")
+        sppf_node("sppf", h, c5, "x", "f5")
+        h3, h4 = h * 4, h * 2
+        c2f_node(
+            "n_c2f_4", h4, c5 + c4, c4, n(3), False, None, "u4",
+            cat=lambda p, s: jnp.concatenate([_upsample2(s["f5"]), s["f4"]], -1),
+        )
+        c2f_node(
+            "n_c2f_3", h3, c4 + c3, c3, n(3), False, None, "u3",
+            cat=lambda p, s: jnp.concatenate([_upsample2(s["u4"]), s["f3"]], -1),
+        )
+        conv_node("n_down3", h3, c3, c3, src="u3")
+        c2f_node(
+            "n_c2f_4b", h4, c3 + c4, c4, n(3), False, None, "d4",
+            cat=lambda p, s: jnp.concatenate([s["x"], s["u4"]], -1),
+        )
+        conv_node("n_down4", h4, c4, c4, src="d4")
+        c2f_node(
+            "n_c2f_5b", h, c4 + c5, c5, n(3), False, None, "d5",
+            cat=lambda p, s: jnp.concatenate([s["x"], s["f5"]], -1),
+        )
+        head_node("head3", h3, c3, "u3", "o3")
+        head_node("head4", h4, c4, "d4", "o4")
+        head_node("head5", h, c5, "d5", "o5")
         return LayerGraph(cfg.name, layers).renumber()

@@ -6,10 +6,12 @@ from .executor import Completion, Flight, SegmentObservation, StreamExecutor, Sw
 from .metrics import (
     ServeMetrics,
     StreamMetrics,
+    SwapStall,
     TickStats,
     overlap_summary,
     percentile,
     segment_summary,
+    swap_stall_summary,
 )
 from .replanner import ReplanConfig, ReplanEvent, Replanner
 from .server import MultiStreamServer, Request

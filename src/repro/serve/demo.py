@@ -28,21 +28,31 @@ def build_pix_yolo_serving(
     norm: str = "batch",
     cost: str | CostProvider = "analytic",
     search: str = "auto",
+    granularity: str = "coarse",
+    stride: int = 1,
 ):
     """Returns ``(models, plan, streams, (gpu, dla))`` for ``n_pix``
     Pix2Pix reconstruction streams + ``n_yolo`` YOLOv8 detection streams
-    over the calibrated Jetson engine pair."""
+    over the calibrated Jetson engine pair.
+
+    ``granularity="fine"`` plans on the *expanded* (primitive) graphs —
+    the planner may cut inside YOLO's ``c2f``/``sppf``/``head`` blocks at
+    stage-callable boundaries, and the staged models execute those fine
+    cuts. ``stride`` thins the legal candidate set (the beam-tractability
+    knob; only meaningful at fine granularity)."""
     from ..models import Pix2PixConfig, Pix2PixGenerator, YOLOv8, YOLOv8Config
 
     provider = cost if isinstance(cost, CostProvider) else make_cost_provider(cost)
     gpu, dla = jetson_orin_engines(constraints_dla=DLA_ANALOGUE_CONSTRAINTS)
     cfg = Pix2PixConfig(img_size=img, base=base, deconv_mode="cropping", norm=norm)
     gen = Pix2PixGenerator(cfg)
-    sm_pix = pix2pix_staged(cfg, {"generator": gen.init(jax.random.key(seed))})
+    sm_pix = pix2pix_staged(cfg, {"generator": gen.init(jax.random.key(seed))}, granularity=granularity)
     ycfg = YOLOv8Config(img_size=img)
     ym = YOLOv8(ycfg)
-    sm_yolo = yolo_staged(ycfg, ym.init(jax.random.key(seed + 1)))
-    plan = nmodel_schedule([sm_pix.graph, sm_yolo.graph], [dla, gpu], provider=provider, search=search)
+    sm_yolo = yolo_staged(ycfg, ym.init(jax.random.key(seed + 1)), granularity=granularity)
+    plan = nmodel_schedule(
+        [sm_pix.graph, sm_yolo.graph], [dla, gpu], provider=provider, search=search, stride=stride
+    )
     streams = [StreamSpec(f"mri-{i}", 0) for i in range(n_pix)] + [
         StreamSpec(f"det-{i}", 1) for i in range(n_yolo)
     ]

@@ -7,7 +7,12 @@ binding), fed by K bounded per-stream frame queues. The executor consumes
 *only* the typed ``core.plan_ir.PlanIR`` — scheduler results
 (``NModelPlan``, ``HaxConnResult``) and legacy ``ModelRoute`` lists are
 normalized to an IR at construction, and nothing downstream reaches into
-scheduler internals. One *tick* is one steady-state cycle in two phases:
+scheduler internals. Plan spans are *layer* indices: on fine-granularity
+(expanded-graph) models the ``StagedModel`` maps each span to its
+sub-block stage executables (``op_spans``), so cuts inside composite
+blocks stage and run exactly like coarse cuts — spans that don't land on
+stage boundaries are rejected at staging time. One *tick* is one
+steady-state cycle in two phases:
 
   * **issue** — every in-flight frame advances exactly one route segment
     (deepest stage first — the double-buffered counter-phase), then each
@@ -162,7 +167,7 @@ class StreamExecutor:
         ir = _as_plan_ir(plan, engine_names)
         if len(models) != ir.n_models:
             raise ValueError(f"{len(models)} models but plan routes {ir.n_models}")
-        ir.validate_against([len(m.ops) for m in models])
+        ir.validate_against([m.n_layers for m in models])
         for s in streams:
             if not 0 <= s.model_index < len(models):
                 raise ValueError(f"stream {s.name} references unknown model {s.model_index}")
@@ -262,7 +267,7 @@ class StreamExecutor:
             raise ValueError(
                 f"swap needs {new_ir.n_engines} engines but executor has {len(self.place_fns)}"
             )
-        new_ir.validate_against([len(m.ops) for m in self.models])
+        new_ir.validate_against([m.n_layers for m in self.models])
         rev = self.plan.revision + 1
         self.plan = new_ir.with_revision(rev)
         self.swap_events.append(
@@ -286,7 +291,7 @@ class StreamExecutor:
         segment executions warmed; silently skips models that have not
         seen a frame yet.
         """
-        new_ir.validate_against([len(m.ops) for m in self.models])
+        new_ir.validate_against([m.n_layers for m in self.models])
         warmed = 0
         for mi, segs in enumerate(new_ir.segments):
             model = self.models[mi]

@@ -36,6 +36,42 @@ class TickStats:
         return max(0.0, 1.0 - self.blocked_s / self.wall_s)
 
 
+@dataclasses.dataclass(frozen=True)
+class SwapStall:
+    """Hot-path cost of one plan hot-swap.
+
+    ``prepare_s`` is the segment-executable warmup (compile + first
+    execution on zero states); ``background=True`` means it ran in the
+    replanner's worker thread, so only ``swap_s`` stalled the tick
+    thread. This is the number that decides whether ``prepare_plan``
+    belongs in the worker on a given backend (compile times dominate on
+    real accelerators)."""
+
+    tick: int
+    prepare_s: float
+    swap_s: float
+    background: bool
+
+    @property
+    def hot_path_s(self) -> float:
+        """Time the executor's tick thread was stalled by this swap."""
+        return self.swap_s + (0.0 if self.background else self.prepare_s)
+
+
+def swap_stall_summary(stalls: list[SwapStall]) -> dict:
+    """Aggregate swap-stall accounting for one serving run."""
+    if not stalls:
+        return {"swaps": 0, "hot_path_stall_ms": 0.0, "hot_path_stall_max_ms": 0.0,
+                "prepare_ms": 0.0, "background_prepares": 0}
+    return {
+        "swaps": len(stalls),
+        "hot_path_stall_ms": sum(s.hot_path_s for s in stalls) * 1e3,
+        "hot_path_stall_max_ms": max(s.hot_path_s for s in stalls) * 1e3,
+        "prepare_ms": sum(s.prepare_s for s in stalls) * 1e3,
+        "background_prepares": sum(s.background for s in stalls),
+    }
+
+
 def overlap_summary(ticks: list[TickStats]) -> dict:
     """Aggregate per-tick overlap efficiency for one serving run."""
     if not ticks:

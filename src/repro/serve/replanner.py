@@ -28,20 +28,28 @@ closes the loop:
      ``executor.swap_plan`` installs the plan at the frame boundary:
      in-flight frames finish on their admitted routes, zero drops.
 
-``background=True`` runs step 3 in a worker thread on a snapshot of the
-scales — the hot loop only pays for the swap itself; the default is
-synchronous for deterministic tests. Attach to any ``StreamExecutor``
-via ``attach`` (sets ``profile_every``, ``on_segment``, ``on_tick``).
+``background=True`` runs step 3 *and* the ``prepare_plan`` warmup in a
+worker thread on a snapshot of the scales — the hot loop only pays for
+the swap itself (compile times dominate the stall on real accelerators);
+the default is synchronous for deterministic tests. Either way the
+per-swap hot-path stall is recorded as a ``metrics.SwapStall`` and
+folded into ``summary()``. An ``OnlineCost`` whose scales were
+warm-started from a calibration JSON (``--calibration-cache``) seeds the
+drift baseline immediately — no warmup ticks needed after a restart.
+Attach to any ``StreamExecutor`` via ``attach`` (sets ``profile_every``,
+``on_segment``, ``on_tick``).
 """
 from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from typing import Sequence
 
 from ..core.cost_model import ANALYTIC, CostProvider, OnlineCost
 from ..core.scheduler import nmodel_schedule
 from .executor import SegmentObservation, StreamExecutor
+from .metrics import SwapStall, swap_stall_summary
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,7 +65,8 @@ class ReplanConfig:
     profile_every: int = 2  # executor segment-profiling cadence (ticks)
     search: str = "auto"  # planner search mode for re-plans
     beam_width: int = 64
-    background: bool = False  # plan in a worker thread (off the hot path)
+    stride: int = 1  # candidate cut-point stride (match the initial plan's)
+    background: bool = False  # plan + prepare in a worker thread (off the hot path)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,7 +106,12 @@ class Replanner:
             self.online = OnlineCost(base_provider or ANALYTIC, alpha=self.config.ema_alpha)
         self.allow_fallback = allow_fallback
         self.events: list[ReplanEvent] = []
+        self.swap_stalls: list[SwapStall] = []
         self._baseline: dict[str, float] = {}  # calibration snapshot of scales
+        if self.online.calibrated([e.name for e in self.engines]):
+            # warm-started scales (e.g. loaded from a calibration JSON):
+            # baseline immediately instead of waiting out warmup_obs ticks
+            self._baseline = self.online.snapshot()
         self._obs_count: dict[str, int] = {}
         self._tick_acc: dict[str, list[float]] = {}  # engine -> [wall, expected]
         self._above = 0  # consecutive drifting ticks (hysteresis counter)
@@ -188,6 +202,16 @@ class Replanner:
         self._fold_tick()
         self._rebaseline()
 
+    def load_calibration(self, path: str) -> "Replanner":
+        """Warm-start from a persisted calibration (``--calibration-cache``):
+        restore the per-engine EMA state into the ``OnlineCost`` and, when
+        it covers every engine, seed the drift baseline from it — works
+        regardless of which base provider the online calibrator wraps."""
+        self.online.load_calibration(path)
+        if self.online.calibrated([e.name for e in self.engines]):
+            self._baseline = self.online.snapshot()
+        return self
+
     # -- the control loop ---------------------------------------------------
 
     def _plan(self, online: OnlineCost):
@@ -198,6 +222,7 @@ class Replanner:
             provider=online,
             search=self.config.search,
             beam_width=self.config.beam_width,
+            stride=self.config.stride,
         )
 
     def _score_fixed(self, partitions, online: OnlineCost) -> float:
@@ -248,7 +273,14 @@ class Replanner:
             def job():
                 plan = self._plan(online)
                 old_cycle = self._score_fixed(cur, online)
-                self._job_result.append((plan, old_cycle, dict(d)))
+                # warm the candidate plan's segment executables here, in
+                # the worker — compilation stays off the tick thread; the
+                # warmup is harmless if the swap is later rejected (it
+                # only seeds executable caches)
+                t0 = time.perf_counter()
+                executor.prepare_plan(plan.ir)
+                prepare_s = time.perf_counter() - t0
+                self._job_result.append((plan, old_cycle, dict(d), prepare_s))
 
             self._job = threading.Thread(target=job, daemon=True)
             self._job.start()
@@ -258,15 +290,30 @@ class Replanner:
         old_cycle = self._score_fixed(executor.plan.partitions, online)
         return self._finish(executor, plan, old_cycle, dict(d))
 
-    def _finish(self, executor: StreamExecutor, plan, old_cycle: float, drift) -> ReplanEvent:
+    def _finish(
+        self, executor: StreamExecutor, plan, old_cycle: float, drift, prepare_s: float | None = None
+    ) -> ReplanEvent:
         cfg = self.config
+        background = prepare_s is not None
         old_partitions = tuple(executor.plan.partitions)
         improves = plan.cycle_time < old_cycle * (1.0 - cfg.min_improvement)
         changes = tuple(plan.ir.partitions) != old_partitions
         swapped = improves and changes
         if swapped:
-            executor.prepare_plan(plan.ir)
+            if not background:
+                t0 = time.perf_counter()
+                executor.prepare_plan(plan.ir)
+                prepare_s = time.perf_counter() - t0
+            t0 = time.perf_counter()
             executor.swap_plan(plan.ir)
+            self.swap_stalls.append(
+                SwapStall(
+                    tick=executor.tick_count,
+                    prepare_s=prepare_s,
+                    swap_s=time.perf_counter() - t0,
+                    background=background,
+                )
+            )
             self._last_swap_tick = executor.tick_count
             self._rebaseline()
         else:
@@ -298,6 +345,7 @@ class Replanner:
             "drift": self.drift(),
             "replans": len(self.events),
             "swaps": sum(e.swapped for e in self.events),
+            "swap_stall": swap_stall_summary(self.swap_stalls),
             "events": [
                 {
                     "tick": e.tick,

@@ -120,17 +120,39 @@ def test_measured_covers_elementwise_kinds(tiny_graph, engines):
         assert mc.layer_time(l, dla) > 0.0
 
 
-def test_measured_composite_kinds_stay_analytic(yolo_graph, engines):
-    """Composite graph-level kinds (c2f/sppf/head) keep analytic numbers —
-    blended falls back there, and coverage reports the gap."""
+def test_measured_composites_covered_via_expansion(yolo_graph, engines):
+    """Composite graph-level kinds (c2f/sppf/head) are measured through
+    their primitive decomposition: YOLO coverage reaches 1.0 (the old
+    composite gap is closed) and a composite's time is the sum of its
+    primitives' measured times."""
     gpu, _ = engines
     mc = MeasuredCost()
     composite = [l for l in yolo_graph if l.kind in ("c2f", "sppf", "head")]
     assert composite
     for l in composite:
-        assert not mc.available(l)
-        assert mc.layer_time(l, gpu) == layer_time(l, gpu)
-    assert 0.0 < mc.coverage(yolo_graph) < 1.0
+        assert l.is_composite
+        assert mc.available(l)
+    assert mc.coverage(yolo_graph) == 1.0
+    # a composite whose decomposition contains an unmeasurable primitive
+    # falls back to the analytic roofline (and blended keeps working)
+    broken = composite[0].clone()
+    broken.sublayers = [broken.sublayers[0].clone(kind="other")]
+    assert not mc.available(broken)
+    assert mc.layer_time(broken, gpu) == layer_time(broken, gpu)
+
+
+def test_measured_composite_time_is_sum_of_primitives(engines):
+    """On a CPU-sized graph, actually lower one c2f block: the composite's
+    measured time equals the sum over its sublayers."""
+    from repro.models import YOLOv8, YOLOv8Config
+
+    gpu, _ = engines
+    g = YOLOv8(YOLOv8Config(img_size=32)).layer_graph()
+    c2f = next(l for l in g if l.kind == "c2f")
+    mc = MeasuredCost()
+    total = mc.layer_time(c2f, gpu)
+    assert total == pytest.approx(sum(mc.layer_time(p, gpu) for p in c2f.sublayers))
+    assert total > 0.0
 
 
 def test_blended_falls_back_to_analytic(tiny_graph, engines):

@@ -1,0 +1,475 @@
+"""The hierarchical layer graph: composite expansion for fine-grained
+planning, measurement, and execution.
+
+Pins the refactor's load-bearing guarantees:
+  (a) ``expand()``/``flatten()`` conserve total flops/bytes/params and
+      carry a consistent index map back to the coarse nodes,
+  (b) cut legality: only stage-callable boundaries are candidate points
+      on expanded graphs, coarse boundaries remain a subset, and the
+      stride knob thins the set,
+  (c) ``MeasuredCost.coverage() == 1.0`` on both serving graphs (the
+      ROADMAP composite gap is closed),
+  (d) the fine-granularity planner's analytic cost is never worse than
+      the coarse plan re-scored at fine granularity, and the executed
+      outputs are bit-exact (eager) between a coarse cut and the same
+      cut expressed on the expanded graph,
+  (e) PlanIR segments round-trip their coarse spans through JSON,
+  (f) OnlineCost calibration persists to JSON and warm-starts a
+      Replanner, and swap stalls are recorded (background prepare keeps
+      the warmup off the hot path).
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro import core
+from repro.core.constraints import DLA_ANALOGUE_CONSTRAINTS
+from repro.core.cost_model import ANALYTIC, MeasuredCost, OnlineCost
+from repro.core.engine import jetson_orin_engines
+from repro.core.pipeline import stage_ops_from_graph
+from repro.core.plan_ir import PlanIR, make_plan_ir
+from repro.core.scheduler import nmodel_schedule
+from repro.models import Pix2PixConfig, Pix2PixGenerator, YOLOv8, YOLOv8Config
+from repro.serve import StreamExecutor, StreamSpec
+
+
+@pytest.fixture(scope="module")
+def engines():
+    gpu, dla = jetson_orin_engines(constraints_dla=DLA_ANALOGUE_CONSTRAINTS)
+    return gpu, dla
+
+
+@pytest.fixture(scope="module")
+def yolo_graph():
+    return YOLOv8(YOLOv8Config(img_size=256)).layer_graph()
+
+
+@pytest.fixture(scope="module")
+def pix_graph():
+    return Pix2PixGenerator(Pix2PixConfig(deconv_mode="cropping")).layer_graph()
+
+
+@pytest.fixture(scope="module")
+def staged_fine_pair():
+    cfg = Pix2PixConfig(img_size=32, base=8, deconv_mode="cropping")
+    gen = Pix2PixGenerator(cfg)
+    params = {"generator": gen.init(jax.random.key(0))}
+    sm_pix_c = core.pix2pix_staged(cfg, params)
+    sm_pix_f = core.pix2pix_staged(cfg, params, granularity="fine")
+    ycfg = YOLOv8Config(img_size=32)
+    yparams = YOLOv8(ycfg).init(jax.random.key(1))
+    sm_yolo_c = core.yolo_staged(ycfg, yparams)
+    sm_yolo_f = core.yolo_staged(ycfg, yparams, granularity="fine")
+    return (sm_pix_c, sm_yolo_c), (sm_pix_f, sm_yolo_f)
+
+
+# ---- expansion: conservation + index maps ----------------------------------
+
+
+def test_expansion_conserves_totals(yolo_graph, pix_graph):
+    for g in (yolo_graph, pix_graph):
+        eg = g.expand()
+        assert eg.total_flops() == pytest.approx(g.total_flops())
+        assert eg.total_bytes() == pytest.approx(g.total_bytes())
+        assert eg.total_params() == g.total_params()
+    # yolo genuinely decomposes; pix is already primitive-only
+    assert len(yolo_graph.expand()) > len(yolo_graph)
+    assert len(pix_graph.expand()) == len(pix_graph)
+    # flatten is the primitive-only alias
+    assert [l.name for l in yolo_graph.flatten()] == [l.name for l in yolo_graph.expand()]
+    assert all(not l.is_composite for l in yolo_graph.flatten())
+
+
+def test_expansion_index_maps_consistent(yolo_graph):
+    eg = yolo_graph.expand()
+    assert len(eg.coarse_of) == len(eg)
+    pos = 0
+    for ci, (lo, hi) in enumerate(eg.spans):
+        assert lo == pos and hi > lo
+        assert all(eg.coarse_of[i] == ci for i in range(lo, hi))
+        pos = hi
+    assert pos == len(eg)
+    # coarse cut points map onto legal fine cut points
+    fine_pts = set(eg.cut_points())
+    for p in range(1, len(yolo_graph)):
+        assert eg.fine_cut(p) in fine_pts
+    # coarse_span round-trips a whole coarse node
+    for ci, (lo, hi) in enumerate(eg.spans):
+        assert eg.coarse_span(lo, hi) == (ci, ci + 1)
+
+
+def test_per_node_totals_match_decomposition(yolo_graph):
+    for l in yolo_graph:
+        prims = l.primitives()
+        assert l.flops == pytest.approx(sum(p.flops for p in prims))
+        assert l.bytes_accessed == pytest.approx(sum(p.bytes_accessed for p in prims))
+        assert l.params == sum(p.params for p in prims)
+
+
+def test_interior_cuts_charge_live_skip_tensors(yolo_graph):
+    """Inside c2f, the accumulated bottleneck outputs stay live: an
+    interior boundary must cost more than the flowing activation alone."""
+    import math
+
+    c2f = next(l for l in yolo_graph if l.kind == "c2f")
+    adds = [p for p in c2f.sublayers if p.name.endswith(".add")]
+    assert adds, "expected a shortcut bottleneck inside the backbone c2f"
+    flowing = 2 * math.prod(adds[0].out_shape)  # dtype_bytes=2
+    assert adds[0].boundary_bytes > flowing  # live outs charged on top
+    # the composite's exit boundary matches the coarse accounting
+    assert c2f.sublayers[-1].boundary_bytes == pytest.approx(c2f.boundary_bytes)
+
+
+# ---- legality mask + stride knob -------------------------------------------
+
+
+def test_cut_legality_and_stride(yolo_graph):
+    eg = yolo_graph.expand()
+    pts = eg.cut_points()
+    # strictly fewer candidates than interior points: interior primitives
+    # of a fused stage refuse cuts...
+    assert 0 < len(pts) < len(eg) - 1
+    # ...e.g. never between a conv and its bn
+    for p in pts:
+        assert eg[p - 1].cut_after
+        assert not eg[p - 1].name.endswith(".conv")
+    # but strictly more candidates than the coarse graph exposes
+    assert len(pts) > len(yolo_graph) - 1
+    # stride thins the legal set, keeping legality
+    strided = eg.cut_points(stride=4)
+    assert strided == pts[::4]
+    # coarse graphs: every interior point remains legal (seed behavior)
+    assert yolo_graph.cut_points() == list(range(1, len(yolo_graph)))
+
+
+def test_fine_staged_ops_align_with_stage_boundaries(staged_fine_pair):
+    (_, _), (_, sm_yolo_f) = staged_fine_pair
+    assert sm_yolo_f.op_spans is not None
+    assert sm_yolo_f.n_layers == len(sm_yolo_f.graph) > len(sm_yolo_f.ops) > 19
+    # every legal cut maps to an op boundary; an illegal one raises
+    for p in sm_yolo_f.graph.cut_points():
+        olo, ohi = sm_yolo_f.op_range(0, p)
+        assert olo == 0 and 0 < ohi <= len(sm_yolo_f.ops)
+    conv_interior = next(
+        p for p in range(1, sm_yolo_f.n_layers) if not sm_yolo_f.graph[p - 1].cut_after
+    )
+    with pytest.raises(ValueError):
+        sm_yolo_f.op_range(0, conv_interior)
+    # stage_ops_from_graph refuses graphs without stage callables
+    with pytest.raises(ValueError):
+        stage_ops_from_graph(Pix2PixGenerator(Pix2PixConfig(img_size=8, base=4)).layer_graph())
+
+
+# ---- measured coverage (ROADMAP item) --------------------------------------
+
+
+def test_measured_coverage_is_complete(yolo_graph, pix_graph):
+    mc = MeasuredCost()
+    assert mc.coverage(pix_graph) == 1.0
+    assert mc.coverage(yolo_graph) == 1.0  # composites measured via expansion
+    assert mc.coverage(yolo_graph.expand()) == 1.0
+
+
+# ---- fine plan >= coarse plan, executed bit-exactly ------------------------
+
+
+def test_fine_plan_cost_never_worse_than_coarse(engines, yolo_graph, pix_graph):
+    """The fine planner searches a superset of the coarse cut points, so
+    its analytic cost is <= the coarse plan re-scored on the expanded
+    graphs (the acceptance bar for the granularity refactor)."""
+    gpu, dla = engines
+    coarse = nmodel_schedule([pix_graph, yolo_graph], [dla, gpu])
+    fine_graphs = [pix_graph.expand(), yolo_graph.expand()]
+    fine = nmodel_schedule(fine_graphs, [dla, gpu])
+    rescored = nmodel_schedule(
+        fine_graphs,
+        [dla, gpu],
+        fixed=tuple(g.fine_cut(p) for g, p in zip(fine_graphs, coarse.partitions)),
+    )
+    assert fine.cycle_time <= rescored.cycle_time
+    # the IR reports the fine cuts in coarse terms
+    for segs, g in zip(fine.ir.segments, fine_graphs):
+        for s in segs:
+            assert s.coarse_span == g.coarse_span(s.lo, s.hi)
+
+
+def test_coarse_cut_bit_exact_on_expanded_graph(engines, staged_fine_pair):
+    """The same physical cut executed at coarse granularity and expressed
+    on the expanded graph produces bit-identical outputs (eager)."""
+    (_, sm_yolo_c), (_, sm_yolo_f) = staged_fine_pair
+    eg = sm_yolo_f.graph
+    p_coarse = len(sm_yolo_c.graph) // 2
+    p_fine = eg.fine_cut(p_coarse)
+    ir_c = make_plan_ir(
+        (sm_yolo_c.name,), ("con", "flex"),
+        [[(0, 0, p_coarse, 0.0), (1, p_coarse, sm_yolo_c.n_layers, 0.0)]],
+    )
+    ir_f = make_plan_ir(
+        (sm_yolo_f.name,), ("con", "flex"),
+        [[(0, 0, p_fine, 0.0), (1, p_fine, sm_yolo_f.n_layers, 0.0)]],
+        graphs=(eg,),
+    )
+    frames = [jax.random.normal(jax.random.key(i), (1, 32, 32, 3)) for i in range(3)]
+
+    def run(sm, ir):
+        ex = StreamExecutor([sm], ir, [StreamSpec("det", 0)], max_queue=8, jit_segments=False)
+        for f in frames:
+            assert ex.submit(0, f)
+            ex.tick()
+        return ex.run_until_drained()["det"]
+
+    outs_c, outs_f = run(sm_yolo_c, ir_c), run(sm_yolo_f, ir_f)
+    for a, b in zip(outs_c, outs_f):
+        for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_fine_plan_executes_with_outputs_equal_to_coarse(engines, staged_fine_pair):
+    """End-to-end acceptance: the planned fine cut points (inside
+    composites) run through the executor with outputs bit-equal (eager)
+    to the coarse plan's on the YOLO+Pix2Pix pair."""
+    gpu, dla = engines
+    (sm_pix_c, sm_yolo_c), (sm_pix_f, sm_yolo_f) = staged_fine_pair
+    plan_c = nmodel_schedule([sm_pix_c.graph, sm_yolo_c.graph], [dla, gpu])
+    plan_f = nmodel_schedule([sm_pix_f.graph, sm_yolo_f.graph], [dla, gpu])
+    assert plan_f.cycle_time <= plan_c.cycle_time
+    # the interesting case: the fine planner picked a yolo cut strictly
+    # inside a composite (not expressible on the coarse graph)
+    coarse_boundaries = {sm_yolo_f.graph.fine_cut(p) for p in range(len(sm_yolo_c.graph) + 1)}
+    assert plan_f.partitions[1] not in coarse_boundaries
+    streams = [StreamSpec("mri", 0), StreamSpec("det", 1)]
+    frames = [jax.random.normal(jax.random.key(i), (1, 32, 32, 3)) for i in range(3)]
+
+    def run(models, plan):
+        ex = StreamExecutor(models, plan, streams, max_queue=8, jit_segments=False)
+        for f in frames:
+            assert ex.submit(0, f) and ex.submit(1, f)
+            ex.tick()
+        return ex.run_until_drained()
+
+    outs_c = run([sm_pix_c, sm_yolo_c], plan_c)
+    outs_f = run([sm_pix_f, sm_yolo_f], plan_f)
+    for k in ("mri", "det"):
+        for a, b in zip(outs_c[k], outs_f[k]):
+            for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+                np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# ---- PlanIR coarse spans ----------------------------------------------------
+
+
+def test_plan_ir_coarse_spans_roundtrip(yolo_graph):
+    eg = yolo_graph.expand()
+    p = eg.fine_cut(5) + 2  # a cut inside coarse node 5
+    while not eg[p - 1].cut_after:
+        p += 1
+    ir = make_plan_ir(
+        ("yolo",), ("E0", "E1"), [[(0, 0, p, 1.0), (1, p, len(eg), 2.0)]], graphs=(eg,)
+    )
+    seg0, seg1 = ir.segments[0]
+    assert seg0.coarse_span == eg.coarse_span(0, p)
+    assert seg1.coarse_span == eg.coarse_span(p, len(eg))
+    assert seg0.coarse_hi >= 6  # the cut is inside node 5, span covers it
+    rt = PlanIR.from_json(ir.to_json())
+    assert rt == ir
+    assert "~c[" in seg0.describe(("E0", "E1"))
+    # coarse-plan IRs stay unannotated (and old JSON still loads)
+    plain = make_plan_ir(("m",), ("E0",), [[(0, 0, 3, 0.0)]])
+    assert plain.segments[0][0].coarse_span is None
+    d = json.loads(plain.to_json())
+    for segs in d["segments"]:
+        for s in segs:
+            del s["coarse_lo"], s["coarse_hi"]
+    assert PlanIR.from_json(json.dumps(d)).segments[0][0].coarse_span is None
+
+
+def test_inefficiency_derate_applies_once_on_composites():
+    """Hierarchical metas surface one violation per mis-aligned primitive;
+    the roofline derate must apply once, not compound to 0.5^k."""
+    from repro.core.constraints import LaneAlignment
+    from repro.core.cost_model import INEFFICIENT_DERATE, layer_time
+    from repro.core.engine import EngineSpec
+    from repro.core.graph import LayerMeta
+
+    eng = EngineSpec("E", 1, 1e12, 1e18, 32e9, (LaneAlignment(128),))
+
+    def prim(i):
+        return LayerMeta(
+            idx=i, name=f"p{i}", kind="conv",
+            in_shape=(1, 8, 8, 192), out_shape=(1, 8, 8, 192),
+            flops=1e9, bytes_accessed=1.0,
+        )
+
+    comp = LayerMeta(
+        idx=0, name="c", kind="c2f",
+        in_shape=(1, 8, 8, 192), out_shape=(1, 8, 8, 192),
+        flops=4e9, bytes_accessed=4.0, sublayers=[prim(i) for i in range(4)],
+    )
+    assert len(eng.supports(comp)) == 5  # composite + 4 primitives
+    assert layer_time(comp, eng) == pytest.approx(4e9 / (1e12 * INEFFICIENT_DERATE))
+
+
+def test_replanner_replans_with_configured_stride():
+    """Drift-triggered re-plans must search the same thinned candidate set
+    the initial plan used (ReplanConfig.stride)."""
+    from repro.core.graph import LayerGraph, pointwise_meta
+    from repro.serve import ReplanConfig, Replanner
+
+    g = LayerGraph(
+        "toy",
+        [pointwise_meta(i, f"m{i}", "act", (1, 64), flops_per_elem=(i + 1) * 1e8 / 64) for i in range(10)],
+    ).renumber()
+    gpu, dla = jetson_orin_engines()
+    rp = Replanner([g], [dla, gpu], ReplanConfig(stride=3))
+    plan = rp._plan(rp._snapshot_online())
+    assert plan.partitions[0] in g.cut_points(stride=3)
+
+
+# ---- OnlineCost persistence + warm start (ROADMAP replanner item) ----------
+
+
+def test_online_calibration_roundtrip_and_warm_start(tmp_path, engines):
+    from repro.serve import Replanner
+
+    gpu, dla = engines
+    oc = OnlineCost(ANALYTIC, alpha=0.5)
+    oc.observe("GPU", 2.0, 1.0)
+    oc.observe("DLA", 3.0, 2.0)
+    path = str(tmp_path / "calib.json")
+    assert oc.save_calibration(path) == path
+    oc2 = OnlineCost(ANALYTIC, alpha=0.5).load_calibration(path)
+    assert oc2.snapshot() == oc.snapshot()
+    # further observations keep folding into the restored EMA state
+    oc.observe("GPU", 2.0, 1.0)
+    oc2.observe("GPU", 2.0, 1.0)
+    assert oc2.scale("GPU") == pytest.approx(oc.scale("GPU"))
+    # a Replanner over a warm-started OnlineCost is calibrated immediately
+    g = Pix2PixGenerator(Pix2PixConfig(img_size=16, base=4, deconv_mode="cropping")).layer_graph()
+    rp = Replanner([g], [dla, gpu], base_provider=oc2)
+    assert rp.calibrated
+    cold = Replanner([g], [dla, gpu], base_provider=OnlineCost(ANALYTIC))
+    assert not cold.calibrated
+    # ...and a replanner over any NON-online base provider can warm-start
+    # its internally wrapped OnlineCost from the same JSON
+    cold2 = Replanner([g], [dla, gpu], base_provider=ANALYTIC)
+    assert not cold2.calibrated
+    cold2.load_calibration(path)
+    assert cold2.calibrated
+    assert cold2.online.scale("GPU") == pytest.approx(oc.snapshot()["GPU"], rel=0.3)
+
+
+def test_make_cost_provider_warm_starts_online(tmp_path):
+    from repro.core.cost_model import make_cost_provider
+
+    oc = make_cost_provider("online")  # blended base, like the CLI flow
+    oc.observe("GPU", 2.0, 1.0)
+    path = str(tmp_path / "calib.json")
+    oc.save_calibration(path)
+    warm = make_cost_provider("online", calibration_path=path)
+    assert warm.scale("GPU") == pytest.approx(2.0)
+    missing = make_cost_provider("online", calibration_path=str(tmp_path / "nope.json"))
+    assert missing.snapshot() == {}
+    # scales are base-provider units: loading under a different base raises
+    with pytest.raises(ValueError, match="base provider"):
+        OnlineCost(ANALYTIC).load_calibration(path)
+
+
+# ---- swap stalls (ROADMAP replanner item) ----------------------------------
+
+
+def _toy_setup(background: bool):
+    from repro.core.graph import LayerGraph, pointwise_meta
+    from repro.core.pipeline import StagedModel
+    from repro.serve import ReplanConfig, Replanner
+
+    n = 6
+    ops = [(f"mul{i}", lambda p, s: {"x": s["x"] * 1.5 + 0.5}) for i in range(n)]
+    graph = LayerGraph(
+        "toy",
+        [pointwise_meta(i, f"mul{i}", "act", (1, 64), flops_per_elem=1e9 / 64) for i in range(n)],
+    ).renumber()
+    sm = StagedModel(
+        name="toy", ops=ops, params=None, graph=graph,
+        init_state=lambda x: {"x": x}, finalize=lambda s: s["x"],
+    )
+    from repro.core.engine import EngineSpec
+
+    engines = [EngineSpec("E0", 1, 1e12, 1e12, 32e9), EngineSpec("E1", 1, 2e12, 1e12, 32e9)]
+    plan = nmodel_schedule([sm.graph], engines)
+    rp = Replanner([sm.graph], engines, ReplanConfig(background=background))
+    ex = StreamExecutor([sm], plan, [StreamSpec("s", 0)], max_queue=8)
+    return sm, rp, ex, engines
+
+
+@pytest.mark.parametrize("background", [False, True])
+def test_swap_stall_recorded(background):
+    import jax.numpy as jnp
+
+    sm, rp, ex, engines = _toy_setup(background)
+    ex.submit(0, jnp.ones((1, 64)))
+    ex.tick()
+    # force a drifted plan through _finish directly (the detector path is
+    # pinned elsewhere); prepare must run off the tick thread only when
+    # the background worker supplied it
+    alt = nmodel_schedule([sm.graph], engines, fixed=(max(1, ex.plan.partitions[0] - 1),))
+    prepared = None
+    if background:
+        prepared = 0.01  # the worker's measured prepare time
+    ev = rp._finish(ex, alt, old_cycle=alt.cycle_time * 10, drift={"E0": 1.0}, prepare_s=prepared)
+    assert ev.swapped
+    assert len(rp.swap_stalls) == 1
+    st = rp.swap_stalls[0]
+    assert st.background is background
+    assert st.hot_path_s >= 0.0
+    if background:
+        assert st.prepare_s == pytest.approx(0.01)
+        assert st.hot_path_s == st.swap_s  # warmup stayed off the hot path
+    summ = rp.summary()["swap_stall"]
+    assert summ["swaps"] == 1
+    assert summ["background_prepares"] == (1 if background else 0)
+
+
+def test_background_replan_prepares_in_worker():
+    """End-to-end background path: the worker thread plans AND warms the
+    new segment executables; the harvested swap records a background
+    prepare (hot path pays only the swap)."""
+    import time as _time
+
+    from repro.serve import ReplanConfig, Replanner
+    from repro.serve.executor import SegmentObservation
+
+    sm, _, ex, engines = _toy_setup(False)
+    cfg = ReplanConfig(
+        drift_threshold=0.5, hysteresis=2, cooldown_ticks=2, warmup_obs=2,
+        min_improvement=0.01, background=True,
+    )
+    rp = Replanner([sm.graph], engines, cfg)
+
+    def feed(walls):
+        for eng, wall in walls.items():
+            seg = ex.plan.route(0)[eng]
+            rp.observe(
+                SegmentObservation(
+                    tick=ex.tick_count, model_index=0, stage=seg.stage, engine=seg.engine,
+                    lo=seg.lo, hi=seg.hi, wall_s=wall, batch=1, revision=ex.plan_revision,
+                )
+            )
+        return rp.maybe_replan(ex)
+
+    e0 = rp._expected_base(0, 0, *ex.plan.route(0)[0].span)
+    e1 = rp._expected_base(0, 1, *ex.plan.route(0)[1].span)
+    for _ in range(4):
+        assert feed({0: 100 * e0, 1: 100 * e1}) is None
+    assert rp.calibrated
+    # sustained 4x skew on E0: the detector launches a background worker
+    # (plan + prepare), then a later tick harvests and swaps
+    ev, deadline = None, _time.time() + 30.0
+    while ev is None and _time.time() < deadline:
+        ev = feed({0: 400 * e0, 1: 100 * e1})
+        _time.sleep(0.005)
+    assert ev is not None and ev.swapped
+    assert rp.swap_stalls and rp.swap_stalls[0].background
+    assert rp.swap_stalls[0].hot_path_s == rp.swap_stalls[0].swap_s
+    assert rp.summary()["swap_stall"]["background_prepares"] == 1
