@@ -170,6 +170,71 @@ def run_granularity_compare(
     return out
 
 
+def run_multicut_compare(
+    img: int, base: int, norm: str, frames: int, microbatch: int, cuts_list=(1, 2, 3)
+) -> dict:
+    """``max_cuts`` sweep on the Pix2Pix + YOLO serving pair.
+
+    Plans the same model pair at each cut budget and records the analytic
+    plan cost next to measured end-to-end FPS through the executor
+    (interleaved medians — container drift between back-to-back runs
+    easily exceeds the routing effect). The single-cut candidates are a
+    subset of every higher budget's and the planner polishes the best
+    single-cut vector inside the multi-cut space, so the analytic cycle
+    is never worse as ``max_cuts`` grows — the recorded ratios measure
+    how much of that headroom the executor realizes."""
+    from repro.core.constraints import DLA_ANALOGUE_CONSTRAINTS
+    from repro.core.engine import jetson_orin_engines
+    from repro.core.scheduler import nmodel_schedule
+    from repro.serve import build_pix_yolo_serving
+
+    gpu, dla = jetson_orin_engines(constraints_dla=DLA_ANALOGUE_CONSTRAINTS)
+    models, _, _, _ = build_pix_yolo_serving(img=img, base=base, n_pix=1, n_yolo=1, norm=norm)
+    graphs = [m.graph for m in models]
+    plans = {mc: nmodel_schedule(graphs, [dla, gpu], max_cuts=mc) for mc in cuts_list}
+
+    k = 2
+    for plan in plans.values():  # warm every plan's segment executables
+        run_point(models, plan, k, 1, img, microbatch, norm)
+    samples: dict[int, list[dict]] = {mc: [] for mc in cuts_list}
+    for _ in range(3):
+        for mc in cuts_list:
+            samples[mc].append(run_point(models, plans[mc], k, frames, img, microbatch, norm))
+    med = {
+        mc: sorted(rs, key=lambda r: r["aggregate_fps"])[len(rs) // 2]
+        for mc, rs in samples.items()
+    }
+    base_mc = cuts_list[0]
+    points = {
+        str(mc): {
+            "plan_cycle_ms": plans[mc].cycle_time * 1e3,
+            "cuts": [list(c) for c in plans[mc].cuts],
+            "planner_search": plans[mc].search,
+            "aggregate_fps": med[mc]["aggregate_fps"],
+            "latency_p50_ms": med[mc]["latency_p50_ms"],
+        }
+        for mc in cuts_list
+    }
+    best_mc = max(cuts_list, key=lambda mc: med[mc]["aggregate_fps"])
+    # the analytic ratio is keyed to the analytically-best budget — it
+    # records the planner's headroom (>= 1.0 by the never-worse
+    # guarantee) independently of which budget noisy measured FPS favors
+    analytic_best = min(cuts_list, key=lambda mc: plans[mc].cycle_time)
+    return {
+        "max_cuts": list(cuts_list),
+        "repeats": 3,
+        "pix_streams": k,
+        "points": points,
+        "best_max_cuts": best_mc,
+        "analytic_best_max_cuts": analytic_best,
+        "plan_cost_ratio": plans[base_mc].cycle_time / plans[analytic_best].cycle_time,
+        # measured ratio stays keyed to the FPS-best budget (container
+        # jitter can put it at 1 cut even when the analytic plan is
+        # cheaper — per-segment host dispatch is not free on CPU)
+        "fps_ratio": med[best_mc]["aggregate_fps"] / med[base_mc]["aggregate_fps"],
+    }
+
+
 def _movable_skew_engine(plan, graphs, engines):
     """Pick the perturbation target: the engine with the most *movable*
     planned work (current analytic occupancy minus the minimum any plan
@@ -372,6 +437,16 @@ def main():
         help="skip the coarse-vs-fine planning granularity comparison",
     )
     ap.add_argument(
+        "--skip-multicut-compare",
+        action="store_true",
+        help="skip the max_cuts (k-segment route) sweep",
+    )
+    ap.add_argument(
+        "--max-cuts-sweep",
+        default="1,2,3",
+        help="comma-separated cut budgets for the multi-cut comparison",
+    )
+    ap.add_argument(
         "--granularity-stride",
         type=int,
         default=1,
@@ -480,6 +555,25 @@ def main():
             f"(x{granularity_compare['fps_ratio']:.2f} measured)"
         )
 
+    multicut_compare = None
+    if not args.skip_multicut_compare:
+        cuts_list = tuple(int(x) for x in args.max_cuts_sweep.split(","))
+        multicut_compare = run_multicut_compare(
+            img, args.base, args.norm, max(frames, 8), args.microbatch, cuts_list
+        )
+        pts = multicut_compare["points"]
+        print(
+            "multicut compare: "
+            + "  ".join(
+                f"max_cuts={mc}: {pts[str(mc)]['plan_cycle_ms']:.3f} ms plan / "
+                f"{pts[str(mc)]['aggregate_fps']:.2f} FPS"
+                for mc in cuts_list
+            )
+            + f"  (best={multicut_compare['best_max_cuts']}, "
+            f"analytic x{multicut_compare['plan_cost_ratio']:.2f}, "
+            f"FPS x{multicut_compare['fps_ratio']:.2f})"
+        )
+
     replan_scenario = None
     if not args.skip_replan_scenario:
         replan_scenario = run_replan_scenario(img, args.base, args.norm, skew=args.skew)
@@ -514,6 +608,7 @@ def main():
         "overlap_efficiency": peak["overlap_efficiency"],
         "dispatch_compare": dispatch_compare,
         "granularity_compare": granularity_compare,
+        "multicut_compare": multicut_compare,
         "replan_scenario": replan_scenario,
         "results": results,
     }

@@ -89,6 +89,11 @@ def history_entry(candidate: dict) -> dict:
         rs = candidate["replan_scenario"]
         entry["replan_recovery_ratio"] = rs.get("recovery_ratio")
         entry["replan_swaps"] = rs.get("swaps")
+    if candidate.get("multicut_compare"):
+        mcc = candidate["multicut_compare"]
+        entry["multicut_best"] = mcc.get("best_max_cuts")
+        entry["multicut_plan_cost_ratio"] = mcc.get("plan_cost_ratio")
+        entry["multicut_fps_ratio"] = mcc.get("fps_ratio")
     return entry
 
 

@@ -55,6 +55,12 @@ def main():
         default="coarse",
         help="plan at composite-node or expanded (primitive) granularity",
     )
+    ap.add_argument(
+        "--max-cuts",
+        type=int,
+        default=1,
+        help="per-model cut budget: k-segment routes ping-pong each model across engines",
+    )
     args = ap.parse_args()
 
     provider = core.make_cost_provider(args.cost, cache_path=args.cost_cache)
@@ -65,15 +71,17 @@ def main():
     g_yolo = YOLOv8(YOLOv8Config(img_size=256)).layer_graph()
     if args.granularity == "fine":
         g_pix, g_yolo = g_pix.expand(), g_yolo.expand()
-    plan_full = core.nmodel_schedule([g_pix, g_yolo], [dla, gpu], provider=provider)
+    plan_full = core.nmodel_schedule(
+        [g_pix, g_yolo], [dla, gpu], provider=provider, max_cuts=args.max_cuts
+    )
     print(f"== planner (full-size graphs, {plan_full.cost_provider} cost, {plan_full.search} search) ==")
-    print(f"partitions: {plan_full.partitions}  cycle={plan_full.cycle_time*1e3:.2f} ms")
+    print(f"cuts: {plan_full.cuts}  cycle={plan_full.cycle_time*1e3:.2f} ms")
     print(plan_full.schedule.ascii_timeline())
 
     # executable view: small CPU-sized models, same machinery
     models, plan, streams, _ = build_pix_yolo_serving(
         img=args.img, n_pix=args.streams, n_yolo=args.yolo_streams, norm=args.norm,
-        cost=provider, granularity=args.granularity,
+        cost=provider, granularity=args.granularity, max_cuts=args.max_cuts,
     )
     if args.cost_cache and hasattr(provider, "save"):
         provider.save()  # measured AND blended both persist their timings

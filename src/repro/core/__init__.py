@@ -27,6 +27,7 @@ from .cost_model import (
     CostProvider,
     MeasuredCost,
     OnlineCost,
+    SegmentCostCache,
     balanced_partition_point,
     graph_time,
     layer_time,
@@ -34,11 +35,12 @@ from .cost_model import (
     segment_cost,
     transfer_time,
 )
-from .plan_ir import PlanIR, PlanSegment, ir_from_routes, make_plan_ir
+from .plan_ir import PlanIR, PlanSegment, ir_from_routes, make_plan_ir, translate_ir
 from .scheduler import (
     HaxConnResult,
     ModelRoute,
     NModelPlan,
+    RouteSpec,
     Schedule,
     haxconn_schedule,
     naive_schedule,

@@ -441,6 +441,40 @@ def graph_time(
     return segment_cost(graph, 0, len(graph), engine, peer, allow_fallback=allow_fallback, provider=provider)
 
 
+class SegmentCostCache:
+    """Memoized ``segment_cost``/``transfer_time`` keyed on spans.
+
+    The multi-cut planner evaluates the same (model, span, engine)
+    segment under thousands of candidate routes — any two routes sharing
+    a cut share the span on one side of it — so the planner's inner loop
+    is one dict lookup per segment instead of an O(span) re-walk. Keys
+    are (model_index, lo, hi, engine.name, allow_fallback); the provider
+    is fixed per cache (a re-plan under refreshed OnlineCost scales
+    builds a fresh cache, so stale timings can never leak into a plan).
+    """
+
+    def __init__(self, provider: CostProvider | None = None):
+        self.provider = provider or ANALYTIC
+        self._segments: dict[tuple, SegmentCost] = {}
+        self._transfers: dict[tuple, float] = {}
+
+    def segment(self, mi: int, graph: LayerGraph, lo: int, hi: int, engine, peer, allow_fallback) -> SegmentCost:
+        key = (mi, lo, hi, engine.name, allow_fallback)
+        c = self._segments.get(key)
+        if c is None:
+            c = segment_cost(graph, lo, hi, engine, peer, allow_fallback, provider=self.provider)
+            self._segments[key] = c
+        return c
+
+    def transfer(self, mi: int, graph: LayerGraph, p: int, engine) -> float:
+        key = (mi, p, engine.name)
+        x = self._transfers.get(key)
+        if x is None:
+            x = transfer_time(partition_boundary_bytes(graph, p), engine)
+            self._transfers[key] = x
+        return x
+
+
 def partition_boundary_bytes(graph: LayerGraph, p: int) -> float:
     """Bytes crossing a partition placed after layer p-1."""
     if p <= 0 or p >= len(graph):

@@ -52,7 +52,25 @@ class EngineSpec:
         Composite metas (hierarchical graphs) are checked through their
         primitive decomposition too: a ``c2f`` block containing one
         illegal primitive is illegal as a whole at coarse granularity —
-        the planner must expand it to route around the primitive."""
+        the planner must expand it to route around the primitive.
+
+        The result is memoized per (layer object, engine): the multi-cut
+        planner calls this on every layer of every candidate span, and
+        walking a composite's decomposition each time dominated planning
+        profiles. Keying on the object identity is sound because graph
+        rewrites (surgery, expansion) ``clone()`` metas rather than
+        mutating them in place; the cached entry pins the layer so a
+        recycled ``id`` can never alias a dead one. Callers must treat
+        the returned list as read-only."""
+        cache = self.__dict__.get("_supports_cache")
+        if cache is None:
+            cache = {}
+            # frozen dataclass: the cache is identity-keyed scratch state,
+            # not part of the spec's value (hash/eq are unaffected)
+            object.__setattr__(self, "_supports_cache", cache)
+        hit = cache.get(id(layer))
+        if hit is not None and hit[0] is layer:
+            return hit[1]
         out = []
         for c in self.constraints:
             v = c.check(layer)
@@ -60,6 +78,7 @@ class EngineSpec:
                 out.append(v)
         for sub in getattr(layer, "sublayers", None) or ():
             out.extend(self.supports(sub))
+        cache[id(layer)] = (layer, out)
         return out
 
 

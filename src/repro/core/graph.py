@@ -171,6 +171,21 @@ class ExpandedGraph(LayerGraph):
             raise ValueError(f"empty fine span [{lo},{hi})")
         return (self.coarse_of[lo], self.coarse_of[hi - 1] + 1)
 
+    def coarse_cut(self, fine_p: int) -> int | None:
+        """Coarse partition point whose expansion boundary is ``fine_p`` —
+        the inverse of :meth:`fine_cut` — or None when the fine cut falls
+        strictly inside a coarse node (not expressible coarsely)."""
+        if fine_p <= 0:
+            return 0
+        if fine_p >= len(self.layers):
+            return len(self.spans)
+        for c, (_, hi) in enumerate(self.spans):
+            if hi == fine_p:
+                return c + 1
+            if hi > fine_p:
+                return None
+        return None
+
 
 def _size(shape):
     return math.prod(shape)

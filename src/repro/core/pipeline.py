@@ -107,6 +107,36 @@ class StagedModel:
             )
         return self._jit_cache[key]
 
+    def check_route(self, spans) -> None:
+        """Validate that an arbitrary span list tiles [0, n_layers) on
+        stage-executable boundaries — the staging precondition for a
+        k-segment route. Raises ``ValueError`` with the offending span
+        otherwise (gaps, overlaps, short coverage, or a cut inside a
+        fused stage callable)."""
+        pos = 0
+        for lo, hi in spans:
+            if lo != pos or hi <= lo:
+                raise ValueError(
+                    f"{self.name}: route spans must tile the graph contiguously; "
+                    f"got [{lo},{hi}) at layer {pos}"
+                )
+            self.op_range(lo, hi)  # stage-boundary legality
+            pos = hi
+        if pos != self.n_layers:
+            raise ValueError(
+                f"{self.name}: route covers [0,{pos}) but the model has {self.n_layers} layers"
+            )
+
+    def run_route(self, x, spans):
+        """Execute an arbitrary (validated) multi-segment route eagerly —
+        the per-model reference the multi-cut equivalence tests pin
+        against ``run_all``."""
+        self.check_route(spans)
+        state = self.init_state(x)
+        for lo, hi in spans:
+            state = self.run_segment(state, lo, hi)
+        return self.finalize(state)
+
     def run_all(self, x):
         return self.finalize(self.run_segment(self.init_state(x), 0, self.n_layers))
 

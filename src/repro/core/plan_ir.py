@@ -75,6 +75,12 @@ class PlanIR:
     search: str = "none"
     kind: str = "manual"  # haxconn | nmodel | standalone | naive | manual
     revision: int = 0  # bumped on every hot-swap
+    # the cut budget the search ran with (0 = unrecorded — legacy plans /
+    # hand-built IRs fall back to the realized cut count). Distinct from
+    # cut_counts: a max_cuts=2 search whose optimum is single-cut still
+    # carries budget 2, so a re-planner inheriting the incumbent's
+    # granularity keeps the full search space.
+    cut_budget: int = 0
 
     def __post_init__(self):
         if len(self.segments) != len(self.models):
@@ -117,6 +123,32 @@ class PlanIR:
         """First-stage boundary per model (the planner's partition point)."""
         return [segs[0].hi for segs in self.segments]
 
+    @property
+    def cuts(self) -> tuple[tuple[int, ...], ...]:
+        """Full per-model cut vectors (interior segment boundaries)."""
+        return tuple(tuple(s.hi for s in segs[:-1]) for segs in self.segments)
+
+    @property
+    def cut_counts(self) -> tuple[int, ...]:
+        """Cuts per model route — the plan's multi-cut metadata."""
+        return tuple(len(segs) - 1 for segs in self.segments)
+
+    @property
+    def max_cuts(self) -> int:
+        """The plan's cut budget: the recorded search budget when the
+        emitting scheduler set one, else the realized cut count (1 floor,
+        so a re-planner inheriting the incumbent's granularity never
+        degenerates to uncuttable single-segment planning)."""
+        return self.cut_budget or max(1, max(self.cut_counts))
+
+    def route_specs(self) -> list[tuple[tuple[int, ...], tuple[int, ...]]]:
+        """Per-model ``(cuts, engines)`` pairs — the scheduler's ``fixed=``
+        form, used to re-score or pin an incumbent plan route-for-route."""
+        return [
+            (tuple(s.hi for s in segs[:-1]), tuple(s.engine for s in segs))
+            for segs in self.segments
+        ]
+
     def route(self, model_index: int) -> tuple[PlanSegment, ...]:
         return self.segments[model_index]
 
@@ -141,7 +173,7 @@ class PlanIR:
     def describe(self) -> str:
         lines = [
             f"PlanIR[{self.kind}] rev={self.revision} cycle={self.expected_cycle * 1e3:.3f}ms "
-            f"cost={self.cost_provider} search={self.search}"
+            f"cost={self.cost_provider} search={self.search} cuts={list(self.cut_counts)}"
         ]
         for mi, segs in enumerate(self.segments):
             spans = " -> ".join(
@@ -177,6 +209,7 @@ class PlanIR:
                 "search": self.search,
                 "kind": self.kind,
                 "revision": self.revision,
+                "cut_budget": self.cut_budget,
             },
             indent=2,
         )
@@ -209,6 +242,7 @@ class PlanIR:
             search=d.get("search", "none"),
             kind=d.get("kind", "manual"),
             revision=int(d.get("revision", 0)),
+            cut_budget=int(d.get("cut_budget", 0)),
         )
 
 
@@ -221,6 +255,7 @@ def make_plan_ir(
     search: str = "none",
     kind: str = "manual",
     graphs: Sequence | None = None,
+    cut_budget: int = 0,
 ) -> PlanIR:
     """Build a PlanIR from per-model ``(engine, lo, hi[, expected_cost])``
     span lists — the one constructor every scheduler emit path goes
@@ -260,6 +295,34 @@ def make_plan_ir(
         cost_provider=cost_provider,
         search=search,
         kind=kind,
+        cut_budget=cut_budget,
+    )
+
+
+def translate_ir(ir: PlanIR, graphs) -> PlanIR:
+    """Re-index a coarse-granularity plan onto expanded graphs.
+
+    Each segment's coarse span [lo, hi) becomes the fine span
+    ``[fine_cut(lo), fine_cut(hi))`` of the matching ``ExpandedGraph`` —
+    the staging-compatible form when the executor's models were staged at
+    fine granularity but the plan was made on the coarse graphs (the
+    cheap-planning / escalate-on-drift deployment). Expected costs carry
+    over unchanged: they remain in the scoring provider's coarse units,
+    which the re-planning runtime never compares against directly."""
+    spans = [
+        [(s.engine, g.fine_cut(s.lo), g.fine_cut(s.hi), s.expected_cost) for s in segs]
+        for segs, g in zip(ir.segments, graphs)
+    ]
+    return make_plan_ir(
+        ir.models,
+        ir.engine_names,
+        spans,
+        expected_cycle=ir.expected_cycle,
+        cost_provider=ir.cost_provider,
+        search=ir.search,
+        kind=ir.kind,
+        graphs=graphs,
+        cut_budget=ir.cut_budget,
     )
 
 

@@ -31,6 +31,7 @@ from .cost_model import (
     ANALYTIC,
     CostProvider,
     SegmentCost,
+    SegmentCostCache,
     balanced_partition_point,
     graph_time,
     partition_boundary_bytes,
@@ -311,28 +312,83 @@ def haxconn_schedule(
 # ---------------------------------------------------------------------------
 
 
+@dataclasses.dataclass(frozen=True)
+class RouteSpec:
+    """A candidate per-model route: strictly increasing interior ``cuts``
+    plus the engine index of each resulting segment
+    (``len(engines) == len(cuts) + 1``).
+
+    The single-cut specialization ``RouteSpec((p,), (i % E, (i+1) % E))``
+    is exactly the legacy counter-phased pair that reduces to the
+    HaX-CoNN swap schedule at N=2, E=2; multi-cut routes ping-pong a
+    model across the engines at up to ``max_cuts`` boundaries."""
+
+    cuts: tuple[int, ...]
+    engines: tuple[int, ...]
+
+    def __post_init__(self):
+        if len(self.engines) != len(self.cuts) + 1:
+            raise ValueError(
+                f"route with {len(self.cuts)} cuts needs {len(self.cuts) + 1} "
+                f"segment engines, got {len(self.engines)}"
+            )
+        if any(b <= a for a, b in zip(self.cuts, self.cuts[1:])):
+            raise ValueError(f"route cuts must be strictly increasing, got {self.cuts}")
+
+    @property
+    def n_cuts(self) -> int:
+        return len(self.cuts)
+
+    def segments(self, n_layers: int) -> list[tuple[int, int, int]]:
+        """The (engine_index, lo, hi) segment list this route induces."""
+        bounds = (0,) + self.cuts + (n_layers,)
+        return [(e, bounds[j], bounds[j + 1]) for j, e in enumerate(self.engines)]
+
+
+def _as_route_spec(entry, i: int, n_engines: int) -> RouteSpec:
+    """Normalize a ``fixed=`` entry: a bare int is the legacy single cut
+    with the counter-phased engine pair; ``(cuts, engines)`` tuples and
+    ``RouteSpec``s pass through (validated)."""
+    if isinstance(entry, RouteSpec):
+        spec = entry
+    elif isinstance(entry, int):
+        spec = RouteSpec((entry,), _model_pair(i, n_engines))
+    else:
+        cuts, engines = entry
+        spec = RouteSpec(tuple(int(c) for c in cuts), tuple(int(e) for e in engines))
+    if any(not 0 <= e < n_engines for e in spec.engines):
+        raise ValueError(f"route {spec} binds an unknown engine (E={n_engines})")
+    return spec
+
+
 @dataclasses.dataclass
 class ModelRoute:
     """Per-model execution route: ordered (engine_index, lo, hi) segments
-    covering [0, L). Model i's pair under E engines is
-    (i % E, (i+1) % E) — the counter-phased assignment that reduces to the
-    HaX-CoNN swap schedule at N=2, E=2."""
+    covering [0, L). ``partition`` is the first cut (the legacy planner's
+    single partition point); ``cuts`` records the full k-cut vector."""
 
     model: str
     partition: int
     segments: list[tuple[int, int, int]]  # (engine_index, lo, hi)
+    cuts: tuple[int, ...] | None = None
+
+    def __post_init__(self):
+        if self.cuts is None:
+            self.cuts = tuple(hi for _, _, hi in self.segments[:-1])
 
 
 @dataclasses.dataclass
 class NModelPlan:
     schedule: Schedule
     routes: list[ModelRoute]
-    partitions: list[int]
+    partitions: list[int]  # first cut per model (legacy single-point view)
     engine_times: dict[str, float]  # steady-state per-cycle occupancy
     flex_index: int  # engine absorbing fallback work
     cost_provider: str = "analytic"  # which CostProvider scored this plan
     search: str = "exhaustive"  # exhaustive | beam | descent | fixed
     ir: PlanIR | None = None  # the typed plan the serve stack consumes
+    cuts: list[tuple[int, ...]] = dataclasses.field(default_factory=list)  # full k-cut vectors
+    max_cuts: int = 1  # the cut budget the search ran with
 
     @property
     def cycle_time(self) -> float:
@@ -349,95 +405,150 @@ def _model_pair(i: int, n_engines: int) -> tuple[int, int]:
     return i % n_engines, (i + 1) % n_engines
 
 
-def _make_model_cost_fn(graphs, engines, allow_fallback, flex_idx, provider=None):
-    """Memoized per-(model, partition) segment costs: a search trial changes
-    one model's point, so the other models' costs recur."""
-    cache: dict[tuple[int, int], tuple] = {}
-    E = len(engines)
-    flex = engines[flex_idx]
+@dataclasses.dataclass(frozen=True)
+class RouteCost:
+    """Cost decomposition of one candidate route on its graph."""
 
-    def cost(i: int, p: int):
-        key = (i, p)
-        if key not in cache:
-            g = graphs[i]
-            e1, e2 = _model_pair(i, E)
-            c1 = segment_cost(g, 0, p, engines[e1], flex, allow_fallback and e1 != flex_idx, provider=provider)
-            c2 = segment_cost(g, p, len(g), engines[e2], flex, allow_fallback and e2 != flex_idx, provider=provider)
-            x = transfer_time(partition_boundary_bytes(g, p), engines[e1]) if e1 != e2 else 0.0
-            cache[key] = (e1, e2, c1, c2, x)
-        return cache[key]
+    segs: tuple  # ((engine_index, SegmentCost), ...) in route order
+    xfers: tuple  # ((charged_engine_index, seconds), ...) per engine-changing cut
+    fallback: float  # total peer-steal time charged to the flex engine
 
-    return cost
+    @property
+    def makespan(self) -> float:
+        """The model's serialized frame time under this route — the cheap
+        per-model score used to rank candidates when the multi-cut set
+        must be capped (``route_limit``)."""
+        return sum(c.elapsed for _, c in self.segs) + sum(x for _, x in self.xfers)
+
+    @property
+    def n_fallback_runs(self) -> int:
+        return sum(c.n_fallback_runs for _, c in self.segs)
 
 
-def _evaluate_vector(graphs, engines, pvec, allow_fallback, flex_idx, cost_fn=None):
-    """Steady-state per-engine occupancy for one partition vector.
+class _RouteCoster:
+    """Route costing over a shared ``SegmentCostCache``.
+
+    Two memo levels: per-(model, span, engine) segment costs (shared by
+    every route that places that span there) and per-(model, route)
+    assembled ``RouteCost``s. Segment/transfer terms are produced by the
+    exact calls the legacy single-cut ``cost_fn`` made, so single-cut
+    route costs are bit-identical to the old (e1, e2, c1, c2, x) tuples.
+    """
+
+    def __init__(self, graphs, engines, allow_fallback, flex_idx, provider=None):
+        self.graphs = graphs
+        self.engines = engines
+        self.allow_fallback = allow_fallback
+        self.flex_idx = flex_idx
+        self.cache = SegmentCostCache(provider)
+        self._routes: dict[tuple[int, RouteSpec], RouteCost] = {}
+
+    def seg(self, i: int, lo: int, hi: int, e: int) -> SegmentCost:
+        return self.cache.segment(
+            i,
+            self.graphs[i],
+            lo,
+            hi,
+            self.engines[e],
+            self.engines[self.flex_idx],
+            self.allow_fallback and e != self.flex_idx,
+        )
+
+    def xfer(self, i: int, p: int, e_prev: int) -> float:
+        return self.cache.transfer(i, self.graphs[i], p, self.engines[e_prev])
+
+    def route(self, i: int, spec: RouteSpec) -> RouteCost:
+        key = (i, spec)
+        rc = self._routes.get(key)
+        if rc is None:
+            bounds = (0,) + spec.cuts + (len(self.graphs[i]),)
+            segs = []
+            for j, e in enumerate(spec.engines):
+                segs.append((e, self.seg(i, bounds[j], bounds[j + 1], e)))
+            xfers = []
+            for j, p in enumerate(spec.cuts):
+                ep, en = spec.engines[j], spec.engines[j + 1]
+                if ep != en:
+                    # the engine pair's shared link serializes on its first engine
+                    xfers.append((min(ep, en), self.xfer(i, p, ep)))
+            fb = 0.0
+            for _, c in segs:
+                fb += c.peer_busy
+            rc = RouteCost(tuple(segs), tuple(xfers), fb)
+            self._routes[key] = rc
+        return rc
+
+
+def _evaluate_routes(n_engines, route_vec, flex_idx, coster: _RouteCoster):
+    """Steady-state per-engine occupancy for one vector of routes.
 
     Accumulation mirrors ``_evaluate_pair`` term-for-term (segment elapsed
-    first, then partition transfers, then fallback steals) so that at
-    N=2/E=2 the floating-point cycle time is bit-identical to
-    ``haxconn_schedule`` and the argmin selects the same partitions.
-    """
-    if cost_fn is None:
-        cost_fn = _make_model_cost_fn(graphs, engines, allow_fallback, flex_idx)
-    E = len(engines)
-    t = [0.0] * E  # occupancy (compute + transfers + stalls charged here)
-    busy = [0.0] * E  # productive compute only
+    first, then partition transfers, then fallback steals — in route
+    order within each model, model order across models) so that at
+    N=2/E=2 with single-cut routes the floating-point cycle time is
+    bit-identical to ``haxconn_schedule`` and the argmin selects the same
+    partitions; k-segment routes simply contribute more terms to the
+    same three passes."""
+    t = [0.0] * n_engines  # occupancy (compute + transfers + stalls charged here)
+    busy = [0.0] * n_engines  # productive compute only
     per_model = []
-    for i, p in enumerate(pvec):
-        e1, e2, c1, c2, x = cost_fn(i, p)
-        t[e1] += c1.elapsed
-        t[e2] += c2.elapsed
-        busy[e1] += c1.engine_busy
-        busy[e2] += c2.engine_busy
-        per_model.append((e1, e2, c1, c2, x))
-    for e1, e2, c1, c2, x in per_model:
-        if e1 != e2:
-            # the engine pair's shared link serializes on its first engine
-            t[min(e1, e2)] += x
-    for e1, e2, c1, c2, x in per_model:
-        t[flex_idx] += c1.peer_busy
-        t[flex_idx] += c2.peer_busy
-        busy[flex_idx] += c1.peer_busy + c2.peer_busy
+    for i, spec in enumerate(route_vec):
+        rc = coster.route(i, spec)
+        for e, c in rc.segs:
+            t[e] += c.elapsed
+            busy[e] += c.engine_busy
+        per_model.append(rc)
+    for rc in per_model:
+        for ce, x in rc.xfers:
+            t[ce] += x
+    for rc in per_model:
+        for _, c in rc.segs:
+            t[flex_idx] += c.peer_busy
+        busy[flex_idx] += rc.fallback
     cycle = max(t)
     spread = cycle - min(t)
     return (cycle, spread), t, busy, per_model
 
 
-def _candidate_deltas(cands, cost_fn, n_engines, flex_idx):
+def _candidate_deltas(cands, coster, n_engines, flex_idx):
     """Per-model candidate engine-occupancy contribution vectors.
 
-    Candidates whose *raw cost components* are identical to an earlier
-    candidate's are dropped (per-model cost monotonicity makes long flat
-    plateaus — e.g. zero-flop crop layers — common): identical components
-    accumulate identically in ``_evaluate_vector``'s fixed summation
-    order, so the earlier point ties every completion exactly and
-    precedes it in product order — the pruning never changes the argmin.
-    (Keying on the raw components rather than the summed delta matters:
-    equal float *sums* do not imply equal canonical keys.)
+    Candidates whose *raw cost components* (and engine bindings) are
+    identical to an earlier candidate's are dropped (per-model cost
+    monotonicity makes long flat plateaus — e.g. zero-flop crop layers —
+    common): identical components accumulate identically in
+    ``_evaluate_routes``'s fixed summation order, so the earlier route
+    ties every completion exactly and precedes it in product order — the
+    pruning never changes the argmin. (Keying on the raw components
+    rather than the summed delta matters: equal float *sums* do not imply
+    equal canonical keys.)
     """
     deltas = []
     for i, cl in enumerate(cands):
         seen, lst = set(), []
-        for ci, p in enumerate(cl):
-            e1, e2, c1, c2, x = cost_fn(i, p)
-            raw = (c1.elapsed, c2.elapsed, x, c1.peer_busy, c2.peer_busy)
+        for ci, spec in enumerate(cl):
+            rc = coster.route(i, spec)
+            raw = (
+                spec.engines,
+                tuple((c.elapsed, c.peer_busy) for _, c in rc.segs),
+                rc.xfers,
+            )
             if raw in seen:
                 continue
             seen.add(raw)
             d = [0.0] * n_engines
-            d[e1] += c1.elapsed
-            d[e2] += c2.elapsed
-            if e1 != e2:
-                d[min(e1, e2)] += x
-            d[flex_idx] += c1.peer_busy + c2.peer_busy
-            lst.append((ci, p, tuple(d)))
+            for e, c in rc.segs:
+                d[e] += c.elapsed
+            for ce, x in rc.xfers:
+                d[ce] += x
+            d[flex_idx] += rc.fallback
+            lst.append((ci, spec, tuple(d)))
         deltas.append(lst)
     return deltas
 
 
-def _beam_search(cands, cost_fn, n_engines, flex_idx, key_of, beam_width):
-    """Beam search over partition vectors.
+def _beam_search(cands, coster, n_engines, flex_idx, key_of, beam_width):
+    """Beam search over route vectors.
 
     States carry the partial per-engine occupancy (monotonically growing —
     every candidate contribution is nonnegative, so a partial cycle lower-
@@ -447,7 +558,7 @@ def _beam_search(cands, cost_fn, n_engines, flex_idx, key_of, beam_width):
     argmin (canonical key, then product order) is bit-identical to the
     exhaustive search.
     """
-    deltas = _candidate_deltas(cands, cost_fn, n_engines, flex_idx)
+    deltas = _candidate_deltas(cands, coster, n_engines, flex_idx)
     # Lookahead for the truncation ordering: each unplaced model must add at
     # least its elementwise-min contribution to every engine, so ranking
     # partial states by max(occupancy + suffix_min) compares lower bounds on
@@ -499,28 +610,130 @@ def _coordinate_descent(start_pvec, cands, key_of, rounds):
     return best_pvec, best_key
 
 
+def _dp_engine_assignments(coster: _RouteCoster, i: int, cuts: tuple[int, ...]) -> list[tuple[int, ...]]:
+    """Per-model DP over engine assignments for a fixed cut vector.
+
+    State = the engine running the current segment; value = the model's
+    serialized makespan so far (segment elapsed + engine-switch
+    transfers, the same terms ``RouteCost.makespan`` sums). Consecutive
+    segments must change engines — a same-engine cut is equivalent to the
+    route with that cut removed, which is already a candidate at k-1 cuts.
+    Returns the argmin path ending on *each* engine, best first: at E=2
+    that is exactly both alternating ping-pong sequences; at E>2 it is a
+    diversity-preserving set of E assignments whose cross-model balance
+    the outer vector search arbitrates via the occupancy deltas.
+    """
+    E = len(coster.engines)
+    n = len(coster.graphs[i])
+    bounds = (0,) + cuts + (n,)
+    dp = {e: (coster.seg(i, bounds[0], bounds[1], e).elapsed, (e,)) for e in range(E)}
+    for j in range(1, len(bounds) - 1):
+        lo, hi = bounds[j], bounds[j + 1]
+        nxt = {}
+        for e in range(E):
+            seg_t = coster.seg(i, lo, hi, e).elapsed
+            best = None
+            for ep, (tot, path) in dp.items():
+                if ep == e:
+                    continue
+                cand = tot + coster.xfer(i, bounds[j], ep) + seg_t
+                if best is None or cand < best[0] or (cand == best[0] and path < best[1]):
+                    best = (cand, path)
+            if best is not None:
+                nxt[e] = (best[0], best[1] + (e,))
+        dp = nxt
+    return [path for _, path in sorted(dp.values())]
+
+
+def _route_candidates(
+    coster: _RouteCoster, i: int, pts, max_cuts: int, route_limit: int
+) -> tuple[list[RouteSpec], bool]:
+    """Candidate routes for model ``i``: the legacy single-cut candidates
+    first (in cut-point order — the prefix the ``max_cuts=1`` pin and the
+    never-worse restart rely on), then, per extra cut count k, every
+    k-subset of the legal points with its DP engine assignments. When a
+    k-level exceeds ``route_limit`` it keeps the routes with the smallest
+    per-model makespan (stable order, so ties stay deterministic);
+    returns (candidates, capped)."""
+    E = len(coster.engines)
+    e1, e2 = _model_pair(i, E)
+    cands = [RouteSpec((p,), (e1, e2)) for p in pts]
+    capped = False
+    if max_cuts <= 1 or E < 2:
+        return cands, capped
+    for k in range(2, max_cuts + 1):
+        level = [
+            RouteSpec(cuts, engs)
+            for cuts in itertools.combinations(pts, k)
+            for engs in _dp_engine_assignments(coster, i, cuts)
+        ]
+        if route_limit and len(level) > route_limit:
+            level.sort(key=lambda r: coster.route(i, r).makespan)
+            level = level[:route_limit]
+            capped = True
+        cands.extend(level)
+    return cands, capped
+
+
+def _run_search(cands, balanced, mode, coster, n_engines, flex_idx, key_of, beam_width, descent_rounds):
+    """One search over the given candidate lists — the exact legacy
+    control flow (exhaustive product scan / beam + descent polish +
+    balanced restart / descent-only), factored out so the multi-cut
+    planner can run it on both the single-cut prefix and the full
+    candidate space."""
+    if mode in ("exhaustive", "fixed"):
+        best_key, best_vec = None, None
+        for vec in itertools.product(*cands):
+            k = key_of(vec)
+            if best_key is None or k < best_key:
+                best_key, best_vec = k, vec
+        return best_vec, best_key
+    if mode == "beam":
+        best_vec, best_key = _beam_search(cands, coster, n_engines, flex_idx, key_of, beam_width)
+        best_vec, best_key = _coordinate_descent(best_vec, cands, key_of, descent_rounds)
+        restart = _coordinate_descent(balanced, cands, key_of, descent_rounds)
+        if restart[1] < best_key:
+            best_vec, best_key = restart
+        return best_vec, best_key
+    # descent
+    return _coordinate_descent(balanced, cands, key_of, descent_rounds)
+
+
 def nmodel_schedule(
     graphs: list[LayerGraph],
     engines,
     allow_fallback: bool = True,
     stride: int = 1,
-    fixed: tuple[int, ...] | None = None,
+    fixed=None,
     exhaustive_limit: int = 20000,
     descent_rounds: int = 8,
     provider: CostProvider | None = None,
     search: str = "auto",
     beam_width: int = 64,
+    max_cuts: int = 1,
+    route_limit: int = 512,
 ) -> NModelPlan:
-    """Plan N staged models over E engines, one partition point per model.
+    """Plan N staged models over E engines, up to ``max_cuts`` partition
+    points per model.
+
+    Each model's route is a sequence of ``(span, engine)`` segments drawn
+    from its legal ``cut_points(stride)``: single-cut candidates keep the
+    legacy counter-phased engine pair; multi-cut candidates take every
+    k-subset of the points with engine assignments from a per-model DP
+    (``_dp_engine_assignments``). ``max_cuts=1`` is bit-identical to the
+    historical single-point planner (and, at N=2, to
+    ``haxconn_schedule``); at ``max_cuts>1`` the search additionally
+    polishes the best single-cut vector inside the multi-cut space, so
+    the plan cost is structurally never worse than ``max_cuts=1``.
 
     ``search`` modes:
 
     * ``"auto"``       — exhaustive over the Cartesian product of candidate
-                         points when it is small (this covers N=2, where the
-                         result is provably identical to ``haxconn_schedule``),
-                         else beam search.
+                         routes when it is small (this covers N=2 single-cut,
+                         where the result is provably identical to
+                         ``haxconn_schedule``), else beam search.
     * ``"exhaustive"`` — force the full product scan.
-    * ``"beam"``       — beam search over partition vectors (width
+    * ``"beam"``       — beam search over route vectors (width
                          ``beam_width``), pruning identical-contribution
                          candidates, followed by a coordinate-descent
                          polish from the beam's best vector. The legacy
@@ -530,8 +743,16 @@ def nmodel_schedule(
     * ``"descent"``    — the legacy coordinate descent from a cost-balanced
                          start (kept as a comparison baseline).
 
-    Plans record which provider scored them (``plan.cost_provider``) and
-    which search produced them (``plan.search``).
+    ``fixed`` pins routes instead of searching: a sequence whose entries
+    are an ``int`` (legacy single cut with the counter-phased pair), a
+    ``(cuts, engines)`` tuple / ``RouteSpec`` (a full multi-cut route —
+    how the re-planner re-scores an incumbent plan), or ``None`` (leave
+    that model free — the partial-re-plan path searches one model while
+    holding the rest).
+
+    Plans record which provider scored them (``plan.cost_provider``),
+    which search produced them (``plan.search``), and the full cut
+    vectors (``plan.cuts``; ``plan.partitions`` stays the first-cut view).
     """
     graphs, engines = list(graphs), list(engines)
     if not graphs:
@@ -540,89 +761,131 @@ def nmodel_schedule(
         raise ValueError("nmodel_schedule needs at least one engine")
     if search not in ("auto", "exhaustive", "beam", "descent"):
         raise ValueError(f"unknown search mode {search!r}")
+    if max_cuts < 1:
+        raise ValueError(f"max_cuts must be >= 1, got {max_cuts}")
     if provider is None:
         provider = ANALYTIC
+    E = len(engines)
     flex_idx = _flex_engine_index(engines)
-    if fixed is not None:
-        cands = [[p] for p in fixed]
-    else:
-        cands = [_candidate_points(g, stride) for g in graphs]
-    for i, c in enumerate(cands):
-        if not c:
-            raise ValueError(f"model {graphs[i].model_name} has no interior partition point")
+    coster = _RouteCoster(graphs, engines, allow_fallback, flex_idx, provider)
 
-    cost_fn = _make_model_cost_fn(graphs, engines, allow_fallback, flex_idx, provider)
+    pinned: list[RouteSpec | None] = [None] * len(graphs)
+    if fixed is not None:
+        if len(fixed) != len(graphs):
+            raise ValueError(f"fixed pins {len(fixed)} models but {len(graphs)} graphs given")
+        pinned = [None if f is None else _as_route_spec(f, i, E) for i, f in enumerate(fixed)]
+    all_pinned = fixed is not None and all(p is not None for p in pinned)
+
+    pts_all, cands, n_single, capped = [], [], [], False
+    for i, g in enumerate(graphs):
+        if pinned[i] is not None:
+            pts_all.append([])
+            cands.append([pinned[i]])
+            n_single.append(1)
+            continue
+        pts = _candidate_points(g, stride)
+        if not pts:
+            raise ValueError(f"model {g.model_name} has no interior partition point")
+        cl, cp = _route_candidates(coster, i, pts, max_cuts, route_limit)
+        pts_all.append(pts)
+        cands.append(cl)
+        n_single.append(len(pts))
+        capped = capped or cp
 
     key_cache: dict[tuple, tuple] = {}
 
-    def key_of(pvec):
-        pvec = tuple(pvec)
-        if pvec not in key_cache:
-            key_cache[pvec] = _evaluate_vector(graphs, engines, pvec, allow_fallback, flex_idx, cost_fn)[0]
-        return key_cache[pvec]
+    def key_of(vec):
+        vec = tuple(vec)
+        if vec not in key_cache:
+            key_cache[vec] = _evaluate_routes(E, vec, flex_idx, coster)[0]
+        return key_cache[vec]
 
-    n_candidates = math.prod(len(c) for c in cands)
-    if fixed is not None:
-        mode = "fixed"
-    elif search == "auto":
-        mode = "exhaustive" if n_candidates <= exhaustive_limit else "beam"
-    else:
-        mode = search
-    if mode in ("exhaustive", "fixed"):
-        best_key, best_pvec = None, None
-        for pvec in itertools.product(*cands):
-            k = key_of(pvec)
-            if best_key is None or k < best_key:
-                best_key, best_pvec = k, pvec
-    else:
-        balanced = [
-            balanced_partition_point(
-                g,
-                engines[_model_pair(i, len(engines))[0]],
-                engines[_model_pair(i, len(engines))[1]],
-                cands[i],
-                provider=provider,
-            )
-            for i, g in enumerate(graphs)
-        ]
-        if mode == "beam":
-            best_pvec, best_key = _beam_search(cands, cost_fn, len(engines), flex_idx, key_of, beam_width)
-            best_pvec, best_key = _coordinate_descent(best_pvec, cands, key_of, descent_rounds)
-            restart = _coordinate_descent(balanced, cands, key_of, descent_rounds)
-            if restart[1] < best_key:
-                best_pvec, best_key = restart
-        else:  # descent
-            best_pvec, best_key = _coordinate_descent(balanced, cands, key_of, descent_rounds)
+    def pick_mode(lists):
+        if all_pinned:
+            return "fixed"
+        if search == "auto":
+            n = math.prod(len(c) for c in lists)
+            return "exhaustive" if n <= exhaustive_limit else "beam"
+        return search
 
-    (cycle, _), t, busy, per_model = _evaluate_vector(
-        graphs, engines, best_pvec, allow_fallback, flex_idx, cost_fn
+    balanced = [
+        pinned[i]
+        if pinned[i] is not None
+        else RouteSpec(
+            (
+                balanced_partition_point(
+                    g,
+                    engines[_model_pair(i, E)[0]],
+                    engines[_model_pair(i, E)[1]],
+                    pts_all[i],
+                    provider=provider,
+                ),
+            ),
+            _model_pair(i, E),
+        )
+        for i, g in enumerate(graphs)
+    ]
+
+    # single-cut pass: exactly the legacy search over the single-cut
+    # candidate prefix — at max_cuts=1 this IS the result (bit-identical
+    # to the historical planner); at max_cuts>1 it seeds the never-worse
+    # guarantee below
+    cands1 = [cl[:n] for cl, n in zip(cands, n_single)]
+    mode1 = pick_mode(cands1)
+    best_vec, best_key = _run_search(
+        cands1, balanced, mode1, coster, E, flex_idx, key_of, beam_width, descent_rounds
     )
+    mode = mode1
+    if max_cuts > 1 and not all_pinned:
+        mode = pick_mode(cands)
+        multi_vec, multi_key = _run_search(
+            cands, balanced, mode, coster, E, flex_idx, key_of, beam_width, descent_rounds
+        )
+        # polish the single-cut optimum inside the multi-cut space: the
+        # result can only improve on it, so max_cuts=k is structurally
+        # never worse than max_cuts=1 even when the beam truncates
+        best_vec, best_key = _coordinate_descent(best_vec, cands, key_of, descent_rounds)
+        if multi_key < best_key:
+            best_vec, best_key = multi_vec, multi_key
+
+    (cycle, _), t, busy, per_model = _evaluate_routes(E, best_vec, flex_idx, coster)
     loads = {e.name: EngineLoad(busy=b, stall=cycle - b) for e, b in zip(engines, busy)}
     routes, segments, notes, ir_spans = [], [], [], []
     n_fallback = 0
-    for i, (g, p) in enumerate(zip(graphs, best_pvec)):
-        e1, e2, c1, c2, x = per_model[i]
+    for i, (g, spec) in enumerate(zip(graphs, best_vec)):
+        rc = per_model[i]
         label = chr(ord("a") + i % 26)
+        seg_list = spec.segments(len(g))
         routes.append(
             ModelRoute(
                 model=g.model_name,
-                partition=p,
-                segments=[(e1, 0, p), (e2, p, len(g))],
+                partition=spec.cuts[0] if spec.cuts else len(g),
+                segments=seg_list,
+                cuts=spec.cuts,
             )
         )
-        ir_spans.append([(e1, 0, p, c1.elapsed), (e2, p, len(g), c2.elapsed)])
-        segments.append((engines[e1].name, f"{label}1", c1.elapsed))
-        if x:
-            segments.append((engines[min(e1, e2)].name, "xfer", x))
-        segments.append((engines[e2].name, f"{label}2", c2.elapsed))
-        if c1.peer_busy + c2.peer_busy:
-            segments.append((engines[flex_idx].name, "fallback", c1.peer_busy + c2.peer_busy))
-        n_fallback += c1.n_fallback_runs + c2.n_fallback_runs
+        ir_spans.append(
+            [(e, lo, hi, c.elapsed) for (e, lo, hi), (_, c) in zip(seg_list, rc.segs)]
+        )
+        xi = 0
+        for j, ((e, lo, hi), (_, c)) in enumerate(zip(seg_list, rc.segs)):
+            segments.append((engines[e].name, f"{label}{j + 1}", c.elapsed))
+            if j < len(spec.cuts) and spec.engines[j] != spec.engines[j + 1]:
+                ce, x = rc.xfers[xi]
+                xi += 1
+                if x:
+                    segments.append((engines[ce].name, "xfer", x))
+        if rc.fallback:
+            segments.append((engines[flex_idx].name, "fallback", rc.fallback))
+        n_fallback += rc.n_fallback_runs
         notes.append(
-            f"{g.model_name}: {engines[e1].name}[0:{p}) {engines[e2].name}[{p}:{len(g)})"
+            f"{g.model_name}: "
+            + " ".join(f"{engines[e].name}[{lo}:{hi})" for e, lo, hi in seg_list)
         )
     notes.append(f"fallback_runs={n_fallback}")
     notes.append(f"search={mode} cost={provider.name}")
+    if max_cuts > 1:
+        notes.append(f"max_cuts={max_cuts}" + (" (route candidates capped)" if capped else ""))
     ir = make_plan_ir(
         tuple(g.model_name for g in graphs),
         tuple(e.name for e in engines),
@@ -632,6 +895,7 @@ def nmodel_schedule(
         search=mode,
         kind="nmodel",
         graphs=graphs,
+        cut_budget=max_cuts,
     )
     sched = Schedule(
         kind="nmodel",
@@ -642,7 +906,8 @@ def nmodel_schedule(
         # instance-indexed keys: the same graph may be scheduled N times
         # with different partition points
         partitions={
-            f"{i}:{g.model_name}": (p, len(g)) for i, (g, p) in enumerate(zip(graphs, best_pvec))
+            f"{i}:{g.model_name}": tuple(spec.cuts) + (len(g),)
+            for i, (g, spec) in enumerate(zip(graphs, best_vec))
         },
         segments=segments,
         notes=notes,
@@ -651,10 +916,12 @@ def nmodel_schedule(
     return NModelPlan(
         schedule=sched,
         routes=routes,
-        partitions=list(best_pvec),
+        partitions=[spec.cuts[0] if spec.cuts else len(g) for spec, g in zip(best_vec, graphs)],
         engine_times={e.name: ti for e, ti in zip(engines, t)},
         flex_index=flex_idx,
         cost_provider=provider.name,
         search=mode,
         ir=ir,
+        cuts=[tuple(spec.cuts) for spec in best_vec],
+        max_cuts=max_cuts,
     )

@@ -251,6 +251,12 @@ def main() -> None:
         help="plan at composite-node or expanded (primitive) granularity",
     )
     ap.add_argument("--stride", type=int, default=1, help="keep every k-th legal cut point")
+    ap.add_argument(
+        "--max-cuts",
+        type=int,
+        default=1,
+        help="per-model cut budget: k-segment routes ping-pong each model across engines",
+    )
     args = ap.parse_args()
 
     provider = make_cost_provider(args.cost, cache_path=args.cost_cache)
@@ -259,12 +265,14 @@ def main() -> None:
     g_yolo = YOLOv8(YOLOv8Config(img_size=args.img)).layer_graph()
     if args.granularity == "fine":
         g_pix, g_yolo = g_pix.expand(), g_yolo.expand()
-    plan = nmodel_schedule([g_pix, g_yolo], [dla, gpu], provider=provider, stride=args.stride)
+    plan = nmodel_schedule(
+        [g_pix, g_yolo], [dla, gpu], provider=provider, stride=args.stride, max_cuts=args.max_cuts
+    )
     if args.cost_cache and hasattr(provider, "save"):
         provider.save()  # measured AND blended both persist their timings
     print(
         f"[analytic] cost={plan.cost_provider} search={plan.search} "
-        f"partitions={plan.partitions} cycle={plan.cycle_time*1e3:.3f} ms "
+        f"cuts={plan.cuts} cycle={plan.cycle_time*1e3:.3f} ms "
         f"aggregate={plan.schedule.aggregate_fps:.1f} FPS"
     )
     print(plan.schedule.ascii_timeline())

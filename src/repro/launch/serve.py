@@ -53,12 +53,14 @@ def run_streams(args) -> None:
         cost=provider,
         granularity=args.granularity,
         stride=args.planner_stride,
+        max_cuts=args.max_cuts,
     )
     if args.cost_cache and hasattr(provider, "save"):
         provider.save()  # measured AND blended both persist their timings
     print(
-        f"[serve] plan partitions={plan.partitions} cycle={plan.cycle_time*1e3:.2f} ms "
-        f"search={plan.search} cost={plan.cost_provider} granularity={args.granularity}"
+        f"[serve] plan cuts={plan.cuts} cycle={plan.cycle_time*1e3:.2f} ms "
+        f"search={plan.search} cost={plan.cost_provider} granularity={args.granularity} "
+        f"max_cuts={args.max_cuts}"
     )
     replanner = None
     if args.replan:
@@ -71,6 +73,7 @@ def run_streams(args) -> None:
                 profile_every=args.profile_every,
                 stride=args.planner_stride,
                 background=args.replan_background,
+                escalate_after=args.replan_escalate,
             ),
             cost=provider,
         )
@@ -148,6 +151,12 @@ def main():
         help="keep every k-th legal cut point (fine-granularity beam tractability knob)",
     )
     ap.add_argument(
+        "--max-cuts",
+        type=int,
+        default=1,
+        help="per-model cut budget: k-segment routes ping-pong each model across engines",
+    )
+    ap.add_argument(
         "--calibration-cache",
         default=None,
         help="JSON file persisting OnlineCost per-engine scales across restarts",
@@ -165,6 +174,12 @@ def main():
     ap.add_argument("--profile-every", type=int, default=2, help="segment-profiling cadence (ticks)")
     ap.add_argument(
         "--replan-background", action="store_true", help="run the planner in a worker thread"
+    )
+    ap.add_argument(
+        "--replan-escalate",
+        type=int,
+        default=0,
+        help="escalate re-planning to fine granularity after this many drift fires (0 = never)",
     )
     args = ap.parse_args()
 

@@ -30,6 +30,7 @@ def build_pix_yolo_serving(
     search: str = "auto",
     granularity: str = "coarse",
     stride: int = 1,
+    max_cuts: int = 1,
 ):
     """Returns ``(models, plan, streams, (gpu, dla))`` for ``n_pix``
     Pix2Pix reconstruction streams + ``n_yolo`` YOLOv8 detection streams
@@ -39,7 +40,9 @@ def build_pix_yolo_serving(
     the planner may cut inside YOLO's ``c2f``/``sppf``/``head`` blocks at
     stage-callable boundaries, and the staged models execute those fine
     cuts. ``stride`` thins the legal candidate set (the beam-tractability
-    knob; only meaningful at fine granularity)."""
+    knob; only meaningful at fine granularity). ``max_cuts`` raises the
+    per-model cut budget: k-segment routes ping-pong a model across the
+    engines (``max_cuts=1`` is the paper's single partition point)."""
     from ..models import Pix2PixConfig, Pix2PixGenerator, YOLOv8, YOLOv8Config
 
     provider = cost if isinstance(cost, CostProvider) else make_cost_provider(cost)
@@ -51,7 +54,12 @@ def build_pix_yolo_serving(
     ym = YOLOv8(ycfg)
     sm_yolo = yolo_staged(ycfg, ym.init(jax.random.key(seed + 1)), granularity=granularity)
     plan = nmodel_schedule(
-        [sm_pix.graph, sm_yolo.graph], [dla, gpu], provider=provider, search=search, stride=stride
+        [sm_pix.graph, sm_yolo.graph],
+        [dla, gpu],
+        provider=provider,
+        search=search,
+        stride=stride,
+        max_cuts=max_cuts,
     )
     streams = [StreamSpec(f"mri-{i}", 0) for i in range(n_pix)] + [
         StreamSpec(f"det-{i}", 1) for i in range(n_yolo)

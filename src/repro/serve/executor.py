@@ -129,8 +129,9 @@ class SegmentObservation:
 class SwapEvent:
     tick: int
     revision: int
-    partitions: tuple[int, ...]
+    partitions: tuple[int, ...]  # first cut per model (legacy view)
     expected_cycle: float
+    cuts: tuple[tuple[int, ...], ...] = ()  # full k-cut vectors per model
 
 
 def _as_plan_ir(plan, engine_names=None) -> PlanIR:
@@ -168,6 +169,7 @@ class StreamExecutor:
         if len(models) != ir.n_models:
             raise ValueError(f"{len(models)} models but plan routes {ir.n_models}")
         ir.validate_against([m.n_layers for m in models])
+        self._check_span_staging(ir, models)
         for s in streams:
             if not 0 <= s.model_index < len(models):
                 raise ValueError(f"stream {s.name} references unknown model {s.model_index}")
@@ -252,6 +254,15 @@ class StreamExecutor:
     def plan_revision(self) -> int:
         return self.plan.revision
 
+    @staticmethod
+    def _check_span_staging(ir: PlanIR, models):
+        """Reject plans whose spans can't stage before any frame runs:
+        on fine-granularity models every route segment — however many
+        cuts the plan takes — must start and end on stage-callable
+        boundaries (``StagedModel.check_route``)."""
+        for mi, segs in enumerate(ir.segments):
+            models[mi].check_route([(s.lo, s.hi) for s in segs])
+
     def swap_plan(self, new_ir: PlanIR) -> int:
         """Install a new plan at the next frame boundary (new admissions).
 
@@ -268,6 +279,7 @@ class StreamExecutor:
                 f"swap needs {new_ir.n_engines} engines but executor has {len(self.place_fns)}"
             )
         new_ir.validate_against([m.n_layers for m in self.models])
+        self._check_span_staging(new_ir, self.models)
         rev = self.plan.revision + 1
         self.plan = new_ir.with_revision(rev)
         self.swap_events.append(
@@ -276,9 +288,10 @@ class StreamExecutor:
                 revision=rev,
                 partitions=tuple(new_ir.partitions),
                 expected_cycle=new_ir.expected_cycle,
+                cuts=new_ir.cuts,
             )
         )
-        self.log.append(TickLog(self.tick_count, "*", f"swap->rev{rev} p={new_ir.partitions}"))
+        self.log.append(TickLog(self.tick_count, "*", f"swap->rev{rev} cuts={list(new_ir.cuts)}"))
         return rev
 
     def prepare_plan(self, new_ir: PlanIR) -> int:
@@ -292,6 +305,7 @@ class StreamExecutor:
         seen a frame yet.
         """
         new_ir.validate_against([m.n_layers for m in self.models])
+        self._check_span_staging(new_ir, self.models)
         warmed = 0
         for mi, segs in enumerate(new_ir.segments):
             model = self.models[mi]

@@ -51,6 +51,10 @@ class SwapStall:
     prepare_s: float
     swap_s: float
     background: bool
+    # True when only the drifted model's route changed (the re-planner
+    # held every other model fixed) — cheaper to prepare and lower-risk
+    # than a full-plan swap
+    partial: bool = False
 
     @property
     def hot_path_s(self) -> float:
@@ -62,13 +66,16 @@ def swap_stall_summary(stalls: list[SwapStall]) -> dict:
     """Aggregate swap-stall accounting for one serving run."""
     if not stalls:
         return {"swaps": 0, "hot_path_stall_ms": 0.0, "hot_path_stall_max_ms": 0.0,
-                "prepare_ms": 0.0, "background_prepares": 0}
+                "prepare_ms": 0.0, "background_prepares": 0,
+                "partial_swaps": 0, "full_swaps": 0}
     return {
         "swaps": len(stalls),
         "hot_path_stall_ms": sum(s.hot_path_s for s in stalls) * 1e3,
         "hot_path_stall_max_ms": max(s.hot_path_s for s in stalls) * 1e3,
         "prepare_ms": sum(s.prepare_s for s in stalls) * 1e3,
         "background_prepares": sum(s.background for s in stalls),
+        "partial_swaps": sum(s.partial for s in stalls),
+        "full_swaps": sum(not s.partial for s in stalls),
     }
 
 

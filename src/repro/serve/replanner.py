@@ -20,13 +20,38 @@ closes the loop:
      consecutive ticks above ``drift_threshold`` (noise stays quiet) and
      ``cooldown_ticks`` between swaps (no thrashing).
   3. **re-plan** — the beam-search planner re-runs on the live-calibrated
-     costs. The refreshed costs also re-score the *current* partitions
-     (``fixed=`` evaluation), and the swap only happens if the new plan's
+     costs, at the *incumbent plan's cut budget* (``max_cuts``: a
+     multi-cut plan is re-planned as a multi-cut plan; override with
+     ``ReplanConfig.max_cuts``). With ``partial_swaps`` the loop first
+     tries a **partial re-plan**: every model's route is held fixed
+     except the one carrying the most planned work on the most-drifted
+     engine; if that single-route plan predicts a cycle within
+     ``partial_tolerance`` of the full re-plan's, only the drifted route
+     is swapped (recorded as a partial swap in ``metrics.SwapStall``).
+     The refreshed costs also re-score the *current* routes (``fixed=``
+     evaluation), and the swap only happens if the chosen plan's
      predicted cycle beats that by ``min_improvement``.
   4. **swap** — ``executor.prepare_plan`` warms the new segment
      executables on zero states (off the hot path), then
      ``executor.swap_plan`` installs the plan at the frame boundary:
      in-flight frames finish on their admitted routes, zero drops.
+
+**Coarse -> fine escalation** (``escalate_after > 0``): after that many
+drift-triggered re-plans the loop escalates its planning granularity —
+sustained drift means the coarse cut set cannot rebalance the engines,
+so the re-planner widens the search to the fine-grained boundary space.
+Two deployments:
+
+  * planner graphs == executor graphs (the common case): escalation
+    re-plans with ``escalate_stride`` instead of ``stride`` — on
+    expanded-graph deployments that unlocks the full stage-boundary cut
+    set the initial (strided) plan skipped.
+  * planner graphs are *coarse* while the executor's models were staged
+    *fine* (cheap-planning deployment; detected at ``attach`` by layer
+    counts): normal re-plans run on the coarse graphs and are translated
+    to fine indices (``plan_ir.translate_ir``); escalation switches the
+    planning graphs to the expansions themselves, unlocking cuts inside
+    composite blocks that coarse planning cannot express.
 
 ``background=True`` runs step 3 *and* the ``prepare_plan`` warmup in a
 worker thread on a snapshot of the scales — the hot loop only pays for
@@ -47,6 +72,7 @@ import time
 from typing import Sequence
 
 from ..core.cost_model import ANALYTIC, CostProvider, OnlineCost
+from ..core.plan_ir import PlanIR, translate_ir
 from ..core.scheduler import nmodel_schedule
 from .executor import SegmentObservation, StreamExecutor
 from .metrics import SwapStall, swap_stall_summary
@@ -67,6 +93,13 @@ class ReplanConfig:
     beam_width: int = 64
     stride: int = 1  # candidate cut-point stride (match the initial plan's)
     background: bool = False  # plan + prepare in a worker thread (off the hot path)
+    max_cuts: int = 0  # cut budget for re-plans; 0 = inherit the incumbent plan's
+    partial_swaps: bool = True  # try single-route re-plans before full swaps
+    # a partial plan is preferred when its predicted cycle is within this
+    # factor of the full re-plan's (it swaps one route instead of all)
+    partial_tolerance: float = 0.02
+    escalate_after: int = 0  # drift fires before escalating granularity (0 = never)
+    escalate_stride: int = 1  # the stride escalated re-plans search with
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,10 +108,14 @@ class ReplanEvent:
     drift: dict[str, float]
     old_partitions: tuple[int, ...]
     new_partitions: tuple[int, ...]
-    old_cycle: float  # current partitions re-scored under live costs
+    old_cycle: float  # current routes re-scored under live costs
     new_cycle: float  # candidate plan under live costs
     swapped: bool
     revision: int  # executor plan revision after the event
+    old_cuts: tuple[tuple[int, ...], ...] = ()
+    new_cuts: tuple[tuple[int, ...], ...] = ()
+    partial: bool = False  # only the drifted model's route was re-planned
+    escalated: bool = False  # this re-plan ran at escalated granularity
 
 
 class Replanner:
@@ -119,15 +156,41 @@ class Replanner:
         self._expected_cache: dict[tuple[int, int, int, int], float] = {}
         self._job: threading.Thread | None = None
         self._job_result: list = []
+        # granularity state: _fine holds the expanded planning graphs when
+        # the executor's models are staged finer than self.graphs (plans
+        # are then translated to fine indices); _escalated flips planning
+        # onto the fine graphs / escalate_stride after sustained drift
+        self._fine = None
+        self._translate = False
+        self._escalated = False
+        self._fires = 0  # drift-triggered re-plans (escalation counter)
+        self._incumbent_max_cuts = 1
 
     # -- wiring -------------------------------------------------------------
 
     def attach(self, executor: StreamExecutor) -> StreamExecutor:
-        """Wire the feedback loop into an executor (observer + tick hook)."""
+        """Wire the feedback loop into an executor (observer + tick hook).
+
+        When the executor's staged models carry more layers than the
+        planning graphs (fine staging, coarse planning), the expansions
+        must match the staged layer counts — re-plans are then made
+        coarse and translated to fine indices, and escalation switches
+        planning onto the expansions themselves."""
         if executor.plan.n_engines != len(self.engines):
             raise ValueError(
                 f"replanner has {len(self.engines)} engines but plan uses {executor.plan.n_engines}"
             )
+        n_exec = list(executor.plan.n_layers)
+        if [len(g) for g in self.graphs] != n_exec:
+            fine = [g.expand() for g in self.graphs]
+            if [len(g) for g in fine] != n_exec:
+                raise ValueError(
+                    f"replanner graphs ({[len(g) for g in self.graphs]} layers) match "
+                    f"neither the executor's models ({n_exec}) nor their expansions"
+                )
+            self._fine = fine
+            self._translate = True
+        self._incumbent_max_cuts = executor.plan.max_cuts
         executor.profile_every = max(1, self.config.profile_every)
         executor.on_segment = self.observe
         executor.on_tick = self.maybe_replan
@@ -135,14 +198,29 @@ class Replanner:
 
     # -- observation --------------------------------------------------------
 
+    @property
+    def _exec_graphs(self):
+        """Graphs in the executor's (staged) index space — what profiled
+        observations and incumbent plans are expressed in."""
+        return self._fine if self._translate else self.graphs
+
+    def _plan_graphs(self):
+        """Graphs the next re-plan searches: coarse until escalation
+        switches to the fine expansions (no-op when not translating)."""
+        if self._translate and self._escalated:
+            return self._fine
+        return self.graphs
+
     def _expected_base(self, model_index: int, engine: int, lo: int, hi: int) -> float:
         """Base-provider cost of graph[lo:hi) on the engine — the fixed
         denominator of the wall-clock calibration (never a scaled plan's
-        expected_cost, which would drift with each re-plan)."""
+        expected_cost, which would drift with each re-plan). Spans are
+        executor-space indices, so the expectation walks the executor's
+        graphs."""
         key = (model_index, engine, lo, hi)
         t = self._expected_cache.get(key)
         if t is None:
-            g = self.graphs[model_index]
+            g = self._exec_graphs[model_index]
             e = self.engines[engine]
             t = sum(self.online.base.layer_time(g[i], e) for i in range(lo, hi))
             self._expected_cache[key] = t
@@ -212,33 +290,105 @@ class Replanner:
             self._baseline = self.online.snapshot()
         return self
 
-    # -- the control loop ---------------------------------------------------
+    # -- planning -----------------------------------------------------------
 
-    def _plan(self, online: OnlineCost):
+    @property
+    def escalated(self) -> bool:
+        return self._escalated
+
+    def _active_max_cuts(self) -> int:
+        return self.config.max_cuts or self._incumbent_max_cuts
+
+    def _plan(self, online: OnlineCost, fixed=None):
+        cfg = self.config
         return nmodel_schedule(
-            self.graphs,
+            self._plan_graphs(),
             self.engines,
             allow_fallback=self.allow_fallback,
             provider=online,
-            search=self.config.search,
-            beam_width=self.config.beam_width,
-            stride=self.config.stride,
+            search=cfg.search,
+            beam_width=cfg.beam_width,
+            stride=cfg.escalate_stride if self._escalated else cfg.stride,
+            max_cuts=self._active_max_cuts(),
+            fixed=fixed,
         )
 
-    def _score_fixed(self, partitions, online: OnlineCost) -> float:
-        return nmodel_schedule(
-            self.graphs,
-            self.engines,
-            allow_fallback=self.allow_fallback,
-            fixed=tuple(partitions),
-            provider=online,
-        ).cycle_time
+    def _score_fixed(self, routes, online: OnlineCost) -> float:
+        """Re-score pinned routes under the live costs. ``routes`` entries
+        are planning-space ``(cuts, engines)`` specs (or bare ints)."""
+        return self._plan(online, fixed=list(routes)).cycle_time
+
+    def _incumbent_routes(self, plan: PlanIR):
+        """The executor's live routes in *planning-space* indices, or None
+        when they are not expressible there (a fine cut inside a
+        composite while still planning coarse — forces escalation)."""
+        specs = plan.route_specs()
+        if not self._translate or self._escalated:
+            return specs
+        out = []
+        for (cuts, engines), g in zip(specs, self._fine):
+            coarse = tuple(g.coarse_cut(c) for c in cuts)
+            if any(c is None for c in coarse):
+                return None
+            out.append((coarse, engines))
+        return out
+
+    def _to_exec_ir(self, ir: PlanIR, models: tuple[str, ...]) -> PlanIR:
+        """Translate a planning-space IR to executor indices (identity
+        unless planning coarse for a fine-staged executor) and restore the
+        executor's model names — planning on an expansion renames graphs
+        (``[expanded]``), but the swap contract matches names exactly."""
+        if self._translate and not self._escalated:
+            ir = translate_ir(ir, self._fine)
+        if tuple(ir.models) != tuple(models):
+            ir = dataclasses.replace(ir, models=tuple(models))
+        return ir
+
+    def _drift_target_model(self, plan: PlanIR, drift: dict[str, float]) -> int:
+        """The model to re-route in a partial re-plan: the one whose
+        incumbent route carries the most base-cost on the most-drifted
+        engine (executor-space accounting)."""
+        names = [e.name for e in self.engines]
+        worst = max(range(len(names)), key=lambda e: drift.get(names[e], 0.0))
+        loads = []
+        for mi in range(plan.n_models):
+            loads.append(
+                sum(
+                    self._expected_base(mi, s.engine, s.lo, s.hi)
+                    for s in plan.route(mi)
+                    if s.engine == worst
+                )
+            )
+        return max(range(len(loads)), key=lambda mi: (loads[mi], -mi))
+
+    def _propose(self, executor_plan: PlanIR, online: OnlineCost, drift: dict[str, float]):
+        """Produce the candidate swap for one drift fire: (plan, exec-space
+        IR, incumbent cycle under live costs, partial?)."""
+        cfg = self.config
+        incumbent = self._incumbent_routes(executor_plan)
+        if incumbent is None:
+            # the live routes are not expressible at coarse planning
+            # granularity — fall forward to fine planning permanently
+            self._escalated = True
+            incumbent = self._incumbent_routes(executor_plan)
+        full = self._plan(online)
+        old_cycle = self._score_fixed(incumbent, online)
+        choice, partial = full, False
+        if cfg.partial_swaps and len(self.graphs) > 1:
+            target = self._drift_target_model(executor_plan, drift)
+            pinned = [r if mi != target else None for mi, r in enumerate(incumbent)]
+            part = self._plan(online, fixed=pinned)
+            if part.cycle_time <= full.cycle_time * (1.0 + cfg.partial_tolerance):
+                choice, partial = part, True
+        return choice, self._to_exec_ir(choice.ir, executor_plan.models), old_cycle, partial
 
     def _snapshot_online(self) -> OnlineCost:
         snap = OnlineCost(self.online.base, alpha=self.online.alpha)
         snap._num = dict(self.online._num)
         snap._den = dict(self.online._den)
         return snap
+
+    # -- the control loop ---------------------------------------------------
 
     def maybe_replan(self, executor: StreamExecutor) -> ReplanEvent | None:
         """Called at every frame boundary (executor ``on_tick``)."""
@@ -266,55 +416,70 @@ class Replanner:
         tick = executor.tick_count
         if self._last_swap_tick is not None and tick - self._last_swap_tick < cfg.cooldown_ticks:
             return None
+        # this is a drift fire: bump the escalation counter before
+        # planning, so the escalate_after-th fire already plans fine
+        self._fires += 1
+        if cfg.escalate_after and not self._escalated and self._fires >= cfg.escalate_after:
+            self._escalated = True
         if cfg.background:
             online = self._snapshot_online()
-            cur = list(executor.plan.partitions)
+            plan_snapshot = executor.plan
+            drift_snapshot = dict(d)
 
             def job():
-                plan = self._plan(online)
-                old_cycle = self._score_fixed(cur, online)
+                plan, ir, old_cycle, partial = self._propose(plan_snapshot, online, drift_snapshot)
                 # warm the candidate plan's segment executables here, in
                 # the worker — compilation stays off the tick thread; the
                 # warmup is harmless if the swap is later rejected (it
                 # only seeds executable caches)
                 t0 = time.perf_counter()
-                executor.prepare_plan(plan.ir)
+                executor.prepare_plan(ir)
                 prepare_s = time.perf_counter() - t0
-                self._job_result.append((plan, old_cycle, dict(d), prepare_s))
+                self._job_result.append((plan, old_cycle, drift_snapshot, prepare_s, partial, ir))
 
             self._job = threading.Thread(target=job, daemon=True)
             self._job.start()
             return None
         online = self._snapshot_online()
-        plan = self._plan(online)
-        old_cycle = self._score_fixed(executor.plan.partitions, online)
-        return self._finish(executor, plan, old_cycle, dict(d))
+        plan, ir, old_cycle, partial = self._propose(executor.plan, online, dict(d))
+        return self._finish(executor, plan, old_cycle, dict(d), partial=partial, ir=ir)
 
     def _finish(
-        self, executor: StreamExecutor, plan, old_cycle: float, drift, prepare_s: float | None = None
+        self,
+        executor: StreamExecutor,
+        plan,
+        old_cycle: float,
+        drift,
+        prepare_s: float | None = None,
+        partial: bool = False,
+        ir: PlanIR | None = None,
     ) -> ReplanEvent:
         cfg = self.config
         background = prepare_s is not None
+        ir = ir if ir is not None else plan.ir
         old_partitions = tuple(executor.plan.partitions)
+        old_cuts = executor.plan.cuts
         improves = plan.cycle_time < old_cycle * (1.0 - cfg.min_improvement)
-        changes = tuple(plan.ir.partitions) != old_partitions
+        changes = ir.route_specs() != executor.plan.route_specs()
         swapped = improves and changes
         if swapped:
             if not background:
                 t0 = time.perf_counter()
-                executor.prepare_plan(plan.ir)
+                executor.prepare_plan(ir)
                 prepare_s = time.perf_counter() - t0
             t0 = time.perf_counter()
-            executor.swap_plan(plan.ir)
+            executor.swap_plan(ir)
             self.swap_stalls.append(
                 SwapStall(
                     tick=executor.tick_count,
                     prepare_s=prepare_s,
                     swap_s=time.perf_counter() - t0,
                     background=background,
+                    partial=partial,
                 )
             )
             self._last_swap_tick = executor.tick_count
+            self._incumbent_max_cuts = executor.plan.max_cuts
             self._rebaseline()
         else:
             # plan already as good as it gets under the drifted costs: stop
@@ -325,11 +490,15 @@ class Replanner:
             tick=executor.tick_count,
             drift=drift,
             old_partitions=old_partitions,
-            new_partitions=tuple(plan.ir.partitions),
+            new_partitions=tuple(ir.partitions),
             old_cycle=old_cycle,
             new_cycle=plan.cycle_time,
             swapped=swapped,
             revision=executor.plan.revision,
+            old_cuts=old_cuts,
+            new_cuts=ir.cuts,
+            partial=partial,
+            escalated=self._escalated,
         )
         self.events.append(ev)
         return ev
@@ -345,6 +514,9 @@ class Replanner:
             "drift": self.drift(),
             "replans": len(self.events),
             "swaps": sum(e.swapped for e in self.events),
+            "partial_swaps": sum(e.swapped and e.partial for e in self.events),
+            "escalated": self._escalated,
+            "drift_fires": self._fires,
             "swap_stall": swap_stall_summary(self.swap_stalls),
             "events": [
                 {
@@ -352,9 +524,13 @@ class Replanner:
                     "drift": {k: round(v, 4) for k, v in e.drift.items()},
                     "old_partitions": list(e.old_partitions),
                     "new_partitions": list(e.new_partitions),
+                    "old_cuts": [list(c) for c in e.old_cuts],
+                    "new_cuts": [list(c) for c in e.new_cuts],
                     "old_cycle": e.old_cycle,
                     "new_cycle": e.new_cycle,
                     "swapped": e.swapped,
+                    "partial": e.partial,
+                    "escalated": e.escalated,
                     "revision": e.revision,
                 }
                 for e in self.events

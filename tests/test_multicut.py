@@ -1,0 +1,539 @@
+"""Multi-cut route planning end-to-end: search -> IR -> staging ->
+execution -> re-planning.
+
+Pins the refactor's load-bearing guarantees:
+  (a) ``max_cuts=1`` is bit-identical to the legacy single-point planner
+      (and, at N=2, to ``haxconn_schedule``) — partitions, cycle time,
+      and per-engine occupancy,
+  (b) raising ``max_cuts`` never worsens the analytic plan cost (the
+      single-cut optimum is polished inside the multi-cut space), and on
+      the bench-sized serving pair it strictly improves it,
+  (c) a multi-cut plan is a pure re-orchestration: executed outputs are
+      bit-exact (eager) vs the single-cut plan and vs ``run_all``,
+  (d) mid-stream hot-swap from a single-cut to a multi-cut plan drops
+      nothing and changes no output,
+  (e) ``fixed=`` pins full routes (the re-planner's re-scoring form) and
+      supports per-model ``None`` holes (the partial re-plan path),
+  (f) the re-planner performs partial swaps (one drifted route) and
+      escalates coarse -> fine planning after sustained drift, including
+      the coarse-planning / fine-staging translation deployment,
+  (g) ``EngineSpec.supports`` is memoized per (layer, engine).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+from repro.core.constraints import DLA_ANALOGUE_CONSTRAINTS
+from repro.core.engine import EngineSpec, jetson_orin_engines
+from repro.core.graph import LayerGraph, pointwise_meta
+from repro.core.pipeline import StagedModel
+from repro.core.plan_ir import make_plan_ir, translate_ir
+from repro.core.scheduler import RouteSpec, nmodel_schedule
+from repro.models import Pix2PixConfig, Pix2PixGenerator, YOLOv8, YOLOv8Config
+from repro.serve import ReplanConfig, Replanner, StreamExecutor, StreamSpec
+from repro.serve.executor import SegmentObservation
+
+
+@pytest.fixture(scope="module")
+def engines():
+    gpu, dla = jetson_orin_engines(constraints_dla=DLA_ANALOGUE_CONSTRAINTS)
+    return gpu, dla
+
+
+@pytest.fixture(scope="module")
+def serving_graphs():
+    pix = Pix2PixGenerator(Pix2PixConfig(deconv_mode="cropping")).layer_graph()
+    yolo = YOLOv8(YOLOv8Config(img_size=256)).layer_graph()
+    return pix, yolo
+
+
+@pytest.fixture(scope="module")
+def staged_pair():
+    cfg = Pix2PixConfig(img_size=32, base=8, deconv_mode="cropping")
+    gen = Pix2PixGenerator(cfg)
+    sm_pix = core.pix2pix_staged(cfg, {"generator": gen.init(jax.random.key(0))})
+    ycfg = YOLOv8Config(img_size=32)
+    ym = YOLOv8(ycfg)
+    sm_yolo = core.yolo_staged(ycfg, ym.init(jax.random.key(1)))
+    return sm_pix, sm_yolo
+
+
+def _toy_staged(n_layers=8, name="toy", flops=1e9):
+    ops = [(f"mul{i}", lambda p, s: {"x": s["x"] * 1.5 + 0.5}) for i in range(n_layers)]
+    graph = LayerGraph(
+        name,
+        [pointwise_meta(i, f"mul{i}", "act", (1, 64), flops_per_elem=flops / 64) for i in range(n_layers)],
+    ).renumber()
+    return StagedModel(
+        name=name,
+        ops=ops,
+        params=None,
+        graph=graph,
+        init_state=lambda x: {"x": x},
+        finalize=lambda s: s["x"],
+    )
+
+
+def _toy_engines(f0=1.0e12, f1=1.0e12):
+    return [
+        EngineSpec("E0", 1, f0, 500e9, 50e9, ()),
+        EngineSpec("E1", 1, f1, 500e9, 50e9, ()),
+    ]
+
+
+# ---- (a) max_cuts=1 is the legacy planner, bit-identical --------------------
+
+
+@pytest.mark.parametrize("mode", ["padded", "cropping"])
+@pytest.mark.parametrize("pair", ["self", "yolo"])
+def test_max_cuts1_bit_identical_to_haxconn(mode, pair, engines):
+    """The PR 2 pin, re-asserted through the multi-cut code path: the
+    k-cut generalization at max_cuts=1 picks the same partitions, cycle
+    time, and per-engine occupancy as the exact two-model search — bit
+    identical, not just close."""
+    gpu, dla = engines
+    g = Pix2PixGenerator(Pix2PixConfig(deconv_mode=mode)).layer_graph()
+    b = g if pair == "self" else YOLOv8(YOLOv8Config(img_size=256)).layer_graph()
+    ref = core.haxconn_schedule(g, b, dla, gpu)
+    plan = nmodel_schedule([g, b], [dla, gpu], max_cuts=1)
+    assert plan.partitions == [ref.p_a, ref.p_b]
+    assert plan.cycle_time == ref.schedule.cycle_time
+    assert plan.engine_times["DLA"] == ref.phase["constrained"]
+    assert plan.engine_times["GPU"] == ref.phase["flexible"]
+    assert plan.cuts == [(ref.p_a,), (ref.p_b,)]
+    assert plan.max_cuts == 1
+
+
+def test_route_spec_validation():
+    with pytest.raises(ValueError):
+        RouteSpec((3,), (0,))  # 1 cut needs 2 segment engines
+    with pytest.raises(ValueError):
+        RouteSpec((5, 3), (0, 1, 0))  # cuts must increase
+    r = RouteSpec((2, 5), (0, 1, 0))
+    assert r.n_cuts == 2
+    assert r.segments(8) == [(0, 0, 2), (1, 2, 5), (0, 5, 8)]
+
+
+# ---- (b) plan cost never worse as max_cuts grows ----------------------------
+
+
+def test_max_cuts2_never_worse_on_serving_graphs(engines, serving_graphs):
+    """The acceptance bar: on both serving graphs (coarse and expanded),
+    the max_cuts=2 analytic plan cost is never worse than max_cuts=1."""
+    gpu, dla = engines
+    pix, yolo = serving_graphs
+    for graphs in ([pix, yolo], [pix.expand(), yolo.expand()]):
+        p1 = nmodel_schedule(graphs, [dla, gpu], max_cuts=1)
+        p2 = nmodel_schedule(graphs, [dla, gpu], max_cuts=2)
+        assert p2.cycle_time <= p1.cycle_time
+        assert all(len(c) <= 2 for c in p2.cuts)
+        # the IR records the search *budget*, not the realized cut count:
+        # a max_cuts=2 search whose optimum is single-cut must not ratchet
+        # an inheriting re-planner down to budget 1
+        assert p2.ir.cut_budget == 2 and p2.ir.max_cuts == 2
+    p3 = nmodel_schedule([pix, yolo], [dla, gpu], max_cuts=3)
+    p1 = nmodel_schedule([pix, yolo], [dla, gpu], max_cuts=1)
+    assert p3.cycle_time <= p1.cycle_time
+
+
+def test_multicut_strictly_improves_bench_pair(engines):
+    """On the bench-sized (32px) pair the single cut cannot balance the
+    engines; the 2-cut search finds a strictly cheaper plan that really
+    uses a second cut."""
+    gpu, dla = engines
+    pix = Pix2PixGenerator(Pix2PixConfig(img_size=32, base=8, deconv_mode="cropping")).layer_graph()
+    yolo = YOLOv8(YOLOv8Config(img_size=32)).layer_graph()
+    p1 = nmodel_schedule([pix, yolo], [dla, gpu], max_cuts=1)
+    p2 = nmodel_schedule([pix, yolo], [dla, gpu], max_cuts=2)
+    assert p2.cycle_time < p1.cycle_time
+    assert max(len(c) for c in p2.cuts) == 2
+    assert p2.ir.max_cuts == 2
+    # the IR carries the multi-cut metadata
+    assert p2.ir.cuts == tuple(tuple(c) for c in p2.cuts)
+    assert p2.ir.cut_counts == tuple(len(c) for c in p2.cuts)
+
+
+# ---- (e) fixed= full-route pinning + partial holes --------------------------
+
+
+def test_fixed_route_specs_rescore_bit_exact(engines, serving_graphs):
+    """Re-scoring a plan's own routes through ``fixed=`` reproduces its
+    cycle time bit-exactly — the re-planner's incumbent-scoring contract."""
+    gpu, dla = engines
+    pix, yolo = serving_graphs
+    plan = nmodel_schedule([pix, yolo], [dla, gpu], max_cuts=2)
+    rescored = nmodel_schedule([pix, yolo], [dla, gpu], fixed=plan.ir.route_specs())
+    assert rescored.cycle_time == plan.cycle_time
+    assert rescored.cuts == plan.cuts
+    assert rescored.search == "fixed"
+
+
+def test_fixed_with_none_holds_other_models(engines, serving_graphs):
+    """A ``None`` entry leaves one model free while the rest stay pinned —
+    the partial re-plan path."""
+    gpu, dla = engines
+    pix, yolo = serving_graphs
+    plan = nmodel_schedule([pix, yolo], [dla, gpu], max_cuts=1)
+    specs = plan.ir.route_specs()
+    partial = nmodel_schedule([pix, yolo], [dla, gpu], fixed=[specs[0], None], max_cuts=2)
+    assert partial.cuts[0] == specs[0][0]  # pinned route untouched
+    # the free model was genuinely searched (its plan stays optimal-or-
+    # equal given the pin, so the cycle can't beat the joint optimum by
+    # more than the pin allows — sanity: it evaluated and emitted)
+    assert partial.cycle_time > 0
+    assert len(partial.cuts[1]) in (1, 2)
+    with pytest.raises(ValueError):
+        nmodel_schedule([pix, yolo], [dla, gpu], fixed=[specs[0]])  # wrong arity
+    with pytest.raises(ValueError):
+        nmodel_schedule([pix, yolo], [dla, gpu], fixed=[((3,), (0, 9)), None])  # bad engine
+
+
+# ---- (c) execution: pure re-orchestration, bit-exact eager ------------------
+
+
+def test_multicut_plan_executes_bit_exact_vs_single_cut(engines, staged_pair):
+    """The planned multi-cut routes run through the executor with outputs
+    bit-equal (eager) to the single-cut plan's and to the monolithic
+    models — routing is pure re-orchestration however many cuts it takes."""
+    gpu, dla = engines
+    sm_pix, sm_yolo = staged_pair
+    plan1 = nmodel_schedule([sm_pix.graph, sm_yolo.graph], [dla, gpu], max_cuts=1)
+    plan2 = nmodel_schedule([sm_pix.graph, sm_yolo.graph], [dla, gpu], max_cuts=2)
+    assert plan2.cycle_time < plan1.cycle_time  # the second cut is load-bearing
+    assert max(len(c) for c in plan2.cuts) == 2
+    streams = [StreamSpec("mri", 0), StreamSpec("det", 1)]
+    frames = [jax.random.normal(jax.random.key(i), (1, 32, 32, 3)) for i in range(3)]
+
+    def run(plan):
+        ex = StreamExecutor([sm_pix, sm_yolo], plan, streams, max_queue=8, jit_segments=False)
+        for f in frames:
+            assert ex.submit(0, f) and ex.submit(1, f)
+            ex.tick()
+        return ex.run_until_drained()
+
+    outs1, outs2 = run(plan1), run(plan2)
+    for k, sm in (("mri", sm_pix), ("det", sm_yolo)):
+        for f, a, b in zip(frames, outs1[k], outs2[k]):
+            ref = sm.run_all(f)
+            for la, lb, lr in zip(jax.tree.leaves(a), jax.tree.leaves(b), jax.tree.leaves(ref)):
+                np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+                np.testing.assert_array_equal(np.asarray(lb), np.asarray(lr))
+
+
+def test_run_route_and_check_route(staged_pair):
+    sm_pix, _ = staged_pair
+    n = sm_pix.n_layers
+    spans = [(0, 2), (2, n - 1), (n - 1, n)]
+    x = jax.random.normal(jax.random.key(7), (1, 32, 32, 3))
+    np.testing.assert_array_equal(
+        np.asarray(sm_pix.run_route(x, spans)), np.asarray(sm_pix.run_all(x))
+    )
+    with pytest.raises(ValueError):
+        sm_pix.check_route([(0, 2), (3, n)])  # gap
+    with pytest.raises(ValueError):
+        sm_pix.check_route([(0, 2), (2, n - 1)])  # short coverage
+    with pytest.raises(ValueError):
+        sm_pix.check_route([(0, n), (n, n)])  # empty span
+
+
+def test_fine_staged_multicut_plan_executes(engines):
+    """A 2-cut plan on the expanded graphs stages sub-block executables
+    and runs bit-exact (eager) vs the monolithic model."""
+    gpu, dla = engines
+    cfg = Pix2PixConfig(img_size=32, base=8, deconv_mode="cropping")
+    gen = Pix2PixGenerator(cfg)
+    params = {"generator": gen.init(jax.random.key(0))}
+    sm_pix_f = core.pix2pix_staged(cfg, params, granularity="fine")
+    ycfg = YOLOv8Config(img_size=32)
+    yparams = YOLOv8(ycfg).init(jax.random.key(1))
+    sm_yolo_f = core.yolo_staged(ycfg, yparams, granularity="fine")
+    plan = nmodel_schedule([sm_pix_f.graph, sm_yolo_f.graph], [dla, gpu], max_cuts=2)
+    streams = [StreamSpec("mri", 0), StreamSpec("det", 1)]
+    ex = StreamExecutor([sm_pix_f, sm_yolo_f], plan, streams, max_queue=8, jit_segments=False)
+    frames = [jax.random.normal(jax.random.key(i), (1, 32, 32, 3)) for i in range(2)]
+    for f in frames:
+        assert ex.submit(0, f) and ex.submit(1, f)
+        ex.tick()
+    outs = ex.run_until_drained()
+    for k, sm in (("mri", sm_pix_f), ("det", sm_yolo_f)):
+        for f, o in zip(frames, outs[k]):
+            for la, lb in zip(jax.tree.leaves(sm.run_all(f)), jax.tree.leaves(o)):
+                np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_executor_rejects_unstageable_multicut_plan(engines):
+    """A span that cuts inside a fused stage callable is rejected up
+    front (construction AND swap), not discovered mid-flight."""
+    ycfg = YOLOv8Config(img_size=32)
+    yparams = YOLOv8(ycfg).init(jax.random.key(1))
+    sm = core.yolo_staged(ycfg, yparams, granularity="fine")
+    bad_p = next(p for p in range(1, sm.n_layers) if not sm.graph[p - 1].cut_after)
+    bad = make_plan_ir((sm.name,), ("E0", "E1"), [[(0, 0, bad_p), (1, bad_p, sm.n_layers)]])
+    with pytest.raises(ValueError):
+        StreamExecutor([sm], bad, [StreamSpec("det", 0)])
+    ok_p = sm.graph.cut_points()[0]
+    ok = make_plan_ir((sm.name,), ("E0", "E1"), [[(0, 0, ok_p), (1, ok_p, sm.n_layers)]])
+    ex = StreamExecutor([sm], ok, [StreamSpec("det", 0)])
+    with pytest.raises(ValueError):
+        ex.swap_plan(bad)
+
+
+# ---- (d) hot-swap single-cut -> multi-cut ----------------------------------
+
+
+def test_hot_swap_single_to_multicut_zero_drops():
+    """Swap a 2-segment plan for a 3-segment plan while frames are in
+    flight: zero drops, per-stream FIFO order, outputs bit-exact vs an
+    unswapped run; in-flight frames finish on their admitted 2-segment
+    routes while new admissions take the 3-segment ones."""
+    sm = _toy_staged(n_layers=6)
+    ir_a = make_plan_ir((sm.name,), ("E0", "E1"), [[(0, 0, 3), (1, 3, 6)]])
+    ir_b = make_plan_ir((sm.name,), ("E0", "E1"), [[(0, 0, 2), (1, 2, 4), (0, 4, 6)]])
+    assert ir_b.cut_counts == (2,) and ir_b.max_cuts == 2
+    streams = [StreamSpec("s0", 0), StreamSpec("s1", 0)]
+    frames = {
+        s.name: [jnp.full((1, 64), float(3 * i + t)) for t in range(4)]
+        for i, s in enumerate(streams)
+    }
+
+    def run(swap_at=None):
+        ex = StreamExecutor([sm], ir_a, streams, max_queue=8, jit_segments=False)
+        for t in range(4):
+            for i, s in enumerate(streams):
+                assert ex.submit(i, frames[s.name][t])
+        ticks = 0
+        while ex.pending:
+            if swap_at is not None and ticks == swap_at:
+                assert ex.in_flight, "swap must happen with frames in flight"
+                ex.swap_plan(ir_b)
+            ex.tick()
+            ticks += 1
+        return ex
+
+    ex_plain, ex_swap = run(), run(swap_at=2)
+    assert ex_swap.plan_revision == 1
+    assert ex_swap.swap_events[0].cuts == ((2, 4),)
+    for s in streams:
+        assert len(ex_swap.outputs[s.name]) == len(frames[s.name])  # zero drops
+        for a, b in zip(ex_plain.outputs[s.name], ex_swap.outputs[s.name]):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        fids = [c.frame_id for c in ex_swap.completions if c.stream == s.name]
+        assert fids == sorted(fids)
+    spans = [e.work.split("[")[1].split(")")[0] for e in ex_swap.log if "#f" in e.work]
+    assert any(sp == "3:6" for sp in spans)  # old route finished in flight
+    assert {"0:2", "2:4", "4:6"} <= set(spans)  # new 3-segment route ran
+
+
+# ---- plan IR metadata -------------------------------------------------------
+
+
+def test_plan_ir_multicut_metadata_roundtrip():
+    ir = make_plan_ir(
+        ("a", "b"),
+        ("E0", "E1"),
+        [[(0, 0, 2), (1, 2, 5), (0, 5, 9)], [(1, 0, 4), (0, 4, 9)]],
+    )
+    assert ir.cuts == ((2, 5), (4,))
+    assert ir.cut_counts == (2, 1)
+    assert ir.max_cuts == 2
+    assert ir.route_specs() == [((2, 5), (0, 1, 0)), ((4,), (1, 0))]
+    back = type(ir).from_json(ir.to_json())
+    assert back.cuts == ir.cuts and back.route_specs() == ir.route_specs()
+    assert "cuts=[2, 1]" in ir.describe()
+
+
+def test_translate_ir_and_coarse_cut_inverse(serving_graphs):
+    _, yolo = serving_graphs
+    eg = yolo.expand()
+    gpu, dla = jetson_orin_engines()
+    plan = nmodel_schedule([yolo], [dla, gpu], max_cuts=2)
+    fine_ir = translate_ir(plan.ir, [eg])
+    assert fine_ir.n_layers == (len(eg),)
+    for cs, fs in zip(plan.ir.segments[0], fine_ir.segments[0]):
+        assert fs.lo == eg.fine_cut(cs.lo) and fs.hi == eg.fine_cut(cs.hi)
+        assert eg.coarse_cut(fs.lo) == cs.lo and eg.coarse_cut(fs.hi) == cs.hi
+    # a fine point strictly inside a coarse node has no coarse preimage
+    interior = next(
+        p for p in range(1, len(eg)) if all(hi != p for _, hi in eg.spans)
+    )
+    assert eg.coarse_cut(interior) is None
+    assert eg.coarse_cut(0) == 0 and eg.coarse_cut(len(eg)) == len(eg.spans)
+
+
+# ---- (g) supports memoization ----------------------------------------------
+
+
+def test_supports_memoized_per_layer_and_engine():
+    class Counting:
+        def __init__(self):
+            self.calls = 0
+
+        def check(self, l):
+            self.calls += 1
+            return None
+
+    c = Counting()
+    eng = EngineSpec("E", 1, 1e12, 1e12, 32e9, (c,))
+    prim = pointwise_meta(0, "p", "act", (1, 8))
+    comp = prim.clone()
+    comp.sublayers = [pointwise_meta(i, f"s{i}", "act", (1, 8)) for i in range(3)]
+    for _ in range(5):
+        assert eng.supports(prim) == []
+    assert c.calls == 1  # memoized after the first walk
+    first = eng.supports(comp)
+    calls_after_composite = c.calls
+    assert eng.supports(comp) is first  # cached object, no re-walk
+    assert c.calls == calls_after_composite
+    # a clone is a fresh object: re-checked, not served stale
+    eng.supports(prim.clone())
+    assert c.calls == calls_after_composite + 1
+
+
+# ---- (f) re-planner: partial swaps + escalation -----------------------------
+
+
+def _feed_all(rp, ex, engine_scale):
+    """One synthetic profiled tick: every segment of every live route
+    observed at ``engine_scale[engine] x`` its base expectation."""
+    for mi in range(len(ex.models)):
+        for seg in ex.plan.route(mi):
+            expected = rp._expected_base(mi, seg.engine, seg.lo, seg.hi)
+            rp.observe(
+                SegmentObservation(
+                    tick=ex.tick_count, model_index=mi, stage=seg.stage, engine=seg.engine,
+                    lo=seg.lo, hi=seg.hi, wall_s=engine_scale[seg.engine] * expected,
+                    batch=1, revision=ex.plan_revision,
+                )
+            )
+    return rp.maybe_replan(ex)
+
+
+def test_partial_swap_replans_only_drifted_route():
+    """Two models, sustained skew on one engine: with a generous partial
+    tolerance the re-planner swaps only the route carrying the most work
+    on the drifted engine; the other model's route is untouched and the
+    swap is recorded as partial."""
+    sm_a = _toy_staged(n_layers=8, name="toyA")
+    sm_b = _toy_staged(n_layers=8, name="toyB")
+    engines = _toy_engines()
+    plan = nmodel_schedule([sm_a.graph, sm_b.graph], engines)
+    cfg = ReplanConfig(
+        drift_threshold=0.5, hysteresis=2, cooldown_ticks=0, warmup_obs=2,
+        min_improvement=0.01, partial_swaps=True, partial_tolerance=10.0,
+    )
+    rp = Replanner([sm_a.graph, sm_b.graph], engines, cfg)
+    ex = StreamExecutor(
+        [sm_a, sm_b], plan, [StreamSpec("a", 0), StreamSpec("b", 1)], max_queue=4
+    )
+    for _ in range(3):
+        assert _feed_all(rp, ex, {0: 100.0, 1: 100.0}) is None
+    assert rp.calibrated
+    old_specs = ex.plan.route_specs()
+    ev = None
+    for _ in range(cfg.hysteresis + 1):
+        ev = ev or _feed_all(rp, ex, {0: 400.0, 1: 100.0})
+    assert ev is not None and ev.swapped and ev.partial
+    new_specs = ex.plan.route_specs()
+    changed = [i for i in range(2) if new_specs[i] != old_specs[i]]
+    assert len(changed) == 1  # exactly the drifted route moved
+    assert rp.swap_stalls[0].partial
+    assert rp.summary()["partial_swaps"] == 1
+    assert rp.summary()["swap_stall"]["partial_swaps"] == 1
+    # the moved route carries less work on the slowed engine
+    mi = changed[0]
+    old_e0 = sum(hi - lo for (_, lo, hi) in RouteSpec(*old_specs[mi]).segments(8) if _ == 0)
+    new_e0 = sum(hi - lo for (_, lo, hi) in RouteSpec(*new_specs[mi]).segments(8) if _ == 0)
+    assert new_e0 < old_e0
+
+
+def test_escalation_widens_stride_after_fires():
+    """``escalate_after`` drift fires switch re-planning from the strided
+    candidate set to ``escalate_stride`` — the full cut set."""
+    sm = _toy_staged(n_layers=12, name="toy12")
+    engines = _toy_engines()
+    plan = nmodel_schedule([sm.graph], engines, stride=4)
+    cfg = ReplanConfig(
+        drift_threshold=0.5, hysteresis=2, cooldown_ticks=0, warmup_obs=2,
+        min_improvement=0.0, stride=4, escalate_after=2, escalate_stride=1,
+    )
+    rp = Replanner([sm.graph], engines, cfg)
+    ex = StreamExecutor([sm], plan, [StreamSpec("s", 0)], max_queue=4)
+    for _ in range(3):
+        _feed_all(rp, ex, {0: 100.0, 1: 100.0})
+    assert rp.calibrated
+    events = []
+    scale = 100.0
+    while len(events) < 2:
+        scale *= 4.0  # keep drifting past each rebaseline
+        for _ in range(cfg.hysteresis + 2):
+            ev = _feed_all(rp, ex, {0: scale, 1: 100.0})
+            if ev:
+                events.append(ev)
+                break
+    assert not events[0].escalated  # first fire: still strided
+    assert events[1].escalated and rp.escalated  # second fire: full cut set
+    assert rp.summary()["escalated"] and rp.summary()["drift_fires"] >= 2
+
+
+def test_escalation_translates_coarse_plans_onto_fine_staging():
+    """The cheap-planning deployment: models staged fine, re-planner
+    given the coarse graphs. Normal re-plans are made coarse and
+    translated to fine indices; after escalation the planner searches the
+    expansion itself (cuts inside composites become reachable)."""
+    ycfg = YOLOv8Config(img_size=32)
+    yparams = YOLOv8(ycfg).init(jax.random.key(1))
+    sm_f = core.yolo_staged(ycfg, yparams, granularity="fine")
+    coarse = YOLOv8(ycfg).layer_graph()
+    eg = sm_f.graph
+    engines = _toy_engines(f0=1.0e12, f1=2.0e12)
+    coarse_plan = nmodel_schedule([coarse], engines)
+    fine_ir = translate_ir(coarse_plan.ir, [eg])
+    ex = StreamExecutor([sm_f], fine_ir, [StreamSpec("det", 0)], max_queue=4, jit_segments=False)
+    cfg = ReplanConfig(
+        drift_threshold=0.5, hysteresis=2, cooldown_ticks=0, warmup_obs=2,
+        min_improvement=0.0, escalate_after=2, profile_every=1,
+    )
+    rp = Replanner([coarse], engines, cfg)
+    rp.attach(ex)
+    assert rp._translate  # coarse planning graphs, fine-staged executor
+    for _ in range(3):
+        _feed_all(rp, ex, {0: 100.0, 1: 100.0})
+    assert rp.calibrated
+    coarse_boundaries = {eg.fine_cut(p) for p in range(len(coarse) + 1)}
+    events = []
+    scale = 100.0
+    while len(events) < 2:
+        scale *= 4.0
+        for _ in range(cfg.hysteresis + 2):
+            ev = _feed_all(rp, ex, {0: scale, 1: 100.0})
+            if ev:
+                events.append(ev)
+                break
+    # pre-escalation plans are coarse-made: every cut lands on a coarse
+    # boundary of the fine index space
+    assert not events[0].escalated
+    for cuts in events[0].new_cuts:
+        assert all(c in coarse_boundaries for c in cuts)
+    assert events[1].escalated
+    # the escalated plan's IR is directly in fine indices and executable
+    ex.prepare_plan(ex.plan)  # still stages cleanly after any swaps
+
+
+def test_replanner_inherits_incumbent_max_cuts(engines, staged_pair):
+    gpu, dla = engines
+    sm_pix, sm_yolo = staged_pair
+    plan2 = nmodel_schedule([sm_pix.graph, sm_yolo.graph], [dla, gpu], max_cuts=2)
+    assert plan2.ir.max_cuts == 2
+    ex = StreamExecutor(
+        [sm_pix, sm_yolo], plan2, [StreamSpec("mri", 0), StreamSpec("det", 1)], max_queue=4
+    )
+    rp = Replanner([sm_pix.graph, sm_yolo.graph], [dla, gpu])
+    rp.attach(ex)
+    assert rp._active_max_cuts() == 2  # inherit the incumbent's budget
+    rp2 = Replanner(
+        [sm_pix.graph, sm_yolo.graph], [dla, gpu], ReplanConfig(max_cuts=3)
+    )
+    rp2.attach(ex)
+    assert rp2._active_max_cuts() == 3  # explicit override wins
