@@ -123,7 +123,7 @@ def run_granularity_compare(
     tractability knob costs, not the never-worse guarantee."""
     from repro.core.constraints import DLA_ANALOGUE_CONSTRAINTS
     from repro.core.engine import jetson_orin_engines
-    from repro.core.scheduler import nmodel_schedule
+    from repro.core.scheduler import _nmodel_schedule_impl as nmodel_schedule
     from repro.serve import build_pix_yolo_serving
 
     gpu, dla = jetson_orin_engines(constraints_dla=DLA_ANALOGUE_CONSTRAINTS)
@@ -185,7 +185,7 @@ def run_multicut_compare(
     how much of that headroom the executor realizes."""
     from repro.core.constraints import DLA_ANALOGUE_CONSTRAINTS
     from repro.core.engine import jetson_orin_engines
-    from repro.core.scheduler import nmodel_schedule
+    from repro.core.scheduler import _nmodel_schedule_impl as nmodel_schedule
     from repro.serve import build_pix_yolo_serving
 
     gpu, dla = jetson_orin_engines(constraints_dla=DLA_ANALOGUE_CONSTRAINTS)
@@ -232,6 +232,173 @@ def run_multicut_compare(
         # jitter can put it at 1 cut even when the analytic plan is
         # cheaper — per-segment host dispatch is not free on CPU)
         "fps_ratio": med[best_mc]["aggregate_fps"] / med[base_mc]["aggregate_fps"],
+    }
+
+
+def run_openloop_sweep(
+    img: int,
+    base: int,
+    norm: str,
+    microbatch: int,
+    load_factors=(0.5, 1.0, 3.0),
+    horizon_s: float = 1.5,
+    n_pix: int = 2,
+    max_queue: int = 4,
+    queue_only_depth: int = 64,
+) -> dict:
+    """Open-loop scenario sweep: offered load at fractions/multiples of the
+    measured closed-loop capacity, under a deadline SLO with the
+    graceful-degradation admission controller on.
+
+    The SLO deadline is derived from the measured capacity — 1.2x the
+    worst bounded backlog in frame-service-times — so the contract under
+    test is load-geometry, not a container-speed constant: with bounded
+    queues every admitted frame can make its deadline, while the 3x
+    *queue-only baseline* (admission off, ``queue_only_depth`` queues)
+    backlogs far past it and collapses goodput. Recorded per point:
+    goodput-under-SLO (total and per tier), p50/p99, and the
+    admit/shed/drop ledger; plus the 3x shed-vs-queue-only goodput ratio
+    and p99 comparison the trend gate and tests pin."""
+    import dataclasses
+
+    import jax
+
+    from repro.serve import (
+        AdmissionConfig,
+        MultiStreamServer,
+        SLOPolicy,
+        StreamSpec,
+        TrafficConfig,
+        build_pix_yolo_serving,
+        merge_flags_for,
+        run_open_loop,
+    )
+
+    models, plan, streams, _ = build_pix_yolo_serving(
+        img=img, base=base, n_pix=n_pix, n_yolo=1, norm=norm
+    )
+
+    def frame(si: int, t: int):
+        return jax.random.normal(jax.random.key(1000 * si + t), (1, img, img, 3))
+
+    def make_server(slo_streams, admission, depth):
+        server = MultiStreamServer(
+            models,
+            plan,
+            slo_streams,
+            max_queue=depth,
+            microbatch=microbatch,
+            merge_batches=merge_flags_for(models),
+            admission=admission,
+        )
+        for t in range(2):  # warm compiled segments before measuring
+            for si, s in enumerate(slo_streams):
+                server.submit(s.model_index, frame(si, t))
+            server.pump()
+        server.drain()
+        # also warm the degraded paths the admission ladder can route to
+        # mid-measurement: level-1 frames fly solo (unmerged shapes) and
+        # level-2 frames run the single-segment degraded route — both
+        # compile on first use, and a multi-second XLA compile inside the
+        # measured window would masquerade as an SLO collapse
+        for level in (1, 2):
+            for si in range(len(slo_streams)):
+                server.executor.submit(si, frame(si, 50 + level), degrade=level)
+            server.executor.run_until_drained()
+        server.reset_metrics()
+        return server
+
+    # closed-loop capacity of the warmed stack = the 1x reference rate
+    cal = make_server(streams, None, max_queue)
+    n_cal = 6
+    t0 = time.perf_counter()
+    for t in range(n_cal):
+        for si, s in enumerate(streams):
+            cal.submit(s.model_index, frame(si, 100 + t))
+        cal.pump()
+    cal.drain()
+    capacity = n_cal * len(streams) / (time.perf_counter() - t0)
+
+    # deadline: 1.2x the worst bounded backlog, in frame-service-times —
+    # feasible under bounded queues, infeasible under the deep baseline
+    deadline_ms = 1.2 * max_queue * len(streams) / capacity * 1e3
+    slo_streams = [
+        dataclasses.replace(
+            s,
+            slo=SLOPolicy(
+                deadline_ms=deadline_ms,
+                tier=0 if s.model_index == 1 else 1,  # detection outranks reconstruction
+                name=f"{s.name}-slo",
+            ),
+        )
+        for s in streams
+    ]
+
+    def drive(server, factor: float, seed0: int) -> dict:
+        rate = factor * capacity / len(streams)
+        traffic = {
+            s.name: TrafficConfig(process="poisson", rate_hz=rate, seed=seed0 + i)
+            for i, s in enumerate(slo_streams)
+        }
+        counts: dict[str, int] = {}
+
+        def frame_fn(name: str):
+            t = counts.get(name, 0)
+            counts[name] = t + 1
+            si = next(i for i, s in enumerate(slo_streams) if s.name == name)
+            return frame(si, 10_000 + t)
+
+        rep = run_open_loop(server, traffic, frame_fn, horizon_s, max_wall_s=600.0)
+        adm = rep["admission"]
+        return {
+            "load_factor": factor,
+            "offered_rate_hz": rate * len(slo_streams),
+            "offered": adm["offered"],
+            "admitted": adm["admitted"],
+            "shed_res": adm["shed_res"],
+            "shed_route": adm["shed_route"],
+            "dropped": adm["dropped"],
+            "aggregate_fps": rep["aggregate_fps"],
+            "goodput_fps": rep["goodput_fps"],
+            "latency_p50_ms": rep["latency_p50_ms"],
+            "latency_p99_ms": rep["latency_p99_ms"],
+            "slo_miss_rate_recent": rep["slo_miss_rate_recent"],
+            "tiers": {
+                t: {
+                    "offered": tm["offered"],
+                    "goodput_fps": tm["goodput_fps"],
+                    "slo_attainment": tm["slo_attainment"],
+                }
+                for t, tm in rep["tiers"].items()
+            },
+        }
+
+    points = {}
+    for i, f in enumerate(load_factors):
+        server = make_server(slo_streams, AdmissionConfig(), max_queue)
+        points[str(f)] = drive(server, f, seed0=10 * (i + 1))
+    top = max(load_factors)
+    # the 3x queue-only baseline: same arrivals, no admission control,
+    # queues deep enough to absorb the whole burst — throughput survives,
+    # goodput collapses (every queued frame blows its deadline)
+    queue_only = drive(
+        make_server(slo_streams, None, queue_only_depth), top, seed0=10 * (len(load_factors) + 1)
+    )
+    shed_top = points[str(top)]
+    q_good = queue_only["goodput_fps"]
+    return {
+        "process": "poisson",
+        "streams": len(slo_streams),
+        "horizon_s": horizon_s,
+        "capacity_fps": capacity,
+        "deadline_ms": deadline_ms,
+        "max_queue": max_queue,
+        "queue_only_depth": queue_only_depth,
+        "load_factors": list(load_factors),
+        "points": points,
+        "queue_only_top": queue_only,
+        "shed_vs_queue_goodput_ratio": shed_top["goodput_fps"] / q_good if q_good > 0 else float("inf"),
+        "p99_bounded_at_top": shed_top["latency_p99_ms"] <= queue_only["latency_p99_ms"],
     }
 
 
@@ -442,6 +609,17 @@ def main():
         help="skip the max_cuts (k-segment route) sweep",
     )
     ap.add_argument(
+        "--skip-openloop-sweep",
+        action="store_true",
+        help="skip the open-loop traffic / SLO / admission-control sweep",
+    )
+    ap.add_argument(
+        "--openloop-horizon",
+        type=float,
+        default=1.5,
+        help="open-loop arrival horizon per load point (seconds)",
+    )
+    ap.add_argument(
         "--max-cuts-sweep",
         default="1,2,3",
         help="comma-separated cut budgets for the multi-cut comparison",
@@ -574,6 +752,27 @@ def main():
             f"FPS x{multicut_compare['fps_ratio']:.2f})"
         )
 
+    openloop = None
+    if not args.skip_openloop_sweep:
+        openloop = run_openloop_sweep(
+            img, args.base, args.norm, args.microbatch, horizon_s=args.openloop_horizon
+        )
+        pts = openloop["points"]
+        print(
+            f"openloop sweep (capacity={openloop['capacity_fps']:.2f} FPS, "
+            f"deadline={openloop['deadline_ms']:.0f} ms): "
+            + "  ".join(
+                f"{lf}x: goodput={pts[str(lf)]['goodput_fps']:.2f} "
+                f"p99={pts[str(lf)]['latency_p99_ms']:.0f}ms "
+                f"drop={pts[str(lf)]['dropped']}"
+                for lf in openloop["load_factors"]
+            )
+            + f"  queue-only@{max(openloop['load_factors'])}x: "
+            f"goodput={openloop['queue_only_top']['goodput_fps']:.2f} "
+            f"p99={openloop['queue_only_top']['latency_p99_ms']:.0f}ms "
+            f"(shed/queue goodput x{openloop['shed_vs_queue_goodput_ratio']:.2f})"
+        )
+
     replan_scenario = None
     if not args.skip_replan_scenario:
         replan_scenario = run_replan_scenario(img, args.base, args.norm, skew=args.skew)
@@ -609,6 +808,7 @@ def main():
         "dispatch_compare": dispatch_compare,
         "granularity_compare": granularity_compare,
         "multicut_compare": multicut_compare,
+        "openloop": openloop,
         "replan_scenario": replan_scenario,
         "results": results,
     }

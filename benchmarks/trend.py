@@ -56,6 +56,15 @@ def comparable(baseline: dict, candidate: dict) -> list[str]:
     ]
 
 
+def goodput_1x(payload: dict):
+    """Goodput-under-SLO at 1x offered load, from either a full bench
+    payload (``openloop.points."1.0"``) or a flattened history entry."""
+    ol = payload.get("openloop")
+    if isinstance(ol, dict):
+        return ol.get("points", {}).get("1.0", {}).get("goodput_fps")
+    return payload.get("openloop_goodput_1x")
+
+
 def compare(baseline: dict, candidate: dict, threshold: float) -> tuple[bool, str]:
     """Returns (ok, report). ``ok`` is False only for a real regression."""
     lines = []
@@ -76,6 +85,17 @@ def compare(baseline: dict, candidate: dict, threshold: float) -> tuple[bool, st
     ok = ratio >= 1.0 - threshold
     if not ok:
         lines.append(f"  REGRESSION: peak FPS dropped more than {threshold:.0%}")
+    # goodput-under-SLO gate at 1x offered load — only when both runs
+    # carry the open-loop sweep (older baselines predate it)
+    base_good, cand_good = goodput_1x(baseline), goodput_1x(candidate)
+    if base_good and cand_good is not None:
+        gratio = cand_good / base_good
+        lines.append(
+            f"  goodput@1x: {base_good:.2f} -> {cand_good:.2f} FPS ({gratio - 1.0:+.1%})"
+        )
+        if gratio < 1.0 - threshold:
+            ok = False
+            lines.append(f"  REGRESSION: goodput-under-SLO at 1x dropped more than {threshold:.0%}")
     return ok, "\n".join(lines)
 
 
@@ -94,6 +114,15 @@ def history_entry(candidate: dict) -> dict:
         entry["multicut_best"] = mcc.get("best_max_cuts")
         entry["multicut_plan_cost_ratio"] = mcc.get("plan_cost_ratio")
         entry["multicut_fps_ratio"] = mcc.get("fps_ratio")
+    if candidate.get("openloop"):
+        ol = candidate["openloop"]
+        pts = ol.get("points", {})
+        top = str(max(ol.get("load_factors", [0])))
+        entry["openloop_goodput_1x"] = pts.get("1.0", {}).get("goodput_fps")
+        entry["openloop_goodput_top"] = pts.get(top, {}).get("goodput_fps")
+        entry["openloop_p99_top_ms"] = pts.get(top, {}).get("latency_p99_ms")
+        entry["openloop_shed_vs_queue_ratio"] = ol.get("shed_vs_queue_goodput_ratio")
+        entry["openloop_capacity_fps"] = ol.get("capacity_fps")
     return entry
 
 

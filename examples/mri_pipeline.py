@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import core
+from repro.core.scheduler import _haxconn_schedule_impl
 from repro.core.constraints import DLA_ANALOGUE_CONSTRAINTS
 from repro.core.engine import jetson_orin_engines
 from repro.data import PhantomConfig, detection_batches, phantom_batches
@@ -60,7 +61,7 @@ def main():
     gpu, dla = jetson_orin_engines(constraints_dla=DLA_ANALOGUE_CONSTRAINTS)
     gsm = core.pix2pix_staged(cfg, params)
     ysm = core.yolo_staged(ycfg, yparams)
-    plan = core.haxconn_schedule(gsm.graph, ysm.graph, dla, gpu)
+    plan = _haxconn_schedule_impl(gsm.graph, ysm.graph, dla, gpu)
     s = plan.schedule
     print("\n== HaX-CoNN schedule (cost model @ Jetson Orin constants) ==")
     for n in s.notes:

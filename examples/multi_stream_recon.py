@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import core
+from repro.core.scheduler import _haxconn_schedule_impl
 from repro.core.constraints import DLA_ANALOGUE_CONSTRAINTS
 from repro.core.engine import jetson_orin_engines
 from repro.models import Pix2PixConfig, Pix2PixGenerator
@@ -24,7 +25,7 @@ def main():
     for mode in ("padded", "cropping", "conv"):
         g = Pix2PixGenerator(Pix2PixConfig(deconv_mode=mode)).layer_graph()
         ill, _ = core.check_graph(g, DLA)
-        r = core.haxconn_schedule(g, g, DLA, GPU)
+        r = _haxconn_schedule_impl(g, g, DLA, GPU)
         s = r.schedule
         results[mode] = s
         print(f"--- {mode} ({len(ill)} DLA-illegal layers) ---")
@@ -42,7 +43,7 @@ def main():
     params = {"generator": gen.init(jax.random.key(0))}
     sm_a = core.pix2pix_staged(cfg, params)
     sm_b = core.pix2pix_staged(cfg, params)
-    plan = core.haxconn_schedule(sm_a.graph, sm_b.graph, DLA, GPU)
+    plan = core.plan([sm_a.graph, sm_b.graph], [DLA, GPU], kind="haxconn")
     pipe = core.TwoModelPipeline(sm_a, sm_b, plan)
     frames = [jax.random.normal(jax.random.key(i), (1, 64, 64, 3)) for i in range(3)]
     outs_a, outs_b = pipe.run_stream(frames, list(reversed(frames)))

@@ -1,4 +1,5 @@
 # The paper's primary contribution: engine-aware multi-model scheduling.
+from .api import plan
 from .graph import LayerGraph, LayerMeta, conv_meta, pointwise_meta
 from .engine import (
     EngineSpec,

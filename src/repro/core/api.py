@@ -1,0 +1,158 @@
+"""The unified planning entry point: ``repro.core.plan``.
+
+Five PRs of organic growth left four scheduler entry points
+(``nmodel_schedule``, ``haxconn_schedule``, ``standalone_schedule``,
+``naive_schedule``), each returning a different result type, while the
+serve stack consumes exactly one contract — the typed ``PlanIR``.
+``plan()`` collapses them: one call signature, one return type, with the
+legacy searches kept verbatim underneath so outputs are bit-identical to
+the old entry points on the same inputs.
+
+``kind`` selects the scheduling mode (``"nmodel"`` is the general
+multi-stream planner and the default; ``"haxconn"``/``"standalone"``/
+``"naive"`` are the paper's two-model comparison schedules).
+``granularity="fine"`` expands coarse graphs to their primitive
+decompositions before planning — cuts inside composite blocks become
+legal at stage-callable boundaries. ``max_cuts="auto"`` raises the
+per-model cut budget until the planned cycle stops improving (the
+carry-over planner polish): budget k is structurally never worse than
+k-1, so the loop stops at the first budget that buys nothing.
+"""
+from __future__ import annotations
+
+from .cost_model import CostProvider, make_cost_provider
+from .graph import ExpandedGraph, LayerGraph
+from .plan_ir import PlanIR
+
+# Budget ceiling for max_cuts="auto": each extra cut multiplies the
+# candidate space, and past a handful of ping-pong boundaries the
+# transfer cost dominates any balance gain on every graph we plan.
+AUTO_CUTS_CEILING = 4
+# Relative cycle improvement a bigger budget must buy to keep escalating.
+AUTO_CUTS_RTOL = 1e-6
+
+_KINDS = ("nmodel", "haxconn", "standalone", "naive")
+
+
+def _as_graph(g) -> LayerGraph:
+    """Accept a ``LayerGraph`` or anything carrying one (``StagedModel``)."""
+    if isinstance(g, LayerGraph):
+        return g
+    inner = getattr(g, "graph", None)
+    if isinstance(inner, LayerGraph):
+        return inner
+    raise TypeError(f"expected a LayerGraph or StagedModel, got {type(g).__name__}")
+
+
+def plan(
+    graphs,
+    engines,
+    *,
+    kind: str = "nmodel",
+    search: str = "auto",
+    granularity: str = "coarse",
+    max_cuts: int | str = 1,
+    cost: str | CostProvider | None = None,
+    allow_fallback: bool = True,
+    stride: int = 1,
+    fixed=None,
+    beam_width: int = 64,
+    route_limit: int = 512,
+    exhaustive_limit: int = 20000,
+    descent_rounds: int = 8,
+) -> PlanIR:
+    """Plan ``graphs`` over ``engines``; returns the typed ``PlanIR``.
+
+    ``graphs`` is a sequence of ``LayerGraph``s (or ``StagedModel``s — the
+    graph is taken); a single graph may be passed bare for
+    ``kind="standalone"``. ``engines`` follows the legacy conventions:
+    constrained engines first (``nmodel``'s fallback flows to the least
+    constrained one; ``haxconn``/``naive`` read ``(constrained,
+    flexible)``; ``standalone`` reads ``(engine, peer)``).
+
+    ``cost`` is a ``CostProvider`` or a ``make_cost_provider`` name
+    (``analytic``/``measured``/``blended``); ``fixed`` pins routes instead
+    of searching (the ``nmodel_schedule`` forms: ints, ``(cuts,
+    engines)`` tuples, ``RouteSpec``s, or ``None`` holes; an ``(pa, pb)``
+    pair for ``haxconn``). ``max_cuts="auto"`` searches budgets
+    1..``AUTO_CUTS_CEILING`` and keeps the first whose successor no
+    longer improves the planned cycle (``PlanIR.cut_budget`` records the
+    chosen budget). Outputs are bit-identical to the legacy entry points
+    at the same settings — ``plan(...)`` is ``<legacy>(...).ir``.
+    """
+    from . import scheduler as _sched
+
+    if kind not in _KINDS:
+        raise ValueError(f"unknown plan kind {kind!r}; expected one of {_KINDS}")
+    if granularity not in ("coarse", "fine"):
+        raise ValueError(f"granularity must be 'coarse' or 'fine', got {granularity!r}")
+    if isinstance(graphs, (LayerGraph,)) or hasattr(graphs, "graph"):
+        graphs = [graphs]
+    gs = [_as_graph(g) for g in graphs]
+    if granularity == "fine":
+        gs = [g if isinstance(g, ExpandedGraph) else g.expand() for g in gs]
+    provider = None
+    if cost is not None:
+        provider = cost if isinstance(cost, CostProvider) else make_cost_provider(cost)
+    engines = list(engines)
+
+    if kind == "standalone":
+        if len(gs) != 1:
+            raise ValueError(f"kind='standalone' plans one graph, got {len(gs)}")
+        if len(engines) != 2:
+            raise ValueError("kind='standalone' needs (engine, peer)")
+        return _sched._standalone_schedule_impl(
+            gs[0], engines[0], engines[1], allow_fallback=allow_fallback, provider=provider
+        ).ir
+    if kind == "naive":
+        if len(gs) != 2 or len(engines) != 2:
+            raise ValueError("kind='naive' plans two graphs over (constrained, flexible)")
+        return _sched._naive_schedule_impl(
+            gs[0], gs[1], engines[0], engines[1], provider=provider
+        ).ir
+    if kind == "haxconn":
+        if len(gs) != 2 or len(engines) != 2:
+            raise ValueError("kind='haxconn' plans two graphs over (constrained, flexible)")
+        return _sched._haxconn_schedule_impl(
+            gs[0],
+            gs[1],
+            engines[0],
+            engines[1],
+            allow_fallback=allow_fallback,
+            stride=stride,
+            fixed=fixed,
+            provider=provider,
+        ).ir
+
+    def _nmodel(budget: int) -> PlanIR:
+        return _sched._nmodel_schedule_impl(
+            gs,
+            engines,
+            allow_fallback=allow_fallback,
+            stride=stride,
+            fixed=fixed,
+            exhaustive_limit=exhaustive_limit,
+            descent_rounds=descent_rounds,
+            provider=provider,
+            search=search,
+            beam_width=beam_width,
+            max_cuts=budget,
+            route_limit=route_limit,
+        ).ir
+
+    if max_cuts == "auto":
+        # Escalate the cut budget until the planned cycle stops improving.
+        # Budget k+1 is structurally never worse than k (the k-budget
+        # optimum is polished inside the larger space), so the first
+        # budget whose successor buys nothing is the stopping point.
+        best = _nmodel(1)
+        for k in range(2, AUTO_CUTS_CEILING + 1):
+            cand = _nmodel(k)
+            if cand.expected_cycle < best.expected_cycle * (1.0 - AUTO_CUTS_RTOL):
+                best = cand
+            else:
+                break
+        return best
+    if not isinstance(max_cuts, int):
+        raise ValueError(f"max_cuts must be an int or 'auto', got {max_cuts!r}")
+    return _nmodel(max_cuts)

@@ -21,7 +21,7 @@ from typing import Any, Callable
 import jax
 
 from .graph import LayerGraph
-from .scheduler import HaxConnResult
+from .plan_ir import PlanIR
 
 
 @dataclasses.dataclass
@@ -224,13 +224,15 @@ class TwoModelPipeline:
         self,
         model_a: StagedModel,
         model_b: StagedModel,
-        plan: HaxConnResult,
+        plan,
         place_con: Callable | None = None,
         place_flex: Callable | None = None,
     ):
         self.a, self.b = model_a, model_b
-        self.pa, self.pb = plan.p_a, plan.p_b
-        self.plan = plan
+        # accept the unified entry point's PlanIR or a legacy HaxConnResult
+        ir = plan if isinstance(plan, PlanIR) else plan.ir
+        self.pa, self.pb = ir.partitions
+        self.plan = ir
         self.place_con = place_con or (lambda x: x)
         self.place_flex = place_flex or (lambda x: x)
         self.log: list[TickLog] = []
@@ -246,7 +248,7 @@ class TwoModelPipeline:
         la, lb = self.a.n_layers, self.b.n_layers
         # the scheduler's typed IR drives the executor; rebuild it from the
         # (possibly caller-overridden) partition points
-        ir = self.plan.ir
+        ir = self.plan
         if ir is None or ir.partitions != [self.pa, self.pb]:
             ir = make_plan_ir(
                 (self.a.name, self.b.name),

@@ -101,7 +101,7 @@ class Schedule:
 # ---------------------------------------------------------------------------
 
 
-def standalone_schedule(
+def _standalone_schedule_impl(
     graph: LayerGraph, engine, peer, allow_fallback=True, provider: CostProvider | None = None
 ) -> Schedule:
     c = graph_time(graph, engine, peer, allow_fallback=allow_fallback, provider=provider)
@@ -145,7 +145,7 @@ def peer_utilization(graph: LayerGraph, engine, peer, provider: CostProvider | N
 # ---------------------------------------------------------------------------
 
 
-def naive_schedule(
+def _naive_schedule_impl(
     graph_a: LayerGraph, graph_b: LayerGraph, constrained, flexible, provider: CostProvider | None = None
 ) -> Schedule:
     """A runs whole on the constrained engine (DLA), B whole on the flexible
@@ -223,7 +223,7 @@ def _evaluate_pair(graph_a, graph_b, pa, pb, constrained, flexible, allow_fallba
     return ca1, ca2, cb1, cb2, xa, xb, t_con, t_flex
 
 
-def haxconn_schedule(
+def _haxconn_schedule_impl(
     graph_a: LayerGraph,
     graph_b: LayerGraph,
     constrained,
@@ -652,9 +652,16 @@ def _route_candidates(
     first (in cut-point order — the prefix the ``max_cuts=1`` pin and the
     never-worse restart rely on), then, per extra cut count k, every
     k-subset of the legal points with its DP engine assignments. When a
-    k-level exceeds ``route_limit`` it keeps the routes with the smallest
-    per-model makespan (stable order, so ties stay deterministic);
-    returns (candidates, capped)."""
+    k-level exceeds ``route_limit`` the cap is *balance-aware*: candidates
+    are grouped by engine signature (first/last segment engines — the
+    counter-phase classes the outer vector search balances across models),
+    each group is ranked by per-model makespan, and the groups are
+    interleaved round-robin up to the limit. A pure makespan sort would
+    keep route_limit near-identical routes that all start on the fastest
+    engine and starve the search of counter-phased partners; the
+    interleave keeps the cheapest routes of *every* phase class (stable
+    order throughout, so ties stay deterministic). Returns
+    (candidates, capped)."""
     E = len(coster.engines)
     e1, e2 = _model_pair(i, E)
     cands = [RouteSpec((p,), (e1, e2)) for p in pts]
@@ -668,8 +675,22 @@ def _route_candidates(
             for engs in _dp_engine_assignments(coster, i, cuts)
         ]
         if route_limit and len(level) > route_limit:
-            level.sort(key=lambda r: coster.route(i, r).makespan)
-            level = level[:route_limit]
+            groups: dict[tuple[int, int], list[RouteSpec]] = {}
+            for r in sorted(level, key=lambda r: coster.route(i, r).makespan):
+                groups.setdefault((r.engines[0], r.engines[-1]), []).append(r)
+            ordered = [g for _, g in sorted(groups.items())]
+            level, rank = [], 0
+            while len(level) < route_limit:
+                took = False
+                for g in ordered:
+                    if rank < len(g):
+                        level.append(g[rank])
+                        took = True
+                        if len(level) >= route_limit:
+                            break
+                if not took:
+                    break
+                rank += 1
             capped = True
         cands.extend(level)
     return cands, capped
@@ -699,7 +720,7 @@ def _run_search(cands, balanced, mode, coster, n_engines, flex_idx, key_of, beam
     return _coordinate_descent(balanced, cands, key_of, descent_rounds)
 
 
-def nmodel_schedule(
+def _nmodel_schedule_impl(
     graphs: list[LayerGraph],
     engines,
     allow_fallback: bool = True,
@@ -925,3 +946,37 @@ def nmodel_schedule(
         cuts=[tuple(spec.cuts) for spec in best_vec],
         max_cuts=max_cuts,
     )
+
+
+# ---------------------------------------------------------------------------
+# legacy entry points — thin deprecated wrappers over the impls above
+# ---------------------------------------------------------------------------
+
+
+def _deprecated_entry(impl, name: str):
+    """Wrap a scheduler impl with a DeprecationWarning pointing at the
+    unified ``repro.core.plan()`` API. The wrapper is pass-through — same
+    arguments, same return object — so pinned outputs stay bit-identical
+    to the pre-``plan()`` entry points."""
+    import functools
+    import warnings
+
+    @functools.wraps(impl)
+    def wrapper(*args, **kwargs):
+        warnings.warn(
+            f"{name} is deprecated; use repro.core.plan(..., kind=...) — it returns "
+            "the PlanIR the serve stack consumes (the legacy result's .ir)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return impl(*args, **kwargs)
+
+    wrapper.__name__ = name
+    wrapper.__qualname__ = name
+    return wrapper
+
+
+standalone_schedule = _deprecated_entry(_standalone_schedule_impl, "standalone_schedule")
+naive_schedule = _deprecated_entry(_naive_schedule_impl, "naive_schedule")
+haxconn_schedule = _deprecated_entry(_haxconn_schedule_impl, "haxconn_schedule")
+nmodel_schedule = _deprecated_entry(_nmodel_schedule_impl, "nmodel_schedule")

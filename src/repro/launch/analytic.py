@@ -236,7 +236,7 @@ def main() -> None:
     from ..core.constraints import DLA_ANALOGUE_CONSTRAINTS
     from ..core.cost_model import make_cost_provider
     from ..core.engine import jetson_orin_engines
-    from ..core.scheduler import nmodel_schedule
+    from ..core.scheduler import _nmodel_schedule_impl as nmodel_schedule
     from ..models import Pix2PixConfig, Pix2PixGenerator, YOLOv8, YOLOv8Config
 
     ap = argparse.ArgumentParser()

@@ -13,6 +13,8 @@ per-segment-synchronized executor for comparison.
   PYTHONPATH=src python -m repro.launch.serve --mode streams --granularity fine
   PYTHONPATH=src python -m repro.launch.serve --mode streams --cost online --replan \
       --calibration-cache calib.json   # scales persist across restarts
+  PYTHONPATH=src python -m repro.launch.serve --mode streams \
+      --traffic poisson --rate 30 --deadline-ms 50 --duration 2 --admission
 """
 from __future__ import annotations
 
@@ -31,20 +33,28 @@ from ..configs import get_arch, build_model
 
 def run_streams(args) -> None:
     from ..core.cost_model import OnlineCost, make_cost_provider
-    from ..serve import (
-        MultiStreamServer,
-        ReplanConfig,
-        build_pix_yolo_serving,
-        build_replanner,
-        merge_flags_for,
-    )
+    from ..serve import ReplanConfig, TrafficConfig, build_server
 
     provider = make_cost_provider(
         args.cost, cache_path=args.cost_cache, calibration_path=args.calibration_cache
     )
     if isinstance(provider, OnlineCost) and provider.snapshot():
         print(f"[serve] warm-started calibration: {provider.describe()}")
-    models, plan, streams, _ = build_pix_yolo_serving(
+    replan_cfg = None
+    if args.replan:
+        replan_cfg = ReplanConfig(
+            drift_threshold=args.replan_threshold,
+            hysteresis=args.replan_hysteresis,
+            cooldown_ticks=args.replan_cooldown,
+            profile_every=args.profile_every,
+            stride=args.planner_stride,
+            background=args.replan_background,
+            escalate_after=args.replan_escalate,
+            load_threshold=args.load_threshold,
+            slo_miss_threshold=args.slo_miss_threshold,
+        )
+    open_loop = args.traffic is not None
+    bundle = build_server(
         img=args.img,
         base=args.base,
         n_pix=args.streams,
@@ -53,61 +63,62 @@ def run_streams(args) -> None:
         cost=provider,
         granularity=args.granularity,
         stride=args.planner_stride,
-        max_cuts=args.max_cuts,
+        max_cuts="auto" if args.max_cuts == "auto" else int(args.max_cuts),
+        max_queue=args.queue_depth,
+        microbatch=args.microbatch,
+        dispatch=args.dispatch,
+        jit_segments=not args.no_jit_segments,
+        deadline_ms=args.deadline_ms if open_loop or args.deadline_ms else None,
+        traffic=TrafficConfig(
+            process=args.traffic, rate_hz=args.rate, seed=args.traffic_seed
+        )
+        if open_loop
+        else None,
+        admission=args.admission,
+        replan=replan_cfg if replan_cfg is not None else False,
     )
+    plan, replanner = bundle.plan, bundle.replanner
     if args.cost_cache and hasattr(provider, "save"):
         provider.save()  # measured AND blended both persist their timings
     print(
-        f"[serve] plan cuts={plan.cuts} cycle={plan.cycle_time*1e3:.2f} ms "
+        f"[serve] plan cuts={plan.cuts} cycle={plan.expected_cycle*1e3:.2f} ms "
         f"search={plan.search} cost={plan.cost_provider} granularity={args.granularity} "
-        f"max_cuts={args.max_cuts}"
+        f"max_cuts={args.max_cuts} (budget={plan.cut_budget})"
     )
-    replanner = None
-    if args.replan:
-        replanner = build_replanner(
-            models,
-            config=ReplanConfig(
-                drift_threshold=args.replan_threshold,
-                hysteresis=args.replan_hysteresis,
-                cooldown_ticks=args.replan_cooldown,
-                profile_every=args.profile_every,
-                stride=args.planner_stride,
-                background=args.replan_background,
-                escalate_after=args.replan_escalate,
-            ),
-            cost=provider,
-        )
-        if (
-            args.calibration_cache
-            and os.path.exists(args.calibration_cache)
-            and not replanner.online.snapshot()
-        ):
-            # non-online base providers wrap a fresh OnlineCost inside the
-            # replanner; warm-start that one too, so --calibration-cache
-            # survives restarts for every --cost mode
-            try:
-                replanner.load_calibration(args.calibration_cache)
-                print(f"[serve] warm-started replanner calibration: {replanner.online.describe()}")
-            except ValueError as e:
-                # scales learned under a different base provider are in
-                # different units — re-calibrate live instead
-                print(f"[serve] calibration cache not applicable, re-calibrating: {e}")
-    server = MultiStreamServer(
-        models,
-        plan,
-        streams,
-        max_queue=args.queue_depth,
-        microbatch=args.microbatch,
-        merge_batches=merge_flags_for(models),
-        dispatch=args.dispatch,
-        jit_segments=not args.no_jit_segments,
-        replanner=replanner,
-    )
-    for t in range(args.frames):
+    if replanner is not None and (
+        args.calibration_cache
+        and os.path.exists(args.calibration_cache)
+        and not replanner.online.snapshot()
+    ):
+        # non-online base providers wrap a fresh OnlineCost inside the
+        # replanner; warm-start that one too, so --calibration-cache
+        # survives restarts for every --cost mode
+        try:
+            replanner.load_calibration(args.calibration_cache)
+            print(f"[serve] warm-started replanner calibration: {replanner.online.describe()}")
+        except ValueError as e:
+            # scales learned under a different base provider are in
+            # different units — re-calibrate live instead
+            print(f"[serve] calibration cache not applicable, re-calibrating: {e}")
+    server, streams = bundle.server, bundle.streams
+    if open_loop:
+        # warm the compiled segments with one closed-loop frame per stream
+        # so the open-loop phase measures service, not compilation
         for s in streams:
-            server.submit(s.model_index, jax.random.normal(jax.random.key(t), (1, args.img, args.img, 3)))
-        server.pump()
-    server.drain()
+            server.submit(s.model_index, bundle.frame_for(s.name, 0))
+        server.drain()
+        print(
+            f"[serve] open loop: {args.traffic} arrivals at {args.rate} Hz/stream "
+            f"for {args.duration}s, deadline={args.deadline_ms}ms, "
+            f"admission={'on' if bundle.admission else 'off'}"
+        )
+        bundle.run_open_loop(args.duration)
+    else:
+        for t in range(args.frames):
+            for s in streams:
+                server.submit(s.model_index, jax.random.normal(jax.random.key(t), (1, args.img, args.img, 3)))
+            server.pump()
+        server.drain()
     if args.calibration_cache and replanner is not None and replanner.online.snapshot():
         # persist the learned per-engine scales so the next process
         # warm-starts its calibration instead of re-learning it
@@ -152,9 +163,8 @@ def main():
     )
     ap.add_argument(
         "--max-cuts",
-        type=int,
-        default=1,
-        help="per-model cut budget: k-segment routes ping-pong each model across engines",
+        default="1",
+        help="per-model cut budget (int), or 'auto' to escalate while the cycle improves",
     )
     ap.add_argument(
         "--calibration-cache",
@@ -181,7 +191,42 @@ def main():
         default=0,
         help="escalate re-planning to fine granularity after this many drift fires (0 = never)",
     )
+    ap.add_argument(
+        "--load-threshold",
+        type=float,
+        default=0.0,
+        help="aggregate queue fill fraction that fires a load re-plan (0 = off)",
+    )
+    ap.add_argument(
+        "--slo-miss-threshold",
+        type=float,
+        default=0.0,
+        help="recent deadline-miss rate that fires a load re-plan (0 = off)",
+    )
+    # open-loop serving + SLOs
+    ap.add_argument(
+        "--traffic",
+        choices=("poisson", "bursty", "diurnal"),
+        default=None,
+        help="drive the server open-loop with this arrival process (default: closed loop)",
+    )
+    ap.add_argument("--rate", type=float, default=10.0, help="mean arrival rate per stream (Hz)")
+    ap.add_argument("--duration", type=float, default=2.0, help="open-loop horizon (seconds)")
+    ap.add_argument("--traffic-seed", type=int, default=0)
+    ap.add_argument(
+        "--deadline-ms",
+        type=float,
+        default=None,
+        help="per-frame SLO deadline (detection tier 0, reconstruction tier 1); default 100 in open loop",
+    )
+    ap.add_argument(
+        "--admission",
+        action="store_true",
+        help="enable the graceful-degradation admission ladder (shed resolution -> shed staging -> drop)",
+    )
     args = ap.parse_args()
+    if args.traffic is not None and args.deadline_ms is None:
+        args.deadline_ms = 100.0
 
     if args.mode == "streams":
         run_streams(args)

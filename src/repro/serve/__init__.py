@@ -1,13 +1,17 @@
 # Multi-stream serving: N staged models over E engines with K frame streams,
 # planned through the segment-level PlanIR and re-planned live by the
-# drift-watching Replanner.
+# drift-watching Replanner. `build_server` is the one-call facade; the
+# open-loop pieces (traffic, SLOs, admission) live in .traffic/.admission.
+from .admission import ADMIT, DROP, SHED_RES, SHED_ROUTE, AdmissionConfig, subsample_frame
 from .demo import build_pix_yolo_serving, build_replanner, merge_flags_for
 from .executor import Completion, Flight, SegmentObservation, StreamExecutor, SwapEvent
+from .facade import ServerBundle, build_server
 from .metrics import (
     ServeMetrics,
     StreamMetrics,
     SwapStall,
     TickStats,
+    TierMetrics,
     overlap_summary,
     percentile,
     segment_summary,
@@ -16,3 +20,10 @@ from .metrics import (
 from .replanner import ReplanConfig, ReplanEvent, Replanner
 from .server import MultiStreamServer, Request
 from .streams import FrameQueue, StreamSpec
+from .traffic import (
+    SLOPolicy,
+    TrafficConfig,
+    arrival_times,
+    merged_arrivals,
+    run_open_loop,
+)

@@ -1,0 +1,94 @@
+"""SLO-aware admission control: graceful degradation under overload.
+
+A closed-loop server blocks its producer when queues fill; an open-loop
+one cannot — frames keep arriving. Queuing them unboundedly preserves
+throughput on paper while every frame blows its deadline (the classic
+goodput collapse). The admission controller instead degrades in
+escalating order as queue pressure rises:
+
+1. **shed resolution** (``pressure >= shed_resolution_at``) — the frame
+   is admitted through ``degrade_frame`` (by default a spatial subsample
+   by ``resolution_factor``), trading fidelity for per-frame compute.
+   Only applied to models whose ``resolution_flexible`` flag is set —
+   shape-specialized models pass through untouched (the decision is
+   still recorded, so reports show the controller's intent).
+2. **shed staging** (``pressure >= shed_route_at``) — the frame runs the
+   *degraded route*: the whole model as one coarse segment on the engine
+   already carrying most of its planned work. No pipeline hand-offs, no
+   inter-engine transfers, minimum per-frame service time — the
+   coarse-granularity fallback of the plan it degrades from.
+3. **drop lowest priority** (queue full) — the newest frame of the
+   lowest-priority (highest-tier) nonempty queue of the same model is
+   evicted to make room for a strictly higher-priority arrival;
+   arrivals that outrank nothing are dropped themselves.
+
+Pressure is the model's aggregate queue fill fraction
+(``StreamExecutor.queue_pressure``). Every decision is recorded in
+``serve.metrics`` per stream and per tier, so reports expose
+goodput-under-SLO next to shed/drop counts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+ADMIT = "admit"
+SHED_RES = "shed_res"
+SHED_ROUTE = "shed_route"
+DROP = "drop"
+
+
+def subsample_frame(frame, factor: int):
+    """Default resolution shed: stride-subsample the spatial axes of an
+    NHWC frame (rank >= 3; leading batch and trailing channel axes kept)."""
+    ndim = getattr(frame, "ndim", 0)
+    if ndim < 3:
+        return frame
+    idx = [slice(None)] * ndim
+    for ax in range(1, ndim - 1):
+        idx[ax] = slice(None, None, factor)
+    return frame[tuple(idx)]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionConfig:
+    """Thresholds of the escalating degradation ladder.
+
+    Pressures are queue fill fractions in [0, 1]; each level activates at
+    its threshold and stays active above it (``shed_route_at`` implies
+    resolution shedding too when the model allows it).
+    """
+
+    shed_resolution_at: float = 0.5
+    shed_route_at: float = 0.75
+    # Pressure above which arrivals that are not of the model's
+    # highest-priority tier are dropped outright — queueing them would
+    # spend the high-priority streams' deadline budget on work that will
+    # miss its own deadline anyway.
+    drop_at: float = 0.9
+    resolution_factor: int = 2
+    enabled: bool = True
+    # Replaces the default subsampler when set: (frame) -> degraded frame.
+    degrade_frame: Callable | None = None
+
+    def __post_init__(self):
+        if not 0.0 < self.shed_resolution_at <= self.shed_route_at <= self.drop_at:
+            raise ValueError("need 0 < shed_resolution_at <= shed_route_at <= drop_at")
+        if self.resolution_factor < 1:
+            raise ValueError("resolution_factor must be >= 1")
+
+    def decide(self, pressure: float) -> tuple[str, int]:
+        """(decision, degrade level) for one arrival at this pressure.
+        Level 0 = admit untouched, 1 = shed resolution, 2 = shed staging."""
+        if not self.enabled:
+            return ADMIT, 0
+        if pressure >= self.shed_route_at:
+            return SHED_ROUTE, 2
+        if pressure >= self.shed_resolution_at:
+            return SHED_RES, 1
+        return ADMIT, 0
+
+    def degrade(self, frame):
+        if self.degrade_frame is not None:
+            return self.degrade_frame(frame)
+        return subsample_frame(frame, self.resolution_factor)

@@ -6,6 +6,11 @@ example, the launch CLI, and the benchmark all drive.
 roofline — or ``measured``/``blended`` for XLA-measured per-layer costs),
 ``norm`` selects the Pix2Pix norm layer (``instance``/``group`` build the
 batch-independent variant whose streams the executor may merge-batch).
+
+``build_pix_yolo_serving`` keeps the historical ``NModelPlan`` return for
+callers that read ``plan.cycle_time``/``plan.schedule``; new code should
+use ``serve.build_server`` (facade over ``repro.core.plan``), which
+returns the ``PlanIR`` contract directly.
 """
 from __future__ import annotations
 
@@ -15,8 +20,36 @@ from ..core.constraints import DLA_ANALOGUE_CONSTRAINTS
 from ..core.cost_model import CostProvider, make_cost_provider
 from ..core.engine import jetson_orin_engines
 from ..core.pipeline import pix2pix_staged, yolo_staged
-from ..core.scheduler import nmodel_schedule
+from ..core.scheduler import _nmodel_schedule_impl
 from .streams import StreamSpec
+
+
+def _build_pix_yolo_models(
+    img: int = 64,
+    base: int = 8,
+    n_pix: int = 4,
+    n_yolo: int = 1,
+    seed: int = 0,
+    norm: str = "batch",
+    granularity: str = "coarse",
+):
+    """Staged Pix2Pix + YOLOv8 models, their stream specs, and the
+    calibrated Jetson engine pair — the common substrate both
+    ``build_pix_yolo_serving`` and the ``build_server`` facade plan over.
+    Returns ``(models, streams, (gpu, dla))``."""
+    from ..models import Pix2PixConfig, Pix2PixGenerator, YOLOv8, YOLOv8Config
+
+    gpu, dla = jetson_orin_engines(constraints_dla=DLA_ANALOGUE_CONSTRAINTS)
+    cfg = Pix2PixConfig(img_size=img, base=base, deconv_mode="cropping", norm=norm)
+    gen = Pix2PixGenerator(cfg)
+    sm_pix = pix2pix_staged(cfg, {"generator": gen.init(jax.random.key(seed))}, granularity=granularity)
+    ycfg = YOLOv8Config(img_size=img)
+    ym = YOLOv8(ycfg)
+    sm_yolo = yolo_staged(ycfg, ym.init(jax.random.key(seed + 1)), granularity=granularity)
+    streams = [StreamSpec(f"mri-{i}", 0) for i in range(n_pix)] + [
+        StreamSpec(f"det-{i}", 1) for i in range(n_yolo)
+    ]
+    return [sm_pix, sm_yolo], streams, (gpu, dla)
 
 
 def build_pix_yolo_serving(
@@ -43,28 +76,20 @@ def build_pix_yolo_serving(
     knob; only meaningful at fine granularity). ``max_cuts`` raises the
     per-model cut budget: k-segment routes ping-pong a model across the
     engines (``max_cuts=1`` is the paper's single partition point)."""
-    from ..models import Pix2PixConfig, Pix2PixGenerator, YOLOv8, YOLOv8Config
-
     provider = cost if isinstance(cost, CostProvider) else make_cost_provider(cost)
-    gpu, dla = jetson_orin_engines(constraints_dla=DLA_ANALOGUE_CONSTRAINTS)
-    cfg = Pix2PixConfig(img_size=img, base=base, deconv_mode="cropping", norm=norm)
-    gen = Pix2PixGenerator(cfg)
-    sm_pix = pix2pix_staged(cfg, {"generator": gen.init(jax.random.key(seed))}, granularity=granularity)
-    ycfg = YOLOv8Config(img_size=img)
-    ym = YOLOv8(ycfg)
-    sm_yolo = yolo_staged(ycfg, ym.init(jax.random.key(seed + 1)), granularity=granularity)
-    plan = nmodel_schedule(
-        [sm_pix.graph, sm_yolo.graph],
+    models, streams, (gpu, dla) = _build_pix_yolo_models(
+        img=img, base=base, n_pix=n_pix, n_yolo=n_yolo, seed=seed, norm=norm,
+        granularity=granularity,
+    )
+    plan = _nmodel_schedule_impl(
+        [m.graph for m in models],
         [dla, gpu],
         provider=provider,
         search=search,
         stride=stride,
         max_cuts=max_cuts,
     )
-    streams = [StreamSpec(f"mri-{i}", 0) for i in range(n_pix)] + [
-        StreamSpec(f"det-{i}", 1) for i in range(n_yolo)
-    ]
-    return [sm_pix, sm_yolo], plan, streams, (gpu, dla)
+    return models, plan, streams, (gpu, dla)
 
 
 def build_replanner(models, config=None, cost: str | CostProvider = "analytic"):

@@ -88,6 +88,7 @@ class FlightMember:
     size: int  # leading-axis extent of this frame in the (possibly merged) state
     t_submit: float
     tick_submit: int
+    degrade: int = 0  # admission degrade level (0 none, 1 resolution, 2 route)
 
 
 @dataclasses.dataclass
@@ -98,6 +99,7 @@ class Flight:
     stage: int  # segments already executed
     route: tuple[PlanSegment, ...]  # snapshot of the plan at admission
     revision: int  # plan revision the flight was admitted under
+    degrade: int = 0  # level 2 flights run the degraded (single-segment) route
 
 
 @dataclasses.dataclass
@@ -108,6 +110,7 @@ class Completion:
     tick_submit: int
     tick_done: int
     latency_s: float  # wall-clock submit -> completion
+    degrade: int = 0  # admission degrade level the frame ran under
 
 
 @dataclasses.dataclass(frozen=True)
@@ -226,14 +229,25 @@ class StreamExecutor:
         # keyed by (model, lo, hi): hot-swapped plans whose spans coincide
         # with an old plan's reuse the same (possibly compiled) runner
         self._seg_fns: dict[tuple[int, int, int], Callable] = {}
+        # degraded single-segment routes, keyed (model, plan revision)
+        self._degraded_routes: dict[tuple[int, int], tuple[PlanSegment, ...]] = {}
+        # per-model stream admission order: strictly tier-first (round-robin
+        # within a tier); identical to plain round-robin when no stream
+        # carries an SLO, so closed-loop behaviour is unchanged
+        self._tiers = [s.tier for s in streams]
 
     # -- submission ---------------------------------------------------------
 
-    def submit(self, stream: int | str, frame: Any) -> bool:
-        """Queue a frame on a stream; False = queue full (backpressure)."""
+    def submit(self, stream: int | str, frame: Any, degrade: int = 0) -> bool:
+        """Queue a frame on a stream; False = queue full (backpressure).
+
+        ``degrade`` is the admission controller's degrade level: level-1
+        frames were resolution-shed upstream (they only opt out of merge
+        batching — their shapes differ), level-2 frames run the degraded
+        single-segment route instead of the plan's."""
         si = stream if isinstance(stream, int) else self._stream_index(stream)
         fid = self._frame_ids[si]
-        if not self.queues[si].push((fid, frame, time.perf_counter())):
+        if not self.queues[si].push((fid, frame, time.perf_counter(), degrade)):
             return False
         self._frame_ids[si] += 1
         return True
@@ -247,6 +261,18 @@ class StreamExecutor:
     @property
     def pending(self) -> int:
         return sum(len(q) for q in self.queues) + sum(len(f.members) for f in self.in_flight)
+
+    def queue_pressure(self, model_index: int | None = None) -> float:
+        """Aggregate queue fill fraction in [0, 1] — the admission
+        controller's and re-planner's load signal. Restricted to one
+        model's streams when ``model_index`` is given."""
+        qs = [
+            q
+            for si, q in enumerate(self.queues)
+            if model_index is None or self.streams[si].model_index == model_index
+        ]
+        cap = sum(q.maxdepth for q in qs)
+        return sum(len(q) for q in qs) / cap if cap else 0.0
 
     # -- plan hot-swap ------------------------------------------------------
 
@@ -337,6 +363,33 @@ class StreamExecutor:
             return model.jitted_segment_fn(lo, hi, donate=self._donate)
         return model.segment_fn(lo, hi)
 
+    def _degraded_route(self, mi: int) -> tuple[PlanSegment, ...]:
+        """The model's shed-staging route: the whole layer span as one
+        coarse segment on the engine already carrying most of its planned
+        work (fewest hand-offs, no inter-engine transfers — the minimum
+        service-time fallback admission control escalates to). Always
+        stage-legal: [0, n_layers) starts and ends on stage boundaries."""
+        key = (mi, self.plan.revision)
+        route = self._degraded_routes.get(key)
+        if route is None:
+            segs = self.plan.route(mi)
+            load: dict[int, float] = {}
+            for s in segs:
+                load[s.engine] = load.get(s.engine, 0.0) + s.expected_cost
+            eng = max(load, key=lambda e: (load[e], -e))
+            route = (
+                PlanSegment(
+                    model_index=mi,
+                    stage=0,
+                    engine=eng,
+                    lo=0,
+                    hi=segs[-1].hi,
+                    expected_cost=sum(s.expected_cost for s in segs),
+                ),
+            )
+            self._degraded_routes[key] = route
+        return route
+
     def _segment_runner(self, mi: int, seg: PlanSegment) -> Callable:
         key = (mi, seg.lo, seg.hi)
         fn = self._seg_fns.get(key)
@@ -421,6 +474,7 @@ class StreamExecutor:
                     tick_submit=m.tick_submit,
                     tick_done=self.tick_count,
                     latency_s=now - m.t_submit,
+                    degrade=m.degrade,
                 )
             )
 
@@ -435,41 +489,68 @@ class StreamExecutor:
     def _admit(self, mi: int) -> list[Flight]:
         """Admit queued frames for model ``mi`` into stage 0 of the
         *current* plan; returns the flights that already finished their
-        route (single-segment models)."""
+        route (single-segment models). Streams are drained strictly
+        tier-first (SLO priority), round-robin within a tier — with no
+        SLOs attached every tier is 0 and this is the plain round-robin."""
         model = self.models[mi]
         stream_idxs = self._streams_of[mi]
         if not stream_idxs:
             return []
-        picked: list[tuple[int, int, Any, float]] = []
+        picked: list[tuple[int, int, Any, float, int]] = []
         n = len(stream_idxs)
         start = self._rr[mi]
-        for k in range(n):
+        rotated = [stream_idxs[(start + k) % n] for k in range(n)]
+        rotated.sort(key=lambda si: self._tiers[si])  # stable: rr order within a tier
+        for si in rotated:
             if len(picked) >= self.microbatch:
                 break
-            si = stream_idxs[(start + k) % n]
             if len(self.queues[si]):
-                fid, frame, t_sub = self.queues[si].pop()
-                picked.append((si, fid, frame, t_sub))
+                fid, frame, t_sub, degrade = self.queues[si].pop()
+                picked.append((si, fid, frame, t_sub, degrade))
         if not picked:
             return []
         self._rr[mi] = (start + len(picked)) % n
         members, states = [], []
-        for si, fid, frame, t_sub in picked:
+        for si, fid, frame, t_sub, degrade in picked:
             size = int(frame.shape[0]) if hasattr(frame, "shape") and frame.shape else 1
-            members.append(FlightMember(si, fid, size, t_sub, self.tick_count))
+            members.append(FlightMember(si, fid, size, t_sub, self.tick_count, degrade=degrade))
             states.append(model.init_state(frame))
         route = self.plan.route(mi)
         rev = self.plan.revision
-        if self.merge_batches[mi] and len(states) > 1:
-            merged = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *states)
+        # Degraded frames never merge: level-1 frames have shed shapes,
+        # level-2 frames run the degraded route, both incompatible with a
+        # concatenated full-route group.
+        clean = [(m, s) for m, s in zip(members, states) if m.degrade == 0]
+        shed = [(m, s) for m, s in zip(members, states) if m.degrade > 0]
+        if self.merge_batches[mi] and len(clean) > 1:
+            merged = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *(s for _, s in clean))
             flights = [
-                Flight(model_index=mi, members=members, state=merged, stage=0, route=route, revision=rev)
+                Flight(
+                    model_index=mi,
+                    members=[m for m, _ in clean],
+                    state=merged,
+                    stage=0,
+                    route=route,
+                    revision=rev,
+                )
             ]
         else:
             flights = [
                 Flight(model_index=mi, members=[m], state=s, stage=0, route=route, revision=rev)
-                for m, s in zip(members, states)
+                for m, s in clean
             ]
+        for m, s in shed:
+            flights.append(
+                Flight(
+                    model_index=mi,
+                    members=[m],
+                    state=s,
+                    stage=0,
+                    route=self._degraded_route(mi) if m.degrade >= 2 else route,
+                    revision=rev,
+                    degrade=m.degrade,
+                )
+            )
         for flight in flights:
             self._note_state_struct(mi, flight.state)
         done = []

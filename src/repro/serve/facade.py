@@ -1,0 +1,222 @@
+"""``build_server`` — the one-call serving facade.
+
+The pieces of the serving stack (staged models, the unified
+``repro.core.plan`` scheduler, stream specs with SLO policies, admission
+control, open-loop traffic, and the online re-planner) compose freely,
+but every driver was re-assembling them by hand. ``build_server`` builds
+the whole stack for the repo's reference workload (Pix2Pix
+reconstruction + YOLOv8 detection on the calibrated Jetson engine pair)
+and returns a ``ServerBundle`` holding each layer, so CLIs, examples,
+benchmarks, and tests drive one construction path:
+
+    bundle = build_server(n_pix=4, n_yolo=1, deadline_ms=50.0,
+                          traffic=TrafficConfig(process="poisson", rate_hz=30),
+                          admission=True)
+    report = bundle.run_open_loop(horizon_s=2.0)
+
+Unlike ``build_pix_yolo_serving`` (kept for ``NModelPlan`` callers), the
+facade plans through ``repro.core.plan`` and carries the ``PlanIR``
+contract end-to-end — including ``max_cuts="auto"`` budget escalation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+
+from ..core.api import plan as core_plan
+from ..core.cost_model import CostProvider, make_cost_provider
+from ..core.plan_ir import PlanIR
+from .admission import AdmissionConfig
+from .demo import _build_pix_yolo_models, merge_flags_for
+from .replanner import ReplanConfig, Replanner
+from .server import MultiStreamServer
+from .streams import StreamSpec
+from .traffic import SLOPolicy, TrafficConfig, run_open_loop
+
+
+@dataclasses.dataclass
+class ServerBundle:
+    """Every layer of one constructed serving stack, plus drivers.
+
+    ``traffic`` maps stream name -> ``TrafficConfig`` (empty when built
+    without open-loop traffic); ``replanner``/``admission`` are None when
+    those layers are off."""
+
+    models: list
+    plan: PlanIR
+    streams: list[StreamSpec]
+    engines: tuple  # planning order: (dla, gpu)
+    provider: CostProvider
+    server: MultiStreamServer
+    replanner: Replanner | None
+    admission: AdmissionConfig | None
+    traffic: dict[str, TrafficConfig]
+    img: int = 64
+
+    def frame_for(self, stream_name: str, t: int = 0):
+        """A deterministic input frame for the named stream (seeded by
+        stream identity + frame index) — the default open-loop source."""
+        si = next(i for i, s in enumerate(self.streams) if s.name == stream_name)
+        return jax.random.normal(jax.random.key(1000 * si + t), (1, self.img, self.img, 3))
+
+    def run_open_loop(
+        self,
+        horizon_s: float,
+        frame_fn: Callable[[str], Any] | None = None,
+        drain: bool = True,
+        max_wall_s: float | None = None,
+    ) -> dict:
+        """Drive the server with the bundle's traffic processes for
+        ``horizon_s`` seconds of arrival time; returns ``server.report()``."""
+        if not self.traffic:
+            raise ValueError("bundle was built without traffic; pass traffic= to build_server")
+        if frame_fn is None:
+            counts: dict[str, int] = {}
+
+            def frame_fn(name: str):
+                t = counts.get(name, 0)
+                counts[name] = t + 1
+                return self.frame_for(name, t)
+
+        return run_open_loop(
+            self.server, self.traffic, frame_fn, horizon_s, drain=drain, max_wall_s=max_wall_s
+        )
+
+    def report(self) -> dict:
+        return self.server.report()
+
+
+def _normalize_slos(slos, deadline_ms, streams: list[StreamSpec]):
+    """Resolve the facade's SLO inputs to one policy (or None) per stream.
+
+    ``slos`` may be a single ``SLOPolicy`` (every stream), a dict keyed by
+    stream name or model index, or None. ``deadline_ms`` is the shorthand:
+    one deadline for all streams, detection streams (model 1) at tier 0
+    and reconstruction streams at tier 1 — the paper's priority split."""
+    if slos is None and deadline_ms is None:
+        return [None] * len(streams)
+    out = []
+    for s in streams:
+        if isinstance(slos, SLOPolicy):
+            out.append(slos)
+        elif isinstance(slos, dict):
+            p = slos.get(s.name, slos.get(s.model_index))
+            out.append(p)
+        else:
+            tier = 0 if s.model_index == 1 else 1
+            out.append(SLOPolicy(deadline_ms=deadline_ms, tier=tier, name=f"{s.name}-slo"))
+    return out
+
+
+def _normalize_traffic(traffic, streams: list[StreamSpec]) -> dict[str, TrafficConfig]:
+    """One ``TrafficConfig`` per stream: a single config fans out to every
+    stream (re-seeded per stream so arrival processes are independent);
+    a dict keyed by stream name passes through (missing names get no
+    traffic)."""
+    if traffic is None:
+        return {}
+    if isinstance(traffic, TrafficConfig):
+        return {
+            s.name: dataclasses.replace(traffic, seed=traffic.seed + si)
+            for si, s in enumerate(streams)
+        }
+    unknown = set(traffic) - {s.name for s in streams}
+    if unknown:
+        raise ValueError(f"traffic for unknown streams: {sorted(unknown)}")
+    return dict(traffic)
+
+
+def build_server(
+    *,
+    # workload
+    img: int = 64,
+    base: int = 8,
+    n_pix: int = 4,
+    n_yolo: int = 1,
+    seed: int = 0,
+    norm: str = "batch",
+    # planning (repro.core.plan)
+    cost: str | CostProvider = "analytic",
+    search: str = "auto",
+    granularity: str = "coarse",
+    stride: int = 1,
+    max_cuts: int | str = 1,
+    # serving
+    max_queue: int = 4,
+    microbatch: int = 1,
+    merge_batches: bool | list[bool] | None = None,
+    dispatch: str = "overlapped",
+    jit_segments: bool = True,
+    # SLOs + open loop
+    slos: SLOPolicy | dict | None = None,
+    deadline_ms: float | None = None,
+    traffic: TrafficConfig | dict[str, TrafficConfig] | None = None,
+    admission: AdmissionConfig | bool | None = None,
+    resolution_flexible: bool | list[bool] = False,
+    # online re-planning
+    replan: bool | ReplanConfig = False,
+) -> ServerBundle:
+    """Build the full serving stack in one call; see module docstring.
+
+    ``merge_batches=None`` derives the per-model flags from batch
+    independence (``merge_flags_for``). ``admission=True`` uses the
+    default degradation ladder; ``replan=True`` the default
+    ``ReplanConfig``. ``deadline_ms`` is the SLO shorthand (detection
+    tier 0, reconstruction tier 1); pass ``slos`` for full control."""
+    provider = cost if isinstance(cost, CostProvider) else make_cost_provider(cost)
+    models, streams, (gpu, dla) = _build_pix_yolo_models(
+        img=img, base=base, n_pix=n_pix, n_yolo=n_yolo, seed=seed, norm=norm,
+        granularity=granularity,
+    )
+    plan_ir = core_plan(
+        [m.graph for m in models],
+        [dla, gpu],
+        search=search,
+        stride=stride,
+        max_cuts=max_cuts,
+        cost=provider,
+    )
+    policies = _normalize_slos(slos, deadline_ms, streams)
+    streams = [
+        dataclasses.replace(s, slo=p) if p is not None else s
+        for s, p in zip(streams, policies)
+    ]
+    if merge_batches is None:
+        merge_batches = merge_flags_for(models)
+    if admission is True:
+        admission = AdmissionConfig()
+    elif admission is False:
+        admission = None
+    replanner = None
+    if replan:
+        config = replan if isinstance(replan, ReplanConfig) else None
+        replanner = Replanner(
+            [m.graph for m in models], [dla, gpu], config=config, base_provider=provider
+        )
+    server = MultiStreamServer(
+        models,
+        plan_ir,
+        streams,
+        max_queue=max_queue,
+        microbatch=microbatch,
+        merge_batches=merge_batches,
+        dispatch=dispatch,
+        jit_segments=jit_segments,
+        replanner=replanner,
+        admission=admission,
+        resolution_flexible=resolution_flexible,
+    )
+    return ServerBundle(
+        models=models,
+        plan=plan_ir,
+        streams=streams,
+        engines=(dla, gpu),
+        provider=provider,
+        server=server,
+        replanner=replanner,
+        admission=admission,
+        traffic=_normalize_traffic(traffic, streams),
+        img=img,
+    )

@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from collections import deque
 
 
 @dataclasses.dataclass
@@ -128,10 +129,13 @@ class StreamMetrics:
     name: str
     latencies_s: list[float] = dataclasses.field(default_factory=list)
     completed: int = 0
+    in_slo: int = 0  # completions within the stream's deadline
 
-    def record(self, latency_s: float):
+    def record(self, latency_s: float, met_slo: bool = True):
         self.latencies_s.append(latency_s)
         self.completed += 1
+        if met_slo:
+            self.in_slo += 1
 
     def summary(self) -> dict:
         return {
@@ -144,23 +148,110 @@ class StreamMetrics:
         }
 
 
-class ServeMetrics:
-    """Aggregates completions across streams for one serving run."""
+@dataclasses.dataclass
+class TierMetrics:
+    """Per-priority-tier admission and goodput accounting.
 
-    def __init__(self, stream_names: list[str]):
+    ``offered`` counts every open-loop arrival for the tier's streams;
+    the admission ledger splits it into ``admitted`` (untouched),
+    ``shed_res``/``shed_route`` (admitted degraded) and ``dropped``
+    (evicted or rejected). ``in_slo`` counts completions within their
+    stream's deadline — goodput-under-SLO is ``in_slo / wall``."""
+
+    tier: int
+    offered: int = 0
+    admitted: int = 0
+    shed_res: int = 0
+    shed_route: int = 0
+    dropped: int = 0
+    completed: int = 0
+    in_slo: int = 0
+    latencies_s: list[float] = dataclasses.field(default_factory=list)
+
+    def summary(self, wall_s: float) -> dict:
+        return {
+            "offered": self.offered,
+            "admitted": self.admitted,
+            "shed_res": self.shed_res,
+            "shed_route": self.shed_route,
+            "dropped": self.dropped,
+            "completed": self.completed,
+            "completed_in_slo": self.in_slo,
+            "goodput_fps": self.in_slo / wall_s if wall_s > 0 else math.inf,
+            "slo_attainment": self.in_slo / self.completed if self.completed else math.nan,
+            "latency_p99_ms": percentile(self.latencies_s, 99) * 1e3,
+        }
+
+
+class ServeMetrics:
+    """Aggregates completions across streams for one serving run.
+
+    ``slos`` (stream name -> ``SLOPolicy`` or None) turns on SLO
+    accounting: completions are checked against their stream's deadline,
+    bucketed per priority tier, and a sliding window of recent SLO
+    outcomes feeds the re-planner's load-pressure signal
+    (``recent_slo_miss_rate``). Streams without a policy count as tier 0
+    with an infinite deadline, so closed-loop reports are unchanged."""
+
+    def __init__(self, stream_names: list[str], slos: dict | None = None, recent_window: int = 64):
         self.streams = {n: StreamMetrics(n) for n in stream_names}
         self.ticks: list[TickStats] = []
+        self.slos = dict(slos) if slos else {}
+        self.tiers: dict[int, TierMetrics] = {}
+        self._recent: deque[bool] = deque(maxlen=recent_window)  # True = deadline met
 
-    def record(self, stream: str, latency_s: float):
-        self.streams[stream].record(latency_s)
+    def _tier(self, stream: str) -> TierMetrics:
+        slo = self.slos.get(stream)
+        t = slo.tier if slo is not None else 0
+        tm = self.tiers.get(t)
+        if tm is None:
+            tm = self.tiers[t] = TierMetrics(t)
+        return tm
+
+    def record(self, stream: str, latency_s: float, degrade: int = 0):
+        slo = self.slos.get(stream)
+        met = slo is None or latency_s <= slo.deadline_s
+        self.streams[stream].record(latency_s, met_slo=met)
+        tm = self._tier(stream)
+        tm.completed += 1
+        tm.latencies_s.append(latency_s)
+        if met:
+            tm.in_slo += 1
+        self._recent.append(met)
+
+    def record_arrival(self, stream: str):
+        self._tier(stream).offered += 1
+
+    def record_admission(self, stream: str, decision: str):
+        """Fold one admission decision (``serve.admission`` constants)."""
+        tm = self._tier(stream)
+        if decision == "admit":
+            tm.admitted += 1
+        elif decision == "shed_res":
+            tm.shed_res += 1
+        elif decision == "shed_route":
+            tm.shed_route += 1
+        elif decision == "drop":
+            tm.dropped += 1
+        else:
+            raise ValueError(f"unknown admission decision {decision!r}")
 
     def record_tick(self, stats: TickStats):
         self.ticks.append(stats)
 
+    def recent_slo_miss_rate(self) -> float:
+        """Fraction of the last ``recent_window`` completions that missed
+        their deadline — the re-planner's SLO-pressure signal. 0.0 until
+        anything completes."""
+        if not self._recent:
+            return 0.0
+        return 1.0 - sum(self._recent) / len(self._recent)
+
     def report(self, wall_s: float) -> dict:
         all_lat = [l for m in self.streams.values() for l in m.latencies_s]
         total = sum(m.completed for m in self.streams.values())
-        return {
+        in_slo = sum(m.in_slo for m in self.streams.values())
+        rep = {
             "streams": len(self.streams),
             "frames": total,
             "wall_s": wall_s,
@@ -170,3 +261,15 @@ class ServeMetrics:
             "overlap": overlap_summary(self.ticks),
             "per_stream": {n: m.summary() for n, m in self.streams.items()},
         }
+        if self.slos:
+            rep["goodput_fps"] = in_slo / wall_s if wall_s > 0 else math.inf
+            rep["slo_miss_rate_recent"] = self.recent_slo_miss_rate()
+            rep["tiers"] = {t: tm.summary(wall_s) for t, tm in sorted(self.tiers.items())}
+            rep["admission"] = {
+                "offered": sum(tm.offered for tm in self.tiers.values()),
+                "admitted": sum(tm.admitted for tm in self.tiers.values()),
+                "shed_res": sum(tm.shed_res for tm in self.tiers.values()),
+                "shed_route": sum(tm.shed_route for tm in self.tiers.values()),
+                "dropped": sum(tm.dropped for tm in self.tiers.values()),
+            }
+        return rep

@@ -71,9 +71,9 @@ import threading
 import time
 from typing import Sequence
 
+from ..core.api import plan as core_plan
 from ..core.cost_model import ANALYTIC, CostProvider, OnlineCost
 from ..core.plan_ir import PlanIR, translate_ir
-from ..core.scheduler import nmodel_schedule
 from .executor import SegmentObservation, StreamExecutor
 from .metrics import SwapStall, swap_stall_summary
 
@@ -100,6 +100,13 @@ class ReplanConfig:
     partial_tolerance: float = 0.02
     escalate_after: int = 0  # drift fires before escalating granularity (0 = never)
     escalate_stride: int = 1  # the stride escalated re-plans search with
+    # -- load-pressure trigger (0.0 = disabled) ----------------------------
+    # Sustained queue growth or SLO-miss rate fires a re-plan too: an
+    # overloaded server is mis-planned for the *offered* load even when
+    # no per-engine cost has drifted.
+    load_threshold: float = 0.0  # aggregate queue fill fraction that counts as pressure
+    slo_miss_threshold: float = 0.0  # recent deadline-miss rate that counts as pressure
+    load_hysteresis: int = 5  # consecutive pressured ticks required to fire
 
 
 @dataclasses.dataclass(frozen=True)
@@ -116,6 +123,7 @@ class ReplanEvent:
     new_cuts: tuple[tuple[int, ...], ...] = ()
     partial: bool = False  # only the drifted model's route was re-planned
     escalated: bool = False  # this re-plan ran at escalated granularity
+    trigger: str = "drift"  # what fired this re-plan: drift | load
 
 
 class Replanner:
@@ -152,6 +160,10 @@ class Replanner:
         self._obs_count: dict[str, int] = {}
         self._tick_acc: dict[str, list[float]] = {}  # engine -> [wall, expected]
         self._above = 0  # consecutive drifting ticks (hysteresis counter)
+        self._load_above = 0  # consecutive load-pressured ticks
+        # Hook for the SLO-pressure signal: () -> recent deadline-miss rate
+        # (the server wires metrics.recent_slo_miss_rate here).
+        self.slo_miss_fn = None
         self._last_swap_tick: int | None = None
         self._expected_cache: dict[tuple[int, int, int, int], float] = {}
         self._job: threading.Thread | None = None
@@ -271,6 +283,7 @@ class Replanner:
     def _rebaseline(self):
         self._baseline = self.online.snapshot()
         self._above = 0
+        self._load_above = 0
 
     def calibrate(self):
         """Snapshot the current scales as the drift baseline now — callers
@@ -299,13 +312,13 @@ class Replanner:
     def _active_max_cuts(self) -> int:
         return self.config.max_cuts or self._incumbent_max_cuts
 
-    def _plan(self, online: OnlineCost, fixed=None):
+    def _plan(self, online: OnlineCost, fixed=None) -> PlanIR:
         cfg = self.config
-        return nmodel_schedule(
+        return core_plan(
             self._plan_graphs(),
             self.engines,
             allow_fallback=self.allow_fallback,
-            provider=online,
+            cost=online,
             search=cfg.search,
             beam_width=cfg.beam_width,
             stride=cfg.escalate_stride if self._escalated else cfg.stride,
@@ -316,7 +329,7 @@ class Replanner:
     def _score_fixed(self, routes, online: OnlineCost) -> float:
         """Re-score pinned routes under the live costs. ``routes`` entries
         are planning-space ``(cuts, engines)`` specs (or bare ints)."""
-        return self._plan(online, fixed=list(routes)).cycle_time
+        return self._plan(online, fixed=list(routes)).expected_cycle
 
     def _incumbent_routes(self, plan: PlanIR):
         """The executor's live routes in *planning-space* indices, or None
@@ -378,9 +391,9 @@ class Replanner:
             target = self._drift_target_model(executor_plan, drift)
             pinned = [r if mi != target else None for mi, r in enumerate(incumbent)]
             part = self._plan(online, fixed=pinned)
-            if part.cycle_time <= full.cycle_time * (1.0 + cfg.partial_tolerance):
+            if part.expected_cycle <= full.expected_cycle * (1.0 + cfg.partial_tolerance):
                 choice, partial = part, True
-        return choice, self._to_exec_ir(choice.ir, executor_plan.models), old_cycle, partial
+        return choice, self._to_exec_ir(choice, executor_plan.models), old_cycle, partial
 
     def _snapshot_online(self) -> OnlineCost:
         snap = OnlineCost(self.online.base, alpha=self.online.alpha)
@@ -390,13 +403,31 @@ class Replanner:
 
     # -- the control loop ---------------------------------------------------
 
+    def _load_signal(self, executor: StreamExecutor) -> dict[str, float] | None:
+        """Evaluate the load-pressure trigger for this tick: sustained
+        queue growth or SLO-miss rate above threshold (``load_threshold``
+        / ``slo_miss_threshold``; both disabled at 0.0). Returns the
+        pressure readings when the hysteresis fires, else None."""
+        cfg = self.config
+        if not cfg.load_threshold and not cfg.slo_miss_threshold:
+            return None
+        pressure = executor.queue_pressure()
+        miss = float(self.slo_miss_fn()) if self.slo_miss_fn is not None else 0.0
+        hot = (cfg.load_threshold and pressure >= cfg.load_threshold) or (
+            cfg.slo_miss_threshold and miss >= cfg.slo_miss_threshold
+        )
+        if not hot:
+            self._load_above = 0
+            return None
+        self._load_above += 1
+        if self._load_above < cfg.load_hysteresis:
+            return None
+        return {"queue_pressure": pressure, "slo_miss_rate": miss}
+
     def maybe_replan(self, executor: StreamExecutor) -> ReplanEvent | None:
         """Called at every frame boundary (executor ``on_tick``)."""
         cfg = self.config
         self._fold_tick()
-        if not self._baseline:
-            self._try_calibrate()
-            return None
         # harvest a finished background planning job first
         if self._job is not None:
             if self._job.is_alive():
@@ -405,18 +436,27 @@ class Replanner:
             if self._job_result:
                 return self._finish(executor, *self._job_result.pop())
             return None
-        d = self.drift()
-        if d and max(d.values()) > cfg.drift_threshold:
-            self._above += 1
-        else:
-            self._above = 0
-            return None
-        if self._above < cfg.hysteresis:
+        if not self._baseline:
+            self._try_calibrate()
+        trigger, d = None, {}
+        if self._baseline:
+            d = self.drift()
+            if d and max(d.values()) > cfg.drift_threshold:
+                self._above += 1
+            else:
+                self._above = 0
+            if self._above >= cfg.hysteresis:
+                trigger = "drift"
+        if trigger is None:
+            load = self._load_signal(executor)
+            if load is not None:
+                trigger, d = "load", load
+        if trigger is None:
             return None
         tick = executor.tick_count
         if self._last_swap_tick is not None and tick - self._last_swap_tick < cfg.cooldown_ticks:
             return None
-        # this is a drift fire: bump the escalation counter before
+        # this is a re-plan fire: bump the escalation counter before
         # planning, so the escalate_after-th fire already plans fine
         self._fires += 1
         if cfg.escalate_after and not self._escalated and self._fires >= cfg.escalate_after:
@@ -425,6 +465,7 @@ class Replanner:
             online = self._snapshot_online()
             plan_snapshot = executor.plan
             drift_snapshot = dict(d)
+            fire_trigger = trigger
 
             def job():
                 plan, ir, old_cycle, partial = self._propose(plan_snapshot, online, drift_snapshot)
@@ -435,14 +476,16 @@ class Replanner:
                 t0 = time.perf_counter()
                 executor.prepare_plan(ir)
                 prepare_s = time.perf_counter() - t0
-                self._job_result.append((plan, old_cycle, drift_snapshot, prepare_s, partial, ir))
+                self._job_result.append(
+                    (plan, old_cycle, drift_snapshot, prepare_s, partial, ir, fire_trigger)
+                )
 
             self._job = threading.Thread(target=job, daemon=True)
             self._job.start()
             return None
         online = self._snapshot_online()
         plan, ir, old_cycle, partial = self._propose(executor.plan, online, dict(d))
-        return self._finish(executor, plan, old_cycle, dict(d), partial=partial, ir=ir)
+        return self._finish(executor, plan, old_cycle, dict(d), partial=partial, ir=ir, trigger=trigger)
 
     def _finish(
         self,
@@ -453,13 +496,17 @@ class Replanner:
         prepare_s: float | None = None,
         partial: bool = False,
         ir: PlanIR | None = None,
+        trigger: str = "drift",
     ) -> ReplanEvent:
         cfg = self.config
         background = prepare_s is not None
-        ir = ir if ir is not None else plan.ir
+        # accept a legacy scheduler plan (NModelPlan et al.) as well as PlanIR
+        if not isinstance(plan, PlanIR):
+            plan = plan.ir
+        ir = ir if ir is not None else plan
         old_partitions = tuple(executor.plan.partitions)
         old_cuts = executor.plan.cuts
-        improves = plan.cycle_time < old_cycle * (1.0 - cfg.min_improvement)
+        improves = plan.expected_cycle < old_cycle * (1.0 - cfg.min_improvement)
         changes = ir.route_specs() != executor.plan.route_specs()
         swapped = improves and changes
         if swapped:
@@ -486,19 +533,21 @@ class Replanner:
             # re-firing on the same signal until it changes again
             self._rebaseline()
             self._last_swap_tick = executor.tick_count
+        self._load_above = 0
         ev = ReplanEvent(
             tick=executor.tick_count,
             drift=drift,
             old_partitions=old_partitions,
             new_partitions=tuple(ir.partitions),
             old_cycle=old_cycle,
-            new_cycle=plan.cycle_time,
+            new_cycle=plan.expected_cycle,
             swapped=swapped,
             revision=executor.plan.revision,
             old_cuts=old_cuts,
             new_cuts=ir.cuts,
             partial=partial,
             escalated=self._escalated,
+            trigger=trigger,
         )
         self.events.append(ev)
         return ev
@@ -517,6 +566,7 @@ class Replanner:
             "partial_swaps": sum(e.swapped and e.partial for e in self.events),
             "escalated": self._escalated,
             "drift_fires": self._fires,
+            "load_fires": sum(e.trigger == "load" for e in self.events),
             "swap_stall": swap_stall_summary(self.swap_stalls),
             "events": [
                 {
@@ -532,6 +582,7 @@ class Replanner:
                     "partial": e.partial,
                     "escalated": e.escalated,
                     "revision": e.revision,
+                    "trigger": e.trigger,
                 }
                 for e in self.events
             ],

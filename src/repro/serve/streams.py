@@ -12,13 +12,26 @@ import dataclasses
 from collections import deque
 from typing import Any
 
+from .traffic import SLOPolicy
+
 
 @dataclasses.dataclass(frozen=True)
 class StreamSpec:
-    """Binding of a named stream to a model index in the executor plan."""
+    """Binding of a named stream to a model index in the executor plan.
+
+    ``slo`` attaches the stream's service objective (deadline + priority
+    tier) for open-loop serving: admission control drops/sheds by tier,
+    the executor admits strictly tier-first, and metrics bucket goodput
+    by it. ``None`` (the closed-loop default) means no deadline and the
+    neutral tier 0."""
 
     name: str
     model_index: int
+    slo: SLOPolicy | None = None
+
+    @property
+    def tier(self) -> int:
+        return self.slo.tier if self.slo is not None else 0
 
 
 class FrameQueue:
@@ -31,6 +44,7 @@ class FrameQueue:
         self._q: deque = deque()
         self.high_water = 0  # max depth ever observed (backpressure audit)
         self.rejected = 0  # pushes refused while full
+        self.evicted = 0  # frames evicted by admission control (make-room)
 
     def __len__(self) -> int:
         return len(self._q)
@@ -49,3 +63,13 @@ class FrameQueue:
 
     def pop(self) -> Any:
         return self._q.popleft()
+
+    def evict_newest(self) -> Any | None:
+        """Drop and return the most recent frame (admission control's
+        make-room path: the newest low-priority frame has waited least,
+        so evicting it wastes the least sunk queueing time). None when
+        empty."""
+        if not self._q:
+            return None
+        self.evicted += 1
+        return self._q.pop()

@@ -1,0 +1,192 @@
+"""Open-loop traffic: seeded arrival processes, SLO policies, and the
+real-time driver that offers frames to a ``MultiStreamServer``.
+
+Closed-loop benches submit a fixed number of frames and drain — the
+system never sees arrivals it does not control, so "FPS" says nothing
+about deadline behaviour under load. This module generates *offered*
+load: per-stream arrival times drawn from a deterministic, seedable
+process, pushed at the server in real time regardless of whether it is
+keeping up. Three processes:
+
+* ``poisson`` — homogeneous Poisson at ``rate_hz`` (i.i.d. exponential
+  gaps), the memoryless baseline.
+* ``bursty``  — a two-state Markov-modulated Poisson process: the stream
+  alternates between a *quiet* state at ``rate_hz`` and a *burst* state
+  at ``rate_hz * burst_factor``, with exponentially distributed dwell
+  times (``mean_quiet_s`` / ``mean_burst_s``). Mean offered rate exceeds
+  ``rate_hz`` by the burst duty cycle — size deadlines accordingly.
+* ``diurnal`` — an inhomogeneous Poisson whose rate ramps sinusoidally
+  between ``floor * rate_hz`` and ``rate_hz`` with period ``period_s``
+  (thinning construction), the slow load-swing that exercises the
+  re-planner's load-pressure trigger.
+
+All draws come from a private ``random.Random(seed)``, so a
+``TrafficConfig`` is a complete, reproducible description of a stream's
+offered load.
+
+``SLOPolicy`` attaches the service objective a stream is admitted under:
+a completion deadline (arrival -> output, queue wait included) and a
+priority tier (0 = highest). Admission control and the executor's
+tier-ordered admission use the tier; metrics bucket goodput by it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import random
+import time
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOPolicy:
+    """Per-stream service-level objective: deadline + priority tier."""
+
+    deadline_ms: float
+    tier: int = 0  # 0 = highest priority; larger = shed/dropped first
+    name: str = ""
+
+    def __post_init__(self):
+        if self.deadline_ms <= 0:
+            raise ValueError("SLO deadline must be positive")
+        if self.tier < 0:
+            raise ValueError("SLO tier must be >= 0")
+
+    @property
+    def deadline_s(self) -> float:
+        return self.deadline_ms / 1e3
+
+    def met(self, latency_s: float) -> bool:
+        return latency_s <= self.deadline_s
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficConfig:
+    """One stream's offered-load process (see module docstring)."""
+
+    process: str = "poisson"  # poisson | bursty | diurnal
+    rate_hz: float = 10.0
+    seed: int = 0
+    burst_factor: float = 4.0  # bursty: rate multiplier while bursting
+    mean_burst_s: float = 0.5  # bursty: mean dwell in the burst state
+    mean_quiet_s: float = 2.0  # bursty: mean dwell in the quiet state
+    period_s: float = 10.0  # diurnal: ramp period
+    floor: float = 0.25  # diurnal: trough rate as a fraction of rate_hz
+
+    def __post_init__(self):
+        if self.process not in ("poisson", "bursty", "diurnal"):
+            raise ValueError(f"unknown traffic process {self.process!r}")
+        if self.rate_hz <= 0:
+            raise ValueError("rate_hz must be positive")
+        if self.process == "bursty" and (
+            self.burst_factor < 1 or self.mean_burst_s <= 0 or self.mean_quiet_s <= 0
+        ):
+            raise ValueError("bursty traffic needs burst_factor >= 1 and positive dwell times")
+        if self.process == "diurnal" and not (0 < self.floor <= 1 and self.period_s > 0):
+            raise ValueError("diurnal traffic needs 0 < floor <= 1 and a positive period")
+
+
+def arrival_times(cfg: TrafficConfig, horizon_s: float) -> list[float]:
+    """Deterministic arrival times in ``[0, horizon_s)`` for one stream.
+
+    Same config (seed included) -> same times, on every platform: the
+    generators consume the ``random.Random`` stream in a fixed order.
+    """
+    if horizon_s <= 0:
+        return []
+    rng = random.Random(cfg.seed)
+    if cfg.process == "poisson":
+        return _poisson(rng, cfg.rate_hz, horizon_s)
+    if cfg.process == "bursty":
+        return _bursty(rng, cfg, horizon_s)
+    return _diurnal(rng, cfg, horizon_s)
+
+
+def _poisson(rng: random.Random, rate_hz: float, horizon_s: float) -> list[float]:
+    out, t = [], 0.0
+    while True:
+        t += rng.expovariate(rate_hz)
+        if t >= horizon_s:
+            return out
+        out.append(t)
+
+
+def _bursty(rng: random.Random, cfg: TrafficConfig, horizon_s: float) -> list[float]:
+    out, t = [], 0.0
+    burst = False  # start quiet: the burst arrives mid-run, not at t=0
+    while t < horizon_s:
+        dwell = rng.expovariate(1.0 / (cfg.mean_burst_s if burst else cfg.mean_quiet_s))
+        rate = cfg.rate_hz * (cfg.burst_factor if burst else 1.0)
+        end = min(t + dwell, horizon_s)
+        while True:
+            t += rng.expovariate(rate)
+            if t >= end:
+                break
+            out.append(t)
+        t = end
+        burst = not burst
+    return out
+
+
+def _diurnal(rng: random.Random, cfg: TrafficConfig, horizon_s: float) -> list[float]:
+    # Lewis-Shedler thinning against the peak rate: candidate arrivals at
+    # rate_hz, each kept with probability lambda(t) / rate_hz.
+    out, t = [], 0.0
+    while True:
+        t += rng.expovariate(cfg.rate_hz)
+        if t >= horizon_s:
+            return out
+        lam = cfg.floor + (1.0 - cfg.floor) * 0.5 * (1.0 - math.cos(2.0 * math.pi * t / cfg.period_s))
+        if rng.random() < lam:
+            out.append(t)
+
+
+def merged_arrivals(traffic: dict[str, TrafficConfig], horizon_s: float) -> list[tuple[float, str]]:
+    """All streams' arrivals merged into one time-ordered (t, stream)
+    schedule — what the open-loop driver walks. Ties break by stream name
+    (insertion order is irrelevant: the schedule is fully determined by
+    the configs)."""
+    events = [
+        (t, name) for name, cfg in traffic.items() for t in arrival_times(cfg, horizon_s)
+    ]
+    events.sort()
+    return events
+
+
+def run_open_loop(
+    server,
+    traffic: dict[str, TrafficConfig],
+    frame_fn,
+    horizon_s: float,
+    drain: bool = True,
+    max_wall_s: float | None = None,
+):
+    """Drive ``server`` with open-loop arrivals in real time.
+
+    ``traffic`` maps stream names to their arrival processes;
+    ``frame_fn(stream_name)`` produces each offered frame. Arrivals are
+    offered when due (``server.offer`` — admission-controlled, never
+    blocking); whenever work is pending the executor ticks, otherwise the
+    driver sleeps to the next arrival. With ``drain=True`` (default) the
+    run continues past the horizon until every admitted frame completes —
+    an overloaded unbounded-queue configuration pays for its backlog in
+    wall time and missed deadlines, which is exactly the comparison the
+    goodput metrics make. ``max_wall_s`` is a safety bound on total wall
+    time (RuntimeError when exceeded). Returns ``server.report()``.
+    """
+    events = merged_arrivals(traffic, horizon_s)
+    t0 = time.perf_counter()
+    i = 0
+    while i < len(events) or (drain and server.executor.pending):
+        now = time.perf_counter() - t0
+        if max_wall_s is not None and now > max_wall_s:
+            raise RuntimeError(f"open-loop run exceeded max_wall_s={max_wall_s}")
+        while i < len(events) and events[i][0] <= now:
+            name = events[i][1]
+            server.offer(name, frame_fn(name))
+            i += 1
+        if server.executor.pending:
+            server.tick()
+        elif i < len(events):
+            time.sleep(min(1e-3, max(0.0, events[i][0] - (time.perf_counter() - t0))))
+    server.finish()
+    return server.report()

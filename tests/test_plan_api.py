@@ -1,0 +1,114 @@
+"""The unified ``repro.core.plan`` entry point.
+
+Pins the API-redesign contract: (a) ``plan(...)`` is bit-identical to
+each legacy scheduler's ``.ir`` at the same settings, (b) the legacy
+names still work but warn ``DeprecationWarning``, (c) ``max_cuts="auto"``
+never plans worse than the single-cut budget and records the budget it
+chose, and (d) the input adapters (StagedModel graphs, bare single
+graph, fine granularity) route to the same searches."""
+import jax
+import pytest
+
+from repro import core
+from repro.core.api import AUTO_CUTS_CEILING
+from repro.core.constraints import DLA_ANALOGUE_CONSTRAINTS
+from repro.core.engine import jetson_orin_engines
+from repro.models import Pix2PixConfig, Pix2PixGenerator, YOLOv8, YOLOv8Config
+
+
+@pytest.fixture(scope="module")
+def engines():
+    gpu, dla = jetson_orin_engines(constraints_dla=DLA_ANALOGUE_CONSTRAINTS)
+    return gpu, dla
+
+
+@pytest.fixture(scope="module")
+def graphs():
+    g_pix = Pix2PixGenerator(Pix2PixConfig(deconv_mode="cropping")).layer_graph()
+    g_yolo = YOLOv8(YOLOv8Config(img_size=256)).layer_graph()
+    return g_pix, g_yolo
+
+
+def test_plan_matches_legacy_nmodel(engines, graphs):
+    gpu, dla = engines
+    g_pix, g_yolo = graphs
+    with pytest.deprecated_call():
+        legacy = core.nmodel_schedule([g_pix, g_yolo], [dla, gpu])
+    assert core.plan([g_pix, g_yolo], [dla, gpu]) == legacy.ir
+
+
+def test_plan_matches_legacy_haxconn_standalone_naive(engines, graphs):
+    gpu, dla = engines
+    g_pix, g_yolo = graphs
+    with pytest.deprecated_call():
+        hax = core.haxconn_schedule(g_pix, g_yolo, dla, gpu)
+    assert core.plan([g_pix, g_yolo], [dla, gpu], kind="haxconn") == hax.ir
+    with pytest.deprecated_call():
+        solo = core.standalone_schedule(g_pix, dla, gpu)
+    assert core.plan([g_pix], [dla, gpu], kind="standalone") == solo.ir
+    # a bare graph is accepted for the one-graph kind
+    assert core.plan(g_pix, [dla, gpu], kind="standalone") == solo.ir
+    with pytest.deprecated_call():
+        naive = core.naive_schedule(g_pix, g_yolo, dla, gpu)
+    assert core.plan([g_pix, g_yolo], [dla, gpu], kind="naive") == naive.ir
+
+
+def test_plan_fine_granularity_matches_legacy_on_expanded(engines, graphs):
+    gpu, dla = engines
+    g_pix, g_yolo = graphs
+    with pytest.deprecated_call():
+        legacy = core.nmodel_schedule([g_pix.expand(), g_yolo.expand()], [dla, gpu], stride=4)
+    got = core.plan([g_pix, g_yolo], [dla, gpu], granularity="fine", stride=4)
+    assert got == legacy.ir
+    # already-expanded graphs pass through unchanged
+    assert core.plan([g_pix.expand(), g_yolo.expand()], [dla, gpu], granularity="fine", stride=4) == got
+
+
+def test_plan_accepts_staged_models(engines):
+    gpu, dla = engines
+    cfg = Pix2PixConfig(img_size=32, base=8, deconv_mode="cropping")
+    sm = core.pix2pix_staged(cfg, {"generator": Pix2PixGenerator(cfg).init(jax.random.key(0))})
+    assert core.plan([sm], [dla, gpu], kind="standalone") == core.plan(
+        [sm.graph], [dla, gpu], kind="standalone"
+    )
+
+
+def test_plan_auto_cuts_never_worse_and_records_budget(engines, graphs):
+    gpu, dla = engines
+    g_pix, g_yolo = graphs
+    k1 = core.plan([g_pix, g_yolo], [dla, gpu], max_cuts=1)
+    auto = core.plan([g_pix, g_yolo], [dla, gpu], max_cuts="auto")
+    assert auto.expected_cycle <= k1.expected_cycle
+    assert 1 <= auto.cut_budget <= AUTO_CUTS_CEILING
+    if auto.cut_budget > 1:
+        # the chosen budget must have actually bought cycle time
+        assert auto.expected_cycle < k1.expected_cycle
+
+
+def test_plan_rejects_bad_inputs(engines, graphs):
+    gpu, dla = engines
+    g_pix, g_yolo = graphs
+    with pytest.raises(ValueError, match="unknown plan kind"):
+        core.plan([g_pix], [dla, gpu], kind="bogus")
+    with pytest.raises(ValueError, match="granularity"):
+        core.plan([g_pix], [dla, gpu], kind="standalone", granularity="medium")
+    with pytest.raises(ValueError, match="one graph"):
+        core.plan([g_pix, g_yolo], [dla, gpu], kind="standalone")
+    with pytest.raises(ValueError, match="max_cuts"):
+        core.plan([g_pix, g_yolo], [dla, gpu], max_cuts="many")
+    with pytest.raises(TypeError, match="LayerGraph"):
+        core.plan([42], [dla, gpu], kind="standalone")
+
+
+def test_plan_fixed_and_cost_forwarding(engines, graphs):
+    gpu, dla = engines
+    g_pix, _ = graphs
+    with pytest.deprecated_call():
+        legacy = core.nmodel_schedule([g_pix, g_pix], [dla, gpu], fixed=(4, 53))
+    got = core.plan([g_pix, g_pix], [dla, gpu], fixed=(4, 53))
+    assert got == legacy.ir
+    assert got.partitions == [4, 53]
+    # a provider name resolves through make_cost_provider
+    assert core.plan([g_pix, g_pix], [dla, gpu], cost="analytic") == core.plan(
+        [g_pix, g_pix], [dla, gpu]
+    )

@@ -1,0 +1,272 @@
+"""Open-loop traffic, SLO-aware admission, and graceful degradation.
+
+The generators are pinned for determinism and rate sanity (seeded
+processes are the whole point: a bench scenario must be replayable).
+The serving pins drive a toy model at 3x its measured capacity with a
+seeded burst and check the overload contract: queues stay bounded,
+higher-priority tiers get strictly higher goodput-under-SLO, and the
+shedding admission controller beats the queue-everything baseline on
+goodput (the goodput-collapse argument: an unbounded queue keeps
+throughput while every frame blows its deadline)."""
+import jax.numpy as jnp
+import pytest
+
+from repro import core
+from repro.core.engine import EngineSpec
+from repro.core.graph import LayerGraph, pointwise_meta
+from repro.core.pipeline import StagedModel
+from repro.serve import (
+    ADMIT,
+    DROP,
+    SHED_RES,
+    SHED_ROUTE,
+    AdmissionConfig,
+    MultiStreamServer,
+    SLOPolicy,
+    StreamSpec,
+    TrafficConfig,
+    arrival_times,
+    merged_arrivals,
+    run_open_loop,
+    subsample_frame,
+)
+
+# ---- arrival generators ----------------------------------------------------
+
+
+def _assert_valid_schedule(times, horizon):
+    assert all(0.0 <= t < horizon for t in times)
+    assert times == sorted(times)
+
+
+def test_poisson_deterministic_and_rate():
+    cfg = TrafficConfig(process="poisson", rate_hz=200.0, seed=3)
+    a = arrival_times(cfg, 5.0)
+    assert a == arrival_times(cfg, 5.0)  # seeded: replayable
+    _assert_valid_schedule(a, 5.0)
+    # 1000 expected arrivals, sigma ~= 32: a 5-sigma band is not flaky
+    assert 840 <= len(a) <= 1160
+    assert arrival_times(TrafficConfig(process="poisson", rate_hz=200.0, seed=4), 5.0) != a
+
+
+def test_bursty_deterministic_and_burstier_than_poisson():
+    cfg = TrafficConfig(
+        process="bursty", rate_hz=100.0, seed=7, burst_factor=8.0, mean_burst_s=0.2, mean_quiet_s=0.8
+    )
+    a = arrival_times(cfg, 10.0)
+    assert a == arrival_times(cfg, 10.0)
+    _assert_valid_schedule(a, 10.0)
+    assert len(a) > 0
+    # burstiness shows up as inter-arrival variance above the exponential's
+    gaps = [b - x for x, b in zip(a, a[1:])]
+    mean = sum(gaps) / len(gaps)
+    var = sum((g - mean) ** 2 for g in gaps) / len(gaps)
+    assert var > mean * mean  # exponential gaps would have var ~= mean^2
+
+
+def test_diurnal_respects_peak_and_floor():
+    cfg = TrafficConfig(process="diurnal", rate_hz=100.0, seed=5, period_s=2.0, floor=0.25)
+    a = arrival_times(cfg, 10.0)
+    assert a == arrival_times(cfg, 10.0)
+    _assert_valid_schedule(a, 10.0)
+    # thinned from the peak rate; mean intensity is between floor and peak
+    assert 0.25 * 100.0 * 10.0 * 0.5 < len(a) < 100.0 * 10.0
+
+
+def test_traffic_config_validation():
+    with pytest.raises(ValueError):
+        TrafficConfig(process="weibull")
+    with pytest.raises(ValueError):
+        TrafficConfig(rate_hz=0.0)
+    with pytest.raises(ValueError):
+        TrafficConfig(process="diurnal", floor=1.5)
+
+
+def test_merged_arrivals_sorted_and_tagged():
+    traffic = {
+        "a": TrafficConfig(process="poisson", rate_hz=50.0, seed=1),
+        "b": TrafficConfig(process="poisson", rate_hz=50.0, seed=2),
+    }
+    events = merged_arrivals(traffic, 2.0)
+    assert [t for t, _ in events] == sorted(t for t, _ in events)
+    assert {name for _, name in events} == {"a", "b"}
+
+
+# ---- SLO + admission primitives --------------------------------------------
+
+
+def test_slo_policy_deadline_and_tier():
+    slo = SLOPolicy(deadline_ms=50.0, tier=2)
+    assert slo.deadline_s == pytest.approx(0.05)
+    assert slo.met(0.049) and not slo.met(0.051)
+    with pytest.raises(ValueError):
+        SLOPolicy(deadline_ms=0.0)
+    with pytest.raises(ValueError):
+        SLOPolicy(deadline_ms=10.0, tier=-1)
+
+
+def test_admission_ladder_escalates_with_pressure():
+    cfg = AdmissionConfig(shed_resolution_at=0.5, shed_route_at=0.75, drop_at=0.9)
+    assert cfg.decide(0.0) == (ADMIT, 0)
+    assert cfg.decide(0.49) == (ADMIT, 0)
+    assert cfg.decide(0.5) == (SHED_RES, 1)
+    assert cfg.decide(0.75) == (SHED_ROUTE, 2)
+    assert cfg.decide(1.0) == (SHED_ROUTE, 2)
+    assert AdmissionConfig(enabled=False).decide(1.0) == (ADMIT, 0)
+    with pytest.raises(ValueError):
+        AdmissionConfig(shed_resolution_at=0.8, shed_route_at=0.5)
+
+
+def test_subsample_frame_strides_spatial_axes_only():
+    f = jnp.ones((1, 8, 8, 3))
+    assert subsample_frame(f, 2).shape == (1, 4, 4, 3)
+    assert subsample_frame(jnp.ones((1, 64)), 2).shape == (1, 64)  # rank<3 untouched
+
+
+# ---- open-loop serving under overload --------------------------------------
+
+
+def _toy_staged(n_layers=4, name="toy"):
+    ops = [(f"mul{i}", lambda p, s: {"x": s["x"] * 1.5 + 0.5}) for i in range(n_layers)]
+    graph = LayerGraph(
+        name,
+        [pointwise_meta(i, f"mul{i}", "act", (1, 64), flops_per_elem=1e9 / 64) for i in range(n_layers)],
+    ).renumber()
+    return StagedModel(
+        name=name,
+        ops=ops,
+        params=None,
+        graph=graph,
+        init_state=lambda x: {"x": x},
+        finalize=lambda s: s["x"],
+    )
+
+
+def _toy_server(tiers, deadline_ms, admission, max_queue, delay_s=2e-3):
+    """One toy model fanned over len(tiers) streams with per-stream SLOs;
+    segment_delay_fn makes the service time deterministic and dominant."""
+    sm = _toy_staged()
+    engines = [
+        EngineSpec("E0", 1, 1.0e12, 500e9, 50e9, ()),
+        EngineSpec("E1", 1, 1.0e12, 500e9, 50e9, ()),
+    ]
+    ir = core.plan([sm.graph], engines)
+    streams = [
+        StreamSpec(f"s{i}", 0, slo=SLOPolicy(deadline_ms=deadline_ms, tier=t))
+        for i, t in enumerate(tiers)
+    ]
+    server = MultiStreamServer(
+        [sm],
+        ir,
+        streams,
+        max_queue=max_queue,
+        jit_segments=False,
+        admission=admission,
+        resolution_flexible=True,
+    )
+    server.executor.segment_delay_fn = lambda seg: delay_s
+    return server, streams
+
+
+def _measure_capacity_fps(tiers) -> float:
+    """Closed-loop aggregate FPS of the toy server — the 1x reference the
+    open-loop scenarios scale from."""
+    server, streams = _toy_server(tiers, deadline_ms=1e6, admission=None, max_queue=4)
+    for t in range(10):
+        for s in streams:
+            server.submit(s.model_index, jnp.ones((1, 64)))
+        server.pump()
+    server.drain()
+    return server.report()["aggregate_fps"]
+
+
+TIERS = (0, 0, 1, 1)
+
+
+def _drive_open_loop(rate_per_stream, admission, max_queue, horizon_s=1.2):
+    server, streams = _toy_server(TIERS, deadline_ms=60.0, admission=admission, max_queue=max_queue)
+    traffic = {
+        s.name: TrafficConfig(process="bursty", rate_hz=rate_per_stream, seed=10 + i, burst_factor=4.0)
+        for i, s in enumerate(streams)
+    }
+    rep = run_open_loop(
+        server, traffic, lambda name: jnp.ones((1, 64)), horizon_s, max_wall_s=120.0
+    )
+    return server, rep
+
+
+@pytest.fixture(scope="module")
+def overload_runs():
+    capacity = _measure_capacity_fps(TIERS)
+    rate = 3.0 * capacity / len(TIERS)  # 3x capacity, split across streams
+    shed_server, shed = _drive_open_loop(rate, AdmissionConfig(), max_queue=4)
+    queue_server, queued = _drive_open_loop(rate, None, max_queue=64)
+    return capacity, shed_server, shed, queue_server, queued
+
+
+def test_burst_overload_queues_stay_bounded(overload_runs):
+    _, shed_server, shed, _, _ = overload_runs
+    ex = shed_server.executor
+    assert all(q.high_water <= q.maxdepth for q in ex.queues)
+    assert all(len(q) == 0 for q in ex.queues)  # drained
+    # the controller actually engaged: arrivals were shed or dropped
+    adm = shed["admission"]
+    assert adm["offered"] > adm["admitted"]
+    assert adm["dropped"] > 0
+
+
+def test_burst_overload_tiers_priority_ordering(overload_runs):
+    _, _, shed, _, _ = overload_runs
+    t0, t1 = shed["tiers"][0], shed["tiers"][1]
+    # both tiers were offered comparable load ...
+    assert t0["offered"] > 0 and t1["offered"] > 0
+    # ... but the higher-priority tier gets strictly higher goodput
+    assert t0["goodput_fps"] > t1["goodput_fps"]
+    # and the ledger balances per tier
+    for tm in (t0, t1):
+        assert tm["offered"] == tm["admitted"] + tm["shed_res"] + tm["shed_route"] + tm["dropped"]
+
+
+def test_burst_overload_shedding_beats_queue_only_goodput(overload_runs):
+    _, _, shed, _, queued = overload_runs
+    # the queue-everything baseline admits more frames ...
+    assert queued["admission"]["dropped"] <= shed["admission"]["dropped"]
+    # ... but shedding wins on goodput-under-SLO (bounded waits keep the
+    # admitted frames inside their deadline)
+    assert shed["goodput_fps"] >= queued["goodput_fps"]
+    # overload is visible to the replanner's load signal in both runs
+    assert shed["slo_miss_rate_recent"] >= 0.0
+
+
+def test_open_loop_report_carries_slo_keys(overload_runs):
+    _, _, shed, _, _ = overload_runs
+    for key in ("goodput_fps", "slo_miss_rate_recent", "tiers", "admission"):
+        assert key in shed
+    for tm in shed["tiers"].values():
+        for key in ("offered", "goodput_fps", "slo_attainment", "latency_p99_ms"):
+            assert key in tm
+
+
+# ---- committed benchmark contract ------------------------------------------
+
+
+def test_committed_bench_pins_openloop_contract():
+    """The committed BENCH_serve.json must show the degradation story the
+    README tells: at the top offered load, shedding admission control
+    keeps p99 bounded and beats the queue-everything baseline on
+    goodput-under-SLO."""
+    import json
+    import pathlib
+
+    path = pathlib.Path(__file__).resolve().parent.parent / "BENCH_serve.json"
+    if not path.exists():
+        pytest.skip("no committed BENCH_serve.json")
+    payload = json.loads(path.read_text())
+    ol = payload.get("openloop")
+    if not ol:
+        pytest.skip("committed bench predates the open-loop sweep")
+    assert ol["shed_vs_queue_goodput_ratio"] >= 1.0
+    assert ol["p99_bounded_at_top"]
+    top = str(max(ol["load_factors"]))
+    assert ol["points"][top]["dropped"] > 0  # the controller actually engaged
+    assert ol["points"]["1.0"]["goodput_fps"] > 0.0  # trend gate key is live
