@@ -1,0 +1,240 @@
+"""Fused serving-kernel microbenchmark: per-kernel parity + timing vs the
+XLA per-op reference across the serving shapes/dtypes, plus the
+measured-cost stage speedups the planner's ``--impl auto`` argmin reads.
+
+Two result planes, deliberately separate:
+
+* ``cases`` — each fused block (``conv_block``, ``deconv_block``) runs
+  against its ``ref.py`` oracle on real serving shapes at f32/bf16:
+  median-of-3 wall clock for both paths plus the parity error. On this
+  CPU container the Pallas kernels execute in *interpret* mode, so the
+  fused wall clock is correctness/dispatch signal, not a speed claim —
+  the per-op reference column is the honest baseline.
+* ``stage_speedups`` — the planner-facing numbers: for every fused group
+  on the two serving graphs, ``MeasuredCost``'s XLA-lowered stage cost
+  (sum of the group's per-op measurements) vs the fused single-jit
+  measurement, both rooflined on the calibrated GPU engine. These are
+  the exact quantities the route DP compares when it binds
+  ``pallas_fused`` to a segment, so a ratio here >= 1.2x is the planner
+  seeing a >= 1.2x stage win.
+
+  PYTHONPATH=src python benchmarks/kernel_bench.py --out BENCH_kernels.json
+  PYTHONPATH=src python benchmarks/kernel_bench.py --smoke   # f32 only, img 64
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import socket
+import statistics
+import time
+
+
+# (name, kind, in_shape, kernel, stride, padding, cout, norm, act) — the
+# serving-graph blocks these kernels replace: Pix2Pix down/up path at
+# img=64/base=8 (the serving default) and the YOLOv8n stem/stage convs.
+SERVING_CASES = [
+    ("pix_down1", "conv", (1, 64, 64, 3), 4, 2, 1, 8, "none", "lrelu"),
+    ("pix_down2", "conv", (1, 32, 32, 8), 4, 2, 1, 16, "batch", "lrelu"),
+    ("yolo_stem", "conv", (1, 64, 64, 3), 3, 2, 1, 16, "batch", "silu"),
+    ("yolo_stage", "conv", (1, 32, 32, 16), 3, 2, 1, 32, "batch", "silu"),
+    ("pix_up1", "deconv", (1, 4, 4, 64), 4, 2, 1, 32, "batch", "relu"),
+    ("pix_up2", "deconv", (1, 8, 8, 64), 4, 2, 1, 16, "batch", "relu"),
+]
+
+
+def _median3(fn) -> float:
+    fn()  # warm (compilation / first-call tracing)
+    ts = []
+    for _ in range(3):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return statistics.median(ts)
+
+
+def run_cases(dtypes=("float32", "bfloat16")) -> list[dict]:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels.fused.ops import conv_block, deconv_block
+    from repro.kernels.fused.ref import conv_block_ref, deconv_block_ref
+
+    ref_conv = jax.jit(
+        conv_block_ref, static_argnames=("stride", "padding", "norm", "groups", "act", "eps")
+    )
+    ref_deconv = jax.jit(
+        deconv_block_ref, static_argnames=("norm", "groups", "act", "eps")
+    )
+
+    out = []
+    for name, kind, shape, k, stride, pad, cout, norm, act in SERVING_CASES:
+        for dtype in dtypes:
+            dt = jnp.dtype(dtype)
+            key = jax.random.key(hash(name) % (2**31))
+            kx, kw, kp = jax.random.split(key, 3)
+            x = jax.random.normal(kx, shape, dt)
+            w = jax.random.normal(kw, (k, k, shape[-1], cout), jnp.float32) * 0.1
+            b = jax.random.normal(kp, (cout,), jnp.float32) * 0.1
+            gamma = jnp.ones((cout,), jnp.float32)
+            beta = jnp.zeros((cout,), jnp.float32)
+            if kind == "conv":
+                fused = lambda: jax.block_until_ready(
+                    conv_block(x, w, b, gamma, beta, stride=stride, padding=pad, norm=norm, act=act)
+                )
+                ref = lambda: jax.block_until_ready(
+                    ref_conv(x, w, b, gamma, beta, stride=stride, padding=pad, norm=norm, act=act)
+                )
+            else:
+                fused = lambda: jax.block_until_ready(
+                    deconv_block(x, w, b, gamma, beta, norm=norm, act=act)
+                )
+                ref = lambda: jax.block_until_ready(deconv_block_ref(x, w, b, gamma, beta, norm=norm, act=act))
+            got, want = fused(), ref()
+            err = float(np.max(np.abs(np.float32(got) - np.float32(want))))
+            t_fused = _median3(fused)
+            t_ref = _median3(ref)
+            out.append(
+                {
+                    "case": name,
+                    "kernel": kind,
+                    "in_shape": list(shape),
+                    "out_channels": cout,
+                    "norm": norm,
+                    "act": act,
+                    "dtype": dtype,
+                    "max_abs_err": err,
+                    "fused_wall_ms": t_fused * 1e3,
+                    "ref_wall_ms": t_ref * 1e3,
+                    "repeats": 3,
+                }
+            )
+            print(
+                f"  {name:>10} {kind:<6} {dtype:<9} err={err:.2e}  "
+                f"fused={t_fused * 1e3:7.2f} ms  ref={t_ref * 1e3:7.2f} ms (interpret-mode wall)"
+            )
+    return out
+
+
+def _iter_fuse_groups(layers):
+    """Yield each fused group (lead + folded members) in order; recurses
+    into composite decompositions (YOLO's coarse graph marks groups on the
+    composites' primitive sublayers)."""
+    i = 0
+    while i < len(layers):
+        l = layers[i]
+        fu = l.attrs.get("fuse")
+        if fu is not None:
+            yield list(layers[i : i + fu["span"]])
+            i += fu["span"]
+        else:
+            if l.sublayers:
+                yield from _iter_fuse_groups(l.sublayers)
+            i += 1
+    return
+
+
+def run_stage_speedups(img: int, base: int) -> dict:
+    from repro.core.constraints import DLA_ANALOGUE_CONSTRAINTS
+    from repro.core.cost_model import MeasuredCost, graph_time
+    from repro.core.engine import jetson_orin_engines
+    from repro.models import Pix2PixConfig, Pix2PixGenerator, YOLOv8, YOLOv8Config
+
+    gpu, _dla = jetson_orin_engines(constraints_dla=DLA_ANALOGUE_CONSTRAINTS)
+    graphs = {
+        "pix2pix": Pix2PixGenerator(
+            Pix2PixConfig(img_size=img, base=base, deconv_mode="cropping")
+        ).layer_graph(),
+        "yolov8n": YOLOv8(YOLOv8Config(img_size=img)).layer_graph(),
+    }
+    mc = MeasuredCost()
+    out = {}
+    for gname, g in graphs.items():
+        groups = []
+        for members in _iter_fuse_groups(list(g)):
+            lead = members[0]
+            xla_us = sum(mc.layer_time(m, gpu, "xla") for m in members) * 1e6
+            fused_us = mc.layer_time(lead, gpu, "pallas_fused") * 1e6
+            groups.append(
+                {
+                    "stage": lead.name,
+                    "kernel": "deconv" if lead.kind == "deconv" else "conv",
+                    "in_shape": list(lead.in_shape),
+                    "span": len(members),
+                    "xla_us": xla_us,
+                    "fused_us": fused_us,
+                    "speedup": xla_us / fused_us if fused_us else float("inf"),
+                }
+            )
+        g_xla = graph_time(g, gpu, provider=mc, impl="xla").elapsed
+        g_pal = graph_time(g, gpu, provider=mc, impl="pallas_fused").elapsed
+        best = max(groups, key=lambda r: r["speedup"]) if groups else None
+        out[gname] = {
+            "img_size": img,
+            "groups": groups,
+            "graph_xla_us": g_xla * 1e6,
+            "graph_fused_us": g_pal * 1e6,
+            "graph_speedup": g_xla / g_pal if g_pal else float("inf"),
+            "best_stage": best["stage"] if best else None,
+            "best_speedup": best["speedup"] if best else None,
+        }
+        print(
+            f"  {gname}@{img}: {len(groups)} fused stages, graph x{out[gname]['graph_speedup']:.3f}, "
+            f"best stage {out[gname]['best_stage']} x{out[gname]['best_speedup']:.3f}"
+        )
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="f32 only, single image size")
+    ap.add_argument("--img", type=int, default=64, help="serving image size for the stage sweep")
+    ap.add_argument("--base", type=int, default=8)
+    ap.add_argument("--out", default="BENCH_kernels.json")
+    args = ap.parse_args()
+
+    import jax
+
+    dtypes = ("float32",) if args.smoke else ("float32", "bfloat16")
+    print(f"fused-kernel parity + wall clock ({', '.join(dtypes)}; Pallas interpret mode):")
+    cases = run_cases(dtypes)
+
+    print("measured-cost stage speedups (planner view, GPU engine):")
+    stage_speedups = run_stage_speedups(args.img, args.base)
+    if not args.smoke and args.img == 64:
+        for g, s in run_stage_speedups(128, args.base).items():
+            stage_speedups[f"{g}@128"] = s
+
+    all_best = {
+        g: s["best_speedup"] for g, s in stage_speedups.items() if s["best_speedup"] is not None
+    }
+    best_graph = max(all_best, key=all_best.get)
+    payload = {
+        "bench": "fused_kernels",
+        "smoke": bool(args.smoke),
+        "dtypes": list(dtypes),
+        "platform": platform.platform(),
+        "hostname": socket.gethostname(),
+        "cases": cases,
+        "stage_speedups": stage_speedups,
+        "max_parity_err_f32": max(c["max_abs_err"] for c in cases if c["dtype"] == "float32"),
+        "best_stage_speedup": all_best[best_graph],
+        "best_stage_graph": best_graph,
+    }
+    payload["machine"] = os.environ.get(
+        "BENCH_MACHINE", f"{payload['hostname']}|{jax.default_backend()}"
+    )
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(
+        f"wrote {args.out}  (best stage speedup x{payload['best_stage_speedup']:.3f} "
+        f"on {best_graph}, max f32 parity err {payload['max_parity_err_f32']:.2e})"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -40,14 +40,14 @@ import socket
 import time
 
 
-def build_models(img: int, base: int, norm: str, provider, search: str):
+def build_models(img: int, base: int, norm: str, provider, search: str, impl: str = "xla"):
     """Build the staged models + plan once per bench process: every point
     reuses them, so jitted segment executables (cached on the models)
     compile once during warmup instead of once per point."""
     from repro.serve import build_pix_yolo_serving
 
     models, plan, _, _ = build_pix_yolo_serving(
-        img=img, base=base, n_pix=1, n_yolo=1, norm=norm, cost=provider, search=search
+        img=img, base=base, n_pix=1, n_yolo=1, norm=norm, cost=provider, search=search, impl=impl
     )
     return models, plan
 
@@ -232,6 +232,75 @@ def run_multicut_compare(
         # jitter can put it at 1 cut even when the analytic plan is
         # cheaper — per-segment host dispatch is not free on CPU)
         "fps_ratio": med[best_mc]["aggregate_fps"] / med[base_mc]["aggregate_fps"],
+    }
+
+
+def run_impl_compare(
+    img: int, base: int, norm: str, frames: int, microbatch: int, impls=("xla", "auto", "pallas")
+) -> dict:
+    """Implementation-planning sweep on the Pix2Pix + YOLO serving pair.
+
+    Plans the same model pair under each ``--impl`` mode with *measured*
+    per-layer costs (the fused-kernel win is a measured effect; analytic
+    roofline cycles for the same three modes ride along), records each
+    plan's cycle and per-segment implementation bindings, and measures
+    end-to-end FPS through the executor — ``pallas_fused`` segments stage
+    the fused serving kernels, so the FPS numbers exercise the real
+    variant dispatch, not just the plan annotation. ``auto`` picks the
+    per-segment argmin over both variants and only switches when the
+    candidate dominates component-wise, so its plan cycle is never worse
+    than forced ``xla`` (the recorded ratio is the pinned guarantee).
+    Interpreted Pallas on CPU makes the absolute ``pallas``/``auto``
+    wall-clock non-indicative; the plan-cost columns carry the signal."""
+    from repro.core.constraints import DLA_ANALOGUE_CONSTRAINTS
+    from repro.core.cost_model import MeasuredCost
+    from repro.core.engine import jetson_orin_engines
+    from repro.core.scheduler import _nmodel_schedule_impl as nmodel_schedule
+    from repro.serve import build_pix_yolo_serving
+
+    gpu, dla = jetson_orin_engines(constraints_dla=DLA_ANALOGUE_CONSTRAINTS)
+    models, _, _, _ = build_pix_yolo_serving(img=img, base=base, n_pix=1, n_yolo=1, norm=norm)
+    graphs = [m.graph for m in models]
+    mc = MeasuredCost()
+    plans = {im: nmodel_schedule(graphs, [dla, gpu], provider=mc, impl=im) for im in impls}
+    analytic = {im: nmodel_schedule(graphs, [dla, gpu], impl=im) for im in impls}
+
+    k = 2
+    cmp_frames = min(frames, 6)  # interpreted Pallas is slow on CPU; keep it bounded
+    for plan in plans.values():  # warm every plan's segment executables
+        run_point(models, plan, k, 1, img, microbatch, norm)
+    samples: dict[str, list[dict]] = {im: [] for im in impls}
+    for _ in range(3):  # interleaved repeats cancel container drift
+        for im in impls:
+            samples[im].append(run_point(models, plans[im], k, cmp_frames, img, microbatch, norm))
+    med = {
+        im: sorted(rs, key=lambda r: r["aggregate_fps"])[len(rs) // 2]
+        for im, rs in samples.items()
+    }
+    points = {
+        im: {
+            "plan_cycle_ms": plans[im].cycle_time * 1e3,
+            "analytic_plan_cycle_ms": analytic[im].cycle_time * 1e3,
+            "impl_bindings": [list(b) for b in plans[im].ir.impl_bindings()],
+            "pallas_segments": sum(
+                1 for b in plans[im].ir.impl_bindings() for s in b if s == "pallas_fused"
+            ),
+            "aggregate_fps": med[im]["aggregate_fps"],
+            "latency_p50_ms": med[im]["latency_p50_ms"],
+        }
+        for im in impls
+    }
+    return {
+        "impls": list(impls),
+        "repeats": 3,
+        "pix_streams": k,
+        "frames_per_stream": cmp_frames,
+        "cost_provider": "measured",
+        "points": points,
+        "auto_vs_xla_plan_ratio": plans["auto"].cycle_time / plans["xla"].cycle_time,
+        "auto_vs_xla_analytic_ratio": analytic["auto"].cycle_time / analytic["xla"].cycle_time,
+        "auto_never_worse": plans["auto"].cycle_time <= plans["xla"].cycle_time
+        and analytic["auto"].cycle_time <= analytic["xla"].cycle_time,
     }
 
 
@@ -609,6 +678,17 @@ def main():
         help="skip the max_cuts (k-segment route) sweep",
     )
     ap.add_argument(
+        "--skip-impl-compare",
+        action="store_true",
+        help="skip the implementation-planning (xla/auto/pallas) sweep",
+    )
+    ap.add_argument(
+        "--impl",
+        choices=("auto", "xla", "pallas"),
+        default="xla",
+        help="implementation-planning mode for the main stream sweep's plan",
+    )
+    ap.add_argument(
         "--skip-openloop-sweep",
         action="store_true",
         help="skip the open-loop traffic / SLO / admission-control sweep",
@@ -649,7 +729,7 @@ def main():
     if args.streams:
         counts = [int(x) for x in args.streams.split(",")]
 
-    models, plan = build_models(img, args.base, args.norm, provider, args.search)
+    models, plan = build_models(img, args.base, args.norm, provider, args.search, args.impl)
     # warm both executor configurations (jitted segment executables AND the
     # eager per-op caches) at the widest stream count so the sweep measures
     # steady state, not first-call tracing
@@ -752,6 +832,24 @@ def main():
             f"FPS x{multicut_compare['fps_ratio']:.2f})"
         )
 
+    impl_compare = None
+    if not args.skip_impl_compare:
+        impl_compare = run_impl_compare(
+            img, args.base, args.norm, max(frames, 4), args.microbatch
+        )
+        pts = impl_compare["points"]
+        print(
+            "impl compare (measured costs): "
+            + "  ".join(
+                f"{im}: {pts[im]['plan_cycle_ms']:.3f} ms plan "
+                f"({pts[im]['pallas_segments']} fused seg) / "
+                f"{pts[im]['aggregate_fps']:.2f} FPS"
+                for im in impl_compare["impls"]
+            )
+            + f"  (auto/xla plan ratio {impl_compare['auto_vs_xla_plan_ratio']:.3f}, "
+            f"never_worse={impl_compare['auto_never_worse']})"
+        )
+
     openloop = None
     if not args.skip_openloop_sweep:
         openloop = run_openloop_sweep(
@@ -798,6 +896,7 @@ def main():
         "microbatch": args.microbatch,
         "norm": args.norm,
         "cost_provider": args.cost,
+        "impl": args.impl,
         "planner_search": results[0]["planner_search"] if results else args.search,
         "platform": platform.platform(),
         "hostname": socket.gethostname(),
@@ -808,6 +907,7 @@ def main():
         "dispatch_compare": dispatch_compare,
         "granularity_compare": granularity_compare,
         "multicut_compare": multicut_compare,
+        "impl_compare": impl_compare,
         "openloop": openloop,
         "replan_scenario": replan_scenario,
         "results": results,

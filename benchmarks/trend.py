@@ -4,6 +4,8 @@ against a baseline and fail on aggregate-FPS regressions.
   PYTHONPATH=src python benchmarks/trend.py --candidate BENCH_serve.new.json
   PYTHONPATH=src python benchmarks/trend.py --candidate new.json --threshold 0.2 \
       --history BENCH_history.jsonl --against-history
+  PYTHONPATH=src python benchmarks/trend.py --candidate new.json \
+      --history BENCH_history.jsonl --kernels BENCH_kernels.json  # + per-kernel ratios
 
 The ``--history`` JSONL file is a keyed per-machine trend store: every
 run appends one summary line keyed by ``machine`` (hostname + jax
@@ -123,6 +125,22 @@ def history_entry(candidate: dict) -> dict:
         entry["openloop_p99_top_ms"] = pts.get(top, {}).get("latency_p99_ms")
         entry["openloop_shed_vs_queue_ratio"] = ol.get("shed_vs_queue_goodput_ratio")
         entry["openloop_capacity_fps"] = ol.get("capacity_fps")
+    if candidate.get("impl_compare"):
+        ic = candidate["impl_compare"]
+        entry["impl_auto_vs_xla_plan_ratio"] = ic.get("auto_vs_xla_plan_ratio")
+        entry["impl_auto_never_worse"] = ic.get("auto_never_worse")
+        auto = ic.get("points", {}).get("auto", {})
+        entry["impl_auto_pallas_segments"] = auto.get("pallas_segments")
+    if candidate.get("kernel_speedups"):
+        # per-kernel fused-stage speedup ratios from kernel_bench (merged
+        # via --kernels): one history column per serving graph, plus the
+        # best-stage headline the nightly gate thresholds on
+        ks = candidate["kernel_speedups"]
+        for gname, s in ks.get("graphs", {}).items():
+            entry[f"kernel_{gname}_graph_speedup"] = s.get("graph_speedup")
+            entry[f"kernel_{gname}_best_speedup"] = s.get("best_speedup")
+        entry["kernel_best_stage_speedup"] = ks.get("best_stage_speedup")
+        entry["kernel_max_parity_err_f32"] = ks.get("max_parity_err_f32")
     return entry
 
 
@@ -157,6 +175,12 @@ def main() -> int:
     ap.add_argument("--threshold", type=float, default=0.2, help="max tolerated peak-FPS drop")
     ap.add_argument("--history", default=None, help="JSONL per-machine trend store to append to")
     ap.add_argument(
+        "--kernels",
+        default=None,
+        help="BENCH_kernels.json from kernel_bench — merges its per-kernel "
+        "fused-stage speedup ratios into the candidate's history entry",
+    )
+    ap.add_argument(
         "--against-history",
         action="store_true",
         help="gate vs this machine's latest same-workload history entry "
@@ -165,6 +189,22 @@ def main() -> int:
     args = ap.parse_args()
 
     candidate = load(args.candidate)
+    if args.kernels:
+        try:
+            kb = load(args.kernels)
+            candidate["kernel_speedups"] = {
+                "graphs": {
+                    g: {
+                        "graph_speedup": s.get("graph_speedup"),
+                        "best_speedup": s.get("best_speedup"),
+                    }
+                    for g, s in kb.get("stage_speedups", {}).items()
+                },
+                "best_stage_speedup": kb.get("best_stage_speedup"),
+                "max_parity_err_f32": kb.get("max_parity_err_f32"),
+            }
+        except FileNotFoundError:
+            print(f"[trend] no kernel bench at {args.kernels}; skipping kernel columns")
     baseline = load(args.baseline)
     base_desc = args.baseline
     if args.against_history and args.history:

@@ -20,6 +20,7 @@ deadline SLO instead of the closed-loop submit/pump cycle.
   PYTHONPATH=src python examples/multi_stream_serve.py --cost measured --norm instance
   PYTHONPATH=src python examples/multi_stream_serve.py --replan
   PYTHONPATH=src python examples/multi_stream_serve.py --granularity fine
+  PYTHONPATH=src python examples/multi_stream_serve.py --cost measured --impl auto
   PYTHONPATH=src python examples/multi_stream_serve.py --open-loop --rate 20 --deadline-ms 100
 """
 from __future__ import annotations
@@ -58,6 +59,13 @@ def main():
         default="1",
         help="per-model cut budget (int), or 'auto' to escalate while the cycle improves",
     )
+    ap.add_argument(
+        "--impl",
+        choices=("auto", "xla", "pallas"),
+        default="xla",
+        help="implementation planning: xla per-op lowering, pallas fused serving kernels, "
+        "or auto (per-segment argmin over both)",
+    )
     ap.add_argument("--open-loop", action="store_true", help="Poisson arrivals under an SLO")
     ap.add_argument("--rate", type=float, default=20.0, help="open-loop arrival rate (Hz/stream)")
     ap.add_argument("--duration", type=float, default=1.5, help="open-loop horizon (s)")
@@ -73,10 +81,12 @@ def main():
     g_yolo = YOLOv8(YOLOv8Config(img_size=256)).layer_graph()
     plan_full = core.plan(
         [g_pix, g_yolo], [dla, gpu], cost=provider,
-        granularity=args.granularity, max_cuts=max_cuts,
+        granularity=args.granularity, max_cuts=max_cuts, impl=args.impl,
     )
     print(f"== planner (full-size graphs, {plan_full.cost_provider} cost, {plan_full.search} search) ==")
     print(f"cuts: {plan_full.cuts}  cycle={plan_full.expected_cycle*1e3:.2f} ms  budget={plan_full.cut_budget}")
+    if args.impl != "xla":
+        print(f"impl={args.impl} bindings={plan_full.impl_bindings()}")
 
     # executable view: small CPU-sized models, same machinery, one facade call
     bundle = build_server(
@@ -87,6 +97,7 @@ def main():
         cost=provider,
         granularity=args.granularity,
         max_cuts=max_cuts,
+        impl=args.impl,
         max_queue=4,
         microbatch=2,
         dispatch=args.dispatch,

@@ -60,6 +60,7 @@ def plan(
     route_limit: int = 512,
     exhaustive_limit: int = 20000,
     descent_rounds: int = 8,
+    impl: str = "xla",
 ) -> PlanIR:
     """Plan ``graphs`` over ``engines``; returns the typed ``PlanIR``.
 
@@ -79,6 +80,12 @@ def plan(
     longer improves the planned cycle (``PlanIR.cut_budget`` records the
     chosen budget). Outputs are bit-identical to the legacy entry points
     at the same settings — ``plan(...)`` is ``<legacy>(...).ir``.
+
+    ``impl`` selects the implementation-planning mode (``nmodel`` only):
+    ``"xla"`` forces the per-op lowering everywhere (the default, and the
+    historical behaviour), ``"pallas"`` forces the fused serving kernels,
+    ``"auto"`` lets the route search pick the argmin implementation per
+    segment (recorded on each ``PlanSegment.impl``).
     """
     from . import scheduler as _sched
 
@@ -86,6 +93,10 @@ def plan(
         raise ValueError(f"unknown plan kind {kind!r}; expected one of {_KINDS}")
     if granularity not in ("coarse", "fine"):
         raise ValueError(f"granularity must be 'coarse' or 'fine', got {granularity!r}")
+    if impl not in ("xla", "auto", "pallas"):
+        raise ValueError(f"unknown impl mode {impl!r} (expected xla | auto | pallas)")
+    if impl != "xla" and kind != "nmodel":
+        raise ValueError(f"impl={impl!r} needs kind='nmodel' (got kind={kind!r})")
     if isinstance(graphs, (LayerGraph,)) or hasattr(graphs, "graph"):
         graphs = [graphs]
     gs = [_as_graph(g) for g in graphs]
@@ -138,6 +149,7 @@ def plan(
             beam_width=beam_width,
             max_cuts=budget,
             route_limit=route_limit,
+            impl=impl,
         ).ir
 
     if max_cuts == "auto":

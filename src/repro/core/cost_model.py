@@ -47,8 +47,21 @@ def _roofline(flops: float, bytes_accessed: float, l: LayerMeta, engine) -> floa
     return max(t_c, t_m)
 
 
-def layer_time(l: LayerMeta, engine) -> float:
-    """Analytic roofline layer time (the historical default path)."""
+def layer_time(l: LayerMeta, engine, impl: str = "xla") -> float:
+    """Analytic roofline layer time (the historical default path).
+
+    ``impl="pallas_fused"`` costs marked fused blocks (``attrs["fuse"]``
+    on the lead layer) with their fused analytic totals — one HBM round
+    trip for the whole block — and their folded members at zero; layers
+    without a variant keep the per-layer roofline."""
+    if impl != "xla":
+        fu = l.attrs.get("fuse")
+        if fu is not None:
+            return _roofline(fu["flops"], fu["bytes"], l, engine)
+        if "fused_into" in l.attrs:
+            return 0.0
+        if l.sublayers:
+            return sum(layer_time(p, engine, impl) for p in l.sublayers)
     return _roofline(l.flops, l.bytes_accessed, l, engine)
 
 
@@ -75,10 +88,10 @@ class CostProvider:
 
     name = "base"
 
-    def layer_time(self, l: LayerMeta, engine) -> float:
+    def layer_time(self, l: LayerMeta, engine, impl: str = "xla") -> float:
         raise NotImplementedError
 
-    def available(self, l: LayerMeta) -> bool:
+    def available(self, l: LayerMeta, impl: str = "xla") -> bool:
         return False
 
     def describe(self) -> str:
@@ -90,8 +103,8 @@ class AnalyticCost(CostProvider):
 
     name = "analytic"
 
-    def layer_time(self, l: LayerMeta, engine) -> float:
-        return layer_time(l, engine)
+    def layer_time(self, l: LayerMeta, engine, impl: str = "xla") -> float:
+        return layer_time(l, engine, impl)
 
 
 ANALYTIC = AnalyticCost()
@@ -136,26 +149,45 @@ class MeasuredCost(CostProvider):
                 )
             self._cache = dict(payload.get("entries", {}))
 
-    def available(self, l: LayerMeta) -> bool:
+    def available(self, l: LayerMeta, impl: str = "xla") -> bool:
         if l.sublayers:
             # composite graph-level kinds (c2f/sppf/head/...) are costed by
             # expansion: measurable iff every primitive in their
             # decomposition is
-            return all(self.available(p) for p in l.sublayers)
+            return all(self.available(p, impl) for p in l.sublayers)
+        if impl != "xla":
+            if "fused_into" in l.attrs:
+                return True  # cost folds into the group's lead layer
+            if "fuse" in l.attrs:
+                return l.attrs.get("groups", 1) == 1
         if l.kind in self._MEASURABLE:
             return l.attrs.get("groups", 1) == 1
         return l.kind in self._ELEMENTWISE
 
-    def coverage(self, graph: LayerGraph) -> float:
+    def coverage(self, graph: LayerGraph, impl: str = "xla") -> float:
         """Fraction of a graph's layers served by a measurement (composites
         count as covered when their whole decomposition is)."""
-        return sum(self.available(l) for l in graph) / max(len(graph), 1)
+        return sum(self.available(l, impl) for l in graph) / max(len(graph), 1)
 
-    def _key(self, l: LayerMeta, engine) -> str:
+    def coverage_report(self, graph: LayerGraph, impls=("xla", "pallas_fused")) -> dict:
+        """Per-implementation coverage with the uncovered layer names —
+        the gaps a calibration run must fill before ``--impl auto``
+        planning is fully measured on this graph."""
+        report = {}
+        for impl in impls:
+            missing = [l.name for l in graph if not self.available(l, impl)]
+            report[impl] = {
+                "coverage": self.coverage(graph, impl),
+                "missing": missing,
+            }
+        return report
+
+    def _key(self, l: LayerMeta, engine, impl: str = "xla") -> str:
         shape = "x".join(str(d) for d in l.in_shape)
         a = l.attrs
         sig = f"k{a.get('kernel', 1)}s{a.get('stride', 1)}p{a.get('padding', 0)}"
-        return f"{l.kind}|{shape}|{sig}|c{l.out_shape[-1]}|{engine.name}|{self.dtype}"
+        base = f"{l.kind}|{shape}|{sig}|c{l.out_shape[-1]}|{engine.name}|{self.dtype}"
+        return base if impl == "xla" else f"{base}|{impl}"
 
     def _measure(self, l: LayerMeta) -> tuple[float, float]:
         from .profiler import _conv_cost, _elementwise_cost
@@ -173,11 +205,40 @@ class MeasuredCost(CostProvider):
             )
         return _elementwise_cost(l.kind, tuple(l.in_shape), self.dtype)
 
-    def layer_time(self, l: LayerMeta, engine) -> float:
-        if not self.available(l):
-            return layer_time(l, engine)
+    def _measure_fused(self, l: LayerMeta, fu: dict) -> tuple[float, float]:
+        from .profiler import _fused_cost
+
+        self.measure_count += 1
+        return _fused_cost(
+            tuple(l.in_shape),
+            l.attrs.get("kernel", 1),
+            l.attrs.get("stride", 1),
+            l.attrs.get("padding", 0),
+            l.out_shape[-1],
+            fu.get("kind", l.kind) == "deconv",
+            fu.get("norm", "none"),
+            fu.get("act", "none"),
+            self.dtype,
+        )
+
+    def layer_time(self, l: LayerMeta, engine, impl: str = "xla") -> float:
+        if not self.available(l, impl):
+            return layer_time(l, engine, impl)
         if l.sublayers:
-            return sum(self.layer_time(p, engine) for p in l.sublayers)
+            return sum(self.layer_time(p, engine, impl) for p in l.sublayers)
+        if impl != "xla":
+            if "fused_into" in l.attrs:
+                return 0.0
+            fu = l.attrs.get("fuse")
+            if fu is not None:
+                key = self._key(l, engine, impl)
+                if key in self._cache:
+                    self.hits += 1
+                    return self._cache[key]
+                flops, bytes_ = self._measure_fused(l, fu)
+                t = _roofline(flops or fu["flops"], bytes_ or fu["bytes"], l, engine)
+                self._cache[key] = t
+                return t
         key = self._key(l, engine)
         if key in self._cache:
             self.hits += 1
@@ -212,13 +273,13 @@ class BlendedCost(CostProvider):
         self.measured = measured or MeasuredCost()
         self.analytic = analytic or ANALYTIC
 
-    def available(self, l: LayerMeta) -> bool:
-        return self.measured.available(l)
+    def available(self, l: LayerMeta, impl: str = "xla") -> bool:
+        return self.measured.available(l, impl)
 
-    def layer_time(self, l: LayerMeta, engine) -> float:
-        if self.measured.available(l):
-            return self.measured.layer_time(l, engine)
-        return self.analytic.layer_time(l, engine)
+    def layer_time(self, l: LayerMeta, engine, impl: str = "xla") -> float:
+        if self.measured.available(l, impl):
+            return self.measured.layer_time(l, engine, impl)
+        return self.analytic.layer_time(l, engine, impl)
 
     def save(self, path: str | None = None) -> str:
         return self.measured.save(path)
@@ -273,17 +334,29 @@ class OnlineCost(CostProvider):
         den = self._den.get(engine_name, 0.0)
         return self._num[engine_name] / den if den > 0 else 1.0
 
+    def scale_for(self, engine_name: str, impl: str = "xla") -> float:
+        """Per-(engine, impl) calibration: non-xla implementations get
+        their own drift channel (``"engine|impl"`` keys, fed by the
+        executor when a segment ran that variant) and fall back to the
+        engine's plain scale until one is observed — drift in one variant
+        can flip the planner's impl choice without touching the other."""
+        if impl != "xla":
+            key = f"{engine_name}|{impl}"
+            if key in self._num:
+                return self.scale(key)
+        return self.scale(engine_name)
+
     def calibrated(self, engine_names) -> bool:
         return all(e in self._num for e in engine_names)
 
     def snapshot(self) -> dict[str, float]:
         return {name: self.scale(name) for name in self._num}
 
-    def layer_time(self, l: LayerMeta, engine) -> float:
-        return self.base.layer_time(l, engine) * self.scale(engine.name)
+    def layer_time(self, l: LayerMeta, engine, impl: str = "xla") -> float:
+        return self.base.layer_time(l, engine, impl) * self.scale_for(engine.name, impl)
 
-    def available(self, l: LayerMeta) -> bool:
-        return self.base.available(l)
+    def available(self, l: LayerMeta, impl: str = "xla") -> bool:
+        return self.base.available(l, impl)
 
     def describe(self) -> str:
         scales = ", ".join(f"{k}x{v:.3g}" for k, v in sorted(self.snapshot().items()))
@@ -391,6 +464,29 @@ class SegmentCost:
         return self.n_fallback_runs > 0
 
 
+def _effective_impls(graph: LayerGraph, lo: int, hi: int, impl: str) -> list[str] | None:
+    """Per-layer implementation actually run by segment [lo, hi) under
+    ``impl`` — mirrors ``StagedModel.segment_ops``: a fused group only
+    switches when it lies entirely inside the segment, so blocks split by
+    the segment boundary are costed (and executed) as xla. Composite
+    layers keep ``impl``: their fused groups live inside the node, so a
+    segment containing the node contains every group (the provider
+    recurses into the decomposition)."""
+    if impl == "xla":
+        return None
+    eff = [impl] * (hi - lo)
+    for i, l in enumerate(graph):
+        fu = l.attrs.get("fuse")
+        if fu is None:
+            continue
+        a, b = i, i + fu["span"]
+        if a >= lo and b <= hi:
+            continue  # fully contained: the group runs fused
+        for j in range(max(a, lo), min(b, hi)):
+            eff[j - lo] = "xla"
+    return eff
+
+
 def segment_cost(
     graph: LayerGraph,
     lo: int,
@@ -399,24 +495,27 @@ def segment_cost(
     peer,
     allow_fallback=True,
     provider: CostProvider | None = None,
+    impl: str = "xla",
 ) -> SegmentCost:
     if provider is None:
         provider = ANALYTIC
+    eff = _effective_impls(graph, lo, hi, impl)
     engine_busy = peer_busy = transfer = 0.0
     runs = 0
     prev_illegal = False
     for i in range(lo, hi):
         l = graph[i]
+        li = "xla" if eff is None else eff[i - lo]
         ill = allow_fallback and is_illegal(l, engine)
         if ill:
-            peer_busy += provider.layer_time(l, peer)
+            peer_busy += provider.layer_time(l, peer, li)
             if not prev_illegal:
                 runs += 1
                 # hand the activation to the peer...
                 prev_bytes = graph[i - 1].boundary_bytes if i > lo else l.boundary_bytes
                 transfer += transfer_time(prev_bytes, engine)
         else:
-            engine_busy += provider.layer_time(l, engine)
+            engine_busy += provider.layer_time(l, engine, li)
             if prev_illegal:
                 # ...and back
                 transfer += transfer_time(graph[i - 1].boundary_bytes, engine)
@@ -435,10 +534,18 @@ def segment_cost(
 
 
 def graph_time(
-    graph: LayerGraph, engine, peer=None, allow_fallback=True, provider: CostProvider | None = None
+    graph: LayerGraph,
+    engine,
+    peer=None,
+    allow_fallback=True,
+    provider: CostProvider | None = None,
+    impl: str = "xla",
 ) -> SegmentCost:
     peer = peer or engine
-    return segment_cost(graph, 0, len(graph), engine, peer, allow_fallback=allow_fallback, provider=provider)
+    return segment_cost(
+        graph, 0, len(graph), engine, peer,
+        allow_fallback=allow_fallback, provider=provider, impl=impl,
+    )
 
 
 class SegmentCostCache:
@@ -458,11 +565,16 @@ class SegmentCostCache:
         self._segments: dict[tuple, SegmentCost] = {}
         self._transfers: dict[tuple, float] = {}
 
-    def segment(self, mi: int, graph: LayerGraph, lo: int, hi: int, engine, peer, allow_fallback) -> SegmentCost:
-        key = (mi, lo, hi, engine.name, allow_fallback)
+    def segment(
+        self, mi: int, graph: LayerGraph, lo: int, hi: int, engine, peer, allow_fallback,
+        impl: str = "xla",
+    ) -> SegmentCost:
+        key = (mi, lo, hi, engine.name, allow_fallback, impl)
         c = self._segments.get(key)
         if c is None:
-            c = segment_cost(graph, lo, hi, engine, peer, allow_fallback, provider=self.provider)
+            c = segment_cost(
+                graph, lo, hi, engine, peer, allow_fallback, provider=self.provider, impl=impl
+            )
             self._segments[key] = c
         return c
 

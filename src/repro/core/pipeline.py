@@ -39,8 +39,19 @@ class StagedModel:
     # op list (expanded graphs: one op per *stage callable*, several
     # primitive layers per op). None = ops align 1:1 with graph layers.
     op_spans: list[tuple[int, int]] | None = None
+    # named implementation variants: impl -> same-length op list (e.g.
+    # "pallas_fused" with each fused block collapsed onto its lead op), and
+    # the op-index groups [a, b) that must be substituted atomically — a
+    # group only switches impl when a segment contains it entirely, so cut
+    # points interior to a fused block keep the reference ops
+    variant_ops: dict[str, list[tuple[str, Callable]]] | None = None
+    variant_groups: list[tuple[int, int]] | None = None
 
     def __post_init__(self):
+        for impl, vops in (self.variant_ops or {}).items():
+            assert len(vops) == len(self.ops), (
+                f"{self.name}: variant {impl!r} has {len(vops)} ops, expected {len(self.ops)}"
+            )
         if self.op_spans is None:
             assert len(self.ops) == len(self.graph), (
                 f"{self.name}: ops ({len(self.ops)}) must align with layer graph ({len(self.graph)})"
@@ -79,31 +90,46 @@ class StagedModel:
                 f"{self.name}: layer span [{lo},{hi}) does not align with stage boundaries"
             ) from None
 
-    def run_segment(self, state, lo, hi):
-        return self.segment_fn(lo, hi)(self.params, state)
+    def run_segment(self, state, lo, hi, impl: str = "xla"):
+        return self.segment_fn(lo, hi, impl)(self.params, state)
 
-    def segment_fn(self, lo, hi):
+    def segment_ops(self, lo, hi, impl: str = "xla"):
+        """The (name, fn) ops executing layers ``[lo, hi)`` under ``impl``.
+
+        Variant substitution is per fused group and only where the group's
+        op span [a, b) lies entirely inside the segment; everything else —
+        including blocks split by the segment boundary — stays ``xla``."""
+        olo, ohi = self.op_range(lo, hi)
+        ops = list(self.ops[olo:ohi])
+        vops = (self.variant_ops or {}).get(impl)
+        if impl != "xla" and vops is not None:
+            for a, b in self.variant_groups or []:
+                if a >= olo and b <= ohi:
+                    ops[a - olo : b - olo] = vops[a:b]
+        return ops
+
+    def segment_fn(self, lo, hi, impl: str = "xla"):
         """Pure ``(params, state) -> state`` over the ops executing layers
         ``[lo, hi)`` — the form ``jax.jit`` (with state-buffer donation)
         accepts."""
-        olo, ohi = self.op_range(lo, hi)
+        ops = self.segment_ops(lo, hi, impl)
 
         def f(params, state):
-            for _, fn in self.ops[olo:ohi]:
+            for _, fn in ops:
                 state = fn(params, state)
             return state
 
         return f
 
-    def jitted_segment_fn(self, lo, hi, donate: bool = False):
+    def jitted_segment_fn(self, lo, hi, donate: bool = False, impl: str = "xla"):
         """Fused one-executable form of ``segment_fn``, cached on the model
         so every executor over the same route shares the compilation."""
         if not hasattr(self, "_jit_cache"):
             self._jit_cache = {}
-        key = (lo, hi, donate)
+        key = (lo, hi, donate, impl)
         if key not in self._jit_cache:
             self._jit_cache[key] = jax.jit(
-                self.segment_fn(lo, hi), donate_argnums=(1,) if donate else ()
+                self.segment_fn(lo, hi, impl), donate_argnums=(1,) if donate else ()
             )
         return self._jit_cache[key]
 
@@ -141,20 +167,32 @@ class StagedModel:
         return self.finalize(self.run_segment(self.init_state(x), 0, self.n_layers))
 
 
-def stage_ops_from_graph(graph: LayerGraph) -> tuple[list[tuple[str, Callable]], list[tuple[int, int]]]:
+def stage_ops_from_graph(
+    graph: LayerGraph, impl: str = "xla"
+) -> tuple[list[tuple[str, Callable]], list[tuple[int, int]]]:
     """Fine-grained (op, span) lists from a coarse graph whose metas carry
     ``attrs["stages"]`` callables — one executable op per stage, spanning
-    that stage's primitive layers in the *expanded* graph."""
+    that stage's primitive layers in the *expanded* graph. ``impl`` picks
+    a registered stage-callable variant where one exists."""
+    from ..models.yolov8 import node_stages
+
     ops, spans, pos = [], [], 0
     for l in graph:
-        stages = l.attrs.get("stages")
-        if not stages:
+        if not l.attrs.get("stages"):
             raise ValueError(f"{l.name}: no stage callables; cannot stage at fine granularity")
-        for sname, nprims, fn in stages:
+        for sname, nprims, fn in node_stages(l, impl):
             ops.append((sname, fn))
             spans.append((pos, pos + nprims))
             pos += nprims
     return ops, spans
+
+
+def fuse_groups_of(graph: LayerGraph) -> list[tuple[int, int]]:
+    """Layer-index spans of the graph's marked fused blocks
+    (``attrs["fuse"]`` on the lead layer — see the model layer_graphs)."""
+    return [
+        (i, i + l.attrs["fuse"]["span"]) for i, l in enumerate(graph) if "fuse" in l.attrs
+    ]
 
 
 def pix2pix_staged(cfg, params, batch_dtype=None, granularity: str = "coarse") -> StagedModel:
@@ -162,6 +200,7 @@ def pix2pix_staged(cfg, params, batch_dtype=None, granularity: str = "coarse") -
 
     gen = Pix2PixGenerator(cfg)
     graph = gen.layer_graph()
+    groups = fuse_groups_of(graph)  # ops align 1:1 with (primitive) layers
     if granularity == "fine":
         # the pix graph is already primitive-only; the expanded view keeps
         # the coarse index map so plans annotate coarse spans uniformly
@@ -174,6 +213,8 @@ def pix2pix_staged(cfg, params, batch_dtype=None, granularity: str = "coarse") -
         init_state=lambda x: {"x": x.astype(cfg.act_dtype), "skips": []},
         finalize=lambda s: s["x"],
         batch_independent=cfg.batch_independent,
+        variant_ops={"pallas_fused": generator_ops(cfg, impl="pallas_fused")},
+        variant_groups=groups,
     )
 
 
@@ -190,9 +231,11 @@ def yolo_staged(cfg, params, granularity: str = "coarse") -> StagedModel:
     coarse = m.layer_graph()
     if granularity == "fine":
         ops, spans = stage_ops_from_graph(coarse)
+        vops, _ = stage_ops_from_graph(coarse, impl="pallas_fused")
         graph, op_spans = coarse.expand(), spans
     else:
         ops, graph, op_spans = m.staged_ops(coarse), coarse, None
+        vops = m.staged_ops(coarse, impl="pallas_fused")
     return StagedModel(
         name=cfg.name,
         ops=ops,
@@ -201,6 +244,10 @@ def yolo_staged(cfg, params, granularity: str = "coarse") -> StagedModel:
         init_state=lambda x: {"x": x.astype(cfg.act_dtype)},
         finalize=lambda s: {"p3": s["o3"], "p4": s["o4"], "p5": s["o5"]},
         op_spans=op_spans,
+        # every op is stage-atomic (a fused ConvBlock is exactly one stage
+        # callable / one coarse node), so groups are single ops
+        variant_ops={"pallas_fused": vops},
+        variant_groups=[(i, i + 1) for i in range(len(ops))],
     )
 
 

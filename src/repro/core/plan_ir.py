@@ -44,6 +44,11 @@ class PlanSegment:
     expected_cost: float = 0.0  # scoring-provider seconds for this span
     coarse_lo: int = -1  # coarse-node span covering [lo, hi); -1 = n/a
     coarse_hi: int = -1
+    # implementation variant the span is staged with: "xla" (per-op
+    # lowering) or "pallas_fused" (fused conv/deconv+norm+act kernels for
+    # the fuse groups fully inside the span; boundary-split groups run xla
+    # regardless — staging and costing share that containment rule)
+    impl: str = "xla"
 
     @property
     def span(self) -> tuple[int, int]:
@@ -60,6 +65,8 @@ class PlanSegment:
         base = f"m{self.model_index}[{self.lo}:{self.hi})@{eng}"
         if self.coarse_lo >= 0:
             base += f"~c[{self.coarse_lo}:{self.coarse_hi})"
+        if self.impl != "xla":
+            base += f"+{self.impl}"
         return base
 
 
@@ -81,6 +88,11 @@ class PlanIR:
     # carries budget 2, so a re-planner inheriting the incumbent's
     # granularity keeps the full search space.
     cut_budget: int = 0
+    # implementation-selection mode the search ran with: "xla" (force the
+    # per-op lowering everywhere), "pallas" (force the fused kernels where
+    # a span contains fuse groups), or "auto" (per-segment argmin over
+    # both — structurally never worse than "xla"). Re-planners inherit it.
+    impl_mode: str = "xla"
 
     def __post_init__(self):
         if len(self.segments) != len(self.models):
@@ -141,6 +153,12 @@ class PlanIR:
         degenerates to uncuttable single-segment planning)."""
         return self.cut_budget or max(1, max(self.cut_counts))
 
+    def impl_bindings(self) -> tuple[tuple[str, ...], ...]:
+        """Per-model implementation bindings in route order — the hot-swap
+        comparison key beside the engine/cut structure (two plans with the
+        same spans but different impls are different plans)."""
+        return tuple(tuple(s.impl for s in segs) for segs in self.segments)
+
     def route_specs(self) -> list[tuple[tuple[int, ...], tuple[int, ...]]]:
         """Per-model ``(cuts, engines)`` pairs — the scheduler's ``fixed=``
         form, used to re-score or pin an incumbent plan route-for-route."""
@@ -171,13 +189,18 @@ class PlanIR:
         return dataclasses.replace(self, revision=revision)
 
     def describe(self) -> str:
-        lines = [
+        head = (
             f"PlanIR[{self.kind}] rev={self.revision} cycle={self.expected_cycle * 1e3:.3f}ms "
             f"cost={self.cost_provider} search={self.search} cuts={list(self.cut_counts)}"
-        ]
+        )
+        if self.impl_mode != "xla":
+            head += f" impl={self.impl_mode}"
+        lines = [head]
         for mi, segs in enumerate(self.segments):
             spans = " -> ".join(
-                f"{self.engine_names[s.engine]}[{s.lo}:{s.hi})" for s in segs
+                f"{self.engine_names[s.engine]}[{s.lo}:{s.hi})"
+                + (f"+{s.impl}" if s.impl != "xla" else "")
+                for s in segs
             )
             lines.append(f"  {self.models[mi]}: {spans}")
         return "\n".join(lines)
@@ -199,6 +222,7 @@ class PlanIR:
                             "expected_cost": s.expected_cost,
                             "coarse_lo": s.coarse_lo,
                             "coarse_hi": s.coarse_hi,
+                            "impl": s.impl,
                         }
                         for s in segs
                     ]
@@ -210,6 +234,7 @@ class PlanIR:
                 "kind": self.kind,
                 "revision": self.revision,
                 "cut_budget": self.cut_budget,
+                "impl_mode": self.impl_mode,
             },
             indent=2,
         )
@@ -228,6 +253,7 @@ class PlanIR:
                     expected_cost=float(s.get("expected_cost", 0.0)),
                     coarse_lo=int(s.get("coarse_lo", -1)),
                     coarse_hi=int(s.get("coarse_hi", -1)),
+                    impl=s.get("impl", "xla"),
                 )
                 for si, s in enumerate(segs)
             )
@@ -243,6 +269,7 @@ class PlanIR:
             kind=d.get("kind", "manual"),
             revision=int(d.get("revision", 0)),
             cut_budget=int(d.get("cut_budget", 0)),
+            impl_mode=d.get("impl_mode", "xla"),
         )
 
 
@@ -256,12 +283,13 @@ def make_plan_ir(
     kind: str = "manual",
     graphs: Sequence | None = None,
     cut_budget: int = 0,
+    impl_mode: str = "xla",
 ) -> PlanIR:
-    """Build a PlanIR from per-model ``(engine, lo, hi[, expected_cost])``
-    span lists — the one constructor every scheduler emit path goes
-    through. When ``graphs`` carries expanded graphs (anything exposing
-    ``coarse_span``), each segment is annotated with the coarse-node span
-    its fine span covers."""
+    """Build a PlanIR from per-model ``(engine, lo, hi[, expected_cost[,
+    impl]])`` span lists — the one constructor every scheduler emit path
+    goes through. When ``graphs`` carries expanded graphs (anything
+    exposing ``coarse_span``), each segment is annotated with the
+    coarse-node span its fine span covers."""
 
     def _coarse(mi, lo, hi):
         g = graphs[mi] if graphs is not None and mi < len(graphs) else None
@@ -281,6 +309,7 @@ def make_plan_ir(
             expected_cost=float(sp[3]) if len(sp) > 3 else 0.0,
             coarse_lo=clo,
             coarse_hi=chi,
+            impl=sp[4] if len(sp) > 4 else "xla",
         )
 
     segments = tuple(
@@ -296,6 +325,7 @@ def make_plan_ir(
         search=search,
         kind=kind,
         cut_budget=cut_budget,
+        impl_mode=impl_mode,
     )
 
 
@@ -310,7 +340,7 @@ def translate_ir(ir: PlanIR, graphs) -> PlanIR:
     over unchanged: they remain in the scoring provider's coarse units,
     which the re-planning runtime never compares against directly."""
     spans = [
-        [(s.engine, g.fine_cut(s.lo), g.fine_cut(s.hi), s.expected_cost) for s in segs]
+        [(s.engine, g.fine_cut(s.lo), g.fine_cut(s.hi), s.expected_cost, s.impl) for s in segs]
         for segs, g in zip(ir.segments, graphs)
     ]
     return make_plan_ir(
@@ -323,6 +353,7 @@ def translate_ir(ir: PlanIR, graphs) -> PlanIR:
         kind=ir.kind,
         graphs=graphs,
         cut_budget=ir.cut_budget,
+        impl_mode=ir.impl_mode,
     )
 
 

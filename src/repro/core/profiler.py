@@ -115,6 +115,54 @@ def _conv_cost(in_shape, kernel, stride, padding, c_out, transposed, dtype_str):
     return float(ca.get("flops", 0.0)), float(ca.get("bytes accessed", 0.0))
 
 
+@functools.lru_cache(maxsize=512)
+def _fused_cost(in_shape, kernel, stride, padding, c_out, transposed, norm, act, dtype_str):
+    """XLA-measured (flops, bytes) for one fused conv/deconv+norm+act
+    block lowered as a SINGLE jit region: the compiler fuses the epilogue,
+    so ``bytes accessed`` counts the block's input, output, and params
+    once — the honest cost of the Pallas fused kernel, directly comparable
+    against the sum of the per-layer ``_conv_cost``/``_elementwise_cost``
+    lowerings the xla implementation pays (which round-trip every
+    intermediate through HBM)."""
+    dtype = jnp.dtype(dtype_str)
+    x = jax.ShapeDtypeStruct(in_shape, dtype)
+    w = jax.ShapeDtypeStruct((kernel, kernel, in_shape[-1], c_out), dtype)
+    v = jax.ShapeDtypeStruct((c_out,), jnp.float32)
+
+    def f(x, w, gamma, beta):
+        if transposed:
+            y = jax.lax.conv_transpose(
+                x, w, strides=(stride, stride), padding="VALID",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            )
+            if padding:
+                y = y[:, padding:-padding, padding:-padding, :]
+        else:
+            pad = [(padding, padding), (padding, padding)] if padding else "VALID"
+            y = jax.lax.conv_general_dilated(
+                x, w, (stride, stride), pad, dimension_numbers=("NHWC", "HWIO", "NHWC")
+            )
+        y = y.astype(jnp.float32)
+        if norm != "none":
+            # inference-time normalization is a per-channel affine (same
+            # stand-in _elementwise_cost uses for the unfused bn layer)
+            y = y * gamma + beta
+        if act == "relu":
+            y = jax.nn.relu(y)
+        elif act == "lrelu":
+            y = jax.nn.leaky_relu(y, 0.2)
+        elif act == "silu":
+            y = jax.nn.silu(y)
+        elif act == "tanh":
+            y = jnp.tanh(y)
+        return y.astype(dtype)
+
+    compiled = jax.jit(f).lower(x, w, v, v).compile()
+    ca = cost_analysis_dict(compiled)
+    flops = float(ca.get("flops", 0.0)) + float(ca.get("transcendentals", 0.0))
+    return flops, float(ca.get("bytes accessed", 0.0))
+
+
 def _profile_layer(l, dtype_name: str):
     """Measured clone of one meta. Composites are profiled through their
     primitive decomposition and their totals become the measured sums, so

@@ -435,15 +435,18 @@ class _RouteCoster:
     route costs are bit-identical to the old (e1, e2, c1, c2, x) tuples.
     """
 
-    def __init__(self, graphs, engines, allow_fallback, flex_idx, provider=None):
+    def __init__(self, graphs, engines, allow_fallback, flex_idx, provider=None, impl="xla"):
         self.graphs = graphs
         self.engines = engines
         self.allow_fallback = allow_fallback
         self.flex_idx = flex_idx
+        self.impl_mode = impl
         self.cache = SegmentCostCache(provider)
         self._routes: dict[tuple[int, RouteSpec], RouteCost] = {}
+        # per-(model, span, engine) winning implementation under "auto"
+        self._impl_choice: dict[tuple[int, int, int, int], str] = {}
 
-    def seg(self, i: int, lo: int, hi: int, e: int) -> SegmentCost:
+    def _seg_impl(self, i: int, lo: int, hi: int, e: int, impl: str) -> SegmentCost:
         return self.cache.segment(
             i,
             self.graphs[i],
@@ -452,7 +455,31 @@ class _RouteCoster:
             self.engines[e],
             self.engines[self.flex_idx],
             self.allow_fallback and e != self.flex_idx,
+            impl,
         )
+
+    def seg(self, i: int, lo: int, hi: int, e: int) -> SegmentCost:
+        if self.impl_mode == "pallas":
+            return self._seg_impl(i, lo, hi, e, "pallas_fused")
+        c_xla = self._seg_impl(i, lo, hi, e, "xla")
+        if self.impl_mode == "xla":
+            return c_xla
+        # "auto": per-segment argmin over implementations. The fused
+        # variant wins only when it dominates component-wise (elapsed AND
+        # peer-steal no worse, elapsed strictly better) — every occupancy
+        # term in _evaluate_routes is then <= its xla counterpart, so the
+        # impl-aware plan cost is structurally never worse than xla-only.
+        c_pal = self._seg_impl(i, lo, hi, e, "pallas_fused")
+        if c_pal.elapsed < c_xla.elapsed and c_pal.peer_busy <= c_xla.peer_busy:
+            self._impl_choice[(i, lo, hi, e)] = "pallas_fused"
+            return c_pal
+        return c_xla
+
+    def chosen(self, i: int, lo: int, hi: int, e: int) -> str:
+        """The implementation bound to one segment under the coster's mode."""
+        if self.impl_mode == "pallas":
+            return "pallas_fused"
+        return self._impl_choice.get((i, lo, hi, e), "xla")
 
     def xfer(self, i: int, p: int, e_prev: int) -> float:
         return self.cache.transfer(i, self.graphs[i], p, self.engines[e_prev])
@@ -733,6 +760,7 @@ def _nmodel_schedule_impl(
     beam_width: int = 64,
     max_cuts: int = 1,
     route_limit: int = 512,
+    impl: str = "xla",
 ) -> NModelPlan:
     """Plan N staged models over E engines, up to ``max_cuts`` partition
     points per model.
@@ -774,6 +802,14 @@ def _nmodel_schedule_impl(
     Plans record which provider scored them (``plan.cost_provider``),
     which search produced them (``plan.search``), and the full cut
     vectors (``plan.cuts``; ``plan.partitions`` stays the first-cut view).
+
+    ``impl`` adds implementation choice as a planning dimension beside
+    the engine binding: ``"xla"`` (default — bit-identical to the
+    historical planner), ``"pallas"`` (force the fused conv/deconv+
+    norm+act kernels on every segment), or ``"auto"`` (per-segment argmin
+    over both implementations; the winning variant is recorded on each
+    emitted ``PlanSegment.impl`` and the plan cost is structurally never
+    worse than ``impl="xla"``).
     """
     graphs, engines = list(graphs), list(engines)
     if not graphs:
@@ -784,11 +820,13 @@ def _nmodel_schedule_impl(
         raise ValueError(f"unknown search mode {search!r}")
     if max_cuts < 1:
         raise ValueError(f"max_cuts must be >= 1, got {max_cuts}")
+    if impl not in ("xla", "auto", "pallas"):
+        raise ValueError(f"unknown impl mode {impl!r} (expected xla | auto | pallas)")
     if provider is None:
         provider = ANALYTIC
     E = len(engines)
     flex_idx = _flex_engine_index(engines)
-    coster = _RouteCoster(graphs, engines, allow_fallback, flex_idx, provider)
+    coster = _RouteCoster(graphs, engines, allow_fallback, flex_idx, provider, impl=impl)
 
     pinned: list[RouteSpec | None] = [None] * len(graphs)
     if fixed is not None:
@@ -886,7 +924,10 @@ def _nmodel_schedule_impl(
             )
         )
         ir_spans.append(
-            [(e, lo, hi, c.elapsed) for (e, lo, hi), (_, c) in zip(seg_list, rc.segs)]
+            [
+                (e, lo, hi, c.elapsed, coster.chosen(i, lo, hi, e))
+                for (e, lo, hi), (_, c) in zip(seg_list, rc.segs)
+            ]
         )
         xi = 0
         for j, ((e, lo, hi), (_, c)) in enumerate(zip(seg_list, rc.segs)):
@@ -907,6 +948,11 @@ def _nmodel_schedule_impl(
     notes.append(f"search={mode} cost={provider.name}")
     if max_cuts > 1:
         notes.append(f"max_cuts={max_cuts}" + (" (route candidates capped)" if capped else ""))
+    if impl != "xla":
+        n_pallas = sum(
+            1 for spans in ir_spans for sp in spans if sp[4] == "pallas_fused"
+        )
+        notes.append(f"impl={impl} ({n_pallas} pallas_fused segments)")
     ir = make_plan_ir(
         tuple(g.model_name for g in graphs),
         tuple(e.name for e in engines),
@@ -917,6 +963,7 @@ def _nmodel_schedule_impl(
         kind="nmodel",
         graphs=graphs,
         cut_budget=max_cuts,
+        impl_mode=impl,
     )
     sched = Schedule(
         kind="nmodel",

@@ -1,0 +1,33 @@
+"""Shared Pallas compatibility helpers for the kernel packages.
+
+jax 0.4.37's ``NDIndexer`` rejects integer indices mixed with ``pl.ds``
+dynamic slices in one ``pl.load`` — the idiom every blocked kernel wants
+for "this singleton grid axis, that dynamic block". ``load_block`` is the
+one shared workaround: integer indices are loaded as size-1 dynamic
+slices and the singleton axes dropped after the load, which lowers to the
+same memory traffic. Originally worked around inline in
+``attention/kernel.py``; extracted here so new kernels can't silently
+copy a broken raw mix.
+"""
+from __future__ import annotations
+
+from jax.experimental import pallas as pl
+
+
+def load_block(ref, *index):
+    """``pl.load(ref, index)`` that accepts int indices beside ``pl.ds``.
+
+    ``index`` elements may be python/traced ints (the axis is loaded as a
+    size-1 dynamic slice and squeezed from the result), ``pl.ds(...)``
+    slices, or plain ``slice`` objects (kept as-is). Returns the loaded
+    array with every int-indexed axis dropped.
+    """
+    idx, keep = [], []
+    for i in index:
+        if isinstance(i, (slice, pl.Slice)):
+            idx.append(i)
+            keep.append(slice(None))
+        else:  # int index: size-1 dynamic slice, squeezed after the load
+            idx.append(pl.ds(i, 1))
+            keep.append(0)
+    return pl.load(ref, tuple(idx))[tuple(keep)]

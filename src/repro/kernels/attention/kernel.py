@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .._compat import load_block
+
 NEG_INF = -1e30
 
 
@@ -44,13 +46,9 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, bq, bk, Sk, causal, window, sof
     def body(kb, carry):
         m, l, acc = carry
         # int indices can't mix with pl.ds in this jax version's NDIndexer;
-        # load the singleton axes as size-1 dynamic slices and drop them
-        k = pl.load(k_ref, (pl.ds(0, 1), pl.ds(kb * bk, bk), pl.ds(0, 1), slice(None)))[
-            0, :, 0, :
-        ].astype(jnp.float32)
-        v = pl.load(v_ref, (pl.ds(0, 1), pl.ds(kb * bk, bk), pl.ds(0, 1), slice(None)))[
-            0, :, 0, :
-        ].astype(jnp.float32)
+        # _compat.load_block loads them as size-1 dynamic slices and drops them
+        k = load_block(k_ref, 0, pl.ds(kb * bk, bk), 0, slice(None)).astype(jnp.float32)
+        v = load_block(v_ref, 0, pl.ds(kb * bk, bk), 0, slice(None)).astype(jnp.float32)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
         s = s * scale
         if softcap:

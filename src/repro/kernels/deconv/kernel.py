@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .._compat import load_block
+
 
 def _phase_matmuls(x_m1, x_0, x_p1, w, th, W):
     """All four parity phases for a row tile.
@@ -65,13 +67,14 @@ def _phase_matmuls(x_m1, x_0, x_p1, w, th, W):
 
 def _deconv_kernel(x_prev_ref, x_ref, x_next_ref, w_ref, o_ref, *, th, W, n_tiles):
     i = pl.program_id(1)
-    x_0 = x_ref[0]  # (th, W, Cin)
+    # singleton batch axis via the shared jax-0.4.37 int-index workaround
+    x_0 = load_block(x_ref, 0, slice(None), slice(None), slice(None))  # (th, W, Cin)
     # row u-1: last row of the previous tile on top; masked at global top
-    prev_last = x_prev_ref[0, th - 1 : th]
+    prev_last = load_block(x_prev_ref, 0, slice(th - 1, th), slice(None), slice(None))
     prev_last = jnp.where(i > 0, prev_last, jnp.zeros_like(prev_last))
     x_m1 = jnp.concatenate([prev_last, x_0[:-1]], axis=0)
     # row u+1: first row of the next tile at the bottom; masked at bottom
-    next_first = x_next_ref[0, 0:1]
+    next_first = load_block(x_next_ref, 0, slice(0, 1), slice(None), slice(None))
     next_first = jnp.where(i < n_tiles - 1, next_first, jnp.zeros_like(next_first))
     x_p1 = jnp.concatenate([x_0[1:], next_first], axis=0)
 

@@ -1,0 +1,195 @@
+"""Pallas TPU kernels: fused conv/deconv + norm + activation serving blocks.
+
+The serving hot path runs `conv -> norm -> act` (Pix2Pix down blocks, every
+YOLO fused conv block) and `deconv -> crop -> norm -> act` (Pix2Pix up
+blocks) as separate XLA ops: each stage round-trips the activation through
+HBM. These kernels fuse a whole block into one pallas_call — the conv is
+tap-decomposed into k*k dense (Cin x Cout) GEMMs (pure MXU work, same
+idiom as the phase-decomposed deconv), the norm statistics and the
+activation are applied in-register, and only the block's final output is
+written back.
+
+Grid is (B,): one sample per step, whole spatial extent in VMEM (serving
+shapes: <= 64x64x64 fp32 ~ 1 MB, comfortably inside ~16 MB). Per-sample
+statistics make the fused norm exact for instance/group norm at any batch
+and for batch norm at B == 1 — the serving case (frames are single
+samples; only batch-independent models merge micro-batches). The ops
+wrapper falls back to the reference for B > 1 batch norm.
+
+The deconv kernel reuses the phase-matmul decomposition from
+``kernels.deconv`` (k=4, stride=2; torch padding=1 — i.e. the paper's
+crop — folded into the phase arithmetic, so deconv+crop is one kernel).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .._compat import load_block
+from ..deconv.kernel import _phase_matmuls
+
+ACTS = ("none", "relu", "lrelu", "silu", "tanh")
+NORMS = ("none", "batch", "instance", "group")
+
+
+def _norm_act(y, gamma, beta, *, norm, groups, act, eps):
+    """Per-sample norm + activation on a (H, W, C) fp32 tile."""
+    if norm in ("batch", "instance"):
+        # batch stats at B==1 == instance stats; mirrors BatchNorm2D math
+        mean = jnp.mean(y, axis=(0, 1), keepdims=True)
+        var = jnp.var(y, axis=(0, 1), keepdims=True)
+        y = (y - mean) * jax.lax.rsqrt(var + eps)
+        y = y * gamma + beta
+    elif norm == "group":
+        H, W, C = y.shape
+        yg = y.reshape(H, W, groups, C // groups)
+        mean = jnp.mean(yg, axis=(0, 1, 3), keepdims=True)
+        var = jnp.var(yg, axis=(0, 1, 3), keepdims=True)
+        y = ((yg - mean) * jax.lax.rsqrt(var + eps)).reshape(H, W, C)
+        y = y * gamma + beta
+    if act == "relu":
+        y = jax.nn.relu(y)
+    elif act == "lrelu":
+        y = jax.nn.leaky_relu(y, 0.2)
+    elif act == "silu":
+        y = jax.nn.silu(y)
+    elif act == "tanh":
+        y = jnp.tanh(y)
+    return y
+
+
+def _conv_block_kernel(
+    x_ref, w_ref, b_ref, g_ref, bt_ref, o_ref, *, k, stride, pad, Ho, Wo, norm, groups, act, eps
+):
+    # singleton batch axis via the shared jax-0.4.37 int-index workaround
+    x = load_block(x_ref, 0, slice(None), slice(None), slice(None)).astype(jnp.float32)
+    if pad:
+        x = jnp.pad(x, ((pad, pad), (pad, pad), (0, 0)))
+    w = w_ref[...].astype(jnp.float32)  # (k, k, Cin, Cout)
+    cin, cout = w.shape[2], w.shape[3]
+    acc = jnp.zeros((Ho * Wo, cout), jnp.float32)
+    # tap decomposition: k*k strided windows, each a dense (Cin x Cout) GEMM
+    for ki in range(k):
+        for kj in range(k):
+            win = jax.lax.slice(
+                x,
+                (ki, kj, 0),
+                (ki + stride * (Ho - 1) + 1, kj + stride * (Wo - 1) + 1, cin),
+                (stride, stride, 1),
+            )
+            acc = acc + jax.lax.dot_general(
+                win.reshape(Ho * Wo, cin),
+                w[ki, kj],
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+    y = acc.reshape(Ho, Wo, cout) + b_ref[...].astype(jnp.float32)
+    y = _norm_act(y, g_ref[...].astype(jnp.float32), bt_ref[...].astype(jnp.float32),
+                  norm=norm, groups=groups, act=act, eps=eps)
+    o_ref[0] = y.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("stride", "padding", "norm", "groups", "act", "eps", "interpret")
+)
+def conv_block_pallas(
+    x,
+    w,
+    b,
+    gamma,
+    beta,
+    stride: int = 1,
+    padding: int = 0,
+    norm: str = "batch",
+    groups: int = 1,
+    act: str = "silu",
+    eps: float = 1e-5,
+    interpret: bool = True,
+):
+    """Fused conv(+bias) + norm + act. x: (B, H, W, Cin) -> (B, Ho, Wo, Cout).
+
+    ``b``/``gamma``/``beta``: (Cout,) conv bias and norm affine (pass zeros/
+    ones to disable). Norm statistics are per-sample — exact for instance/
+    group norm, and for batch norm only at B == 1 (the ops wrapper guards).
+    """
+    B, H, W, Cin = x.shape
+    k = w.shape[0]
+    Cout = w.shape[-1]
+    Ho = (H + 2 * padding - k) // stride + 1
+    Wo = (W + 2 * padding - k) // stride + 1
+    assert norm in NORMS and act in ACTS, (norm, act)
+    kernel = functools.partial(
+        _conv_block_kernel,
+        k=k, stride=stride, pad=padding, Ho=Ho, Wo=Wo,
+        norm=norm, groups=groups, act=act, eps=eps,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, H, W, Cin), lambda bi: (bi, 0, 0, 0)),
+            pl.BlockSpec((k, k, Cin, Cout), lambda bi: (0, 0, 0, 0)),
+            pl.BlockSpec((Cout,), lambda bi: (0,)),
+            pl.BlockSpec((Cout,), lambda bi: (0,)),
+            pl.BlockSpec((Cout,), lambda bi: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, Ho, Wo, Cout), lambda bi: (bi, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Ho, Wo, Cout), x.dtype),
+        interpret=interpret,
+    )(x, w, b, gamma, beta)
+
+
+def _deconv_block_kernel(x_ref, w_ref, b_ref, g_ref, bt_ref, o_ref, *, H, W, norm, groups, act, eps):
+    x_0 = load_block(x_ref, 0, slice(None), slice(None), slice(None))  # (H, W, Cin)
+    # whole sample per grid step: the +-1 row halos are plain shifts
+    x_m1 = jnp.concatenate([jnp.zeros_like(x_0[:1]), x_0[:-1]], axis=0)
+    x_p1 = jnp.concatenate([x_0[1:], jnp.zeros_like(x_0[:1])], axis=0)
+    tile = _phase_matmuls(x_m1, x_0, x_p1, w_ref[...], H, W)  # (H, 2, W, 2, Cout)
+    y = tile.reshape(2 * H, 2 * W, -1) + b_ref[...].astype(jnp.float32)
+    y = _norm_act(y, g_ref[...].astype(jnp.float32), bt_ref[...].astype(jnp.float32),
+                  norm=norm, groups=groups, act=act, eps=eps)
+    o_ref[0] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("norm", "groups", "act", "eps", "interpret"))
+def deconv_block_pallas(
+    x,
+    w,
+    b,
+    gamma,
+    beta,
+    norm: str = "batch",
+    groups: int = 1,
+    act: str = "relu",
+    eps: float = 1e-5,
+    interpret: bool = True,
+):
+    """Fused k=4/stride=2/torch-padding-1 deconv (crop folded) + norm + act.
+
+    x: (B, H, W, Cin) -> (B, 2H, 2W, Cout); weights (4, 4, Cin, Cout).
+    Same per-sample-statistics caveat as ``conv_block_pallas``.
+    """
+    B, H, W, Cin = x.shape
+    assert w.shape[:2] == (4, 4), "phase decomposition is specialized to k=4"
+    Cout = w.shape[-1]
+    assert norm in NORMS and act in ACTS, (norm, act)
+    kernel = functools.partial(
+        _deconv_block_kernel, H=H, W=W, norm=norm, groups=groups, act=act, eps=eps
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, H, W, Cin), lambda bi: (bi, 0, 0, 0)),
+            pl.BlockSpec((4, 4, Cin, Cout), lambda bi: (0, 0, 0, 0)),
+            pl.BlockSpec((Cout,), lambda bi: (0,)),
+            pl.BlockSpec((Cout,), lambda bi: (0,)),
+            pl.BlockSpec((Cout,), lambda bi: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, 2 * H, 2 * W, Cout), lambda bi: (bi, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, 2 * H, 2 * W, Cout), x.dtype),
+        interpret=interpret,
+    )(x, w, b, gamma, beta)

@@ -1,0 +1,77 @@
+"""jit wrappers for the fused serving blocks, with reference fallback.
+
+The Pallas kernels compute norm statistics per sample (grid (B,)) — exact
+for instance/group norm at any batch and for batch norm at B == 1. A
+B > 1 batch-norm call (merged micro-batches never hit this: only
+batch-independent models merge) falls back to the jnp reference, which is
+still one fused jit region under XLA.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import conv_block_pallas, deconv_block_pallas
+from .ref import conv_block_ref, deconv_block_ref
+
+
+def _affine(x, b, gamma, beta, cout):
+    f32 = jnp.float32
+    b = jnp.zeros((cout,), f32) if b is None else b
+    gamma = jnp.ones((cout,), f32) if gamma is None else gamma
+    beta = jnp.zeros((cout,), f32) if beta is None else beta
+    return b, gamma, beta
+
+
+@functools.partial(
+    jax.jit, static_argnames=("stride", "padding", "norm", "groups", "act", "eps", "interpret")
+)
+def conv_block(
+    x,
+    w,
+    b=None,
+    gamma=None,
+    beta=None,
+    stride: int = 1,
+    padding: int = 0,
+    norm: str = "batch",
+    groups: int = 1,
+    act: str = "silu",
+    eps: float = 1e-5,
+    interpret: bool = True,
+):
+    """Fused conv(+bias)+norm+act: (B, H, W, Cin) -> (B, Ho, Wo, Cout)."""
+    b, gamma, beta = _affine(x, b, gamma, beta, w.shape[-1])
+    if norm == "batch" and x.shape[0] > 1:
+        return conv_block_ref(
+            x, w, b, gamma, beta, stride=stride, padding=padding, norm=norm,
+            groups=groups, act=act, eps=eps,
+        )
+    return conv_block_pallas(
+        x, w, b, gamma, beta, stride=stride, padding=padding, norm=norm,
+        groups=groups, act=act, eps=eps, interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("norm", "groups", "act", "eps", "interpret"))
+def deconv_block(
+    x,
+    w,
+    b=None,
+    gamma=None,
+    beta=None,
+    norm: str = "batch",
+    groups: int = 1,
+    act: str = "relu",
+    eps: float = 1e-5,
+    interpret: bool = True,
+):
+    """Fused k=4/s=2 deconv + crop (+bias) + norm + act: -> (B, 2H, 2W, Cout)."""
+    b, gamma, beta = _affine(x, b, gamma, beta, w.shape[-1])
+    if norm == "batch" and x.shape[0] > 1:
+        return deconv_block_ref(x, w, b, gamma, beta, norm=norm, groups=groups, act=act, eps=eps)
+    return deconv_block_pallas(
+        x, w, b, gamma, beta, norm=norm, groups=groups, act=act, eps=eps, interpret=interpret
+    )

@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for the fused serving blocks — the exact op sequence
+the XLA (unfused) stage callables run, composed from the same nn-layer
+math (`Conv2D`/`ConvTranspose2D` + `BatchNorm2D`-family stats + act)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+DN = ("NHWC", "HWIO", "NHWC")
+
+
+def _act(y, act):
+    if act == "relu":
+        return jax.nn.relu(y)
+    if act == "lrelu":
+        return jax.nn.leaky_relu(y, 0.2)
+    if act == "silu":
+        return jax.nn.silu(y)
+    if act == "tanh":
+        return jnp.tanh(y)
+    return y
+
+
+def _norm(y, gamma, beta, *, norm, groups, eps):
+    """Batch-statistics norm over the batch (batch), per-sample (instance),
+    or per-sample grouped channels (group) — fp32 in, fp32 out."""
+    if norm == "none":
+        return y
+    if norm == "batch":
+        mean = jnp.mean(y, axis=(0, 1, 2), keepdims=True)
+        var = jnp.var(y, axis=(0, 1, 2), keepdims=True)
+        return (y - mean) * jax.lax.rsqrt(var + eps) * gamma + beta
+    if norm == "instance":
+        mean = jnp.mean(y, axis=(1, 2), keepdims=True)
+        var = jnp.var(y, axis=(1, 2), keepdims=True)
+        return (y - mean) * jax.lax.rsqrt(var + eps) * gamma + beta
+    if norm == "group":
+        B, H, W, C = y.shape
+        yg = y.reshape(B, H, W, groups, C // groups)
+        mean = jnp.mean(yg, axis=(1, 2, 4), keepdims=True)
+        var = jnp.var(yg, axis=(1, 2, 4), keepdims=True)
+        return ((yg - mean) * jax.lax.rsqrt(var + eps)).reshape(B, H, W, C) * gamma + beta
+    raise ValueError(f"unknown norm {norm!r}")
+
+
+def conv_block_ref(
+    x, w, b, gamma, beta, stride=1, padding=0, norm="batch", groups=1, act="silu", eps=1e-5
+):
+    y = jax.lax.conv_general_dilated(
+        x,
+        w.astype(x.dtype),
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=DN,
+    )
+    y = y.astype(jnp.float32) + b.astype(jnp.float32)
+    y = _norm(y, gamma.astype(jnp.float32), beta.astype(jnp.float32), norm=norm, groups=groups, eps=eps)
+    return _act(y, act).astype(x.dtype)
+
+
+def deconv_block_ref(x, w, b, gamma, beta, norm="batch", groups=1, act="relu", eps=1e-5):
+    """k=4/stride=2 VALID transposed conv + border crop (torch padding=1)
+    + bias + norm + act — the Pix2Pix up-block sequence."""
+    y = jax.lax.conv_transpose(
+        x, w.astype(x.dtype), strides=(2, 2), padding="VALID", dimension_numbers=DN
+    )
+    y = y[:, 1:-1, 1:-1, :]
+    y = y.astype(jnp.float32) + b.astype(jnp.float32)
+    y = _norm(y, gamma.astype(jnp.float32), beta.astype(jnp.float32), norm=norm, groups=groups, eps=eps)
+    return _act(y, act).astype(x.dtype)

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .._compat import load_block
+
 
 def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, o_ref, state_ref, *, chunk, P, N):
     ci = pl.program_id(2)
@@ -28,11 +30,12 @@ def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, o_ref, state_ref, *, chunk, 
     def _init():
         state_ref[...] = jnp.zeros((P, N), jnp.float32)
 
-    x = x_ref[0, :, 0, :].astype(jnp.float32)  # (L, P)
-    dt = dt_ref[0, :, 0].astype(jnp.float32)  # (L,)
+    # singleton grid axes via the shared jax-0.4.37 int-index workaround
+    x = load_block(x_ref, 0, slice(None), 0, slice(None)).astype(jnp.float32)  # (L, P)
+    dt = load_block(dt_ref, 0, slice(None), 0).astype(jnp.float32)  # (L,)
     a = a_ref[0].astype(jnp.float32)  # scalar (per head)
-    bmat = b_ref[0, :, 0, :].astype(jnp.float32)  # (L, N)
-    cmat = c_ref[0, :, 0, :].astype(jnp.float32)  # (L, N)
+    bmat = load_block(b_ref, 0, slice(None), 0, slice(None)).astype(jnp.float32)  # (L, N)
+    cmat = load_block(c_ref, 0, slice(None), 0, slice(None)).astype(jnp.float32)  # (L, N)
 
     dA = dt * a  # (L,)
     dA_cum = jnp.cumsum(dA)  # (L,)

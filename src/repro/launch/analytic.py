@@ -257,6 +257,13 @@ def main() -> None:
         default=1,
         help="per-model cut budget: k-segment routes ping-pong each model across engines",
     )
+    ap.add_argument(
+        "--impl",
+        choices=("auto", "xla", "pallas"),
+        default="xla",
+        help="implementation planning: xla per-op lowering, pallas fused serving kernels, "
+        "or auto (per-segment argmin over both)",
+    )
     args = ap.parse_args()
 
     provider = make_cost_provider(args.cost, cache_path=args.cost_cache)
@@ -266,7 +273,8 @@ def main() -> None:
     if args.granularity == "fine":
         g_pix, g_yolo = g_pix.expand(), g_yolo.expand()
     plan = nmodel_schedule(
-        [g_pix, g_yolo], [dla, gpu], provider=provider, stride=args.stride, max_cuts=args.max_cuts
+        [g_pix, g_yolo], [dla, gpu], provider=provider, stride=args.stride,
+        max_cuts=args.max_cuts, impl=args.impl,
     )
     if args.cost_cache and hasattr(provider, "save"):
         provider.save()  # measured AND blended both persist their timings
@@ -275,6 +283,8 @@ def main() -> None:
         f"cuts={plan.cuts} cycle={plan.cycle_time*1e3:.3f} ms "
         f"aggregate={plan.schedule.aggregate_fps:.1f} FPS"
     )
+    if args.impl != "xla":
+        print(f"[analytic] impl={args.impl} bindings={plan.ir.impl_bindings()}")
     print(plan.schedule.ascii_timeline())
     if args.per_layer:
         for graph in (g_pix, g_yolo):

@@ -64,6 +64,7 @@ def run_streams(args) -> None:
         granularity=args.granularity,
         stride=args.planner_stride,
         max_cuts="auto" if args.max_cuts == "auto" else int(args.max_cuts),
+        impl=args.impl,
         max_queue=args.queue_depth,
         microbatch=args.microbatch,
         dispatch=args.dispatch,
@@ -85,6 +86,8 @@ def run_streams(args) -> None:
         f"search={plan.search} cost={plan.cost_provider} granularity={args.granularity} "
         f"max_cuts={args.max_cuts} (budget={plan.cut_budget})"
     )
+    if args.impl != "xla":
+        print(f"[serve] impl={args.impl} bindings={plan.impl_bindings()}")
     if replanner is not None and (
         args.calibration_cache
         and os.path.exists(args.calibration_cache)
@@ -165,6 +168,13 @@ def main():
         "--max-cuts",
         default="1",
         help="per-model cut budget (int), or 'auto' to escalate while the cycle improves",
+    )
+    ap.add_argument(
+        "--impl",
+        choices=("auto", "xla", "pallas"),
+        default="xla",
+        help="implementation planning: xla per-op lowering, pallas fused serving kernels, "
+        "or auto (per-segment argmin over both)",
     )
     ap.add_argument(
         "--calibration-cache",

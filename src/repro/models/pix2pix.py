@@ -176,9 +176,13 @@ class Pix2PixGenerator(Module):
             layers.append(meta)
             idx += 1
 
+        # (start_idx, span, kind, norm, act) of each pallas_fused block
+        fuse_groups: list[tuple[int, int, str, str, str]] = []
+
         h = c.img_size
         c_prev = c.in_channels
         for i, ch in enumerate(c.down_channels()):
+            fuse_groups.append((idx, 2 if i == 0 else 3, "conv", "none" if i == 0 else c.norm, "lrelu"))
             add(conv_meta(idx, f"down{i}.conv", batch, h, h, c_prev, ch, 4, 2, 1, dtype_bytes))
             h //= 2
             if i != 0:
@@ -199,21 +203,48 @@ class Pix2PixGenerator(Module):
                 add(conv_meta(idx, f"{name}.conv", batch, 2 * h + 2, 2 * h + 2, ch, ch, 3, 1, 0, dtype_bytes))
             return 2 * h
 
+        # deconv spans: padded fuses deconv+bn+relu, cropping also folds the
+        # crop; "conv" mode's 3x3 refine has no fused kernel -> downs only
+        up_span = {"padded": 2, "cropping": 3}.get(c.deconv_mode, 0)
         for i, ch in enumerate(c.up_channels()):
+            if up_span:
+                fuse_groups.append((idx, up_span + 1, "deconv", c.norm, "relu"))
             h = add_up(i, f"up{i}", ch, h, c_prev)
             add(pointwise_meta(idx, f"up{i}.bn", "bn", (batch, h, h, ch), dtype_bytes, 2.0, 2 * ch))
             add(pointwise_meta(idx, f"up{i}.relu", "act", (batch, h, h, ch), dtype_bytes))
             add(pointwise_meta(idx, f"up{i}.concat", "concat", (batch, h, h, 2 * ch), dtype_bytes, 0.0))
             c_prev = ch * 2
+        if up_span:
+            fuse_groups.append((idx, up_span, "deconv", "none", "tanh"))
         h = add_up(7, "final", c.out_channels, h, c_prev)
         add(pointwise_meta(idx, "tanh", "tanh", (batch, h, h, c.out_channels), dtype_bytes))
+
+        # mark pallas_fused blocks: lead layer carries the fused analytic
+        # totals (in + out + params only — the intermediate activations
+        # never round-trip through HBM), folded members point back at it
+        for lo, span, kind, norm, act in fuse_groups:
+            members = layers[lo : lo + span]
+            fused_bytes = dtype_bytes * (
+                math.prod(members[0].in_shape) + math.prod(members[-1].out_shape)
+            ) + 4.0 * sum(m.params for m in members)
+            layers[lo].attrs["fuse"] = {
+                "span": span,
+                "flops": sum(m.flops for m in members),
+                "bytes": fused_bytes,
+                "kind": kind,
+                "norm": norm,
+                "act": act,
+            }
+            for m in members[1:]:
+                m.attrs["fused_into"] = members[0].name
+
         g = LayerGraph(f"{c.name}.G[{c.deconv_mode}]", layers)
         # skip tensors stay live across the bottleneck: widen boundary bytes
         # (a partition between down_i and up_{7-i} must also move the skips)
         return g.renumber()
 
 
-def generator_ops(cfg: Pix2PixConfig):
+def generator_ops(cfg: Pix2PixConfig, impl: str = "xla"):
     """Per-layer executable ops aligned 1:1 with ``layer_graph`` indices.
 
     Each op is ``(name, fn)`` with ``fn(params, state) -> state`` where
@@ -222,6 +253,12 @@ def generator_ops(cfg: Pix2PixConfig):
     all ops reproduces ``Pix2PixGenerator.__call__`` exactly (property-
     tested). The state dict (x + live skips) is what crosses a partition —
     matching ``LayerMeta.boundary_bytes`` accounting.
+
+    ``impl="pallas_fused"`` returns the same-length list with each fused
+    block (the graph's ``attrs["fuse"]`` groups) collapsed onto its lead op
+    — one ``kernels.fused`` call doing conv/deconv+norm+act in a single
+    kernel — and the folded members replaced by identity ops. Cut points
+    interior to a fused block simply see the already-final activations.
     """
     ops = []
     c_prev = cfg.in_channels
@@ -342,6 +379,82 @@ def generator_ops(cfg: Pix2PixConfig):
         return f
 
     ops.append(("tanh", mk_tanh()))
+    if impl == "xla":
+        return ops
+    if impl != "pallas_fused":
+        raise ValueError(f"unknown impl {impl!r} (want xla|pallas_fused)")
+
+    from ..kernels.fused.ops import conv_block, deconv_block
+
+    pos = {name: k for k, (name, _) in enumerate(ops)}
+
+    def identity(p, s):
+        return s
+
+    def norm_groups(ch):
+        return math.gcd(cfg.norm_groups, ch) if cfg.norm == "group" else 1
+
+    def mk_down_fused(i, ch):
+        def f(p, s):
+            s = dict(s)
+            blk = p["downs"][i]
+            bn = blk.get("bn")
+            s["x"] = conv_block(
+                s["x"],
+                blk["conv"]["w"],
+                gamma=None if bn is None else bn["scale"],
+                beta=None if bn is None else bn["bias"],
+                stride=2,
+                padding=1,
+                norm="none" if bn is None else cfg.norm,
+                groups=norm_groups(ch),
+                act="lrelu",
+            )
+            s["skips"] = s["skips"] + [s["x"]]
+            return s
+
+        return f
+
+    def mk_up_fused(i, ch):
+        def f(p, s):
+            s = dict(s)
+            bn = p["ups"][i]["bn"]
+            s["x"] = deconv_block(
+                s["x"],
+                up_params(p, i)["deconv"]["w"],
+                gamma=bn["scale"],
+                beta=bn["bias"],
+                norm=cfg.norm,
+                groups=norm_groups(ch),
+                act="relu",
+            )
+            return s
+
+        return f
+
+    def mk_final_fused():
+        def f(p, s):
+            s = dict(s)
+            pp = up_params(p, n_ups)["deconv"]
+            s["x"] = deconv_block(s["x"], pp["w"], b=pp["b"], norm="none", act="tanh")
+            return s
+
+        return f
+
+    def fold(lead, fused_fn, *folded):
+        ops[pos[lead]] = (lead, fused_fn)
+        for name in folded:
+            ops[pos[name]] = (name, identity)
+
+    for i, ch in downs:
+        folded = ([f"down{i}.bn"] if i != 0 else []) + [f"down{i}.lrelu"]
+        fold(f"down{i}.conv", mk_down_fused(i, ch), *folded)
+    if cfg.deconv_mode in ("padded", "cropping"):
+        crop = ["crop"] if cfg.deconv_mode == "cropping" else []
+        for i, ch in enumerate(cfg.up_channels()):
+            folded = [f"up{i}.{t}" for t in crop + ["bn", "relu"]]
+            fold(f"up{i}.deconv", mk_up_fused(i, ch), *folded)
+        fold("final.deconv", mk_final_fused(), *[f"final.{t}" for t in crop], "tanh")
     return ops
 
 

@@ -38,10 +38,15 @@ class YOLOv8Config:
 
 @dataclasses.dataclass(frozen=True)
 class ConvBlock(Module):
+    """conv+bn+silu. ``impl="pallas_fused"`` runs the whole block as one
+    fused kernel (``kernels.fused``) instead of three XLA ops; params and
+    math are identical (same specs, per-sample batch stats at B == 1)."""
+
     c_in: int
     c_out: int
     k: int = 3
     s: int = 1
+    impl: str = "xla"
 
     def specs(self):
         pad = self.k // 2
@@ -52,6 +57,13 @@ class ConvBlock(Module):
 
     def __call__(self, p, x):
         pad = self.k // 2
+        if self.impl == "pallas_fused":
+            from ..kernels.fused.ops import conv_block
+
+            return conv_block(
+                x, p["conv"]["w"], gamma=p["bn"]["scale"], beta=p["bn"]["bias"],
+                stride=self.s, padding=pad, norm="batch", act="silu",
+            )
         x = Conv2D(self.c_in, self.c_out, self.k, self.s, padding=pad, use_bias=False)(p["conv"], x)
         return jax.nn.silu(BatchNorm2D(self.c_out)(p["bn"], x))
 
@@ -60,13 +72,14 @@ class ConvBlock(Module):
 class Bottleneck(Module):
     c: int
     shortcut: bool = True
+    impl: str = "xla"
 
     def specs(self):
         return {"cv1": ConvBlock(self.c, self.c, 3), "cv2": ConvBlock(self.c, self.c, 3)}
 
     def __call__(self, p, x):
-        y = ConvBlock(self.c, self.c, 3)(p["cv1"], x)
-        y = ConvBlock(self.c, self.c, 3)(p["cv2"], y)
+        y = ConvBlock(self.c, self.c, 3, impl=self.impl)(p["cv1"], x)
+        y = ConvBlock(self.c, self.c, 3, impl=self.impl)(p["cv2"], y)
         return x + y if self.shortcut else y
 
 
@@ -218,11 +231,13 @@ class YOLOv8(Module):
         return {"p3": o3, "p4": o4, "p5": o5}
 
     # ---- per-node executable ops aligned with layer_graph ----------------------
-    def staged_ops(self, graph: LayerGraph | None = None):
+    def staged_ops(self, graph: LayerGraph | None = None, impl: str = "xla"):
         """Coarse per-node ops: each op composes its node's stage callables,
         so the coarse executor runs the exact same primitive sequence the
         fine-grained (expanded) executor does — bit-exact in eager mode.
-        Pass an already-built ``layer_graph()`` to avoid rebuilding it."""
+        Pass an already-built ``layer_graph()`` to avoid rebuilding it.
+        ``impl`` selects a registered stage-callable variant (nodes without
+        one — pools, concats, 1x1 output convs — keep their base stages)."""
 
         def composed(stages):
             def f(p, s):
@@ -233,10 +248,12 @@ class YOLOv8(Module):
             return f
 
         graph = graph if graph is not None else self.layer_graph()
-        return [(l.name, composed(l.attrs["stages"])) for l in graph]
+        return [(l.name, composed(node_stages(l, impl))) for l in graph]
 
     # ---- hierarchical layer graph for the scheduler ----------------------------
-    def layer_graph(self, batch: int = 1, dtype_bytes: int = 2) -> LayerGraph:
+    def layer_graph(
+        self, batch: int = 1, dtype_bytes: int = 2, _impl: str = "xla"
+    ) -> LayerGraph:
         """Coarse graph whose composite nodes (`c2f`/`sppf`/`head` and the
         fused conv blocks) carry (a) their primitive-only ``sublayers``
         decomposition — flop/byte/param totals are the decomposition sums,
@@ -249,6 +266,7 @@ class YOLOv8(Module):
         cfg = self.cfg
         c1, c2, c3, c4, c5 = self._dims()
         n = cfg.n
+        impl = _impl
         layers: list[LayerMeta] = []
 
         def act_bytes(h, c):
@@ -288,6 +306,19 @@ class YOLOv8(Module):
             for m in (cm, bn, act):
                 m.boundary_bytes += live_extra
                 m.attrs["cut_after"] = False
+            # every ConvBlock is a pallas_fused candidate: one kernel, one
+            # HBM round trip (in + out + params) instead of three
+            cm.attrs["fuse"] = {
+                "span": 3,
+                "flops": cm.flops + bn.flops + act.flops,
+                "bytes": dtype_bytes * (math.prod(cm.in_shape) + math.prod(shape))
+                + 4.0 * (cm.params + bn.params),
+                "kind": "conv",
+                "norm": "batch",
+                "act": "silu",
+            }
+            bn.attrs["fused_into"] = cm.name
+            act.attrs["fused_into"] = cm.name
             return [cm, bn, act], h_out
 
         def end_stage(prims):
@@ -299,7 +330,7 @@ class YOLOv8(Module):
 
             def fn(p, s, ci=c_in, co=c_out, key=name, sk=src, d=dst):
                 s = dict(s)
-                s[d] = ConvBlock(ci, co, 3, 2)(p[key], s[sk])
+                s[d] = ConvBlock(ci, co, 3, 2, impl=impl)(p[key], s[sk])
                 return s
 
             node(
@@ -329,7 +360,7 @@ class YOLOv8(Module):
 
             def cv1_fn(p, s, ci=c_in, co=c_out, key=name, t=tmp, sc=src_compute):
                 s = dict(s)
-                y = ConvBlock(ci, co, 1)(p[key]["cv1"], sc(p, s))
+                y = ConvBlock(ci, co, 1, impl=impl)(p[key]["cv1"], sc(p, s))
                 y1, y2 = jnp.split(y, 2, axis=-1)
                 s[t] = [y1, y2]
                 return s
@@ -353,7 +384,7 @@ class YOLOv8(Module):
                 def bn_fn(p, s, key=name, i=i, ch=c_h, sc=shortcut, t=tmp):
                     s = dict(s)
                     outs = list(s[t])
-                    outs.append(Bottleneck(ch, sc)(p[key]["bn"][i], outs[-1]))
+                    outs.append(Bottleneck(ch, sc, impl=impl)(p[key]["bn"][i], outs[-1]))
                     s[t] = outs
                     return s
 
@@ -366,7 +397,7 @@ class YOLOv8(Module):
 
             def cv2_fn(p, s, key=name, ch=c_h, nb=nb, co=c_out, t=tmp, d=dst):
                 s = dict(s)
-                y = ConvBlock((2 + nb) * ch, co, 1)(p[key]["cv2"], jnp.concatenate(s[t], -1))
+                y = ConvBlock((2 + nb) * ch, co, 1, impl=impl)(p[key]["cv2"], jnp.concatenate(s[t], -1))
                 del s[t]
                 s[d] = y
                 return s
@@ -382,7 +413,7 @@ class YOLOv8(Module):
 
             def cv1_fn(p, s, key=name, cc=c, ch=c_h, t=tmp, sk=src):
                 s = dict(s)
-                s[t] = [ConvBlock(cc, ch, 1)(p[key]["cv1"], s[sk])]
+                s[t] = [ConvBlock(cc, ch, 1, impl=impl)(p[key]["cv1"], s[sk])]
                 return s
 
             stages.append((f"{name}.cv1", end_stage(blk), cv1_fn))
@@ -405,7 +436,7 @@ class YOLOv8(Module):
 
             def cv2_fn(p, s, key=name, cc=c, ch=c_h, t=tmp, d=dst):
                 s = dict(s)
-                y = ConvBlock(4 * ch, cc, 1)(p[key]["cv2"], jnp.concatenate(s[t], -1))
+                y = ConvBlock(4 * ch, cc, 1, impl=impl)(p[key]["cv2"], jnp.concatenate(s[t], -1))
                 del s[t]
                 s[d] = y
                 return s
@@ -425,7 +456,7 @@ class YOLOv8(Module):
 
                 def fn(p, s, key=name, sub=sub, ci=ci, co=co, r=read, w=write):
                     s = dict(s)
-                    s[w] = ConvBlock(ci, co, 3)(p[key][sub], s[r])
+                    s[w] = ConvBlock(ci, co, 3, impl=impl)(p[key][sub], s[r])
                     return s
 
                 stages.append((f"{name}.{sname}", end_stage(prims), fn))
@@ -496,4 +527,19 @@ class YOLOv8(Module):
         head_node("head3", h3, c3, "u3", "o3")
         head_node("head4", h4, c4, "d4", "o4")
         head_node("head5", h, c5, "d5", "o5")
-        return LayerGraph(cfg.name, layers).renumber()
+        g = LayerGraph(cfg.name, layers).renumber()
+        if _impl == "xla":
+            # graft the pallas_fused stage callables as named variants: same
+            # stage structure/boundaries, every ConvBlock runs as one kernel
+            alt = self.layer_graph(batch, dtype_bytes, _impl="pallas_fused")
+            for l, al in zip(g.layers, alt.layers):
+                l.attrs["stage_variants"] = {"pallas_fused": al.attrs["stages"]}
+        return g
+
+
+def node_stages(meta: LayerMeta, impl: str = "xla"):
+    """A node's stage callables under the given implementation (falls back
+    to the base ``stages`` for nodes with no registered variant)."""
+    if impl != "xla":
+        return meta.attrs.get("stage_variants", {}).get(impl, meta.attrs["stages"])
+    return meta.attrs["stages"]

@@ -64,6 +64,7 @@ def build_pix_yolo_serving(
     granularity: str = "coarse",
     stride: int = 1,
     max_cuts: int = 1,
+    impl: str = "xla",
 ):
     """Returns ``(models, plan, streams, (gpu, dla))`` for ``n_pix``
     Pix2Pix reconstruction streams + ``n_yolo`` YOLOv8 detection streams
@@ -75,7 +76,10 @@ def build_pix_yolo_serving(
     cuts. ``stride`` thins the legal candidate set (the beam-tractability
     knob; only meaningful at fine granularity). ``max_cuts`` raises the
     per-model cut budget: k-segment routes ping-pong a model across the
-    engines (``max_cuts=1`` is the paper's single partition point)."""
+    engines (``max_cuts=1`` is the paper's single partition point).
+    ``impl`` selects the implementation-planning mode: ``xla`` (per-op
+    lowering, default), ``pallas`` (force the fused serving kernels), or
+    ``auto`` (per-segment argmin over both)."""
     provider = cost if isinstance(cost, CostProvider) else make_cost_provider(cost)
     models, streams, (gpu, dla) = _build_pix_yolo_models(
         img=img, base=base, n_pix=n_pix, n_yolo=n_yolo, seed=seed, norm=norm,
@@ -88,6 +92,7 @@ def build_pix_yolo_serving(
         search=search,
         stride=stride,
         max_cuts=max_cuts,
+        impl=impl,
     )
     return models, plan, streams, (gpu, dla)
 

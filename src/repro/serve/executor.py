@@ -126,6 +126,7 @@ class SegmentObservation:
     wall_s: float  # dispatch + sync wall time of this segment call
     batch: int  # leading-axis frames in the flight (merged groups > 1)
     revision: int  # plan revision the segment ran under
+    impl: str = "xla"  # implementation variant the segment ran with
 
 
 @dataclasses.dataclass(frozen=True)
@@ -226,9 +227,10 @@ class StreamExecutor:
         # donation needs backend support; the CPU client ignores donated
         # buffers (and warns), so only donate segment state buffers off-CPU
         self._donate = jax.default_backend() not in ("cpu",)
-        # keyed by (model, lo, hi): hot-swapped plans whose spans coincide
-        # with an old plan's reuse the same (possibly compiled) runner
-        self._seg_fns: dict[tuple[int, int, int], Callable] = {}
+        # keyed by (model, lo, hi, impl): hot-swapped plans whose spans
+        # (and implementation bindings) coincide with an old plan's reuse
+        # the same (possibly compiled) runner
+        self._seg_fns: dict[tuple[int, int, int, str], Callable] = {}
         # degraded single-segment routes, keyed (model, plan revision)
         self._degraded_routes: dict[tuple[int, int], tuple[PlanSegment, ...]] = {}
         # per-model stream admission order: strictly tier-first (round-robin
@@ -338,9 +340,10 @@ class StreamExecutor:
             for _, struct in self._state_structs[mi]:
                 state = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), struct)
                 for seg in segs:
-                    key = (mi, seg.lo, seg.hi)
+                    impl = getattr(seg, "impl", "xla")
+                    key = (mi, seg.lo, seg.hi, impl)
                     if key not in self._seg_fns:
-                        self._seg_fns[key] = self._make_runner(mi, seg.lo, seg.hi)
+                        self._seg_fns[key] = self._make_runner(mi, seg.lo, seg.hi, impl)
                     state = self._seg_fns[key](model.params, state)
                     warmed += 1
                 jax.block_until_ready(state)
@@ -355,13 +358,13 @@ class StreamExecutor:
         self._blocked_s += time.perf_counter() - t0
         return x
 
-    def _make_runner(self, mi: int, lo: int, hi: int) -> Callable:
+    def _make_runner(self, mi: int, lo: int, hi: int, impl: str = "xla") -> Callable:
         model = self.models[mi]
         if self.jit_segments:
             # cached on the model: executors over the same span share one
-            # compiled executable per (segment, shape)
-            return model.jitted_segment_fn(lo, hi, donate=self._donate)
-        return model.segment_fn(lo, hi)
+            # compiled executable per (segment, impl, shape)
+            return model.jitted_segment_fn(lo, hi, donate=self._donate, impl=impl)
+        return model.segment_fn(lo, hi, impl=impl)
 
     def _degraded_route(self, mi: int) -> tuple[PlanSegment, ...]:
         """The model's shed-staging route: the whole layer span as one
@@ -391,10 +394,11 @@ class StreamExecutor:
         return route
 
     def _segment_runner(self, mi: int, seg: PlanSegment) -> Callable:
-        key = (mi, seg.lo, seg.hi)
+        impl = getattr(seg, "impl", "xla")
+        key = (mi, seg.lo, seg.hi, impl)
         fn = self._seg_fns.get(key)
         if fn is None:
-            fn = self._make_runner(mi, seg.lo, seg.hi)
+            fn = self._make_runner(mi, seg.lo, seg.hi, impl)
             self._seg_fns[key] = fn
         return fn
 
@@ -444,6 +448,7 @@ class StreamExecutor:
                 wall_s=time.perf_counter() - t0 + d,
                 batch=sum(m.size for m in flight.members),
                 revision=flight.revision,
+                impl=getattr(seg, "impl", "xla"),
             )
             self.segment_obs.append(obs)
             if self.on_segment is not None:

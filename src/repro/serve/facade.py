@@ -143,6 +143,7 @@ def build_server(
     granularity: str = "coarse",
     stride: int = 1,
     max_cuts: int | str = 1,
+    impl: str = "xla",
     # serving
     max_queue: int = 4,
     microbatch: int = 1,
@@ -164,7 +165,10 @@ def build_server(
     independence (``merge_flags_for``). ``admission=True`` uses the
     default degradation ladder; ``replan=True`` the default
     ``ReplanConfig``. ``deadline_ms`` is the SLO shorthand (detection
-    tier 0, reconstruction tier 1); pass ``slos`` for full control."""
+    tier 0, reconstruction tier 1); pass ``slos`` for full control.
+    ``impl`` selects the implementation-planning mode (``xla`` | ``auto``
+    | ``pallas``); segments planned ``pallas_fused`` stage the fused
+    serving kernels end-to-end."""
     provider = cost if isinstance(cost, CostProvider) else make_cost_provider(cost)
     models, streams, (gpu, dla) = _build_pix_yolo_models(
         img=img, base=base, n_pix=n_pix, n_yolo=n_yolo, seed=seed, norm=norm,
@@ -177,6 +181,7 @@ def build_server(
         stride=stride,
         max_cuts=max_cuts,
         cost=provider,
+        impl=impl,
     )
     policies = _normalize_slos(slos, deadline_ms, streams)
     streams = [

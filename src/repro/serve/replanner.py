@@ -72,7 +72,7 @@ import time
 from typing import Sequence
 
 from ..core.api import plan as core_plan
-from ..core.cost_model import ANALYTIC, CostProvider, OnlineCost
+from ..core.cost_model import ANALYTIC, CostProvider, OnlineCost, _effective_impls
 from ..core.plan_ir import PlanIR, translate_ir
 from .executor import SegmentObservation, StreamExecutor
 from .metrics import SwapStall, swap_stall_summary
@@ -165,7 +165,10 @@ class Replanner:
         # (the server wires metrics.recent_slo_miss_rate here).
         self.slo_miss_fn = None
         self._last_swap_tick: int | None = None
-        self._expected_cache: dict[tuple[int, int, int, int], float] = {}
+        self._expected_cache: dict[tuple[int, int, int, int, str], float] = {}
+        # implementation-selection mode re-plans run with; inherited from
+        # the attached executor's plan (and refreshed on every swap)
+        self._impl_mode = "xla"
         self._job: threading.Thread | None = None
         self._job_result: list = []
         # granularity state: _fine holds the expanded planning graphs when
@@ -203,6 +206,7 @@ class Replanner:
             self._fine = fine
             self._translate = True
         self._incumbent_max_cuts = executor.plan.max_cuts
+        self._impl_mode = getattr(executor.plan, "impl_mode", "xla")
         executor.profile_every = max(1, self.config.profile_every)
         executor.on_segment = self.observe
         executor.on_tick = self.maybe_replan
@@ -223,18 +227,23 @@ class Replanner:
             return self._fine
         return self.graphs
 
-    def _expected_base(self, model_index: int, engine: int, lo: int, hi: int) -> float:
+    def _expected_base(self, model_index: int, engine: int, lo: int, hi: int, impl: str = "xla") -> float:
         """Base-provider cost of graph[lo:hi) on the engine — the fixed
         denominator of the wall-clock calibration (never a scaled plan's
         expected_cost, which would drift with each re-plan). Spans are
         executor-space indices, so the expectation walks the executor's
-        graphs."""
-        key = (model_index, engine, lo, hi)
+        graphs — under the implementation the span actually ran with, so
+        each variant calibrates against its own expectation."""
+        key = (model_index, engine, lo, hi, impl)
         t = self._expected_cache.get(key)
         if t is None:
             g = self._exec_graphs[model_index]
             e = self.engines[engine]
-            t = sum(self.online.base.layer_time(g[i], e) for i in range(lo, hi))
+            eff = _effective_impls(g, lo, hi, impl)
+            t = sum(
+                self.online.base.layer_time(g[i], e, eff[i - lo] if eff else "xla")
+                for i in range(lo, hi)
+            )
             self._expected_cache[key] = t
         return t
 
@@ -244,7 +253,8 @@ class Replanner:
         pair into one magnitude-weighted EMA sample at the frame boundary
         (per-segment ratios on near-empty spans are all host overhead —
         summing first keeps them from swinging the scale)."""
-        expected = self._expected_base(obs.model_index, obs.engine, obs.lo, obs.hi)
+        impl = getattr(obs, "impl", "xla")
+        expected = self._expected_base(obs.model_index, obs.engine, obs.lo, obs.hi, impl)
         # merged flights run the span once for the whole group; normalize
         # to a per-frame observation so microbatching doesn't read as drift
         wall = obs.wall_s / max(obs.batch, 1)
@@ -252,6 +262,13 @@ class Replanner:
         acc = self._tick_acc.setdefault(name, [0.0, 0.0])
         acc[0] += wall
         acc[1] += expected
+        if impl != "xla":
+            # fold into the variant's own calibration channel too, so
+            # drift in one implementation (and only it) can flip the
+            # planner's per-segment impl choice on the next re-plan
+            ch = self._tick_acc.setdefault(f"{name}|{impl}", [0.0, 0.0])
+            ch[0] += wall
+            ch[1] += expected
 
     def _fold_tick(self):
         for name, (wall, expected) in self._tick_acc.items():
@@ -324,6 +341,7 @@ class Replanner:
             stride=cfg.escalate_stride if self._escalated else cfg.stride,
             max_cuts=self._active_max_cuts(),
             fixed=fixed,
+            impl=self._impl_mode,
         )
 
     def _score_fixed(self, routes, online: OnlineCost) -> float:
@@ -367,7 +385,7 @@ class Replanner:
         for mi in range(plan.n_models):
             loads.append(
                 sum(
-                    self._expected_base(mi, s.engine, s.lo, s.hi)
+                    self._expected_base(mi, s.engine, s.lo, s.hi, getattr(s, "impl", "xla"))
                     for s in plan.route(mi)
                     if s.engine == worst
                 )
@@ -507,7 +525,10 @@ class Replanner:
         old_partitions = tuple(executor.plan.partitions)
         old_cuts = executor.plan.cuts
         improves = plan.expected_cycle < old_cycle * (1.0 - cfg.min_improvement)
-        changes = ir.route_specs() != executor.plan.route_specs()
+        changes = (
+            ir.route_specs() != executor.plan.route_specs()
+            or ir.impl_bindings() != executor.plan.impl_bindings()
+        )
         swapped = improves and changes
         if swapped:
             if not background:
@@ -527,6 +548,7 @@ class Replanner:
             )
             self._last_swap_tick = executor.tick_count
             self._incumbent_max_cuts = executor.plan.max_cuts
+            self._impl_mode = getattr(executor.plan, "impl_mode", "xla")
             self._rebaseline()
         else:
             # plan already as good as it gets under the drifted costs: stop
