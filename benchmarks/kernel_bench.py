@@ -42,6 +42,10 @@ SERVING_CASES = [
     ("yolo_stage", "conv", (1, 32, 32, 16), 3, 2, 1, 32, "batch", "silu"),
     ("pix_up1", "deconv", (1, 4, 4, 64), 4, 2, 1, 32, "batch", "relu"),
     ("pix_up2", "deconv", (1, 8, 8, 64), 4, 2, 1, 16, "batch", "relu"),
+    # YOLOv8n SPPF tail at img=64 and img=256: pool pyramid + concat,
+    # cout = 4x the input channels (kernel=window, stride/pad fixed)
+    ("yolo_sppf", "sppf", (1, 2, 2, 64), 5, 1, 2, 256, "none", "none"),
+    ("yolo_sppf_hi", "sppf", (1, 8, 8, 128), 5, 1, 2, 512, "none", "none"),
 ]
 
 
@@ -60,8 +64,8 @@ def run_cases(dtypes=("float32", "bfloat16")) -> list[dict]:
     import jax.numpy as jnp
     import numpy as np
 
-    from repro.kernels.fused.ops import conv_block, deconv_block
-    from repro.kernels.fused.ref import conv_block_ref, deconv_block_ref
+    from repro.kernels.fused.ops import conv_block, deconv_block, sppf_pyramid
+    from repro.kernels.fused.ref import conv_block_ref, deconv_block_ref, sppf_pyramid_ref
 
     ref_conv = jax.jit(
         conv_block_ref, static_argnames=("stride", "padding", "norm", "groups", "act", "eps")
@@ -69,6 +73,7 @@ def run_cases(dtypes=("float32", "bfloat16")) -> list[dict]:
     ref_deconv = jax.jit(
         deconv_block_ref, static_argnames=("norm", "groups", "act", "eps")
     )
+    ref_sppf = jax.jit(sppf_pyramid_ref, static_argnames=("window", "reps"))
 
     out = []
     for name, kind, shape, k, stride, pad, cout, norm, act in SERVING_CASES:
@@ -81,7 +86,10 @@ def run_cases(dtypes=("float32", "bfloat16")) -> list[dict]:
             b = jax.random.normal(kp, (cout,), jnp.float32) * 0.1
             gamma = jnp.ones((cout,), jnp.float32)
             beta = jnp.zeros((cout,), jnp.float32)
-            if kind == "conv":
+            if kind == "sppf":
+                fused = lambda: jax.block_until_ready(sppf_pyramid(x, window=k))
+                ref = lambda: jax.block_until_ready(ref_sppf(x, window=k))
+            elif kind == "conv":
                 fused = lambda: jax.block_until_ready(
                     conv_block(x, w, b, gamma, beta, stride=stride, padding=pad, norm=norm, act=act)
                 )
@@ -161,7 +169,7 @@ def run_stage_speedups(img: int, base: int) -> dict:
             groups.append(
                 {
                     "stage": lead.name,
-                    "kernel": "deconv" if lead.kind == "deconv" else "conv",
+                    "kernel": {"deconv": "deconv", "pool": "sppf"}.get(lead.kind, "conv"),
                     "in_shape": list(lead.in_shape),
                     "span": len(members),
                     "xla_us": xla_us,

@@ -3,8 +3,11 @@ roofline aggregation. Prints ``name,us_per_call,derived`` CSV.
 
   PYTHONPATH=src python -m benchmarks.run [--full]
 
---full trains the Table II variants longer and times more pipeline
-frames; the default finishes in a few minutes on CPU.
+--full trains the Table II variants longer, times more pipeline frames,
+and appends a replicated-fleet serving row (``--replicas`` controls the
+replica count, ``--traffic-seed`` pins the arrival process so fleet rows
+are reproducible end-to-end); the default finishes in a few minutes on
+CPU.
 """
 from __future__ import annotations
 
@@ -12,10 +15,44 @@ import argparse
 import sys
 
 
+def fleet_serving_row(rows: list[tuple], replicas: int, traffic_seed: int) -> None:
+    """Goodput of the replicated serving fleet under open-loop Poisson
+    arrivals — the paper's two-instance scaling experiment as a CSV row."""
+    from repro.serve import TrafficConfig, build_server
+
+    bundle = build_server(
+        img=32,
+        n_pix=2,
+        n_yolo=1,
+        deadline_ms=100.0,
+        traffic=TrafficConfig(process="poisson", rate_hz=30.0, seed=traffic_seed),
+        admission=True,
+        replicas=replicas,
+    )
+    server = bundle.server
+    # warm the compiled segments so the measured window is service-only
+    for s in bundle.streams:
+        server.submit(s.model_index, bundle.frame_for(s.name, 0))
+    server.drain()
+    server.reset_metrics()
+    rep = bundle.run_open_loop(1.0, max_wall_s=20.0)
+    imb = rep.get("router_imbalance", 1.0)
+    rows.append(
+        (
+            f"fleet_serving[r{replicas}|seed{traffic_seed}]",
+            1e6 / rep["goodput_fps"] if rep["goodput_fps"] else float("inf"),
+            f"goodput_fps={rep['goodput_fps']:.1f};frames={rep['frames']};"
+            f"router_imbalance={imb:.3f}",
+        )
+    )
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--skip-accuracy", action="store_true")
+    ap.add_argument("--replicas", type=int, default=2, help="fleet row replica count (--full)")
+    ap.add_argument("--traffic-seed", type=int, default=0, help="fleet row arrival seed")
     args = ap.parse_args()
 
     from benchmarks.paper_tables import (
@@ -34,6 +71,8 @@ def main() -> None:
     table3_4_haxconn_2gan(rows, verbose=True)
     table5_6_haxconn_yolo(rows, verbose=True)
     pipeline_wallclock(rows, n_frames=8 if args.full else 3)
+    if args.full:
+        fleet_serving_row(rows, replicas=args.replicas, traffic_seed=args.traffic_seed)
 
     if not args.skip_accuracy:
         from benchmarks.table2_accuracy import table2_accuracy

@@ -1,10 +1,11 @@
 """Multi-stream serving benchmark: aggregate FPS and latency percentiles
 vs concurrent stream count, the coarse-vs-fine planning-granularity
 comparison (composite vs expanded primitive cut points: plan cost and
-measured FPS), plus the online re-planning perturbation-recovery
-scenario, written to ``BENCH_serve.json`` so successive PRs have a perf
-trajectory to compare against (``benchmarks/trend.py`` diffs two runs
-and gates CI on regressions).
+measured FPS), the replicated-fleet scaling sweep (goodput vs replica
+count behind the sticky load-aware router), plus the online re-planning
+perturbation-recovery scenario, written to ``BENCH_serve.json`` so
+successive PRs have a perf trajectory to compare against
+(``benchmarks/trend.py`` diffs two runs and gates CI on regressions).
 
   PYTHONPATH=src python benchmarks/serve_bench.py --smoke
   PYTHONPATH=src python benchmarks/serve_bench.py --streams 1,2,4,8 --frames 16
@@ -471,6 +472,125 @@ def run_openloop_sweep(
     }
 
 
+def run_fleet_sweep(
+    img: int,
+    base: int,
+    norm: str,
+    microbatch: int,
+    replica_counts=(1, 2, 4),
+    horizon_s: float = 1.0,
+    n_pix: int = 4,
+    max_queue: int = 4,
+    router_seed: int = 0,
+    traffic_seed: int = 0,
+) -> dict:
+    """Replicated-fleet scaling sweep: goodput-under-SLO vs replica count.
+
+    Two experiments through the same ``build_server`` facade the CLIs use.
+    **Matched per-replica load**: each R-replica fleet is offered R x a
+    fixed fraction of the measured single-pipeline capacity, so every
+    replica sees the same per-replica pressure and the recorded
+    ``scaling_efficiency`` (goodput(R) / (R x goodput(1))) isolates how
+    much of the replication the fleet realizes — overlapping executors
+    keep more async segment executions in flight, which is real
+    parallelism even on a 1-device CPU host. **Same total load**: R=1 vs
+    R=2 under an *identical* seeded arrival sequence at ~2x the single
+    pipeline's capacity — the overloaded single replica sheds/misses
+    where the fleet has headroom, so ``same_load_goodput_ratio_2v1`` is
+    the paper's two-instance scaling claim as one number (>= 1.0 is the
+    trend-gated contract). Router imbalance rides along per point."""
+    from repro.serve import TrafficConfig, build_server
+
+    n_streams = n_pix + 1
+
+    def build(replicas: int, rate_per_stream: float, deadline_ms: float, seed0: int):
+        bundle = build_server(
+            img=img, base=base, n_pix=n_pix, n_yolo=1, norm=norm,
+            microbatch=microbatch, max_queue=max_queue,
+            deadline_ms=deadline_ms,
+            traffic=TrafficConfig(process="poisson", rate_hz=rate_per_stream, seed=seed0),
+            admission=True, replicas=replicas, router_seed=router_seed,
+        )
+        server = bundle.server
+        for t in range(2):  # warm compiled segments before measuring
+            for s in bundle.streams:
+                server.submit(s.model_index, bundle.frame_for(s.name, t))
+            server.pump()
+        server.drain()
+        server.reset_metrics()
+        return bundle
+
+    # closed-loop capacity of one warmed replica = the per-replica unit load
+    cal = build(1, 1.0, 100.0, traffic_seed)
+    n_cal = 6
+    t0 = time.perf_counter()
+    for t in range(n_cal):
+        for s in cal.streams:
+            cal.server.submit(s.model_index, cal.frame_for(s.name, 100 + t))
+        cal.server.pump()
+    cal.server.drain()
+    capacity = n_cal * n_streams / (time.perf_counter() - t0)
+    # deadline feasible under bounded queues on ONE replica (cf. the
+    # open-loop sweep) — replication can only relieve it
+    deadline_ms = 1.2 * max_queue * n_streams / capacity * 1e3
+
+    def drive(bundle) -> dict:
+        rep = bundle.run_open_loop(horizon_s, max_wall_s=600.0)
+        adm = rep["admission"]
+        return {
+            "replicas": bundle.replicas,
+            "offered": adm["offered"],
+            "admitted": adm["admitted"],
+            "dropped": adm["dropped"],
+            "frames": rep["frames"],
+            "aggregate_fps": rep["aggregate_fps"],
+            "goodput_fps": rep["goodput_fps"],
+            "latency_p50_ms": rep["latency_p50_ms"],
+            "latency_p99_ms": rep["latency_p99_ms"],
+            "router_imbalance": rep.get("router_imbalance", 1.0),
+            "routed_frames": rep["router"]["routed_frames"] if "router" in rep else None,
+        }
+
+    per_replica_factor = 0.6  # below capacity so scaling isn't shed-limited
+    points = {}
+    for i, R in enumerate(replica_counts):
+        rate = per_replica_factor * R * capacity / n_streams
+        p = drive(build(R, rate, deadline_ms, traffic_seed + 10 * (i + 1)))
+        p["offered_rate_hz"] = rate * n_streams
+        points[str(R)] = p
+    base_r = min(replica_counts)
+    base_good = points[str(base_r)]["goodput_fps"]
+    scaling = {
+        str(R): (points[str(R)]["goodput_fps"] * base_r / (R * base_good)) if base_good > 0 else 0.0
+        for R in replica_counts
+    }
+
+    # same total offered load, identical seeded arrivals: 1 vs 2 replicas
+    same_rate = 2.0 * capacity / n_streams
+    same_seed = traffic_seed + 1000
+    rep1 = drive(build(1, same_rate, deadline_ms, same_seed))
+    rep2 = drive(build(2, same_rate, deadline_ms, same_seed))
+    ratio = (
+        rep2["goodput_fps"] / rep1["goodput_fps"] if rep1["goodput_fps"] > 0 else float("inf")
+    )
+    return {
+        "replica_counts": list(replica_counts),
+        "streams": n_streams,
+        "horizon_s": horizon_s,
+        "capacity_fps": capacity,
+        "deadline_ms": deadline_ms,
+        "per_replica_load_factor": per_replica_factor,
+        "router_seed": router_seed,
+        "traffic_seed": traffic_seed,
+        "points": points,
+        "scaling_efficiency": scaling,
+        "same_load_offered_rate_hz": same_rate * n_streams,
+        "same_load_1r": rep1,
+        "same_load_2r": rep2,
+        "same_load_goodput_ratio_2v1": ratio,
+    }
+
+
 def _movable_skew_engine(plan, graphs, engines):
     """Pick the perturbation target: the engine with the most *movable*
     planned work (current analytic occupancy minus the minimum any plan
@@ -694,6 +814,18 @@ def main():
         help="skip the open-loop traffic / SLO / admission-control sweep",
     )
     ap.add_argument(
+        "--skip-fleet-sweep",
+        action="store_true",
+        help="skip the replicated-fleet scaling sweep",
+    )
+    ap.add_argument(
+        "--fleet-replicas",
+        default="1,2,4",
+        help="comma-separated replica counts for the fleet sweep",
+    )
+    ap.add_argument("--router-seed", type=int, default=0, help="fleet router tie-break seed")
+    ap.add_argument("--traffic-seed", type=int, default=0, help="fleet sweep arrival seed")
+    ap.add_argument(
         "--openloop-horizon",
         type=float,
         default=1.5,
@@ -871,6 +1003,28 @@ def main():
             f"(shed/queue goodput x{openloop['shed_vs_queue_goodput_ratio']:.2f})"
         )
 
+    fleet = None
+    if not args.skip_fleet_sweep:
+        fleet = run_fleet_sweep(
+            img, args.base, args.norm, args.microbatch,
+            replica_counts=tuple(int(x) for x in args.fleet_replicas.split(",")),
+            horizon_s=min(args.openloop_horizon, 1.0),
+            router_seed=args.router_seed,
+            traffic_seed=args.traffic_seed,
+        )
+        pts = fleet["points"]
+        print(
+            f"fleet sweep (capacity={fleet['capacity_fps']:.2f} FPS, "
+            f"deadline={fleet['deadline_ms']:.0f} ms): "
+            + "  ".join(
+                f"R={R}: goodput={pts[str(R)]['goodput_fps']:.2f} "
+                f"eff={fleet['scaling_efficiency'][str(R)]:.2f} "
+                f"imb={pts[str(R)]['router_imbalance']:.2f}"
+                for R in fleet["replica_counts"]
+            )
+            + f"  same-load 2R/1R goodput x{fleet['same_load_goodput_ratio_2v1']:.2f}"
+        )
+
     replan_scenario = None
     if not args.skip_replan_scenario:
         replan_scenario = run_replan_scenario(img, args.base, args.norm, skew=args.skew)
@@ -909,6 +1063,7 @@ def main():
         "multicut_compare": multicut_compare,
         "impl_compare": impl_compare,
         "openloop": openloop,
+        "fleet": fleet,
         "replan_scenario": replan_scenario,
         "results": results,
     }

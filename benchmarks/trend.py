@@ -67,6 +67,22 @@ def goodput_1x(payload: dict):
     return payload.get("openloop_goodput_1x")
 
 
+def fleet_goodput_2r(payload: dict):
+    """2-replica fleet goodput at the same-total-load point, from either a
+    full bench payload (``fleet.same_load_2r``) or a history entry."""
+    fl = payload.get("fleet")
+    if isinstance(fl, dict):
+        return fl.get("same_load_2r", {}).get("goodput_fps")
+    return payload.get("fleet_goodput_2r")
+
+
+def fleet_ratio_2v1(payload: dict):
+    fl = payload.get("fleet")
+    if isinstance(fl, dict):
+        return fl.get("same_load_goodput_ratio_2v1")
+    return payload.get("fleet_same_load_ratio_2v1")
+
+
 def compare(baseline: dict, candidate: dict, threshold: float) -> tuple[bool, str]:
     """Returns (ok, report). ``ok`` is False only for a real regression."""
     lines = []
@@ -98,6 +114,25 @@ def compare(baseline: dict, candidate: dict, threshold: float) -> tuple[bool, st
         if gratio < 1.0 - threshold:
             ok = False
             lines.append(f"  REGRESSION: goodput-under-SLO at 1x dropped more than {threshold:.0%}")
+    # fleet gates: 2-replica goodput at the same-load point must not
+    # regress vs baseline, and the candidate's 2R/1R same-load ratio must
+    # hold the >= 1.0 replication contract (the paper's two-instance
+    # scaling claim) — only when both runs carry the fleet sweep
+    base_fleet, cand_fleet = fleet_goodput_2r(baseline), fleet_goodput_2r(candidate)
+    if base_fleet and cand_fleet is not None:
+        fratio = cand_fleet / base_fleet
+        lines.append(
+            f"  fleet goodput@2R: {base_fleet:.2f} -> {cand_fleet:.2f} FPS ({fratio - 1.0:+.1%})"
+        )
+        if fratio < 1.0 - threshold:
+            ok = False
+            lines.append(f"  REGRESSION: 2-replica fleet goodput dropped more than {threshold:.0%}")
+    cand_2v1 = fleet_ratio_2v1(candidate)
+    if cand_2v1 is not None:
+        lines.append(f"  fleet same-load 2R/1R goodput ratio: x{cand_2v1:.2f}")
+        if cand_2v1 < 1.0:
+            ok = False
+            lines.append("  REGRESSION: 2-replica fleet goodput below single-replica at same load")
     return ok, "\n".join(lines)
 
 
@@ -125,6 +160,14 @@ def history_entry(candidate: dict) -> dict:
         entry["openloop_p99_top_ms"] = pts.get(top, {}).get("latency_p99_ms")
         entry["openloop_shed_vs_queue_ratio"] = ol.get("shed_vs_queue_goodput_ratio")
         entry["openloop_capacity_fps"] = ol.get("capacity_fps")
+    if candidate.get("fleet"):
+        fl = candidate["fleet"]
+        entry["fleet_goodput_2r"] = fl.get("same_load_2r", {}).get("goodput_fps")
+        entry["fleet_same_load_ratio_2v1"] = fl.get("same_load_goodput_ratio_2v1")
+        entry["fleet_scaling_eff_2r"] = fl.get("scaling_efficiency", {}).get("2")
+        entry["fleet_router_imbalance_2r"] = fl.get("points", {}).get("2", {}).get(
+            "router_imbalance"
+        )
     if candidate.get("impl_compare"):
         ic = candidate["impl_compare"]
         entry["impl_auto_vs_xla_plan_ratio"] = ic.get("auto_vs_xla_plan_ratio")

@@ -22,6 +22,7 @@ deadline SLO instead of the closed-loop submit/pump cycle.
   PYTHONPATH=src python examples/multi_stream_serve.py --granularity fine
   PYTHONPATH=src python examples/multi_stream_serve.py --cost measured --impl auto
   PYTHONPATH=src python examples/multi_stream_serve.py --open-loop --rate 20 --deadline-ms 100
+  PYTHONPATH=src python examples/multi_stream_serve.py --open-loop --replicas 2 --traffic-seed 7
 """
 from __future__ import annotations
 
@@ -70,6 +71,14 @@ def main():
     ap.add_argument("--rate", type=float, default=20.0, help="open-loop arrival rate (Hz/stream)")
     ap.add_argument("--duration", type=float, default=1.5, help="open-loop horizon (s)")
     ap.add_argument("--deadline-ms", type=float, default=100.0, help="open-loop SLO deadline")
+    ap.add_argument(
+        "--replicas", type=int, default=1,
+        help="replicated serving pipelines behind the sticky load-aware fleet router",
+    )
+    ap.add_argument(
+        "--traffic-seed", type=int, default=0,
+        help="arrival-process seed (open-loop runs replay exactly, fleet included)",
+    )
     args = ap.parse_args()
     max_cuts = "auto" if args.max_cuts == "auto" else int(args.max_cuts)
 
@@ -103,8 +112,11 @@ def main():
         dispatch=args.dispatch,
         replan=args.replan,
         deadline_ms=args.deadline_ms if args.open_loop else None,
-        traffic=TrafficConfig(process="poisson", rate_hz=args.rate) if args.open_loop else None,
+        traffic=TrafficConfig(process="poisson", rate_hz=args.rate, seed=args.traffic_seed)
+        if args.open_loop
+        else None,
         admission=args.open_loop,
+        replicas=args.replicas,
     )
     if args.cost_cache and hasattr(provider, "save"):
         provider.save()  # measured AND blended both persist their timings
@@ -155,8 +167,16 @@ def main():
                 f"  tier {t}: offered={tm['offered']} goodput={tm['goodput_fps']:.1f} FPS "
                 f"attainment={tm['slo_attainment']:.2f}"
             )
+    if args.replicas > 1:
+        ro = rep["router"]
+        print(
+            f"fleet: {args.replicas} replicas  routed={ro['routed_frames']} "
+            f"imbalance={ro['imbalance']:.2f}  assignments={ro['assignments']}"
+        )
     if args.replan:
         rp = rep["replan"]
+        if isinstance(rp, list):  # fleet: one summary per replica; show replica 0
+            rp = rp[0]
         scales = {k: f"x{v:.3g}" for k, v in rp["scales"].items()}
         print(
             f"replan: calibrated={rp['calibrated']} observations={rp['observations']} "

@@ -21,6 +21,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import threading
 
 from .constraints import Violation
 from .graph import LayerGraph, LayerMeta
@@ -206,9 +207,14 @@ class MeasuredCost(CostProvider):
         return _elementwise_cost(l.kind, tuple(l.in_shape), self.dtype)
 
     def _measure_fused(self, l: LayerMeta, fu: dict) -> tuple[float, float]:
-        from .profiler import _fused_cost
+        from .profiler import _fused_cost, _sppf_cost
 
         self.measure_count += 1
+        if fu.get("kind") == "pool":
+            # SPPF pool pyramid + concat fused into one region
+            return _sppf_cost(
+                tuple(l.in_shape), fu.get("window", 5), fu.get("span", 3), self.dtype
+            )
         return _fused_cost(
             tuple(l.in_shape),
             l.attrs.get("kernel", 1),
@@ -304,6 +310,11 @@ class OnlineCost(CostProvider):
     when thermal state or co-located load skews one engine. On this CPU
     container the scales double as the analytic-units -> wall-clock
     calibration.
+
+    One instance may be shared by every replica of a serving fleet: the
+    drain is thread-safe (an ``RLock`` guards the EMA state), so all
+    replicas' ``SegmentObservation``s fold into a single fleet-wide
+    calibration store keyed per (engine, impl).
     """
 
     name = "online"
@@ -315,6 +326,7 @@ class OnlineCost(CostProvider):
         self.alpha = alpha
         self._num: dict[str, float] = {}  # decayed observed-wall sum
         self._den: dict[str, float] = {}  # decayed expected sum
+        self._lock = threading.RLock()  # fleet replicas drain concurrently
         self.observations = 0
 
     def observe(self, engine_name: str, observed_s: float, expected_s: float):
@@ -322,17 +334,19 @@ class OnlineCost(CostProvider):
         if observed_s <= 0.0 or expected_s <= 0.0:
             return
         a = self.alpha
-        if engine_name not in self._num:
-            self._num[engine_name] = observed_s
-            self._den[engine_name] = expected_s
-        else:
-            self._num[engine_name] = (1.0 - a) * self._num[engine_name] + a * observed_s
-            self._den[engine_name] = (1.0 - a) * self._den[engine_name] + a * expected_s
-        self.observations += 1
+        with self._lock:
+            if engine_name not in self._num:
+                self._num[engine_name] = observed_s
+                self._den[engine_name] = expected_s
+            else:
+                self._num[engine_name] = (1.0 - a) * self._num[engine_name] + a * observed_s
+                self._den[engine_name] = (1.0 - a) * self._den[engine_name] + a * expected_s
+            self.observations += 1
 
     def scale(self, engine_name: str) -> float:
-        den = self._den.get(engine_name, 0.0)
-        return self._num[engine_name] / den if den > 0 else 1.0
+        with self._lock:
+            den = self._den.get(engine_name, 0.0)
+            return self._num[engine_name] / den if den > 0 else 1.0
 
     def scale_for(self, engine_name: str, impl: str = "xla") -> float:
         """Per-(engine, impl) calibration: non-xla implementations get
@@ -350,7 +364,8 @@ class OnlineCost(CostProvider):
         return all(e in self._num for e in engine_names)
 
     def snapshot(self) -> dict[str, float]:
-        return {name: self.scale(name) for name in self._num}
+        with self._lock:
+            return {name: self.scale(name) for name in list(self._num)}
 
     def layer_time(self, l: LayerMeta, engine, impl: str = "xla") -> float:
         return self.base.layer_time(l, engine, impl) * self.scale_for(engine.name, impl)
@@ -376,13 +391,15 @@ class OnlineCost(CostProvider):
         (observed, expected) sums are stored — not just their ratio — so a
         restarted process resumes the EMA with the same sample weighting
         it shut down with."""
+        with self._lock:
+            engines = {
+                name: {"num": self._num[name], "den": self._den[name]} for name in self._num
+            }
         payload = {
             "version": 1,
             "alpha": self.alpha,
             "base": self.base.name,
-            "engines": {
-                name: {"num": self._num[name], "den": self._den[name]} for name in self._num
-            },
+            "engines": engines,
         }
         tmp = path + ".tmp"
         with open(tmp, "w") as f:
@@ -407,12 +424,13 @@ class OnlineCost(CostProvider):
                 f"but this OnlineCost wraps {self.base.name!r} — the scales are in "
                 "different units; re-calibrate instead of warm-starting"
             )
-        for name, st in payload.get("engines", {}).items():
-            num, den = float(st["num"]), float(st["den"])
-            if num <= 0 or den <= 0:
-                raise ValueError(f"{path}: non-positive EMA state for engine {name!r}")
-            self._num[name] = num
-            self._den[name] = den
+        with self._lock:
+            for name, st in payload.get("engines", {}).items():
+                num, den = float(st["num"]), float(st["den"])
+                if num <= 0 or den <= 0:
+                    raise ValueError(f"{path}: non-positive EMA state for engine {name!r}")
+                self._num[name] = num
+                self._den[name] = den
         return self
 
 

@@ -41,10 +41,18 @@ class EngineSpec:
     link_bw: float  # bytes/s to the peer engine
     constraints: tuple[Any, ...] = ()
     efficiency: float = 1.0  # multiplier on peak_flops (achievable utilization)
+    # Optional concrete ``jax.Device`` this spec executes on. Excluded from
+    # eq/hash: binding is a *placement* decision, so a bound slice plans
+    # identically to the abstract specs it was derived from.
+    device: Any = dataclasses.field(default=None, compare=False)
 
     @property
     def flops(self):
         return self.peak_flops * self.efficiency
+
+    def bound(self, device) -> "EngineSpec":
+        """This spec bound to a concrete ``jax.Device`` placement target."""
+        return dataclasses.replace(self, device=device)
 
     def supports(self, layer) -> list:
         """Return the list of violated constraints for a layer (empty = legal).
@@ -119,3 +127,70 @@ def tpu_submesh_engines(
         efficiency,
     )
     return big, small
+
+
+class DevicePool:
+    """Discovered ``jax.Device``s sliced into per-replica engine groups.
+
+    The fleet (``repro.serve.fleet``) replicates the planned pipeline R
+    times; each replica gets a slice of the pool and an engine tuple
+    bound to that slice. On multi-device hosts the slices are disjoint
+    (``D // R`` devices each, round-robin reuse once R exceeds D); on
+    1-device hosts — CPU CI — every replica binds the virtual 2-engine
+    GPU/DLA pair to the single device, so the whole fleet still runs.
+    Placement is exposed as per-engine ``place_fns`` (``jax.device_put``
+    closures) in the shape ``StreamExecutor`` consumes; on a 1-device
+    pool they collapse to identity so the hot path pays nothing.
+    """
+
+    def __init__(self, engines, devices=None):
+        if devices is None:
+            import jax
+
+            devices = list(jax.devices())
+        if not devices:
+            raise ValueError("DevicePool needs at least one device")
+        self.devices = list(devices)
+        self.engines = tuple(engines)
+        if not self.engines:
+            raise ValueError("DevicePool needs at least one engine spec")
+
+    @classmethod
+    def discover(cls, engines=None, constraints_dla=(), constraints_gpu=()):
+        """Pool over ``jax.devices()``; defaults to the Jetson-analogue
+        (DLA, GPU) virtual pair in planning order when no specs are given."""
+        if engines is None:
+            gpu, dla = jetson_orin_engines(constraints_dla, constraints_gpu)
+            engines = (dla, gpu)
+        return cls(engines)
+
+    @property
+    def n_devices(self) -> int:
+        return len(self.devices)
+
+    def replica_devices(self, replica: int, n_replicas: int) -> list:
+        """The device slice backing one replica (wraps when R > D)."""
+        if replica < 0 or replica >= n_replicas:
+            raise ValueError(f"replica {replica} out of range for {n_replicas}")
+        per = max(1, len(self.devices) // max(1, n_replicas))
+        return [self.devices[(replica * per + j) % len(self.devices)] for j in range(per)]
+
+    def engine_slice(self, replica: int, n_replicas: int) -> tuple[EngineSpec, ...]:
+        """The pool's engine specs bound to this replica's devices."""
+        devs = self.replica_devices(replica, n_replicas)
+        return tuple(e.bound(devs[i % len(devs)]) for i, e in enumerate(self.engines))
+
+    def place_fns(self, replica: int, n_replicas: int) -> list:
+        """Per-engine state-placement closures for ``StreamExecutor``."""
+        if len(self.devices) == 1:
+            # single-device host: device_put would be a no-op round trip
+            return [lambda state: state for _ in self.engines]
+        import jax
+
+        fns = []
+        for e in self.engine_slice(replica, n_replicas):
+            dev = e.device
+            fns.append(
+                lambda state, dev=dev: jax.tree.map(lambda x: jax.device_put(x, dev), state)
+            )
+        return fns

@@ -233,9 +233,24 @@ def yolo_staged(cfg, params, granularity: str = "coarse") -> StagedModel:
         ops, spans = stage_ops_from_graph(coarse)
         vops, _ = stage_ops_from_graph(coarse, impl="pallas_fused")
         graph, op_spans = coarse.expand(), spans
+        # fused blocks whose variant spans multiple stage ops (the SPPF
+        # pool pyramid: three pool stages -> one kernel) must switch impl
+        # atomically; every other op switches individually, as before —
+        # ConvBlock fuse groups live inside a single stage callable
+        multi = []
+        for glo, ghi in fuse_groups_of(graph):
+            a = max(i for i, (lo, _hi) in enumerate(spans) if lo <= glo)
+            b = min(i + 1 for i, (_lo, hi) in enumerate(spans) if hi >= ghi)
+            if b - a > 1:
+                multi.append((a, b))
+        covered = {i for a, b in multi for i in range(a, b)}
+        groups = sorted(multi + [(i, i + 1) for i in range(len(ops)) if i not in covered])
     else:
         ops, graph, op_spans = m.staged_ops(coarse), coarse, None
         vops = m.staged_ops(coarse, impl="pallas_fused")
+        # every op is stage-atomic (a coarse node's fused blocks live
+        # wholly inside its one stage callable), so groups are single ops
+        groups = [(i, i + 1) for i in range(len(ops))]
     return StagedModel(
         name=cfg.name,
         ops=ops,
@@ -244,10 +259,8 @@ def yolo_staged(cfg, params, granularity: str = "coarse") -> StagedModel:
         init_state=lambda x: {"x": x.astype(cfg.act_dtype)},
         finalize=lambda s: {"p3": s["o3"], "p4": s["o4"], "p5": s["o5"]},
         op_spans=op_spans,
-        # every op is stage-atomic (a fused ConvBlock is exactly one stage
-        # callable / one coarse node), so groups are single ops
         variant_ops={"pallas_fused": vops},
-        variant_groups=[(i, i + 1) for i in range(len(ops))],
+        variant_groups=groups,
     )
 
 

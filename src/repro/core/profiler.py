@@ -163,6 +163,40 @@ def _fused_cost(in_shape, kernel, stride, padding, c_out, transposed, norm, act,
     return flops, float(ca.get("bytes accessed", 0.0))
 
 
+@functools.lru_cache(maxsize=128)
+def _sppf_cost(in_shape, window, reps, dtype_str):
+    """XLA-measured (flops, bytes) for the SPPF pool pyramid + concat
+    lowered as a SINGLE jit region: ``reps`` cascaded stride-1 max pools
+    whose intermediates feed both the next pool and the final concat.
+    Fused, the input is read once and only the 4C concat is written —
+    the honest cost of the Pallas ``sppf_pyramid`` kernel, comparable
+    against the sum of the per-pool ``_elementwise_cost`` lowerings the
+    xla implementation pays."""
+    dtype = jnp.dtype(dtype_str)
+    x = jax.ShapeDtypeStruct(tuple(in_shape), dtype)
+    pad = window // 2
+
+    def f(x):
+        outs = [x]
+        for _ in range(reps):
+            outs.append(
+                jax.lax.reduce_window(
+                    outs[-1],
+                    -jnp.inf,
+                    jax.lax.max,
+                    (1, window, window, 1),
+                    (1, 1, 1, 1),
+                    [(0, 0), (pad, pad), (pad, pad), (0, 0)],
+                )
+            )
+        return jnp.concatenate(outs, axis=-1)
+
+    compiled = jax.jit(f).lower(x).compile()
+    ca = cost_analysis_dict(compiled)
+    flops = float(ca.get("flops", 0.0)) + float(ca.get("transcendentals", 0.0))
+    return flops, float(ca.get("bytes accessed", 0.0))
+
+
 def _profile_layer(l, dtype_name: str):
     """Measured clone of one meta. Composites are profiled through their
     primitive decomposition and their totals become the measured sums, so

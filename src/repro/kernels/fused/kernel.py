@@ -142,6 +142,48 @@ def conv_block_pallas(
     )(x, w, b, gamma, beta)
 
 
+def _sppf_kernel(x_ref, o_ref, *, H, W, C, window, reps):
+    """SPPF pool pyramid: ``reps`` cascaded stride-1 max pools on one
+    sample, concatenated with the input along channels — all in VMEM, one
+    write of the (H, W, (reps+1)*C) result. Each pool is window*window
+    static slices reduced by max (-inf halo), so padded positions can
+    never win: bit-exact vs the reduce_window reference at any dtype."""
+    x = load_block(x_ref, 0, slice(None), slice(None), slice(None))  # (H, W, C)
+    pad = window // 2
+    neg = jnp.asarray(-jnp.inf, x.dtype)
+    outs = [x]
+    cur = x
+    for _ in range(reps):
+        xp = jnp.pad(cur, ((pad, pad), (pad, pad), (0, 0)), constant_values=neg)
+        m = None
+        for ki in range(window):
+            for kj in range(window):
+                win = jax.lax.slice(xp, (ki, kj, 0), (ki + H, kj + W, C))
+                m = win if m is None else jnp.maximum(m, win)
+        cur = m
+        outs.append(cur)
+    o_ref[0] = jnp.concatenate(outs, axis=-1).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "reps", "interpret"))
+def sppf_pyramid_pallas(x, window: int = 5, reps: int = 3, interpret: bool = True):
+    """Fused SPPF tail: (B, H, W, C) -> (B, H, W, (reps+1)*C) — the
+    concat of the input with ``reps`` cascaded stride-1/same max pools
+    (YOLOv8: 5x5, reps=3). Pure max/concat, so no per-sample-statistics
+    caveat: exact at any batch."""
+    B, H, W, C = x.shape
+    kernel = functools.partial(_sppf_kernel, H=H, W=W, C=C, window=window, reps=reps)
+    Cout = (reps + 1) * C
+    return pl.pallas_call(
+        kernel,
+        grid=(B,),
+        in_specs=[pl.BlockSpec((1, H, W, C), lambda bi: (bi, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, H, W, Cout), lambda bi: (bi, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, W, Cout), x.dtype),
+        interpret=interpret,
+    )(x)
+
+
 def _deconv_block_kernel(x_ref, w_ref, b_ref, g_ref, bt_ref, o_ref, *, H, W, norm, groups, act, eps):
     x_0 = load_block(x_ref, 0, slice(None), slice(None), slice(None))  # (H, W, Cin)
     # whole sample per grid step: the +-1 row halos are plain shifts

@@ -13,7 +13,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .kernel import conv_block_pallas, deconv_block_pallas
+from .kernel import conv_block_pallas, deconv_block_pallas, sppf_pyramid_pallas
 from .ref import conv_block_ref, deconv_block_ref
 
 
@@ -75,3 +75,11 @@ def deconv_block(
     return deconv_block_pallas(
         x, w, b, gamma, beta, norm=norm, groups=groups, act=act, eps=eps, interpret=interpret
     )
+
+
+@functools.partial(jax.jit, static_argnames=("window", "reps", "interpret"))
+def sppf_pyramid(x, window: int = 5, reps: int = 3, interpret: bool = True):
+    """Fused SPPF pool pyramid + concat: (B, H, W, C) -> (B, H, W, (reps+1)*C).
+
+    Max/concat only — exact at any batch, no reference fallback needed."""
+    return sppf_pyramid_pallas(x, window=window, reps=reps, interpret=interpret)

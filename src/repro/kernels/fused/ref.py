@@ -58,6 +58,27 @@ def conv_block_ref(
     return _act(y, act).astype(x.dtype)
 
 
+def sppf_pyramid_ref(x, window=5, reps=3):
+    """SPPF tail oracle: the exact op sequence the unfused stage callables
+    run — ``reps`` cascaded stride-1/same-padded max pools (reduce_window
+    with a -inf identity, as ``nn.max_pool``) concatenated with the input
+    along channels."""
+    pad = window // 2
+    outs = [x]
+    for _ in range(reps):
+        outs.append(
+            jax.lax.reduce_window(
+                outs[-1],
+                -jnp.inf,
+                jax.lax.max,
+                (1, window, window, 1),
+                (1, 1, 1, 1),
+                [(0, 0), (pad, pad), (pad, pad), (0, 0)],
+            )
+        )
+    return jnp.concatenate(outs, axis=-1)
+
+
 def deconv_block_ref(x, w, b, gamma, beta, norm="batch", groups=1, act="relu", eps=1e-5):
     """k=4/stride=2 VALID transposed conv + border crop (torch padding=1)
     + bias + norm + act — the Pix2Pix up-block sequence."""

@@ -15,6 +15,8 @@ per-segment-synchronized executor for comparison.
       --calibration-cache calib.json   # scales persist across restarts
   PYTHONPATH=src python -m repro.launch.serve --mode streams \
       --traffic poisson --rate 30 --deadline-ms 50 --duration 2 --admission
+  PYTHONPATH=src python -m repro.launch.serve --mode streams --replicas 2 \
+      --traffic poisson --rate 30 --duration 2 --admission   # replicated fleet
 """
 from __future__ import annotations
 
@@ -77,6 +79,8 @@ def run_streams(args) -> None:
         else None,
         admission=args.admission,
         replan=replan_cfg if replan_cfg is not None else False,
+        replicas=args.replicas,
+        router_seed=args.router_seed,
     )
     plan, replanner = bundle.plan, bundle.replanner
     if args.cost_cache and hasattr(provider, "save"):
@@ -86,6 +90,11 @@ def run_streams(args) -> None:
         f"search={plan.search} cost={plan.cost_provider} granularity={args.granularity} "
         f"max_cuts={args.max_cuts} (budget={plan.cut_budget})"
     )
+    if args.replicas > 1:
+        print(
+            f"[serve] fleet: {args.replicas} replicas over "
+            f"{bundle.server.pool.n_devices} device(s), router seed {args.router_seed}"
+        )
     if args.impl != "xla":
         print(f"[serve] impl={args.impl} bindings={plan.impl_bindings()}")
     if replanner is not None and (
@@ -181,6 +190,13 @@ def main():
         default=None,
         help="JSON file persisting OnlineCost per-engine scales across restarts",
     )
+    ap.add_argument(
+        "--replicas",
+        type=int,
+        default=1,
+        help="replicated serving pipelines over the device pool (sticky load-aware router)",
+    )
+    ap.add_argument("--router-seed", type=int, default=0, help="fleet router tie-break seed")
     ap.add_argument("--dispatch", choices=("overlapped", "serialized"), default="overlapped")
     ap.add_argument("--norm", choices=("batch", "instance", "group"), default="batch")
     ap.add_argument("--no-jit-segments", action="store_true", help="eager per-op dispatch")

@@ -417,17 +417,46 @@ class YOLOv8(Module):
                 return s
 
             stages.append((f"{name}.cv1", end_stage(blk), cv1_fn))
+            pool_prims = []
             for i in range(3):
                 pm = pointwise_meta(
                     0, f"{name}.pool{i + 1}", "pool", (batch, h, h, c_h), dtype_bytes, 25.0
                 )
                 pm.attrs.update({"window": 5, "stride": 1})
                 pm.boundary_bytes += act_bytes(h, (i + 1) * c_h)  # pooled pyramid stays live
+                pool_prims.append(pm)
+            # the pool pyramid (+ the concat it feeds) is a pallas_fused
+            # candidate: read cv1's output once, write the 4*c_h concat once
+            # instead of round-tripping every pyramid level through HBM
+            pool_prims[0].attrs["fuse"] = {
+                "span": 3,
+                "flops": sum(p.flops for p in pool_prims),
+                "bytes": dtype_bytes * batch * h * h * c_h * 5.0,
+                "kind": "pool",
+                "window": 5,
+            }
+            for pm in pool_prims[1:]:
+                pm.attrs["fused_into"] = pool_prims[0].name
+            for i, pm in enumerate(pool_prims):
+                if impl == "pallas_fused":
+                    # whole pyramid runs in the pool3 stage as one kernel;
+                    # pool1/pool2 pass through (the planner only binds the
+                    # fused variant when all three stages share a segment)
+                    if i < 2:
+                        def pool_fn(p, s):
+                            return s
+                    else:
+                        def pool_fn(p, s, t=tmp):
+                            from ..kernels.fused.ops import sppf_pyramid
 
-                def pool_fn(p, s, t=tmp):
-                    s = dict(s)
-                    s[t] = s[t] + [max_pool(s[t][-1], 5, 1, padding=2)]
-                    return s
+                            s = dict(s)
+                            s[t] = [sppf_pyramid(s[t][0])]
+                            return s
+                else:
+                    def pool_fn(p, s, t=tmp):
+                        s = dict(s)
+                        s[t] = s[t] + [max_pool(s[t][-1], 5, 1, padding=2)]
+                        return s
 
                 stages.append((f"{name}.pool{i + 1}", end_stage([pm]), pool_fn))
             cat_m = pointwise_meta(0, f"{name}.cat", "concat", (batch, h, h, 4 * c_h), dtype_bytes, 0.0)

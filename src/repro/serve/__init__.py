@@ -6,14 +6,18 @@ from .admission import ADMIT, DROP, SHED_RES, SHED_ROUTE, AdmissionConfig, subsa
 from .demo import build_pix_yolo_serving, build_replanner, merge_flags_for
 from .executor import Completion, Flight, SegmentObservation, StreamExecutor, SwapEvent
 from .facade import ServerBundle, build_server
+from .fleet import FleetRouter, FleetServer
 from .metrics import (
     ServeMetrics,
     StreamMetrics,
     SwapStall,
     TickStats,
     TierMetrics,
+    fleet_report,
+    merge_metrics,
     overlap_summary,
     percentile,
+    router_imbalance,
     segment_summary,
     swap_stall_summary,
 )

@@ -26,10 +26,12 @@ from typing import Any, Callable
 import jax
 
 from ..core.api import plan as core_plan
-from ..core.cost_model import CostProvider, make_cost_provider
+from ..core.cost_model import CostProvider, OnlineCost, make_cost_provider
+from ..core.engine import DevicePool
 from ..core.plan_ir import PlanIR
 from .admission import AdmissionConfig
 from .demo import _build_pix_yolo_models, merge_flags_for
+from .fleet import FleetServer
 from .replanner import ReplanConfig, Replanner
 from .server import MultiStreamServer
 from .streams import StreamSpec
@@ -49,11 +51,12 @@ class ServerBundle:
     streams: list[StreamSpec]
     engines: tuple  # planning order: (dla, gpu)
     provider: CostProvider
-    server: MultiStreamServer
+    server: MultiStreamServer | FleetServer
     replanner: Replanner | None
     admission: AdmissionConfig | None
     traffic: dict[str, TrafficConfig]
     img: int = 64
+    replicas: int = 1
 
     def frame_for(self, stream_name: str, t: int = 0):
         """A deterministic input frame for the named stream (seeded by
@@ -158,6 +161,9 @@ def build_server(
     resolution_flexible: bool | list[bool] = False,
     # online re-planning
     replan: bool | ReplanConfig = False,
+    # fleet replication
+    replicas: int = 1,
+    router_seed: int = 0,
 ) -> ServerBundle:
     """Build the full serving stack in one call; see module docstring.
 
@@ -168,15 +174,29 @@ def build_server(
     tier 0, reconstruction tier 1); pass ``slos`` for full control.
     ``impl`` selects the implementation-planning mode (``xla`` | ``auto``
     | ``pallas``); segments planned ``pallas_fused`` stage the fused
-    serving kernels end-to-end."""
+    serving kernels end-to-end.
+
+    ``replicas > 1`` returns the bundle over a ``FleetServer``: R
+    replicated (plan, executor) groups over a ``DevicePool`` behind a
+    sticky load-aware ``FleetRouter``. The plan is solved once — over
+    replica 0's engine slice, which is value-identical to every other
+    slice (only the device binding differs) — and each replica gets its
+    own ``Replanner``, all sharing one thread-safe ``OnlineCost`` so
+    calibration is fleet-wide."""
     provider = cost if isinstance(cost, CostProvider) else make_cost_provider(cost)
     models, streams, (gpu, dla) = _build_pix_yolo_models(
         img=img, base=base, n_pix=n_pix, n_yolo=n_yolo, seed=seed, norm=norm,
         granularity=granularity,
     )
+    if replicas < 1:
+        raise ValueError(f"replicas must be >= 1, got {replicas}")
+    pool = DevicePool((dla, gpu))
+    # one plan serves every replica: slice 0's bound engines plan exactly
+    # like the abstract pair (device binding is excluded from spec equality)
+    plan_engines = list(pool.engine_slice(0, replicas)) if replicas > 1 else [dla, gpu]
     plan_ir = core_plan(
         [m.graph for m in models],
-        [dla, gpu],
+        plan_engines,
         search=search,
         stride=stride,
         max_cuts=max_cuts,
@@ -195,24 +215,56 @@ def build_server(
     elif admission is False:
         admission = None
     replanner = None
+    replanners = None
     if replan:
         config = replan if isinstance(replan, ReplanConfig) else None
-        replanner = Replanner(
-            [m.graph for m in models], [dla, gpu], config=config, base_provider=provider
+        if replicas > 1:
+            # one shared OnlineCost: every replica's Replanner reuses the
+            # instance (thread-safe drain), so all replicas' segment
+            # observations feed a single fleet-wide calibration store
+            shared = provider if isinstance(provider, OnlineCost) else OnlineCost(base=provider)
+            replanners = [
+                Replanner(
+                    [m.graph for m in models], [dla, gpu], config=config, base_provider=shared
+                )
+                for _ in range(replicas)
+            ]
+            replanner = replanners[0]
+        else:
+            replanner = Replanner(
+                [m.graph for m in models], [dla, gpu], config=config, base_provider=provider
+            )
+    if replicas > 1:
+        server = FleetServer(
+            models,
+            plan_ir,
+            streams,
+            replicas=replicas,
+            pool=pool,
+            router_seed=router_seed,
+            max_queue=max_queue,
+            microbatch=microbatch,
+            merge_batches=merge_batches,
+            dispatch=dispatch,
+            jit_segments=jit_segments,
+            replanners=replanners,
+            admission=admission,
+            resolution_flexible=resolution_flexible,
         )
-    server = MultiStreamServer(
-        models,
-        plan_ir,
-        streams,
-        max_queue=max_queue,
-        microbatch=microbatch,
-        merge_batches=merge_batches,
-        dispatch=dispatch,
-        jit_segments=jit_segments,
-        replanner=replanner,
-        admission=admission,
-        resolution_flexible=resolution_flexible,
-    )
+    else:
+        server = MultiStreamServer(
+            models,
+            plan_ir,
+            streams,
+            max_queue=max_queue,
+            microbatch=microbatch,
+            merge_batches=merge_batches,
+            dispatch=dispatch,
+            jit_segments=jit_segments,
+            replanner=replanner,
+            admission=admission,
+            resolution_flexible=resolution_flexible,
+        )
     return ServerBundle(
         models=models,
         plan=plan_ir,
@@ -224,4 +276,5 @@ def build_server(
         admission=admission,
         traffic=_normalize_traffic(traffic, streams),
         img=img,
+        replicas=replicas,
     )

@@ -273,3 +273,64 @@ class ServeMetrics:
                 "dropped": sum(tm.dropped for tm in self.tiers.values()),
             }
         return rep
+
+
+# -- fleet aggregation -------------------------------------------------------
+
+
+def router_imbalance(per_replica_counts) -> float:
+    """Max/mean of per-replica routed-arrival counts: 1.0 is a perfectly
+    balanced fleet; R means one replica took everything."""
+    counts = list(per_replica_counts)
+    if not counts:
+        return math.nan
+    mean = sum(counts) / len(counts)
+    return max(counts) / mean if mean > 0 else 1.0
+
+
+def merge_metrics(replica_metrics) -> "ServeMetrics":
+    """Fold R replicas' per-replica ledgers into one fleet-level
+    ``ServeMetrics``: stream latency samples concatenate, tier admission
+    counters sum, and the tick log is pooled (fleet overlap efficiency is
+    the replica aggregate). Streams are disjoint across replicas only in
+    how traffic was routed — every replica declares the full stream set,
+    so the union keys line up."""
+    replica_metrics = list(replica_metrics)
+    if not replica_metrics:
+        raise ValueError("merge_metrics needs at least one replica")
+    slos: dict = {}
+    for m in replica_metrics:
+        slos.update(m.slos)
+    names: list[str] = []
+    for m in replica_metrics:
+        names.extend(n for n in m.streams if n not in names)
+    agg = ServeMetrics(names, slos=slos or None)
+    for m in replica_metrics:
+        for name, sm in m.streams.items():
+            a = agg.streams[name]
+            a.latencies_s.extend(sm.latencies_s)
+            a.completed += sm.completed
+            a.in_slo += sm.in_slo
+        for t, tm in m.tiers.items():
+            at = agg.tiers.get(t)
+            if at is None:
+                at = agg.tiers[t] = TierMetrics(t)
+            for f in ("offered", "admitted", "shed_res", "shed_route", "dropped",
+                      "completed", "in_slo"):
+                setattr(at, f, getattr(at, f) + getattr(tm, f))
+            at.latencies_s.extend(tm.latencies_s)
+        agg.ticks.extend(m.ticks)
+        agg._recent.extend(m._recent)
+    return agg
+
+
+def fleet_report(replica_metrics, wall_s: float, routed_counts=None) -> dict:
+    """Fleet-level serving report: the merged ledgers over one shared wall
+    clock (replica FPS numbers do not sum — the fleet's throughput is
+    total completions over the *fleet's* wall), plus the router-imbalance
+    metric when per-replica routed-arrival counts are given."""
+    rep = merge_metrics(replica_metrics).report(wall_s)
+    rep["replicas"] = len(list(replica_metrics))
+    if routed_counts is not None:
+        rep["router_imbalance"] = router_imbalance(routed_counts)
+    return rep

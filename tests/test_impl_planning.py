@@ -74,6 +74,48 @@ def test_deconv_block_parity(shape, cout, norm, act, dtype):
     np.testing.assert_allclose(np.float32(got), np.float32(want), atol=atol)
 
 
+SPPF_CASES = [
+    ((1, 8, 8, 16), 5, 3),  # the YOLO SPPF pyramid at serving scale
+    ((2, 4, 4, 8), 5, 3),  # B>1: max/concat have no cross-sample coupling
+    ((1, 8, 8, 4), 3, 2),
+]
+
+
+@pytest.mark.parametrize("shape,window,reps", SPPF_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_sppf_pyramid_parity_exact(shape, window, reps, dtype):
+    """The fused SPPF pool-pyramid is max/concat only — bit-exact vs the
+    reduce_window oracle at BOTH dtypes, not merely close."""
+    from repro.kernels.fused.ops import sppf_pyramid
+    from repro.kernels.fused.ref import sppf_pyramid_ref
+
+    x = jax.random.normal(jax.random.key(0), shape).astype(dtype)
+    got = sppf_pyramid(x, window=window, reps=reps)
+    want = sppf_pyramid_ref(x, window=window, reps=reps)
+    assert got.shape == shape[:-1] + ((reps + 1) * shape[-1],)
+    assert got.dtype == dtype
+    np.testing.assert_array_equal(np.float32(got), np.float32(want))
+
+
+def test_yolo_fine_granularity_pins_sppf_variant_group():
+    """At fine granularity the three SPPF pools form the one multi-op
+    variant group (they substitute atomically as the fused pyramid);
+    every other op keeps per-op substitution."""
+    from repro.core.pipeline import yolo_staged
+    from repro.models import YOLOv8
+
+    ycfg = YOLOv8Config(img_size=32)
+    sm = yolo_staged(ycfg, YOLOv8(ycfg).init(jax.random.key(0)), granularity="fine")
+    multi = [(a, b) for a, b in sm.variant_groups if b - a > 1]
+    assert len(multi) == 1
+    a, b = multi[0]
+    names = [sm.ops[i][0] for i in range(a, b)]
+    assert names == ["sppf.pool1", "sppf.pool2", "sppf.pool3"]
+    # single-op groups cover everything else exactly once
+    covered = sorted(i for lo, hi in sm.variant_groups for i in range(lo, hi))
+    assert covered == list(range(len(sm.ops)))
+
+
 def test_conv_block_batchnorm_b2_matches_ref():
     # B>1 batch norm takes cross-sample statistics: the wrapper must route
     # to the fused jnp reference, not the per-sample Pallas kernel
