@@ -83,6 +83,23 @@ def fleet_ratio_2v1(payload: dict):
     return payload.get("fleet_same_load_ratio_2v1")
 
 
+def proc_fleet_goodput_2w(payload: dict):
+    """2-worker process-fleet goodput at the same-total-load point, from
+    either a full bench payload (``proc_fleet.same_load_2w``) or a
+    flattened history entry."""
+    pf = payload.get("proc_fleet")
+    if isinstance(pf, dict):
+        return pf.get("same_load_2w", {}).get("goodput_fps")
+    return payload.get("proc_fleet_goodput_2w")
+
+
+def proc_fleet_ratio_2v1(payload: dict):
+    pf = payload.get("proc_fleet")
+    if isinstance(pf, dict):
+        return pf.get("same_load_goodput_ratio_2v1")
+    return payload.get("proc_fleet_same_load_ratio_2v1")
+
+
 def compare(baseline: dict, candidate: dict, threshold: float) -> tuple[bool, str]:
     """Returns (ok, report). ``ok`` is False only for a real regression."""
     lines = []
@@ -133,6 +150,32 @@ def compare(baseline: dict, candidate: dict, threshold: float) -> tuple[bool, st
         if cand_2v1 < 1.0:
             ok = False
             lines.append("  REGRESSION: 2-replica fleet goodput below single-replica at same load")
+    # process-fleet gates: same shape as the in-process fleet gates, over
+    # the multi-process sweep — only when the runs carry it (PR smoke
+    # skips it for wall-clock; the nightly proc-fleet step records it)
+    base_proc, cand_proc = proc_fleet_goodput_2w(baseline), proc_fleet_goodput_2w(candidate)
+    if base_proc and cand_proc is not None:
+        pratio = cand_proc / base_proc
+        lines.append(
+            f"  proc-fleet goodput@2W: {base_proc:.2f} -> {cand_proc:.2f} FPS ({pratio - 1.0:+.1%})"
+        )
+        if pratio < 1.0 - threshold:
+            ok = False
+            lines.append(f"  REGRESSION: 2-worker proc-fleet goodput dropped more than {threshold:.0%}")
+    cand_p2v1 = proc_fleet_ratio_2v1(candidate)
+    if cand_p2v1 is not None:
+        lines.append(f"  proc-fleet same-load 2W/1W goodput ratio: x{cand_p2v1:.2f}")
+        # the >= 1.0 contract needs real processors: a single-core host
+        # can only context-switch its two workers, so the absolute gate
+        # keys off the applicability flag the sweep records (full-payload
+        # candidates only; flattened history entries keep the ratio as a
+        # tracked-but-ungated signal)
+        applicable = candidate.get("proc_fleet", {}).get("same_load_contract_applicable", True)
+        if cand_p2v1 < 1.0 and applicable:
+            ok = False
+            lines.append("  REGRESSION: 2-worker proc fleet goodput below single-worker at same load")
+        elif cand_p2v1 < 1.0:
+            lines.append("    (single-core host: same-load contract not applicable, not gated)")
     return ok, "\n".join(lines)
 
 
@@ -166,6 +209,14 @@ def history_entry(candidate: dict) -> dict:
         entry["fleet_same_load_ratio_2v1"] = fl.get("same_load_goodput_ratio_2v1")
         entry["fleet_scaling_eff_2r"] = fl.get("scaling_efficiency", {}).get("2")
         entry["fleet_router_imbalance_2r"] = fl.get("points", {}).get("2", {}).get(
+            "router_imbalance"
+        )
+    if candidate.get("proc_fleet"):
+        pf = candidate["proc_fleet"]
+        entry["proc_fleet_goodput_2w"] = pf.get("same_load_2w", {}).get("goodput_fps")
+        entry["proc_fleet_same_load_ratio_2v1"] = pf.get("same_load_goodput_ratio_2v1")
+        entry["proc_fleet_scaling_eff_2w"] = pf.get("scaling_efficiency", {}).get("2")
+        entry["proc_fleet_router_imbalance_2w"] = pf.get("points", {}).get("2", {}).get(
             "router_imbalance"
         )
     if candidate.get("impl_compare"):

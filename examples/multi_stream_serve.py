@@ -23,6 +23,7 @@ deadline SLO instead of the closed-loop submit/pump cycle.
   PYTHONPATH=src python examples/multi_stream_serve.py --cost measured --impl auto
   PYTHONPATH=src python examples/multi_stream_serve.py --open-loop --rate 20 --deadline-ms 100
   PYTHONPATH=src python examples/multi_stream_serve.py --open-loop --replicas 2 --traffic-seed 7
+  PYTHONPATH=src python examples/multi_stream_serve.py --open-loop --workers 2
 """
 from __future__ import annotations
 
@@ -76,6 +77,11 @@ def main():
         help="replicated serving pipelines behind the sticky load-aware fleet router",
     )
     ap.add_argument(
+        "--workers", type=int, default=0,
+        help="multi-process fleet: worker processes behind the IPC router "
+        "(mutually exclusive with --replicas)",
+    )
+    ap.add_argument(
         "--traffic-seed", type=int, default=0,
         help="arrival-process seed (open-loop runs replay exactly, fleet included)",
     )
@@ -103,7 +109,8 @@ def main():
         n_pix=args.streams,
         n_yolo=args.yolo_streams,
         norm=args.norm,
-        cost=provider,
+        # worker processes rebuild the provider by name from the JSON spec
+        cost=args.cost if args.workers else provider,
         granularity=args.granularity,
         max_cuts=max_cuts,
         impl=args.impl,
@@ -117,6 +124,7 @@ def main():
         else None,
         admission=args.open_loop,
         replicas=args.replicas,
+        workers=args.workers,
     )
     if args.cost_cache and hasattr(provider, "save"):
         provider.save()  # measured AND blended both persist their timings
@@ -167,7 +175,17 @@ def main():
                 f"  tier {t}: offered={tm['offered']} goodput={tm['goodput_fps']:.1f} FPS "
                 f"attainment={tm['slo_attainment']:.2f}"
             )
-    if args.replicas > 1:
+    if args.workers:
+        ro = rep["router"]
+        total = max(1, sum(ro["routed_frames"]))
+        shares = "  ".join(
+            f"worker{w}={n} ({n / total:.0%})" for w, n in enumerate(ro["routed_frames"])
+        )
+        print(
+            f"proc fleet: {args.workers} worker processes  {shares}  "
+            f"imbalance={ro['imbalance']:.2f}  failures={len(rep['worker_failures'])}"
+        )
+    elif args.replicas > 1:
         ro = rep["router"]
         print(
             f"fleet: {args.replicas} replicas  routed={ro['routed_frames']} "
@@ -175,7 +193,7 @@ def main():
         )
     if args.replan:
         rp = rep["replan"]
-        if isinstance(rp, list):  # fleet: one summary per replica; show replica 0
+        if isinstance(rp, list):  # fleet: one summary per replica/worker; show the first
             rp = rp[0]
         scales = {k: f"x{v:.3g}" for k, v in rp["scales"].items()}
         print(
@@ -206,6 +224,7 @@ def main():
         for o in outs[s.name][: args.frames]:
             ok &= any(matches(o, r) for r in pool)
     print(f"\nfunctional check vs monolithic run_all: {'OK' if ok else 'FAIL'}")
+    bundle.close()
     return 0 if ok else 1
 
 

@@ -21,6 +21,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import tempfile
 import threading
 
 from .constraints import Violation
@@ -367,6 +368,30 @@ class OnlineCost(CostProvider):
         with self._lock:
             return {name: self.scale(name) for name in list(self._num)}
 
+    # -- fleet-wide calibration sync (see serve.multiproc) -------------------
+
+    def state(self) -> dict[str, dict[str, float]]:
+        """The raw per-key EMA sums, JSON-able: ``{key: {num, den}}``.
+        The sums — not the ratios — are the sync currency: merging them
+        keeps each contributor's weight proportional to its decayed
+        expected magnitude (the same weighted-ratio idiom ``observe``
+        applies to individual samples)."""
+        with self._lock:
+            return {k: {"num": self._num[k], "den": self._den[k]} for k in self._num}
+
+    def load_state(self, state: dict) -> "OnlineCost":
+        """Replace the per-key EMA sums with a (merged) ``state()`` dict.
+        Non-positive entries are skipped — a broadcast can never wipe a
+        key into an invalid scale. Returns self."""
+        with self._lock:
+            for name, st in state.items():
+                num, den = float(st["num"]), float(st["den"])
+                if num <= 0.0 or den <= 0.0:
+                    continue
+                self._num[name] = num
+                self._den[name] = den
+        return self
+
     def layer_time(self, l: LayerMeta, engine, impl: str = "xla") -> float:
         return self.base.layer_time(l, engine, impl) * self.scale_for(engine.name, impl)
 
@@ -390,21 +415,34 @@ class OnlineCost(CostProvider):
         """Write the learned per-engine EMA state to JSON. The decayed
         (observed, expected) sums are stored — not just their ratio — so a
         restarted process resumes the EMA with the same sample weighting
-        it shut down with."""
-        with self._lock:
-            engines = {
-                name: {"num": self._num[name], "den": self._den[name]} for name in self._num
-            }
+        it shut down with.
+
+        The write is atomic for *concurrent* writers: each write goes to
+        a uniquely-named temp file in the target directory, then
+        ``os.replace``s into place. A fixed ``path + ".tmp"`` would let
+        two fleet workers checkpointing at once interleave writes into
+        the same temp file and publish a corrupt mix; with unique temps
+        the last replace wins and every published file is complete."""
         payload = {
             "version": 1,
             "alpha": self.alpha,
             "base": self.base.name,
-            "engines": engines,
+            "engines": self.state(),
         }
-        tmp = path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(payload, f, indent=2, sort_keys=True)
-        os.replace(tmp, path)
+        target = os.path.abspath(path)
+        fd, tmp = tempfile.mkstemp(
+            prefix=os.path.basename(target) + ".", suffix=".tmp", dir=os.path.dirname(target)
+        )
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f, indent=2, sort_keys=True)
+            os.replace(tmp, target)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
         return path
 
     def load_calibration(self, path: str) -> "OnlineCost":

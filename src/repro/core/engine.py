@@ -175,6 +175,17 @@ class DevicePool:
         per = max(1, len(self.devices) // max(1, n_replicas))
         return [self.devices[(replica * per + j) % len(self.devices)] for j in range(per)]
 
+    def worker_pool(self, worker: int, n_workers: int) -> "DevicePool":
+        """A sub-pool over one worker *process*'s device slice.
+
+        The multi-process fleet (``repro.serve.multiproc``) spawns R
+        workers; each builds its replica group over the devices visible
+        to *its* process. Slicing reuses the replica round-robin (wraps
+        when R exceeds D), so a worker's pool is just this pool narrowed
+        to its share — on 1-device hosts every worker sees the single
+        device and placement stays identity."""
+        return DevicePool(self.engines, devices=self.replica_devices(worker, n_workers))
+
     def engine_slice(self, replica: int, n_replicas: int) -> tuple[EngineSpec, ...]:
         """The pool's engine specs bound to this replica's devices."""
         devs = self.replica_devices(replica, n_replicas)

@@ -17,6 +17,8 @@ per-segment-synchronized executor for comparison.
       --traffic poisson --rate 30 --deadline-ms 50 --duration 2 --admission
   PYTHONPATH=src python -m repro.launch.serve --mode streams --replicas 2 \
       --traffic poisson --rate 30 --duration 2 --admission   # replicated fleet
+  PYTHONPATH=src python -m repro.launch.serve --mode streams --workers 2 \
+      --traffic poisson --rate 30 --duration 2   # multi-process fleet (IPC router)
 """
 from __future__ import annotations
 
@@ -62,7 +64,9 @@ def run_streams(args) -> None:
         n_pix=args.streams,
         n_yolo=args.yolo_streams,
         norm=args.norm,
-        cost=provider,
+        # worker processes rebuild the provider from its name (the build
+        # spec crosses the process boundary as JSON)
+        cost=args.cost if args.workers else provider,
         granularity=args.granularity,
         stride=args.planner_stride,
         max_cuts="auto" if args.max_cuts == "auto" else int(args.max_cuts),
@@ -81,6 +85,8 @@ def run_streams(args) -> None:
         replan=replan_cfg if replan_cfg is not None else False,
         replicas=args.replicas,
         router_seed=args.router_seed,
+        workers=args.workers,
+        calibration_path=args.calibration_cache if args.workers else None,
     )
     plan, replanner = bundle.plan, bundle.replanner
     if args.cost_cache and hasattr(provider, "save"):
@@ -90,7 +96,13 @@ def run_streams(args) -> None:
         f"search={plan.search} cost={plan.cost_provider} granularity={args.granularity} "
         f"max_cuts={args.max_cuts} (budget={plan.cut_budget})"
     )
-    if args.replicas > 1:
+    if args.workers:
+        print(
+            f"[serve] fleet: {args.workers} worker processes "
+            f"(pids {[h.process.pid for h in bundle.server.handles]}), "
+            f"router seed {args.router_seed}"
+        )
+    elif args.replicas > 1:
         print(
             f"[serve] fleet: {args.replicas} replicas over "
             f"{bundle.server.pool.n_devices} device(s), router seed {args.router_seed}"
@@ -131,7 +143,11 @@ def run_streams(args) -> None:
                 server.submit(s.model_index, jax.random.normal(jax.random.key(t), (1, args.img, args.img, 3)))
             server.pump()
         server.drain()
-    if args.calibration_cache and replanner is not None and replanner.online.snapshot():
+    if args.workers:
+        # the multi-process fleet checkpoints its merged calibration itself
+        # (sync_calibration writes --calibration-cache atomically)
+        pass
+    elif args.calibration_cache and replanner is not None and replanner.online.snapshot():
         # persist the learned per-engine scales so the next process
         # warm-starts its calibration instead of re-learning it
         replanner.online.save_calibration(args.calibration_cache)
@@ -140,6 +156,7 @@ def run_streams(args) -> None:
         provider.save_calibration(args.calibration_cache)
         print(f"[serve] saved calibration -> {args.calibration_cache}")
     print(json.dumps(server.report(), indent=2))
+    bundle.close()
 
 
 def main():
@@ -195,6 +212,13 @@ def main():
         type=int,
         default=1,
         help="replicated serving pipelines over the device pool (sticky load-aware router)",
+    )
+    ap.add_argument(
+        "--workers",
+        type=int,
+        default=0,
+        help="multi-process fleet: spawn this many worker processes, each hosting one "
+        "replica group behind the IPC router (mutually exclusive with --replicas)",
     )
     ap.add_argument("--router-seed", type=int, default=0, help="fleet router tie-break seed")
     ap.add_argument("--dispatch", choices=("overlapped", "serialized"), default="overlapped")

@@ -6,7 +6,7 @@ from .admission import ADMIT, DROP, SHED_RES, SHED_ROUTE, AdmissionConfig, subsa
 from .demo import build_pix_yolo_serving, build_replanner, merge_flags_for
 from .executor import Completion, Flight, SegmentObservation, StreamExecutor, SwapEvent
 from .facade import ServerBundle, build_server
-from .fleet import FleetRouter, FleetServer
+from .fleet import FleetRouter, FleetServer, LocalReplica
 from .metrics import (
     ServeMetrics,
     StreamMetrics,
@@ -15,11 +15,21 @@ from .metrics import (
     TierMetrics,
     fleet_report,
     merge_metrics,
+    metrics_from_payload,
     overlap_summary,
     percentile,
     router_imbalance,
     segment_summary,
     swap_stall_summary,
+)
+from .multiproc import (
+    ProcFleetServer,
+    RemoteReplica,
+    ShmRing,
+    WorkerDied,
+    WorkerError,
+    WorkerTimeout,
+    merge_calibration,
 )
 from .replanner import ReplanConfig, ReplanEvent, Replanner
 from .server import MultiStreamServer, Request

@@ -32,6 +32,7 @@ from ..core.plan_ir import PlanIR
 from .admission import AdmissionConfig
 from .demo import _build_pix_yolo_models, merge_flags_for
 from .fleet import FleetServer
+from .multiproc import ProcFleetServer
 from .replanner import ReplanConfig, Replanner
 from .server import MultiStreamServer
 from .streams import StreamSpec
@@ -51,12 +52,13 @@ class ServerBundle:
     streams: list[StreamSpec]
     engines: tuple  # planning order: (dla, gpu)
     provider: CostProvider
-    server: MultiStreamServer | FleetServer
+    server: MultiStreamServer | FleetServer | ProcFleetServer
     replanner: Replanner | None
     admission: AdmissionConfig | None
     traffic: dict[str, TrafficConfig]
     img: int = 64
     replicas: int = 1
+    workers: int = 0
 
     def frame_for(self, stream_name: str, t: int = 0):
         """A deterministic input frame for the named stream (seeded by
@@ -89,6 +91,19 @@ class ServerBundle:
 
     def report(self) -> dict:
         return self.server.report()
+
+    def close(self):
+        """Release server resources — shuts down the worker processes of a
+        multi-process fleet; a no-op for in-process servers."""
+        close = getattr(self.server, "close", None)
+        if close is not None:
+            close()
+
+    def __enter__(self) -> "ServerBundle":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
 
 def _normalize_slos(slos, deadline_ms, streams: list[StreamSpec]):
@@ -164,6 +179,10 @@ def build_server(
     # fleet replication
     replicas: int = 1,
     router_seed: int = 0,
+    # multi-process fleet
+    workers: int = 0,
+    calibration_path: str | None = None,
+    calib_sync_every: int = 16,
 ) -> ServerBundle:
     """Build the full serving stack in one call; see module docstring.
 
@@ -182,7 +201,29 @@ def build_server(
     replica 0's engine slice, which is value-identical to every other
     slice (only the device binding differs) — and each replica gets its
     own ``Replanner``, all sharing one thread-safe ``OnlineCost`` so
-    calibration is fleet-wide."""
+    calibration is fleet-wide.
+
+    ``workers > 0`` returns the bundle over a ``ProcFleetServer`` instead:
+    R worker *processes*, each rebuilding the same replica group from the
+    serialized plan, behind the same sticky router over IPC
+    (``serve.multiproc``). Mutually exclusive with ``replicas > 1`` — one
+    replica group per worker process. ``cost`` must then be a provider
+    name (the build spec crosses the process boundary as JSON), and with
+    ``replan`` on the workers' calibrations sync fleet-wide every
+    ``calib_sync_every`` front ticks, checkpointing atomically to
+    ``calibration_path`` (which also warm-starts workers on spawn). Call
+    ``bundle.close()`` (or use the bundle as a context manager) to shut
+    the workers down."""
+    if workers and replicas > 1:
+        raise ValueError(
+            "workers and replicas are mutually exclusive: a multi-process fleet "
+            "hosts one replica group per worker process"
+        )
+    if workers and not isinstance(cost, str):
+        raise ValueError(
+            "multi-process fleet needs a cost provider *name* (the build spec "
+            f"crosses the process boundary as JSON), got {type(cost).__name__}"
+        )
     provider = cost if isinstance(cost, CostProvider) else make_cost_provider(cost)
     models, streams, (gpu, dla) = _build_pix_yolo_models(
         img=img, base=base, n_pix=n_pix, n_yolo=n_yolo, seed=seed, norm=norm,
@@ -216,7 +257,7 @@ def build_server(
         admission = None
     replanner = None
     replanners = None
-    if replan:
+    if replan and not workers:
         config = replan if isinstance(replan, ReplanConfig) else None
         if replicas > 1:
             # one shared OnlineCost: every replica's Replanner reuses the
@@ -234,7 +275,36 @@ def build_server(
             replanner = Replanner(
                 [m.graph for m in models], [dla, gpu], config=config, base_provider=provider
             )
-    if replicas > 1:
+    if workers:
+        # workers rebuild their replanners in-process; the front only
+        # carries the serialized config (True -> worker-side default)
+        replan_payload = None
+        if replan:
+            replan_payload = (
+                dataclasses.asdict(replan) if isinstance(replan, ReplanConfig) else {}
+            )
+        server = ProcFleetServer(
+            plan_ir,
+            streams,
+            workers=workers,
+            build={
+                "img": img, "base": base, "n_pix": n_pix, "n_yolo": n_yolo,
+                "seed": seed, "norm": norm, "granularity": granularity,
+            },
+            router_seed=router_seed,
+            max_queue=max_queue,
+            microbatch=microbatch,
+            merge_batches=merge_batches,
+            dispatch=dispatch,
+            jit_segments=jit_segments,
+            admission=admission,
+            resolution_flexible=resolution_flexible,
+            cost=cost,
+            replan=replan_payload,
+            calibration_path=calibration_path,
+            calib_sync_every=calib_sync_every,
+        )
+    elif replicas > 1:
         server = FleetServer(
             models,
             plan_ir,
@@ -277,4 +347,5 @@ def build_server(
         traffic=_normalize_traffic(traffic, streams),
         img=img,
         replicas=replicas,
+        workers=workers,
     )

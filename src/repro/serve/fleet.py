@@ -64,15 +64,36 @@ class FleetRouter:
         # sum of 1/deadline_s over streams stuck to each replica — the
         # deadline-aware tie-break (tighter deadlines weigh heavier)
         self._deadline_pressure = [0.0] * n_replicas
+        self._alive = set(range(n_replicas))
 
     def replica_of(self, stream: str) -> int | None:
         return self.assignments.get(stream)
 
+    @property
+    def alive(self) -> list[int]:
+        return sorted(self._alive)
+
+    def evict(self, replica: int) -> list[str]:
+        """Remove a replica from routing (worker death / heartbeat miss):
+        it never receives another pick, its deadline pressure is zeroed,
+        and its sticky streams are unpinned so each one's next arrival
+        re-routes to a survivor. Returns the migrated stream names."""
+        if replica not in self._alive:
+            return []
+        self._alive.discard(replica)
+        migrated = sorted(s for s, r in self.assignments.items() if r == replica)
+        for s in migrated:
+            del self.assignments[s]
+        self._deadline_pressure[replica] = 0.0
+        return migrated
+
     def pick(self, loads) -> int:
-        """Least-loaded replica for non-sticky work (warmup, model-index
-        submissions): same ordering, no assignment recorded."""
+        """Least-loaded alive replica for non-sticky work (warmup,
+        model-index submissions): same ordering, no assignment recorded."""
+        if not self._alive:
+            raise RuntimeError("no alive replicas to route to")
         return min(
-            range(self.n_replicas),
+            self._alive,
             key=lambda r: (loads[r], self._deadline_pressure[r], self._rank[r]),
         )
 
@@ -80,7 +101,7 @@ class FleetRouter:
         """Sticky replica for one stream given current per-replica loads
         (outstanding frames). ``deadline_s`` feeds the pressure tie-break."""
         r = self.assignments.get(stream)
-        if r is None:
+        if r is None or r not in self._alive:
             r = self.pick(loads)
             self.assignments[stream] = r
             if deadline_s and deadline_s > 0:
@@ -101,11 +122,81 @@ class FleetRouter:
         return {
             "replicas": self.n_replicas,
             "seed": self.seed,
+            "alive": self.alive,
+            "evicted": sorted(set(range(self.n_replicas)) - self._alive),
             "streams_assigned": len(self.assignments),
             "routed_frames": list(self.routed_frames),
             "imbalance": router_imbalance(self.routed_frames),
             "assignments": dict(self.assignments),
         }
+
+
+class LocalReplica:
+    """In-process replica handle: the surface the router fronts replicas
+    through, whatever their transport.
+
+    ``FleetServer`` wraps each thread-local ``MultiStreamServer`` in one
+    of these; ``serve.multiproc.RemoteReplica`` implements the *same*
+    surface over a worker-process RPC pipe. Routing, service, drain, and
+    report-merging code is written against this interface only, so the
+    fleet is transport-agnostic — ``workers=0`` (in-process) stays the
+    fast path and the bit-exactness oracle for the process fleet.
+
+    Surface: ``alive`` flag; ``load`` (outstanding frames + backlog, the
+    router's pick metric) and ``pending`` properties; ``offer`` /
+    ``submit`` / ``tick`` / ``pump`` / ``drain`` / ``finish`` /
+    ``reset_metrics`` service calls; ``deadline_of`` for the router's
+    pressure tie-break; ``metrics`` / ``report`` for the fleet merge;
+    ``close`` for teardown (a no-op in-process)."""
+
+    def __init__(self, server: MultiStreamServer):
+        self.server = server
+        self.alive = True
+
+    @property
+    def load(self) -> int:
+        return self.server.executor.pending + len(self.server._backlog)
+
+    @property
+    def pending(self) -> int:
+        return self.server.executor.pending
+
+    def offer(self, target: int | str, frame: Any) -> str:
+        return self.server.offer(target, frame)
+
+    def submit(self, model_index: int, frame: Any):
+        self.server.submit(model_index, frame)
+
+    def tick(self):
+        if self.server.executor.pending:
+            self.server.tick()
+
+    def pump(self):
+        self.server.pump()
+
+    def drain(self) -> dict:
+        return self.server.drain()
+
+    def finish(self):
+        self.server.finish()
+
+    def reset_metrics(self):
+        self.server.reset_metrics()
+
+    def deadline_of(self, stream: str) -> float | None:
+        for s in self.server.executor.streams:
+            if s.name == stream:
+                return s.slo.deadline_s if s.slo is not None else None
+        return None
+
+    def metrics(self):
+        return self.server.metrics
+
+    def report(self) -> dict:
+        return self.server.report()
+
+    def close(self):
+        pass
 
 
 class _FleetExecutorView:
@@ -181,6 +272,7 @@ class FleetServer:
             )
             for r in range(replicas)
         ]
+        self.handles = [LocalReplica(s) for s in self.servers]
         self.router = FleetRouter(replicas, seed=router_seed)
         self.executor = _FleetExecutorView(self.servers)
         self._t0: float | None = None
@@ -188,13 +280,10 @@ class FleetServer:
     # -- routing ------------------------------------------------------------
 
     def _loads(self) -> list[int]:
-        return [s.executor.pending + len(s._backlog) for s in self.servers]
+        return [h.load for h in self.handles]
 
     def _deadline_of(self, stream: str) -> float | None:
-        for s in self.servers[0].executor.streams:
-            if s.name == stream:
-                return s.slo.deadline_s if s.slo is not None else None
-        return None
+        return self.handles[0].deadline_of(stream)
 
     # -- open-loop intake ---------------------------------------------------
 
@@ -209,24 +298,23 @@ class FleetServer:
         else:
             r = self.router.pick(self._loads())
             self.router.routed_frames[r] += 1
-        return self.servers[r].offer(target, frame)
+        return self.handles[r].offer(target, frame)
 
     def tick(self):
         """Service every replica with outstanding work (one executor tick
         each + metrics fold)."""
-        for s in self.servers:
-            if s.executor.pending:
-                s.tick()
+        for h in self.handles:
+            h.tick()
 
     def finish(self):
-        for s in self.servers:
-            s.finish()
+        for h in self.handles:
+            h.finish()
 
     def reset_metrics(self):
         """Fresh measurement window on every replica + zeroed router frame
         counters; sticky assignments and warmed executors are kept."""
-        for s in self.servers:
-            s.reset_metrics()
+        for h in self.handles:
+            h.reset_metrics()
         self.router.reset_counts()
         self._t0 = None
 
@@ -237,16 +325,16 @@ class FleetServer:
             self._t0 = time.perf_counter()
         r = self.router.pick(self._loads())
         self.router.routed_frames[r] += 1
-        self.servers[r].submit(model_index, frame)
+        self.handles[r].submit(model_index, frame)
 
     def pump(self):
-        for s in self.servers:
-            s.pump()
+        for h in self.handles:
+            h.pump()
 
     def drain(self) -> dict:
         outs: dict = {}
-        for s in self.servers:
-            for name, vals in s.drain().items():
+        for h in self.handles:
+            for name, vals in h.drain().items():
                 outs.setdefault(name, []).extend(vals)
         return outs
 

@@ -274,6 +274,70 @@ class ServeMetrics:
             }
         return rep
 
+    # -- cross-process serialization (see serve.multiproc) -------------------
+
+    def to_payload(self) -> dict:
+        """The full ledger as a JSON-able dict: fleet workers ship this
+        over the RPC pipe and the front rebuilds a live ``ServeMetrics``
+        with ``metrics_from_payload`` so the existing ``merge_metrics`` /
+        ``fleet_report`` machinery works across process boundaries."""
+        return {
+            "streams": {
+                n: {"latencies_s": list(m.latencies_s), "completed": m.completed,
+                    "in_slo": m.in_slo}
+                for n, m in self.streams.items()
+            },
+            "slos": {
+                n: {"deadline_ms": p.deadline_ms, "tier": p.tier, "name": p.name}
+                for n, p in self.slos.items() if p is not None
+            },
+            "tiers": {
+                str(t): {
+                    "offered": tm.offered, "admitted": tm.admitted,
+                    "shed_res": tm.shed_res, "shed_route": tm.shed_route,
+                    "dropped": tm.dropped, "completed": tm.completed,
+                    "in_slo": tm.in_slo, "latencies_s": list(tm.latencies_s),
+                }
+                for t, tm in self.tiers.items()
+            },
+            "ticks": [[t.tick, t.wall_s, t.blocked_s, t.segments] for t in self.ticks],
+            "recent": [bool(b) for b in self._recent],
+            "recent_window": self._recent.maxlen,
+        }
+
+
+def metrics_from_payload(payload: dict) -> ServeMetrics:
+    """Rebuild a live ``ServeMetrics`` from ``ServeMetrics.to_payload``.
+    The reconstruction is exact — stream/tier counters, latency samples,
+    tick log, and the recent-SLO window all round-trip — so a merged
+    fleet report over worker payloads matches the in-process merge."""
+    from .traffic import SLOPolicy  # local: traffic is a sibling leaf module
+
+    slos = {
+        n: SLOPolicy(deadline_ms=p["deadline_ms"], tier=p["tier"], name=p["name"])
+        for n, p in payload.get("slos", {}).items()
+    }
+    m = ServeMetrics(
+        list(payload.get("streams", {})),
+        slos=slos or None,
+        recent_window=payload.get("recent_window") or 64,
+    )
+    for name, st in payload.get("streams", {}).items():
+        sm = m.streams[name]
+        sm.latencies_s = [float(x) for x in st["latencies_s"]]
+        sm.completed = int(st["completed"])
+        sm.in_slo = int(st["in_slo"])
+    for t, st in payload.get("tiers", {}).items():
+        tm = m.tiers[int(t)] = TierMetrics(int(t))
+        for f in ("offered", "admitted", "shed_res", "shed_route", "dropped",
+                  "completed", "in_slo"):
+            setattr(tm, f, int(st[f]))
+        tm.latencies_s = [float(x) for x in st["latencies_s"]]
+    m.ticks = [TickStats(int(t), float(w), float(b), int(s))
+               for t, w, b, s in payload.get("ticks", [])]
+    m._recent.extend(bool(b) for b in payload.get("recent", []))
+    return m
+
 
 # -- fleet aggregation -------------------------------------------------------
 

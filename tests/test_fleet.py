@@ -257,6 +257,36 @@ def test_fleet_validates_replicas(staged_pair, engines):
         )
 
 
+def test_router_sticky_across_plan_hot_swap(staged_pair, engines):
+    """A mid-stream ``swap_plan`` on one replica is a routing no-op: the
+    swap changes where that replica's future segments run, never which
+    replica owns a stream — assignments, per-stream ordering, and frame
+    counts are identical before and after the swap."""
+    gpu, dla = engines
+    sm_pix, sm_yolo = staged_pair
+    plan = core.plan([sm_pix.graph, sm_yolo.graph], [dla, gpu], max_cuts=1)
+    alt = core.plan([sm_pix.graph, sm_yolo.graph], [dla, gpu], max_cuts=2)
+    streams = [StreamSpec("mri-0", 0), StreamSpec("mri-1", 0), StreamSpec("det-0", 1)]
+    frames = {
+        s.name: [jax.random.normal(jax.random.key(13 * i + t), (1, 32, 32, 3)) for t in range(4)]
+        for i, s in enumerate(streams)
+    }
+    fleet = FleetServer(
+        [sm_pix, sm_yolo], plan, streams, replicas=2,
+        pool=DevicePool((dla, gpu)), max_queue=8,
+    )
+    _drive_named(fleet, streams, {n: fs[:2] for n, fs in frames.items()}, 2)
+    before = dict(fleet.router.assignments)
+    assert set(before) == {s.name for s in streams}
+    rev = fleet.servers[0].executor.swap_plan(alt)
+    assert rev >= 1
+    outs = _drive_named(fleet, streams, {n: fs[2:] for n, fs in frames.items()}, 2)
+    assert fleet.router.assignments == before  # no stream migrated
+    for s in streams:  # post-swap frames of replica 0's streams still served
+        assert len(outs[s.name]) == 4
+    assert fleet.report()["plan_revision"] == rev
+
+
 # ---- facade + shared OnlineCost --------------------------------------------
 
 
