@@ -472,6 +472,172 @@ def run_openloop_sweep(
     }
 
 
+def run_batching_sweep(
+    img: int,
+    base: int,
+    microbatch: int,
+    max_batches=(1, 4, 8),
+    load_factors=(1.0, 3.0),
+    horizon_s: float = 1.0,
+    n_pix: int = 4,
+    max_queue: int = 8,
+    hold_ms: float = 2.0,
+) -> dict:
+    """Continuous-batching sweep: goodput vs ``max_batch`` at 1x and 3x
+    offered load.
+
+    Serves ``n_pix`` instance-norm Pix2Pix streams (batch-independent, so
+    the cross-stream coalescer is live) plus one YOLO stream under a
+    deadline SLO, at each coalescer cap. At 1x load slack is plentiful
+    and the slack-driven hold assembles full buckets; at 3x the queues
+    are deep enough that buckets fill greedily without holding. Recorded
+    per point: goodput, latency percentiles, mean effective batch, the
+    bucket-occupancy histogram, and the held-frame ledger. The trend-gated
+    contract is ``batched_vs_unbatched_goodput_ratio_3x >= 1.0`` (the
+    best batched cap's goodput at top load vs ``max_batch=1``, absolute)
+    and ``held_then_missed == 0`` everywhere — the slack gate means a
+    hold can never turn a meetable deadline into a miss."""
+    import dataclasses
+
+    import jax
+
+    from repro.serve import (
+        BatchConfig,
+        MultiStreamServer,
+        SLOPolicy,
+        StreamSpec,
+        TrafficConfig,
+        build_pix_yolo_serving,
+        merge_flags_for,
+        run_open_loop,
+    )
+
+    # instance norm: per-sample statistics, so coalesced batches are exact
+    # and merge_flags_for marks the pix model batch-independent
+    models, plan, streams, _ = build_pix_yolo_serving(
+        img=img, base=base, n_pix=n_pix, n_yolo=1, norm="instance"
+    )
+
+    def frame(si: int, t: int):
+        return jax.random.normal(jax.random.key(1000 * si + t), (1, img, img, 3))
+
+    def make_server(slo_streams, bc: BatchConfig | None):
+        server = MultiStreamServer(
+            models,
+            plan,
+            slo_streams,
+            max_queue=max_queue,
+            microbatch=microbatch,
+            merge_batches=merge_flags_for(models),
+            batching=bc,
+        )
+        # warm every bucket executable the coalescer can reach: a
+        # multi-second XLA compile inside the measured window would read
+        # as an SLO collapse
+        buckets = bc.buckets if bc is not None else (1,)
+        for b in buckets:
+            for _ in range(b):
+                for si, s in enumerate(slo_streams):
+                    server.submit(s.model_index, frame(si, 50 + b))
+            server.pump()
+            server.drain()
+        server.reset_metrics()
+        return server
+
+    # closed-loop capacity of the unbatched stack = the 1x reference rate
+    cal = make_server(streams, None)
+    n_cal = 6
+    t0 = time.perf_counter()
+    for t in range(n_cal):
+        for si, s in enumerate(streams):
+            cal.submit(s.model_index, frame(si, 100 + t))
+        cal.pump()
+    cal.drain()
+    capacity = n_cal * len(streams) / (time.perf_counter() - t0)
+
+    deadline_ms = 1.2 * max_queue * len(streams) / capacity * 1e3
+    slo_streams = [
+        dataclasses.replace(
+            s,
+            slo=SLOPolicy(
+                deadline_ms=deadline_ms,
+                tier=0 if s.model_index == 1 else 1,
+                name=f"{s.name}-slo",
+            ),
+        )
+        for s in streams
+    ]
+
+    def drive(server, factor: float, seed0: int) -> dict:
+        rate = factor * capacity / len(slo_streams)
+        traffic = {
+            s.name: TrafficConfig(process="poisson", rate_hz=rate, seed=seed0 + i)
+            for i, s in enumerate(slo_streams)
+        }
+        counts: dict[str, int] = {}
+
+        def frame_fn(name: str):
+            t = counts.get(name, 0)
+            counts[name] = t + 1
+            si = next(i for i, s in enumerate(slo_streams) if s.name == name)
+            return frame(si, 10_000 + t)
+
+        rep = run_open_loop(server, traffic, frame_fn, horizon_s, max_wall_s=600.0)
+        bat = rep["batching"]
+        return {
+            "load_factor": factor,
+            "offered_rate_hz": rate * len(slo_streams),
+            "frames": rep["frames"],
+            "aggregate_fps": rep["aggregate_fps"],
+            "goodput_fps": rep["goodput_fps"],
+            "latency_p50_ms": rep["latency_p50_ms"],
+            "latency_p99_ms": rep["latency_p99_ms"],
+            "mean_effective_batch": bat["mean_effective_batch"],
+            "occupancy": bat["occupancy"],
+            "held_frames": bat["held_frames"],
+            "held_then_missed": bat["held_then_missed"],
+        }
+
+    points: dict[str, dict] = {}
+    for i, mb in enumerate(max_batches):
+        bc = BatchConfig(max_batch=mb, hold_ms=hold_ms) if mb > 1 else None
+        per_load = {}
+        for j, f in enumerate(load_factors):
+            server = make_server(slo_streams, bc)
+            per_load[str(f)] = drive(server, f, seed0=100 * (i + 1) + 10 * (j + 1))
+        points[str(mb)] = per_load
+
+    top = str(max(load_factors))
+    unbatched_top = points[str(min(max_batches))][top]
+    batched_caps = [mb for mb in max_batches if mb > 1]
+    best_batched = (
+        max((points[str(mb)][top] for mb in batched_caps), key=lambda p: p["goodput_fps"])
+        if batched_caps
+        else unbatched_top
+    )
+    ratio = (
+        best_batched["goodput_fps"] / unbatched_top["goodput_fps"]
+        if unbatched_top["goodput_fps"] > 0
+        else float("inf")
+    )
+    return {
+        "max_batches": list(max_batches),
+        "load_factors": list(load_factors),
+        "streams": len(slo_streams),
+        "norm": "instance",
+        "hold_ms": hold_ms,
+        "horizon_s": horizon_s,
+        "capacity_fps": capacity,
+        "deadline_ms": deadline_ms,
+        "max_queue": max_queue,
+        "points": points,
+        "batched_vs_unbatched_goodput_ratio_3x": ratio,
+        "held_then_missed_total": sum(
+            p["held_then_missed"] for per in points.values() for p in per.values()
+        ),
+    }
+
+
 def run_fleet_sweep(
     img: int,
     base: int,
@@ -972,6 +1138,22 @@ def main():
         help="skip the open-loop traffic / SLO / admission-control sweep",
     )
     ap.add_argument(
+        "--skip-batching-sweep",
+        action="store_true",
+        help="skip the continuous-batching (max_batch) sweep",
+    )
+    ap.add_argument(
+        "--batching-max-batches",
+        default="1,4,8",
+        help="comma-separated coalescer caps for the batching sweep",
+    )
+    ap.add_argument(
+        "--batch-hold-ms",
+        type=float,
+        default=2.0,
+        help="slack-gated hold window for the batching sweep (ms)",
+    )
+    ap.add_argument(
         "--skip-fleet-sweep",
         action="store_true",
         help="skip the replicated-fleet scaling sweep",
@@ -1171,6 +1353,29 @@ def main():
             f"(shed/queue goodput x{openloop['shed_vs_queue_goodput_ratio']:.2f})"
         )
 
+    batching = None
+    if not args.skip_batching_sweep:
+        batching = run_batching_sweep(
+            img, args.base, args.microbatch,
+            max_batches=tuple(int(x) for x in args.batching_max_batches.split(",")),
+            horizon_s=min(args.openloop_horizon, 1.0),
+            hold_ms=args.batch_hold_ms,
+        )
+        pts = batching["points"]
+        top = str(max(batching["load_factors"]))
+        print(
+            f"batching sweep (capacity={batching['capacity_fps']:.2f} FPS, "
+            f"deadline={batching['deadline_ms']:.0f} ms, hold={batching['hold_ms']}ms): "
+            + "  ".join(
+                f"B={mb}@{top}x: goodput={pts[str(mb)][top]['goodput_fps']:.2f} "
+                f"eff_batch={pts[str(mb)][top]['mean_effective_batch']:.2f} "
+                f"p99={pts[str(mb)][top]['latency_p99_ms']:.0f}ms"
+                for mb in batching["max_batches"]
+            )
+            + f"  batched/unbatched goodput x{batching['batched_vs_unbatched_goodput_ratio_3x']:.2f}"
+            f"  held_then_missed={batching['held_then_missed_total']}"
+        )
+
     fleet = None
     if not args.skip_fleet_sweep:
         fleet = run_fleet_sweep(
@@ -1259,6 +1464,7 @@ def main():
         "multicut_compare": multicut_compare,
         "impl_compare": impl_compare,
         "openloop": openloop,
+        "batching": batching,
         "fleet": fleet,
         "proc_fleet": proc_fleet,
         "replan_scenario": replan_scenario,

@@ -100,6 +100,22 @@ def proc_fleet_ratio_2v1(payload: dict):
     return payload.get("proc_fleet_same_load_ratio_2v1")
 
 
+def batching_ratio_3x(payload: dict):
+    """Best batched cap's goodput at top load vs ``max_batch=1``, from
+    either a full bench payload (``batching``) or a history entry."""
+    bt = payload.get("batching")
+    if isinstance(bt, dict):
+        return bt.get("batched_vs_unbatched_goodput_ratio_3x")
+    return payload.get("batching_goodput_ratio_3x")
+
+
+def batching_held_then_missed(payload: dict):
+    bt = payload.get("batching")
+    if isinstance(bt, dict):
+        return bt.get("held_then_missed_total")
+    return payload.get("batching_held_then_missed")
+
+
 def compare(baseline: dict, candidate: dict, threshold: float) -> tuple[bool, str]:
     """Returns (ok, report). ``ok`` is False only for a real regression."""
     lines = []
@@ -131,6 +147,24 @@ def compare(baseline: dict, candidate: dict, threshold: float) -> tuple[bool, st
         if gratio < 1.0 - threshold:
             ok = False
             lines.append(f"  REGRESSION: goodput-under-SLO at 1x dropped more than {threshold:.0%}")
+    # continuous-batching gates: the candidate's batched goodput at top
+    # (3x) load must hold the >= 1.0 absolute contract vs its own
+    # unbatched run (coalescing must never cost goodput — the slack gate
+    # and greedy fill under pressure make this structural, not tuned),
+    # and the slack-gated hold must never convert a meetable deadline
+    # into a miss — only when the run carries the batching sweep
+    cand_bratio = batching_ratio_3x(candidate)
+    if cand_bratio is not None:
+        lines.append(f"  batching batched/unbatched goodput@3x: x{cand_bratio:.2f}")
+        if cand_bratio < 1.0:
+            ok = False
+            lines.append("  REGRESSION: batched goodput at 3x load below the unbatched run")
+    cand_htm = batching_held_then_missed(candidate)
+    if cand_htm is not None:
+        lines.append(f"  batching held-then-missed frames: {cand_htm}")
+        if cand_htm > 0:
+            ok = False
+            lines.append("  REGRESSION: slack-gated hold converted a deadline into a miss")
     # fleet gates: 2-replica goodput at the same-load point must not
     # regress vs baseline, and the candidate's 2R/1R same-load ratio must
     # hold the >= 1.0 replication contract (the paper's two-instance
@@ -203,6 +237,15 @@ def history_entry(candidate: dict) -> dict:
         entry["openloop_p99_top_ms"] = pts.get(top, {}).get("latency_p99_ms")
         entry["openloop_shed_vs_queue_ratio"] = ol.get("shed_vs_queue_goodput_ratio")
         entry["openloop_capacity_fps"] = ol.get("capacity_fps")
+    if candidate.get("batching"):
+        bt = candidate["batching"]
+        top = str(max(bt.get("load_factors", [0])))
+        best = str(max(bt.get("max_batches", [1])))
+        entry["batching_goodput_ratio_3x"] = bt.get("batched_vs_unbatched_goodput_ratio_3x")
+        entry["batching_held_then_missed"] = bt.get("held_then_missed_total")
+        top_pt = bt.get("points", {}).get(best, {}).get(top, {})
+        entry["batching_goodput_top"] = top_pt.get("goodput_fps")
+        entry["batching_mean_effective_batch_top"] = top_pt.get("mean_effective_batch")
     if candidate.get("fleet"):
         fl = candidate["fleet"]
         entry["fleet_goodput_2r"] = fl.get("same_load_2r", {}).get("goodput_fps")

@@ -61,6 +61,7 @@ def plan(
     exhaustive_limit: int = 20000,
     descent_rounds: int = 8,
     impl: str = "xla",
+    batch: int = 1,
 ) -> PlanIR:
     """Plan ``graphs`` over ``engines``; returns the typed ``PlanIR``.
 
@@ -86,6 +87,11 @@ def plan(
     historical behaviour), ``"pallas"`` forces the fused serving kernels,
     ``"auto"`` lets the route search pick the argmin implementation per
     segment (recorded on each ``PlanSegment.impl``).
+
+    ``batch`` scores every route at that effective admission batch
+    (``nmodel`` only): per-frame amortized layer and transfer costs, the
+    knob the serving re-planner turns when the coalescer's observed
+    bucket shifts. ``batch=1`` is bit-identical to the historical plans.
     """
     from . import scheduler as _sched
 
@@ -97,6 +103,10 @@ def plan(
         raise ValueError(f"unknown impl mode {impl!r} (expected xla | auto | pallas)")
     if impl != "xla" and kind != "nmodel":
         raise ValueError(f"impl={impl!r} needs kind='nmodel' (got kind={kind!r})")
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
+    if batch > 1 and kind != "nmodel":
+        raise ValueError(f"batch={batch} needs kind='nmodel' (got kind={kind!r})")
     if isinstance(graphs, (LayerGraph,)) or hasattr(graphs, "graph"):
         graphs = [graphs]
     gs = [_as_graph(g) for g in graphs]
@@ -150,6 +160,7 @@ def plan(
             max_cuts=budget,
             route_limit=route_limit,
             impl=impl,
+            batch=batch,
         ).ir
 
     if max_cuts == "auto":

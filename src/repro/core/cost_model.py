@@ -29,6 +29,21 @@ from .graph import LayerGraph, LayerMeta
 
 SWITCH_OVERHEAD = 25e-6  # s; engine handoff latency (DeepStream/TensorRT-like)
 INEFFICIENT_DERATE = 0.5  # achieved fraction of engine flops on mis-aligned layers
+BATCH_FIXED_FRAC = 0.25  # fraction of per-frame time that is batch-amortizable
+
+
+def batch_amortization(batch: int) -> float:
+    """Per-frame time multiplier at effective batch ``batch``.
+
+    Models the fixed per-dispatch cost (kernel launch, weight traffic,
+    host sync) that a batched executable pays once instead of per frame:
+    ``amort(1) == 1.0`` exactly — batch-1 plans are bit-identical to the
+    pre-batching planner — and the curve decays toward
+    ``1 - BATCH_FIXED_FRAC`` as the bucket grows. ``MeasuredCost``
+    replaces this analytic curve with real per-bucket lowerings; this is
+    the fallback shape for analytic planning and unmeasured layers."""
+    b = max(int(batch), 1)
+    return 1.0 - BATCH_FIXED_FRAC * (1.0 - 1.0 / b)
 
 
 def _effective_flops(l: LayerMeta, engine) -> float:
@@ -49,22 +64,25 @@ def _roofline(flops: float, bytes_accessed: float, l: LayerMeta, engine) -> floa
     return max(t_c, t_m)
 
 
-def layer_time(l: LayerMeta, engine, impl: str = "xla") -> float:
+def layer_time(l: LayerMeta, engine, impl: str = "xla", batch: int = 1) -> float:
     """Analytic roofline layer time (the historical default path).
 
     ``impl="pallas_fused"`` costs marked fused blocks (``attrs["fuse"]``
     on the lead layer) with their fused analytic totals — one HBM round
     trip for the whole block — and their folded members at zero; layers
-    without a variant keep the per-layer roofline."""
+    without a variant keep the per-layer roofline. ``batch`` > 1 returns
+    the *per-frame* time at that effective batch (see
+    ``batch_amortization``); batch=1 is the historical value exactly."""
+    amort = batch_amortization(batch)
     if impl != "xla":
         fu = l.attrs.get("fuse")
         if fu is not None:
-            return _roofline(fu["flops"], fu["bytes"], l, engine)
+            return _roofline(fu["flops"], fu["bytes"], l, engine) * amort
         if "fused_into" in l.attrs:
             return 0.0
         if l.sublayers:
-            return sum(layer_time(p, engine, impl) for p in l.sublayers)
-    return _roofline(l.flops, l.bytes_accessed, l, engine)
+            return sum(layer_time(p, engine, impl, batch) for p in l.sublayers)
+    return _roofline(l.flops, l.bytes_accessed, l, engine) * amort
 
 
 def transfer_time(nbytes: float, engine) -> float:
@@ -90,7 +108,7 @@ class CostProvider:
 
     name = "base"
 
-    def layer_time(self, l: LayerMeta, engine, impl: str = "xla") -> float:
+    def layer_time(self, l: LayerMeta, engine, impl: str = "xla", batch: int = 1) -> float:
         raise NotImplementedError
 
     def available(self, l: LayerMeta, impl: str = "xla") -> bool:
@@ -105,8 +123,8 @@ class AnalyticCost(CostProvider):
 
     name = "analytic"
 
-    def layer_time(self, l: LayerMeta, engine, impl: str = "xla") -> float:
-        return layer_time(l, engine, impl)
+    def layer_time(self, l: LayerMeta, engine, impl: str = "xla", batch: int = 1) -> float:
+        return layer_time(l, engine, impl, batch)
 
 
 ANALYTIC = AnalyticCost()
@@ -184,20 +202,32 @@ class MeasuredCost(CostProvider):
             }
         return report
 
-    def _key(self, l: LayerMeta, engine, impl: str = "xla") -> str:
+    def _key(self, l: LayerMeta, engine, impl: str = "xla", batch: int = 1) -> str:
         shape = "x".join(str(d) for d in l.in_shape)
         a = l.attrs
         sig = f"k{a.get('kernel', 1)}s{a.get('stride', 1)}p{a.get('padding', 0)}"
         base = f"{l.kind}|{shape}|{sig}|c{l.out_shape[-1]}|{engine.name}|{self.dtype}"
-        return base if impl == "xla" else f"{base}|{impl}"
+        if impl != "xla":
+            base = f"{base}|{impl}"
+        # per-bucket entries form the amortization curve in the JSON cache;
+        # batch=1 keys stay byte-identical to the pre-batching format
+        return base if batch == 1 else f"{base}|b{batch}"
 
-    def _measure(self, l: LayerMeta) -> tuple[float, float]:
+    @staticmethod
+    def _batched_shape(in_shape, batch: int) -> tuple:
+        shape = tuple(in_shape)
+        if batch == 1 or not shape:
+            return shape
+        return (shape[0] * batch,) + shape[1:]
+
+    def _measure(self, l: LayerMeta, batch: int = 1) -> tuple[float, float]:
         from .profiler import _conv_cost, _elementwise_cost
 
         self.measure_count += 1
+        shape = self._batched_shape(l.in_shape, batch)
         if l.kind in self._MEASURABLE:
-            return _conv_cost(
-                tuple(l.in_shape),
+            flops, bytes_ = _conv_cost(
+                shape,
                 l.attrs.get("kernel", 1),
                 l.attrs.get("stride", 1),
                 l.attrs.get("padding", 0),
@@ -205,52 +235,59 @@ class MeasuredCost(CostProvider):
                 l.kind == "deconv",
                 self.dtype,
             )
-        return _elementwise_cost(l.kind, tuple(l.in_shape), self.dtype)
+        else:
+            flops, bytes_ = _elementwise_cost(l.kind, shape, self.dtype)
+        # per-frame numbers at this bucket: weight traffic is counted once
+        # by cost_analysis, so dividing by batch yields a real (sub-linear)
+        # amortization curve rather than the analytic approximation
+        return flops / batch, bytes_ / batch
 
-    def _measure_fused(self, l: LayerMeta, fu: dict) -> tuple[float, float]:
+    def _measure_fused(self, l: LayerMeta, fu: dict, batch: int = 1) -> tuple[float, float]:
         from .profiler import _fused_cost, _sppf_cost
 
         self.measure_count += 1
+        shape = self._batched_shape(l.in_shape, batch)
         if fu.get("kind") == "pool":
             # SPPF pool pyramid + concat fused into one region
-            return _sppf_cost(
-                tuple(l.in_shape), fu.get("window", 5), fu.get("span", 3), self.dtype
+            flops, bytes_ = _sppf_cost(shape, fu.get("window", 5), fu.get("span", 3), self.dtype)
+        else:
+            flops, bytes_ = _fused_cost(
+                shape,
+                l.attrs.get("kernel", 1),
+                l.attrs.get("stride", 1),
+                l.attrs.get("padding", 0),
+                l.out_shape[-1],
+                fu.get("kind", l.kind) == "deconv",
+                fu.get("norm", "none"),
+                fu.get("act", "none"),
+                self.dtype,
             )
-        return _fused_cost(
-            tuple(l.in_shape),
-            l.attrs.get("kernel", 1),
-            l.attrs.get("stride", 1),
-            l.attrs.get("padding", 0),
-            l.out_shape[-1],
-            fu.get("kind", l.kind) == "deconv",
-            fu.get("norm", "none"),
-            fu.get("act", "none"),
-            self.dtype,
-        )
+        return flops / batch, bytes_ / batch
 
-    def layer_time(self, l: LayerMeta, engine, impl: str = "xla") -> float:
+    def layer_time(self, l: LayerMeta, engine, impl: str = "xla", batch: int = 1) -> float:
+        batch = max(int(batch), 1)
         if not self.available(l, impl):
-            return layer_time(l, engine, impl)
+            return layer_time(l, engine, impl, batch)
         if l.sublayers:
-            return sum(self.layer_time(p, engine, impl) for p in l.sublayers)
+            return sum(self.layer_time(p, engine, impl, batch) for p in l.sublayers)
         if impl != "xla":
             if "fused_into" in l.attrs:
                 return 0.0
             fu = l.attrs.get("fuse")
             if fu is not None:
-                key = self._key(l, engine, impl)
+                key = self._key(l, engine, impl, batch)
                 if key in self._cache:
                     self.hits += 1
                     return self._cache[key]
-                flops, bytes_ = self._measure_fused(l, fu)
+                flops, bytes_ = self._measure_fused(l, fu, batch)
                 t = _roofline(flops or fu["flops"], bytes_ or fu["bytes"], l, engine)
                 self._cache[key] = t
                 return t
-        key = self._key(l, engine)
+        key = self._key(l, engine, batch=batch)
         if key in self._cache:
             self.hits += 1
             return self._cache[key]
-        flops, bytes_ = self._measure(l)
+        flops, bytes_ = self._measure(l, batch)
         t = _roofline(flops or l.flops, bytes_ or l.bytes_accessed, l, engine)
         self._cache[key] = t
         return t
@@ -283,10 +320,10 @@ class BlendedCost(CostProvider):
     def available(self, l: LayerMeta, impl: str = "xla") -> bool:
         return self.measured.available(l, impl)
 
-    def layer_time(self, l: LayerMeta, engine, impl: str = "xla") -> float:
+    def layer_time(self, l: LayerMeta, engine, impl: str = "xla", batch: int = 1) -> float:
         if self.measured.available(l, impl):
-            return self.measured.layer_time(l, engine, impl)
-        return self.analytic.layer_time(l, engine, impl)
+            return self.measured.layer_time(l, engine, impl, batch)
+        return self.analytic.layer_time(l, engine, impl, batch)
 
     def save(self, path: str | None = None) -> str:
         return self.measured.save(path)
@@ -349,16 +386,22 @@ class OnlineCost(CostProvider):
             den = self._den.get(engine_name, 0.0)
             return self._num[engine_name] / den if den > 0 else 1.0
 
-    def scale_for(self, engine_name: str, impl: str = "xla") -> float:
-        """Per-(engine, impl) calibration: non-xla implementations get
-        their own drift channel (``"engine|impl"`` keys, fed by the
-        executor when a segment ran that variant) and fall back to the
-        engine's plain scale until one is observed — drift in one variant
-        can flip the planner's impl choice without touching the other."""
-        if impl != "xla":
-            key = f"{engine_name}|{impl}"
-            if key in self._num:
-                return self.scale(key)
+    def scale_for(self, engine_name: str, impl: str = "xla", batch: int = 1) -> float:
+        """Per-(engine, impl, bucket) calibration: non-xla implementations
+        get their own drift channel (``"engine|impl"`` keys, fed by the
+        executor when a segment ran that variant), and batched segments get
+        per-bucket channels (``"...|b{bucket}"``) — the observed-vs-expected
+        ratio at each bucket is its own calibration, so a mis-modelled
+        amortization curve surfaces as bucket-channel drift. Fallback
+        ladder: exact (impl, bucket) -> (engine, bucket) -> impl -> plain
+        engine scale."""
+        base = f"{engine_name}|{impl}" if impl != "xla" else engine_name
+        if batch > 1:
+            for key in (f"{base}|b{batch}", f"{engine_name}|b{batch}"):
+                if key in self._num:
+                    return self.scale(key)
+        if impl != "xla" and base in self._num:
+            return self.scale(base)
         return self.scale(engine_name)
 
     def calibrated(self, engine_names) -> bool:
@@ -392,8 +435,10 @@ class OnlineCost(CostProvider):
                 self._den[name] = den
         return self
 
-    def layer_time(self, l: LayerMeta, engine, impl: str = "xla") -> float:
-        return self.base.layer_time(l, engine, impl) * self.scale_for(engine.name, impl)
+    def layer_time(self, l: LayerMeta, engine, impl: str = "xla", batch: int = 1) -> float:
+        return self.base.layer_time(l, engine, impl, batch) * self.scale_for(
+            engine.name, impl, batch
+        )
 
     def available(self, l: LayerMeta, impl: str = "xla") -> bool:
         return self.base.available(l, impl)
@@ -552,10 +597,22 @@ def segment_cost(
     allow_fallback=True,
     provider: CostProvider | None = None,
     impl: str = "xla",
+    batch: int = 1,
 ) -> SegmentCost:
+    """Per-frame segment cost at effective batch ``batch``: layer times
+    are the provider's per-frame amortized numbers and each handoff moves
+    the whole bucket's activations once (``bytes * batch`` through the
+    link, one SWITCH_OVERHEAD) divided back per frame — so batching
+    amortizes the fixed engine-switch latency exactly where the serving
+    executor does. batch=1 reproduces the historical costs bit-for-bit."""
     if provider is None:
         provider = ANALYTIC
+    batch = max(int(batch), 1)
     eff = _effective_impls(graph, lo, hi, impl)
+
+    def xfer(nbytes: float) -> float:
+        return transfer_time(nbytes * batch, engine) / batch
+
     engine_busy = peer_busy = transfer = 0.0
     runs = 0
     prev_illegal = False
@@ -564,20 +621,20 @@ def segment_cost(
         li = "xla" if eff is None else eff[i - lo]
         ill = allow_fallback and is_illegal(l, engine)
         if ill:
-            peer_busy += provider.layer_time(l, peer, li)
+            peer_busy += provider.layer_time(l, peer, li, batch)
             if not prev_illegal:
                 runs += 1
                 # hand the activation to the peer...
                 prev_bytes = graph[i - 1].boundary_bytes if i > lo else l.boundary_bytes
-                transfer += transfer_time(prev_bytes, engine)
+                transfer += xfer(prev_bytes)
         else:
-            engine_busy += provider.layer_time(l, engine, li)
+            engine_busy += provider.layer_time(l, engine, li, batch)
             if prev_illegal:
                 # ...and back
-                transfer += transfer_time(graph[i - 1].boundary_bytes, engine)
+                transfer += xfer(graph[i - 1].boundary_bytes)
         prev_illegal = ill
     if prev_illegal:
-        transfer += transfer_time(graph[hi - 1].boundary_bytes, engine)
+        transfer += xfer(graph[hi - 1].boundary_bytes)
     return SegmentCost(
         lo=lo,
         hi=hi,
@@ -596,11 +653,12 @@ def graph_time(
     allow_fallback=True,
     provider: CostProvider | None = None,
     impl: str = "xla",
+    batch: int = 1,
 ) -> SegmentCost:
     peer = peer or engine
     return segment_cost(
         graph, 0, len(graph), engine, peer,
-        allow_fallback=allow_fallback, provider=provider, impl=impl,
+        allow_fallback=allow_fallback, provider=provider, impl=impl, batch=batch,
     )
 
 
@@ -623,22 +681,24 @@ class SegmentCostCache:
 
     def segment(
         self, mi: int, graph: LayerGraph, lo: int, hi: int, engine, peer, allow_fallback,
-        impl: str = "xla",
+        impl: str = "xla", batch: int = 1,
     ) -> SegmentCost:
-        key = (mi, lo, hi, engine.name, allow_fallback, impl)
+        key = (mi, lo, hi, engine.name, allow_fallback, impl, batch)
         c = self._segments.get(key)
         if c is None:
             c = segment_cost(
-                graph, lo, hi, engine, peer, allow_fallback, provider=self.provider, impl=impl
+                graph, lo, hi, engine, peer, allow_fallback,
+                provider=self.provider, impl=impl, batch=batch,
             )
             self._segments[key] = c
         return c
 
-    def transfer(self, mi: int, graph: LayerGraph, p: int, engine) -> float:
-        key = (mi, p, engine.name)
+    def transfer(self, mi: int, graph: LayerGraph, p: int, engine, batch: int = 1) -> float:
+        key = (mi, p, engine.name, batch)
         x = self._transfers.get(key)
         if x is None:
-            x = transfer_time(partition_boundary_bytes(graph, p), engine)
+            # whole bucket crosses once, amortized back per frame
+            x = transfer_time(partition_boundary_bytes(graph, p) * batch, engine) / batch
             self._transfers[key] = x
         return x
 

@@ -93,6 +93,9 @@ class PlanIR:
     # a span contains fuse groups), or "auto" (per-segment argmin over
     # both — structurally never worse than "xla"). Re-planners inherit it.
     impl_mode: str = "xla"
+    # effective admission batch the routes were scored at (continuous
+    # batching: the coalescer's steady-state bucket). 1 = per-frame costs.
+    batch: int = 1
 
     def __post_init__(self):
         if len(self.segments) != len(self.models):
@@ -235,6 +238,7 @@ class PlanIR:
                 "revision": self.revision,
                 "cut_budget": self.cut_budget,
                 "impl_mode": self.impl_mode,
+                "batch": self.batch,
             },
             indent=2,
         )
@@ -270,6 +274,7 @@ class PlanIR:
             revision=int(d.get("revision", 0)),
             cut_budget=int(d.get("cut_budget", 0)),
             impl_mode=d.get("impl_mode", "xla"),
+            batch=int(d.get("batch", 1)),
         )
 
 
@@ -284,6 +289,7 @@ def make_plan_ir(
     graphs: Sequence | None = None,
     cut_budget: int = 0,
     impl_mode: str = "xla",
+    batch: int = 1,
 ) -> PlanIR:
     """Build a PlanIR from per-model ``(engine, lo, hi[, expected_cost[,
     impl]])`` span lists — the one constructor every scheduler emit path
@@ -326,6 +332,7 @@ def make_plan_ir(
         kind=kind,
         cut_budget=cut_budget,
         impl_mode=impl_mode,
+        batch=batch,
     )
 
 
@@ -354,6 +361,7 @@ def translate_ir(ir: PlanIR, graphs) -> PlanIR:
         graphs=graphs,
         cut_budget=ir.cut_budget,
         impl_mode=ir.impl_mode,
+        batch=ir.batch,
     )
 
 

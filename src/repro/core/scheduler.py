@@ -389,6 +389,7 @@ class NModelPlan:
     ir: PlanIR | None = None  # the typed plan the serve stack consumes
     cuts: list[tuple[int, ...]] = dataclasses.field(default_factory=list)  # full k-cut vectors
     max_cuts: int = 1  # the cut budget the search ran with
+    batch: int = 1  # effective admission batch the routes were scored at
 
     @property
     def cycle_time(self) -> float:
@@ -435,12 +436,14 @@ class _RouteCoster:
     route costs are bit-identical to the old (e1, e2, c1, c2, x) tuples.
     """
 
-    def __init__(self, graphs, engines, allow_fallback, flex_idx, provider=None, impl="xla"):
+    def __init__(self, graphs, engines, allow_fallback, flex_idx, provider=None, impl="xla",
+                 batch=1):
         self.graphs = graphs
         self.engines = engines
         self.allow_fallback = allow_fallback
         self.flex_idx = flex_idx
         self.impl_mode = impl
+        self.batch = max(int(batch), 1)  # effective admission batch the DP scores at
         self.cache = SegmentCostCache(provider)
         self._routes: dict[tuple[int, RouteSpec], RouteCost] = {}
         # per-(model, span, engine) winning implementation under "auto"
@@ -456,6 +459,7 @@ class _RouteCoster:
             self.engines[self.flex_idx],
             self.allow_fallback and e != self.flex_idx,
             impl,
+            self.batch,
         )
 
     def seg(self, i: int, lo: int, hi: int, e: int) -> SegmentCost:
@@ -482,7 +486,7 @@ class _RouteCoster:
         return self._impl_choice.get((i, lo, hi, e), "xla")
 
     def xfer(self, i: int, p: int, e_prev: int) -> float:
-        return self.cache.transfer(i, self.graphs[i], p, self.engines[e_prev])
+        return self.cache.transfer(i, self.graphs[i], p, self.engines[e_prev], self.batch)
 
     def route(self, i: int, spec: RouteSpec) -> RouteCost:
         key = (i, spec)
@@ -761,6 +765,7 @@ def _nmodel_schedule_impl(
     max_cuts: int = 1,
     route_limit: int = 512,
     impl: str = "xla",
+    batch: int = 1,
 ) -> NModelPlan:
     """Plan N staged models over E engines, up to ``max_cuts`` partition
     points per model.
@@ -822,11 +827,15 @@ def _nmodel_schedule_impl(
         raise ValueError(f"max_cuts must be >= 1, got {max_cuts}")
     if impl not in ("xla", "auto", "pallas"):
         raise ValueError(f"unknown impl mode {impl!r} (expected xla | auto | pallas)")
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
     if provider is None:
         provider = ANALYTIC
     E = len(engines)
     flex_idx = _flex_engine_index(engines)
-    coster = _RouteCoster(graphs, engines, allow_fallback, flex_idx, provider, impl=impl)
+    coster = _RouteCoster(
+        graphs, engines, allow_fallback, flex_idx, provider, impl=impl, batch=batch
+    )
 
     pinned: list[RouteSpec | None] = [None] * len(graphs)
     if fixed is not None:
@@ -946,6 +955,8 @@ def _nmodel_schedule_impl(
         )
     notes.append(f"fallback_runs={n_fallback}")
     notes.append(f"search={mode} cost={provider.name}")
+    if batch > 1:
+        notes.append(f"batch={batch} (per-frame amortized costs)")
     if max_cuts > 1:
         notes.append(f"max_cuts={max_cuts}" + (" (route candidates capped)" if capped else ""))
     if impl != "xla":
@@ -964,6 +975,7 @@ def _nmodel_schedule_impl(
         graphs=graphs,
         cut_budget=max_cuts,
         impl_mode=impl,
+        batch=batch,
     )
     sched = Schedule(
         kind="nmodel",
@@ -992,6 +1004,7 @@ def _nmodel_schedule_impl(
         ir=ir,
         cuts=[tuple(spec.cuts) for spec in best_vec],
         max_cuts=max_cuts,
+        batch=batch,
     )
 
 

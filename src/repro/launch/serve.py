@@ -37,7 +37,7 @@ from ..configs import get_arch, build_model
 
 def run_streams(args) -> None:
     from ..core.cost_model import OnlineCost, make_cost_provider
-    from ..serve import ReplanConfig, TrafficConfig, build_server
+    from ..serve import BatchConfig, ReplanConfig, TrafficConfig, build_server
 
     provider = make_cost_provider(
         args.cost, cache_path=args.cost_cache, calibration_path=args.calibration_cache
@@ -73,6 +73,9 @@ def run_streams(args) -> None:
         impl=args.impl,
         max_queue=args.queue_depth,
         microbatch=args.microbatch,
+        batching=BatchConfig(max_batch=args.max_batch, hold_ms=args.batch_hold_ms)
+        if args.max_batch > 1
+        else None,
         dispatch=args.dispatch,
         jit_segments=not args.no_jit_segments,
         deadline_ms=args.deadline_ms if open_loop or args.deadline_ms else None,
@@ -96,6 +99,11 @@ def run_streams(args) -> None:
         f"search={plan.search} cost={plan.cost_provider} granularity={args.granularity} "
         f"max_cuts={args.max_cuts} (budget={plan.cut_budget})"
     )
+    if args.max_batch > 1:
+        print(
+            f"[serve] continuous batching: max_batch={args.max_batch} "
+            f"hold={args.batch_hold_ms}ms (norm={args.norm}; batch-norm models never coalesce)"
+        )
     if args.workers:
         print(
             f"[serve] fleet: {args.workers} worker processes "
@@ -173,6 +181,21 @@ def main():
     ap.add_argument("--img", type=int, default=64)
     ap.add_argument("--base", type=int, default=8)
     ap.add_argument("--microbatch", type=int, default=2)
+    ap.add_argument(
+        "--max-batch",
+        type=int,
+        default=1,
+        help="continuous batching: coalesce frames across streams of a batch-independent "
+        "model into power-of-two buckets up to this size (1 = off; batch-norm models "
+        "never coalesce — use --norm instance)",
+    )
+    ap.add_argument(
+        "--batch-hold-ms",
+        type=float,
+        default=0.0,
+        help="longest a partial batch bucket may hold for co-riders; frames only wait "
+        "when every member's SLO slack covers the batched service time plus this window",
+    )
     ap.add_argument("--queue-depth", type=int, default=4)
     ap.add_argument(
         "--cost", choices=("analytic", "measured", "blended", "online"), default="analytic"

@@ -493,10 +493,31 @@ class YOLOv8(Module):
             def conv1_stage(sname, sub, ci, co, read, write, live):
                 cm = conv_meta(0, f"{name}.{sname}", batch, h, h, ci, co, 1, 1, 0, dtype_bytes)
                 cm.boundary_bytes += live
+                # the bare 1x1 head convs (box3/cls3) are span-1 pallas_fused
+                # candidates too: conv+bias in one kernel, no norm/act, so
+                # the fused path is exact at any batch (no batch-norm caveat)
+                cm.attrs["fuse"] = {
+                    "span": 1,
+                    "flops": cm.flops,
+                    "bytes": dtype_bytes
+                    * (math.prod(cm.in_shape) + math.prod(cm.out_shape))
+                    + 4.0 * cm.params,
+                    "kind": "conv",
+                    "norm": "none",
+                    "act": "none",
+                }
 
                 def fn(p, s, key=name, sub=sub, ci=ci, co=co, r=read, w=write):
                     s = dict(s)
-                    s[w] = Conv2D(ci, co, 1, 1, padding=0)(p[key][sub], s[r])
+                    if impl == "pallas_fused":
+                        from ..kernels.fused.ops import conv_block
+
+                        s[w] = conv_block(
+                            s[r], p[key][sub]["w"], b=p[key][sub]["b"],
+                            stride=1, padding=0, norm="none", act="none",
+                        )
+                    else:
+                        s[w] = Conv2D(ci, co, 1, 1, padding=0)(p[key][sub], s[r])
                     return s
 
                 stages.append((f"{name}.{sname}", end_stage([cm]), fn))

@@ -3,6 +3,7 @@
 # drift-watching Replanner. `build_server` is the one-call facade; the
 # open-loop pieces (traffic, SLOs, admission) live in .traffic/.admission.
 from .admission import ADMIT, DROP, SHED_RES, SHED_ROUTE, AdmissionConfig, subsample_frame
+from .batching import BatchConfig, bucket_for
 from .demo import build_pix_yolo_serving, build_replanner, merge_flags_for
 from .executor import Completion, Flight, SegmentObservation, StreamExecutor, SwapEvent
 from .facade import ServerBundle, build_server
@@ -13,6 +14,7 @@ from .metrics import (
     SwapStall,
     TickStats,
     TierMetrics,
+    engine_wait_summary,
     fleet_report,
     merge_metrics,
     metrics_from_payload,

@@ -1,0 +1,81 @@
+"""Deadline-aware continuous batching configuration.
+
+``BatchConfig`` is the one knob bundle behind the serving stack's
+cross-stream coalescer (``StreamExecutor._admit``): ``max_batch`` bounds
+the bucket ladder (powers of two, the shapes the executor pre-compiles
+batched executables for), ``hold_ms`` caps how long a partial bucket may
+wait for co-riders, and ``min_slack_factor`` is the deadline-safety
+margin — a frame only waits when its SLO slack exceeds that multiple of
+the expected batched service time plus the hold window, so batching
+never converts a meetable deadline into a miss. ``max_batch=1`` (the
+default) disables coalescing entirely and the executor is bit-identical
+to the pre-batching behaviour.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+def bucket_for(n: int, max_batch: int) -> int:
+    """Smallest power-of-two bucket >= ``n``, capped at ``max_batch``."""
+    n = max(int(n), 1)
+    b = 1
+    while b < n and b < max_batch:
+        b <<= 1
+    return min(b, max_batch) if n <= max_batch else max_batch
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchConfig:
+    """Continuous-batching policy for the serving executor.
+
+    * ``max_batch`` — largest coalesced flight (1 disables batching).
+    * ``hold_ms`` — longest a partial bucket may hold for more frames.
+    * ``min_slack_factor`` — a member may only hold when its SLO slack
+      exceeds ``min_slack_factor * expected_batched_service + hold``.
+    """
+
+    max_batch: int = 1
+    hold_ms: float = 0.0
+    min_slack_factor: float = 1.5
+
+    def __post_init__(self):
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.hold_ms < 0:
+            raise ValueError(f"hold_ms must be >= 0, got {self.hold_ms}")
+        if self.min_slack_factor < 0:
+            raise ValueError(
+                f"min_slack_factor must be >= 0, got {self.min_slack_factor}"
+            )
+
+    @property
+    def enabled(self) -> bool:
+        return self.max_batch > 1
+
+    @property
+    def hold_s(self) -> float:
+        return self.hold_ms * 1e-3
+
+    @property
+    def buckets(self) -> tuple[int, ...]:
+        """The bucket ladder: powers of two up to ``max_batch`` (always
+        including ``max_batch`` itself so every admissible group has an
+        exact executable)."""
+        out = []
+        b = 1
+        while b < self.max_batch:
+            out.append(b)
+            b <<= 1
+        out.append(self.max_batch)
+        return tuple(out)
+
+    def bucket_for(self, n: int) -> int:
+        return bucket_for(n, self.max_batch)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict | None) -> "BatchConfig":
+        return cls(**d) if d else cls()

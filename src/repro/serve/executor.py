@@ -77,6 +77,7 @@ import jax.numpy as jnp
 from ..core.pipeline import StagedModel, TickLog
 from ..core.plan_ir import PlanIR, PlanSegment, ir_from_routes
 from ..core.scheduler import NModelPlan
+from .batching import BatchConfig
 from .metrics import TickStats
 from .streams import FrameQueue, StreamSpec
 
@@ -100,6 +101,10 @@ class Flight:
     route: tuple[PlanSegment, ...]  # snapshot of the plan at admission
     revision: int  # plan revision the flight was admitted under
     degrade: int = 0  # level 2 flights run the degraded (single-segment) route
+    valid: int = 0  # real frames in the (possibly padded) state; 0 = all
+    bucket: int = 0  # padded leading-axis extent (the compiled bucket); 0 = valid
+    held: bool = False  # the coalescer delayed this flight waiting for co-riders
+    t_issue: float = 0.0  # admission wall clock (feeds the service-time EMA)
 
 
 @dataclasses.dataclass
@@ -111,6 +116,8 @@ class Completion:
     tick_done: int
     latency_s: float  # wall-clock submit -> completion
     degrade: int = 0  # admission degrade level the frame ran under
+    batch: int = 1  # real frames in the flight this frame rode in (occupancy)
+    held: bool = False  # the flight was held by the coalescer before running
 
 
 @dataclasses.dataclass(frozen=True)
@@ -127,6 +134,7 @@ class SegmentObservation:
     batch: int  # leading-axis frames in the flight (merged groups > 1)
     revision: int  # plan revision the segment ran under
     impl: str = "xla"  # implementation variant the segment ran with
+    bucket: int = 0  # padded bucket the segment executed at (0 = batch)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -136,6 +144,15 @@ class SwapEvent:
     partitions: tuple[int, ...]  # first cut per model (legacy view)
     expected_cycle: float
     cuts: tuple[tuple[int, ...], ...] = ()  # full k-cut vectors per model
+
+
+def _leading(state) -> int:
+    """Leading-axis extent of a state pytree (the executed batch bucket)."""
+    leaves = jax.tree.leaves(state)
+    if not leaves:
+        return 1
+    shape = jnp.shape(leaves[0]) if not hasattr(leaves[0], "shape") else leaves[0].shape
+    return int(shape[0]) if shape else 1
 
 
 def _as_plan_ir(plan, engine_names=None) -> PlanIR:
@@ -168,6 +185,7 @@ class StreamExecutor:
         profile_every: int = 0,
         on_segment: Callable[[SegmentObservation], None] | None = None,
         segment_delay_fn: Callable[[PlanSegment], float] | None = None,
+        batching: BatchConfig | None = None,
     ):
         ir = _as_plan_ir(plan, engine_names)
         if len(models) != ir.n_models:
@@ -227,16 +245,29 @@ class StreamExecutor:
         # donation needs backend support; the CPU client ignores donated
         # buffers (and warns), so only donate segment state buffers off-CPU
         self._donate = jax.default_backend() not in ("cpu",)
-        # keyed by (model, lo, hi, impl): hot-swapped plans whose spans
-        # (and implementation bindings) coincide with an old plan's reuse
-        # the same (possibly compiled) runner
-        self._seg_fns: dict[tuple[int, int, int, str], Callable] = {}
+        # keyed by (model, lo, hi, impl, bucket): hot-swapped plans whose
+        # spans (and implementation bindings) coincide with an old plan's
+        # reuse the same (possibly compiled) runner; the bucket key gives
+        # every batch size its own warmed executable so steady-state
+        # batched serving never recompiles
+        self._seg_fns: dict[tuple[int, int, int, str, int], Callable] = {}
         # degraded single-segment routes, keyed (model, plan revision)
         self._degraded_routes: dict[tuple[int, int], tuple[PlanSegment, ...]] = {}
         # per-model stream admission order: strictly tier-first (round-robin
         # within a tier); identical to plain round-robin when no stream
         # carries an SLO, so closed-loop behaviour is unchanged
         self._tiers = [s.tier for s in streams]
+        # continuous batching (coalescer) state
+        self.batching = batching or BatchConfig()
+        self._hold_since: dict[int, float] = {}  # model -> wall clock hold start
+        self._held_pending: set[int] = set()  # models with a hold in progress
+        # observed admission->completion service time EMA per (model, bucket):
+        # the self-calibrating "expected batched segment time" the hold
+        # decision compares slack against
+        self._svc_ema: dict[tuple[int, int], float] = {}
+        # per-engine host-time breakdown for the current tick (satellite
+        # diagnostic): engine index -> [issue_s, transfer_s, resolve_s]
+        self._wait_acc: dict[int, list[float]] = {}
 
     # -- submission ---------------------------------------------------------
 
@@ -338,25 +369,60 @@ class StreamExecutor:
         for mi, segs in enumerate(new_ir.segments):
             model = self.models[mi]
             for _, struct in self._state_structs[mi]:
-                state = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), struct)
-                for seg in segs:
-                    impl = getattr(seg, "impl", "xla")
-                    key = (mi, seg.lo, seg.hi, impl)
-                    if key not in self._seg_fns:
-                        self._seg_fns[key] = self._make_runner(mi, seg.lo, seg.hi, impl)
-                    state = self._seg_fns[key](model.params, state)
-                    warmed += 1
-                jax.block_until_ready(state)
+                for bstruct in self._warm_structs(mi, struct):
+                    bucket = _leading(bstruct)
+                    state = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), bstruct)
+                    for seg in segs:
+                        impl = getattr(seg, "impl", "xla")
+                        key = (mi, seg.lo, seg.hi, impl, bucket)
+                        if key not in self._seg_fns:
+                            self._seg_fns[key] = self._make_runner(mi, seg.lo, seg.hi, impl)
+                        state = self._seg_fns[key](model.params, state)
+                        warmed += 1
+                    jax.block_until_ready(state)
         return warmed
+
+    def _warm_structs(self, mi: int, struct):
+        """The state structs a plan warmup must compile for: the seen
+        struct itself plus — for models the coalescer may batch — every
+        bucket-scaled variant of its single-frame shapes, so a plan swap
+        lands with all bucket executables warm and steady-state batched
+        serving never compiles on the hot path."""
+        out = [struct]
+        bc = self.batching
+        if bc.enabled and self.merge_batches[mi] and _leading(struct) == 1:
+            for b in bc.buckets:
+                if b == 1:
+                    continue
+                out.append(
+                    jax.tree.map(
+                        lambda s, b=b: jax.ShapeDtypeStruct((b,) + tuple(s.shape[1:]), s.dtype),
+                        struct,
+                    )
+                )
+        return out
 
     # -- execution ----------------------------------------------------------
 
-    def _block(self, x):
-        """block_until_ready with the wait charged to this tick's stats."""
+    def _block(self, x, engine: int | None = None):
+        """block_until_ready with the wait charged to this tick's stats
+        (and, when ``engine`` is given, to that engine's resolve-wait in
+        the per-engine breakdown)."""
         t0 = time.perf_counter()
         x = jax.block_until_ready(x)
-        self._blocked_s += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        self._blocked_s += dt
+        if engine is not None:
+            self._charge_wait(engine, 2, dt)
         return x
+
+    def _charge_wait(self, engine: int, slot: int, dt: float):
+        """Accrue host time to one engine's (issue, transfer, resolve)
+        breakdown for the current tick."""
+        acc = self._wait_acc.get(engine)
+        if acc is None:
+            acc = self._wait_acc[engine] = [0.0, 0.0, 0.0]
+        acc[slot] += dt
 
     def _make_runner(self, mi: int, lo: int, hi: int, impl: str = "xla") -> Callable:
         model = self.models[mi]
@@ -393,9 +459,9 @@ class StreamExecutor:
             self._degraded_routes[key] = route
         return route
 
-    def _segment_runner(self, mi: int, seg: PlanSegment) -> Callable:
+    def _segment_runner(self, mi: int, seg: PlanSegment, bucket: int = 1) -> Callable:
         impl = getattr(seg, "impl", "xla")
-        key = (mi, seg.lo, seg.hi, impl)
+        key = (mi, seg.lo, seg.hi, impl, bucket)
         fn = self._seg_fns.get(key)
         if fn is None:
             fn = self._make_runner(mi, seg.lo, seg.hi, impl)
@@ -411,9 +477,13 @@ class StreamExecutor:
         eng = seg.engine
         t0 = time.perf_counter()
         state = self.place_fns[eng](flight.state)
-        flight.state = self._segment_runner(flight.model_index, seg)(
+        t1 = time.perf_counter()
+        self._charge_wait(eng, 1, t1 - t0)
+        bucket = flight.bucket or flight.valid or _leading(state)
+        flight.state = self._segment_runner(flight.model_index, seg, bucket)(
             self.models[flight.model_index].params, state
         )
+        self._charge_wait(eng, 0, time.perf_counter() - t1)
         d = 0.0
         if self.segment_delay_fn is not None:
             d = self.segment_delay_fn(seg)
@@ -435,7 +505,7 @@ class StreamExecutor:
             )
         )
         if self._profiling_tick:
-            self._block(flight.state)
+            self._block(flight.state, engine=eng)
             obs = SegmentObservation(
                 tick=self.tick_count,
                 model_index=flight.model_index,
@@ -449,20 +519,35 @@ class StreamExecutor:
                 batch=sum(m.size for m in flight.members),
                 revision=flight.revision,
                 impl=getattr(seg, "impl", "xla"),
+                bucket=bucket,
             )
             self.segment_obs.append(obs)
             if self.on_segment is not None:
                 self.on_segment(obs)
         elif self.dispatch == "serialized":
-            self._block(flight.state)
+            self._block(flight.state, engine=eng)
 
     def _complete(self, flight: Flight):
         model = self.models[flight.model_index]
-        out = self._block(model.finalize(flight.state))
+        last_eng = flight.route[-1].engine if flight.route else None
+        out = self._block(model.finalize(flight.state), engine=last_eng)
         now = time.perf_counter()
-        if len(flight.members) == 1:
+        valid = flight.valid or sum(m.size for m in flight.members)
+        if flight.t_issue:
+            # fold this flight's admission->completion wall into the
+            # per-(model, bucket) service EMA the coalescer's hold
+            # decision consults
+            key = (flight.model_index, flight.bucket or valid)
+            svc = now - flight.t_issue
+            prev = self._svc_ema.get(key)
+            self._svc_ema[key] = svc if prev is None else 0.7 * prev + 0.3 * svc
+        if len(flight.members) == 1 and not (flight.bucket and flight.bucket > valid):
             sliced = [out]
         else:
+            # padded lanes (bucket > valid) fall off here: member slices
+            # only ever index [0, valid), so the zero-filled pad rows are
+            # never observable in any completion — bit-exactness vs
+            # per-frame execution is a slicing invariant, not a masking op
             off, sliced = 0, []
             for m in flight.members:
                 o = off
@@ -480,6 +565,8 @@ class StreamExecutor:
                     tick_done=self.tick_count,
                     latency_s=now - m.t_submit,
                     degrade=m.degrade,
+                    batch=valid,
+                    held=flight.held,
                 )
             )
 
@@ -491,29 +578,122 @@ class StreamExecutor:
         if key not in [k for k, _ in known]:
             known.append((key, struct))
 
+    def expected_service(self, mi: int, bucket: int) -> float:
+        """Observed admission->completion wall EMA for (model, bucket) —
+        the coalescer's self-calibrating estimate of what riding a batch
+        of that size costs. Falls back to the largest smaller bucket seen
+        (batched service is monotone-ish in bucket), 0.0 before any
+        observation (hold decisions then bound only by the hold window)."""
+        t = self._svc_ema.get((mi, bucket))
+        if t is not None:
+            return t
+        seen = [b for (m, b), _ in self._svc_ema.items() if m == mi and b < bucket]
+        return self._svc_ema[(mi, max(seen))] if seen else 0.0
+
+    def _should_hold(self, mi: int, cands: list[tuple[int, tuple]], now: float) -> bool:
+        """The slack-driven hold decision for a partial bucket: wait for
+        co-riders only when *every* waiting member's SLO slack clears the
+        expected batched service time (scaled by ``min_slack_factor``)
+        plus the full hold window — so a hold can never turn a meetable
+        deadline into a miss — and the hold window has not expired. Any
+        degraded candidate or an empty window admits immediately (under
+        queue pressure the caller has already filled the bucket, so high
+        load never holds and batching never costs goodput)."""
+        bc = self.batching
+        if bc.hold_s <= 0.0:
+            return False
+        started = self._hold_since.get(mi)
+        if started is not None and now - started >= bc.hold_s:
+            return False  # window expired: admit what we have
+        if any(item[3] > 0 for _, item in cands):
+            return False  # degraded frames never wait on a merge they can't join
+        total = sum(
+            int(item[1].shape[0]) if hasattr(item[1], "shape") and item[1].shape else 1
+            for _, item in cands
+        )
+        t_b = self.expected_service(mi, bc.bucket_for(total))
+        floor = bc.min_slack_factor * t_b + bc.hold_s
+        for si, item in cands:
+            slo = self.streams[si].slo
+            if slo is None:
+                continue
+            slack = slo.deadline_s - (now - item[2])
+            if slack <= floor:
+                return False
+        return True
+
     def _admit(self, mi: int) -> list[Flight]:
         """Admit queued frames for model ``mi`` into stage 0 of the
         *current* plan; returns the flights that already finished their
         route (single-segment models). Streams are drained strictly
-        tier-first (SLO priority), round-robin within a tier — with no
-        SLOs attached every tier is 0 and this is the plain round-robin."""
+        tier-first (SLO priority); within a tier the oldest waiting head
+        goes first (age tiebreak — a stream can no longer lose the
+        microbatch cut forever to rotation phasing), falling back to
+        round-robin order on equal ages. With no SLOs attached every tier
+        is 0 and fresh frames tie, so closed-loop behaviour is unchanged.
+
+        With an enabled ``BatchConfig`` and a batch-independent model
+        (``merge_batches``), admission becomes the cross-stream
+        coalescer: up to ``max_batch`` clean frames from any of the
+        model's streams merge into one flight, padded to the power-of-two
+        bucket; a partial bucket may *hold* (frames stay queued) while
+        every member's slack allows it — see ``_should_hold``."""
         model = self.models[mi]
         stream_idxs = self._streams_of[mi]
         if not stream_idxs:
             return []
-        picked: list[tuple[int, int, Any, float, int]] = []
+        bc = self.batching
+        coalesce = bc.enabled and self.merge_batches[mi]
+        cap = bc.max_batch if coalesce else self.microbatch
         n = len(stream_idxs)
         start = self._rr[mi]
         rotated = [stream_idxs[(start + k) % n] for k in range(n)]
-        rotated.sort(key=lambda si: self._tiers[si])  # stable: rr order within a tier
-        for si in rotated:
-            if len(picked) >= self.microbatch:
-                break
-            if len(self.queues[si]):
-                fid, frame, t_sub, degrade = self.queues[si].pop()
-                picked.append((si, fid, frame, t_sub, degrade))
-        if not picked:
+        now = time.perf_counter()
+
+        def head_age(si: int) -> float:
+            q = self.queues[si]
+            return now - q.peek()[2] if len(q) else -1.0
+
+        # stable: (tier, oldest-head-first), rr order breaking exact ties
+        rotated.sort(key=lambda si: (self._tiers[si], -head_age(si)))
+        # candidate collection peeks without popping: a held bucket's
+        # frames must stay queued (and keep aging) until admission.
+        # Coalescing drains multiple frames per stream (greedy bucket
+        # fill under queue pressure); classic admission keeps the one-
+        # frame-per-stream round-robin cut.
+        cands: list[tuple[int, tuple]] = []
+        if coalesce:
+            pos = {si: 0 for si in rotated}
+            progress = True
+            while len(cands) < cap and progress:
+                progress = False
+                for si in rotated:
+                    if len(cands) >= cap:
+                        break
+                    if pos[si] < len(self.queues[si]):
+                        cands.append((si, self.queues[si].peek(pos[si])))
+                        pos[si] += 1
+                        progress = True
+        else:
+            for si in rotated:
+                if len(cands) >= cap:
+                    break
+                if len(self.queues[si]):
+                    cands.append((si, self.queues[si].peek()))
+        if not cands:
             return []
+        held = mi in self._held_pending
+        if coalesce and len(cands) < cap and self._should_hold(mi, cands, now):
+            if mi not in self._hold_since:
+                self._hold_since[mi] = now
+            self._held_pending.add(mi)
+            return []
+        self._hold_since.pop(mi, None)
+        self._held_pending.discard(mi)
+        picked: list[tuple[int, int, Any, float, int]] = []
+        for si, _ in cands:
+            fid, frame, t_sub, degrade = self.queues[si].pop()
+            picked.append((si, fid, frame, t_sub, degrade))
         self._rr[mi] = (start + len(picked)) % n
         members, states = [], []
         for si, fid, frame, t_sub, degrade in picked:
@@ -529,6 +709,18 @@ class StreamExecutor:
         shed = [(m, s) for m, s in zip(members, states) if m.degrade > 0]
         if self.merge_batches[mi] and len(clean) > 1:
             merged = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *(s for _, s in clean))
+            total = sum(m.size for m, _ in clean)
+            bucket = bc.bucket_for(total) if coalesce else total
+            if bucket > total:
+                # pad to the compiled bucket with zero lanes; _complete
+                # slices members out of [0, total) so the pads are never
+                # observable (bit-exact vs per-frame execution)
+                merged = jax.tree.map(
+                    lambda a: jnp.concatenate(
+                        [a, jnp.zeros((bucket - total,) + a.shape[1:], a.dtype)], axis=0
+                    ),
+                    merged,
+                )
             flights = [
                 Flight(
                     model_index=mi,
@@ -537,11 +729,24 @@ class StreamExecutor:
                     stage=0,
                     route=route,
                     revision=rev,
+                    valid=total,
+                    bucket=bucket,
+                    held=held,
                 )
             ]
         else:
             flights = [
-                Flight(model_index=mi, members=[m], state=s, stage=0, route=route, revision=rev)
+                Flight(
+                    model_index=mi,
+                    members=[m],
+                    state=s,
+                    stage=0,
+                    route=route,
+                    revision=rev,
+                    valid=m.size,
+                    bucket=m.size,
+                    held=held and m.degrade == 0,
+                )
                 for m, s in clean
             ]
         for m, s in shed:
@@ -554,10 +759,13 @@ class StreamExecutor:
                     route=self._degraded_route(mi) if m.degrade >= 2 else route,
                     revision=rev,
                     degrade=m.degrade,
+                    valid=m.size,
+                    bucket=m.size,
                 )
             )
         for flight in flights:
             self._note_state_struct(mi, flight.state)
+            flight.t_issue = time.perf_counter()
         done = []
         for flight in flights:
             self._run_segment(flight)
@@ -575,6 +783,7 @@ class StreamExecutor:
         t_start = time.perf_counter()
         self._blocked_s = 0.0
         self._segments_issued = 0
+        self._wait_acc = {}
         self._profiling_tick = self.profile_every > 0 and self.tick_count % self.profile_every == 0
         if self._profiling_tick and self.in_flight:
             # drain the async dispatch queue before timing anything: without
@@ -582,7 +791,8 @@ class StreamExecutor:
             # tick's in-flight work and its wall time is attributed to the
             # wrong (model, engine, span) — poisoning the cost calibration
             for f in self.in_flight:
-                self._block(f.state)
+                last = f.route[min(f.stage, len(f.route) - 1)].engine if f.route else None
+                self._block(f.state, engine=last)
         done: list[Flight] = []
         # deepest stage first; route lengths may differ across plan
         # revisions, so the depth bound comes from the live flights
@@ -612,6 +822,10 @@ class StreamExecutor:
                 wall_s=time.perf_counter() - t_start,
                 blocked_s=self._blocked_s,
                 segments=self._segments_issued,
+                engine_wait={
+                    self.engine_names[e]: tuple(acc) for e, acc in self._wait_acc.items()
+                }
+                or None,
             )
         )
         self.tick_count += 1

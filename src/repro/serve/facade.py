@@ -30,6 +30,7 @@ from ..core.cost_model import CostProvider, OnlineCost, make_cost_provider
 from ..core.engine import DevicePool
 from ..core.plan_ir import PlanIR
 from .admission import AdmissionConfig
+from .batching import BatchConfig
 from .demo import _build_pix_yolo_models, merge_flags_for
 from .fleet import FleetServer
 from .multiproc import ProcFleetServer
@@ -166,6 +167,7 @@ def build_server(
     max_queue: int = 4,
     microbatch: int = 1,
     merge_batches: bool | list[bool] | None = None,
+    batching: BatchConfig | int | None = None,
     dispatch: str = "overlapped",
     jit_segments: bool = True,
     # SLOs + open loop
@@ -187,9 +189,14 @@ def build_server(
     """Build the full serving stack in one call; see module docstring.
 
     ``merge_batches=None`` derives the per-model flags from batch
-    independence (``merge_flags_for``). ``admission=True`` uses the
-    default degradation ladder; ``replan=True`` the default
-    ``ReplanConfig``. ``deadline_ms`` is the SLO shorthand (detection
+    independence (``merge_flags_for``). ``batching`` turns on the
+    deadline-aware continuous-batching coalescer: pass a ``BatchConfig``
+    or an int shorthand (``batching=8`` == ``BatchConfig(max_batch=8)``);
+    it only engages on batch-independent models (``merge_batches``), so
+    with the default ``norm="batch"`` pix2pix streams do not coalesce —
+    use ``norm="instance"`` for the batched reconstruction workload.
+    ``admission=True`` uses the default degradation ladder;
+    ``replan=True`` the default ``ReplanConfig``. ``deadline_ms`` is the SLO shorthand (detection
     tier 0, reconstruction tier 1); pass ``slos`` for full control.
     ``impl`` selects the implementation-planning mode (``xla`` | ``auto``
     | ``pallas``); segments planned ``pallas_fused`` stage the fused
@@ -251,6 +258,8 @@ def build_server(
     ]
     if merge_batches is None:
         merge_batches = merge_flags_for(models)
+    if isinstance(batching, int):
+        batching = BatchConfig(max_batch=batching)
     if admission is True:
         admission = AdmissionConfig()
     elif admission is False:
@@ -295,6 +304,7 @@ def build_server(
             max_queue=max_queue,
             microbatch=microbatch,
             merge_batches=merge_batches,
+            batching=batching,
             dispatch=dispatch,
             jit_segments=jit_segments,
             admission=admission,
@@ -315,6 +325,7 @@ def build_server(
             max_queue=max_queue,
             microbatch=microbatch,
             merge_batches=merge_batches,
+            batching=batching,
             dispatch=dispatch,
             jit_segments=jit_segments,
             replanners=replanners,
@@ -329,6 +340,7 @@ def build_server(
             max_queue=max_queue,
             microbatch=microbatch,
             merge_batches=merge_batches,
+            batching=batching,
             dispatch=dispatch,
             jit_segments=jit_segments,
             replanner=replanner,

@@ -239,6 +239,7 @@ class FleetServer:
         max_queue: int = 4,
         microbatch: int = 1,
         merge_batches: bool | list[bool] = False,
+        batching=None,
         dispatch: str = "overlapped",
         jit_segments: bool = True,
         replanners=None,
@@ -263,6 +264,7 @@ class FleetServer:
                 max_queue=max_queue,
                 microbatch=microbatch,
                 merge_batches=merge_batches,
+                batching=batching,
                 place_fns=pool.place_fns(r, replicas),
                 dispatch=dispatch,
                 jit_segments=jit_segments,

@@ -23,12 +23,19 @@ from collections import deque
 
 @dataclasses.dataclass
 class TickStats:
-    """Host-side timing of one executor tick."""
+    """Host-side timing of one executor tick.
+
+    ``engine_wait`` is the per-engine host-time breakdown of the tick:
+    ``{engine_name: (issue_s, transfer_s, resolve_s)}`` — dispatch time
+    spent issuing that engine's segments, time placing states onto it,
+    and time blocked waiting for its results. Resolve-wait dominating the
+    tick is the no-overlap signature the coalescer attacks."""
 
     tick: int
     wall_s: float
     blocked_s: float  # time inside block_until_ready during this tick
     segments: int  # engine segment calls issued this tick
+    engine_wait: dict | None = None  # engine -> (issue_s, transfer_s, resolve_s)
 
     @property
     def overlap_efficiency(self) -> float:
@@ -91,6 +98,37 @@ def overlap_summary(ticks: list[TickStats]) -> dict:
         "overlap_efficiency": max(0.0, 1.0 - blocked / wall) if wall > 0 else math.nan,
         "blocked_s": blocked,
         "tick_wall_s": wall,
+    }
+
+
+def engine_wait_summary(ticks: list[TickStats]) -> dict:
+    """Per-engine idle-time breakdown over a run: where each engine's
+    host time went — issue (dispatch), transfer (placement), resolve
+    (blocked on results) — as absolute seconds and as fractions of the
+    total tick wall. The diagnostic behind a flat overlap_speedup: when
+    ``resolve_frac`` dominates, segments are serializing on the host
+    instead of overlapping, which is exactly what batched executables
+    amortize."""
+    wall = sum(t.wall_s for t in ticks)
+    acc: dict[str, list[float]] = {}
+    for t in ticks:
+        if not t.engine_wait:
+            continue
+        for name, w in t.engine_wait.items():
+            a = acc.setdefault(name, [0.0, 0.0, 0.0])
+            a[0] += w[0]
+            a[1] += w[1]
+            a[2] += w[2]
+    return {
+        name: {
+            "issue_s": a[0],
+            "transfer_s": a[1],
+            "resolve_s": a[2],
+            "issue_frac": a[0] / wall if wall > 0 else math.nan,
+            "transfer_frac": a[1] / wall if wall > 0 else math.nan,
+            "resolve_frac": a[2] / wall if wall > 0 else math.nan,
+        }
+        for name, a in sorted(acc.items())
     }
 
 
@@ -199,6 +237,14 @@ class ServeMetrics:
         self.slos = dict(slos) if slos else {}
         self.tiers: dict[int, TierMetrics] = {}
         self._recent: deque[bool] = deque(maxlen=recent_window)  # True = deadline met
+        # continuous-batching occupancy ledger: effective-batch histogram
+        # over completions (each frame counts the real frames in its
+        # flight), plus the held-then-missed contract counter — a frame
+        # the coalescer held that then missed its deadline. The hold rule
+        # is built to keep that at exactly 0.
+        self.batch_occupancy: dict[int, int] = {}
+        self.held_frames = 0
+        self.held_then_missed = 0
 
     def _tier(self, stream: str) -> TierMetrics:
         slo = self.slos.get(stream)
@@ -208,7 +254,8 @@ class ServeMetrics:
             tm = self.tiers[t] = TierMetrics(t)
         return tm
 
-    def record(self, stream: str, latency_s: float, degrade: int = 0):
+    def record(self, stream: str, latency_s: float, degrade: int = 0,
+               batch: int = 1, held: bool = False):
         slo = self.slos.get(stream)
         met = slo is None or latency_s <= slo.deadline_s
         self.streams[stream].record(latency_s, met_slo=met)
@@ -218,6 +265,19 @@ class ServeMetrics:
         if met:
             tm.in_slo += 1
         self._recent.append(met)
+        b = max(int(batch), 1)
+        self.batch_occupancy[b] = self.batch_occupancy.get(b, 0) + 1
+        if held:
+            self.held_frames += 1
+            if not met:
+                self.held_then_missed += 1
+
+    def mean_effective_batch(self) -> float:
+        """Frame-weighted mean of the batch each completion rode in."""
+        total = sum(self.batch_occupancy.values())
+        if not total:
+            return math.nan
+        return sum(b * n for b, n in self.batch_occupancy.items()) / total
 
     def record_arrival(self, stream: str):
         self._tier(stream).offered += 1
@@ -259,6 +319,13 @@ class ServeMetrics:
             "latency_p50_ms": percentile(all_lat, 50) * 1e3,
             "latency_p99_ms": percentile(all_lat, 99) * 1e3,
             "overlap": overlap_summary(self.ticks),
+            "engines": engine_wait_summary(self.ticks),
+            "batching": {
+                "occupancy": {str(b): n for b, n in sorted(self.batch_occupancy.items())},
+                "mean_effective_batch": self.mean_effective_batch(),
+                "held_frames": self.held_frames,
+                "held_then_missed": self.held_then_missed,
+            },
             "per_stream": {n: m.summary() for n, m in self.streams.items()},
         }
         if self.slos:
@@ -300,9 +367,15 @@ class ServeMetrics:
                 }
                 for t, tm in self.tiers.items()
             },
-            "ticks": [[t.tick, t.wall_s, t.blocked_s, t.segments] for t in self.ticks],
+            "ticks": [
+                [t.tick, t.wall_s, t.blocked_s, t.segments, t.engine_wait]
+                for t in self.ticks
+            ],
             "recent": [bool(b) for b in self._recent],
             "recent_window": self._recent.maxlen,
+            "batch_occupancy": {str(b): n for b, n in self.batch_occupancy.items()},
+            "held_frames": self.held_frames,
+            "held_then_missed": self.held_then_missed,
         }
 
 
@@ -333,9 +406,20 @@ def metrics_from_payload(payload: dict) -> ServeMetrics:
                   "completed", "in_slo"):
             setattr(tm, f, int(st[f]))
         tm.latencies_s = [float(x) for x in st["latencies_s"]]
-    m.ticks = [TickStats(int(t), float(w), float(b), int(s))
-               for t, w, b, s in payload.get("ticks", [])]
+    m.ticks = [
+        TickStats(
+            int(row[0]), float(row[1]), float(row[2]), int(row[3]),
+            engine_wait=(
+                {n: tuple(float(x) for x in w) for n, w in row[4].items()}
+                if len(row) > 4 and row[4] else None
+            ),
+        )
+        for row in payload.get("ticks", [])
+    ]
     m._recent.extend(bool(b) for b in payload.get("recent", []))
+    m.batch_occupancy = {int(b): int(n) for b, n in payload.get("batch_occupancy", {}).items()}
+    m.held_frames = int(payload.get("held_frames", 0))
+    m.held_then_missed = int(payload.get("held_then_missed", 0))
     return m
 
 
@@ -385,6 +469,12 @@ def merge_metrics(replica_metrics) -> "ServeMetrics":
             at.latencies_s.extend(tm.latencies_s)
         agg.ticks.extend(m.ticks)
         agg._recent.extend(m._recent)
+        # batch occupancy merges across the fleet: histograms sum, so the
+        # fleet report's mean effective batch is the frame-weighted mean
+        for b, c in m.batch_occupancy.items():
+            agg.batch_occupancy[b] = agg.batch_occupancy.get(b, 0) + c
+        agg.held_frames += m.held_frames
+        agg.held_then_missed += m.held_then_missed
     return agg
 
 

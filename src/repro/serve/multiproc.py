@@ -214,6 +214,7 @@ def _worker_main(spec: dict, conn) -> None:
         from ..core.engine import DevicePool
         from ..core.plan_ir import PlanIR
         from .admission import AdmissionConfig
+        from .batching import BatchConfig
         from .demo import _build_pix_yolo_models
         from .replanner import ReplanConfig, Replanner
         from .server import MultiStreamServer
@@ -258,6 +259,7 @@ def _worker_main(spec: dict, conn) -> None:
             max_queue=skw["max_queue"],
             microbatch=skw["microbatch"],
             merge_batches=skw["merge_batches"],
+            batching=BatchConfig.from_dict(skw.get("batching")),
             place_fns=pool.place_fns(0, 1),
             dispatch=skw["dispatch"],
             jit_segments=skw["jit_segments"],
@@ -592,6 +594,7 @@ class ProcFleetServer:
         max_queue: int = 4,
         microbatch: int = 1,
         merge_batches: bool | list = False,
+        batching=None,
         dispatch: str = "overlapped",
         jit_segments: bool = True,
         admission=None,
@@ -680,6 +683,7 @@ class ProcFleetServer:
                         "merge_batches": merge_batches
                         if isinstance(merge_batches, bool)
                         else list(merge_batches),
+                        "batching": batching.to_dict() if batching is not None else None,
                         "dispatch": dispatch,
                         "jit_segments": jit_segments,
                         "admission": adm_payload,

@@ -165,7 +165,16 @@ class Replanner:
         # (the server wires metrics.recent_slo_miss_rate here).
         self.slo_miss_fn = None
         self._last_swap_tick: int | None = None
-        self._expected_cache: dict[tuple[int, int, int, int, str], float] = {}
+        self._expected_cache: dict[tuple[int, int, int, int, str, int], float] = {}
+        # continuous-batching state: the admission bucket the incumbent
+        # plan was scored at, a magnitude-weighted EMA of the buckets
+        # observed flights actually ran at, and the hysteresis counter of
+        # the batch-shift trigger (sustained concurrency change re-plans
+        # even when no per-engine scale has drifted)
+        self._planned_batch = 1
+        self._batch_ema = 1.0
+        self._batch_above = 0
+        self._tick_batch: list[float] = [0.0, 0.0]  # [sum bucket*w, sum w]
         # implementation-selection mode re-plans run with; inherited from
         # the attached executor's plan (and refreshed on every swap)
         self._impl_mode = "xla"
@@ -207,6 +216,8 @@ class Replanner:
             self._translate = True
         self._incumbent_max_cuts = executor.plan.max_cuts
         self._impl_mode = getattr(executor.plan, "impl_mode", "xla")
+        self._planned_batch = max(int(getattr(executor.plan, "batch", 1)), 1)
+        self._batch_ema = float(self._planned_batch)
         executor.profile_every = max(1, self.config.profile_every)
         executor.on_segment = self.observe
         executor.on_tick = self.maybe_replan
@@ -227,21 +238,28 @@ class Replanner:
             return self._fine
         return self.graphs
 
-    def _expected_base(self, model_index: int, engine: int, lo: int, hi: int, impl: str = "xla") -> float:
+    def _expected_base(
+        self, model_index: int, engine: int, lo: int, hi: int, impl: str = "xla", batch: int = 1
+    ) -> float:
         """Base-provider cost of graph[lo:hi) on the engine — the fixed
         denominator of the wall-clock calibration (never a scaled plan's
         expected_cost, which would drift with each re-plan). Spans are
         executor-space indices, so the expectation walks the executor's
         graphs — under the implementation the span actually ran with, so
-        each variant calibrates against its own expectation."""
-        key = (model_index, engine, lo, hi, impl)
+        each variant calibrates against its own expectation. ``batch``
+        derives the expectation at the bucket the span actually ran at
+        (per-frame amortized), so the modeled amortization curve cancels
+        out of the engine scale instead of reading as drift."""
+        key = (model_index, engine, lo, hi, impl, batch)
         t = self._expected_cache.get(key)
         if t is None:
             g = self._exec_graphs[model_index]
             e = self.engines[engine]
             eff = _effective_impls(g, lo, hi, impl)
             t = sum(
-                self.online.base.layer_time(g[i], e, eff[i - lo] if eff else "xla")
+                self.online.base.layer_time(
+                    g[i], e, eff[i - lo] if eff else "xla", batch=batch
+                )
                 for i in range(lo, hi)
             )
             self._expected_cache[key] = t
@@ -254,10 +272,15 @@ class Replanner:
         (per-segment ratios on near-empty spans are all host overhead —
         summing first keeps them from swinging the scale)."""
         impl = getattr(obs, "impl", "xla")
-        expected = self._expected_base(obs.model_index, obs.engine, obs.lo, obs.hi, impl)
-        # merged flights run the span once for the whole group; normalize
-        # to a per-frame observation so microbatching doesn't read as drift
-        wall = obs.wall_s / max(obs.batch, 1)
+        # coalesced flights run the span once for the whole (padded)
+        # bucket; normalize wall AND expectation to that bucket so the
+        # modeled batching amortization cancels out of the engine scale.
+        # What remains in the per-bucket channels below is the *residual*
+        # — how far the bucket's real batched wall deviates from the
+        # amortization curve the planner scored it with.
+        bucket = max(int(getattr(obs, "bucket", 0)), int(getattr(obs, "batch", 1)), 1)
+        expected = self._expected_base(obs.model_index, obs.engine, obs.lo, obs.hi, impl, bucket)
+        wall = obs.wall_s / bucket
         name = self.engines[obs.engine].name
         acc = self._tick_acc.setdefault(name, [0.0, 0.0])
         acc[0] += wall
@@ -269,12 +292,30 @@ class Replanner:
             ch = self._tick_acc.setdefault(f"{name}|{impl}", [0.0, 0.0])
             ch[0] += wall
             ch[1] += expected
+        if bucket > 1:
+            # per-bucket calibration channel (``OnlineCost.scale_for``
+            # resolves ``{engine}[|{impl}]|b{bucket}`` before falling back
+            # to the engine-wide scale): drift in one bucket's batching
+            # efficiency re-scores plans at that bucket, and only them
+            base_ch = name if impl == "xla" else f"{name}|{impl}"
+            bch = self._tick_acc.setdefault(f"{base_ch}|b{bucket}", [0.0, 0.0])
+            bch[0] += wall
+            bch[1] += expected
+        # magnitude-weighted admission-bucket sample for the batch-shift
+        # trigger (big spans dominate, matching the scale folding above)
+        self._tick_batch[0] += bucket * obs.wall_s
+        self._tick_batch[1] += obs.wall_s
 
     def _fold_tick(self):
         for name, (wall, expected) in self._tick_acc.items():
             self.online.observe(name, wall, expected)
             self._obs_count[name] = self._obs_count.get(name, 0) + 1
         self._tick_acc.clear()
+        if self._tick_batch[1] > 0:
+            mean = self._tick_batch[0] / self._tick_batch[1]
+            a = self.config.ema_alpha
+            self._batch_ema = (1.0 - a) * self._batch_ema + a * mean
+            self._tick_batch = [0.0, 0.0]
 
     # -- drift detection ----------------------------------------------------
 
@@ -342,6 +383,7 @@ class Replanner:
             max_cuts=self._active_max_cuts(),
             fixed=fixed,
             impl=self._impl_mode,
+            batch=self._planned_batch,
         )
 
     def _score_fixed(self, routes, online: OnlineCost) -> float:
@@ -442,6 +484,25 @@ class Replanner:
             return None
         return {"queue_pressure": pressure, "slo_miss_rate": miss}
 
+    def _batch_signal(self, executor: StreamExecutor) -> dict[str, float] | None:
+        """Evaluate the batch-shift trigger: the coalescer's observed
+        admission bucket (EMA, quantized to the executor's bucket ladder)
+        has moved away from the bucket the incumbent plan was scored at,
+        for ``hysteresis`` consecutive ticks. An arrival-concurrency
+        shift re-plans even when no per-engine scale has drifted — the
+        routes were balanced for a different effective batch."""
+        bc = getattr(executor, "batching", None)
+        if bc is None or not bc.enabled:
+            return None
+        observed = bc.bucket_for(int(round(self._batch_ema)))
+        if observed == self._planned_batch:
+            self._batch_above = 0
+            return None
+        self._batch_above += 1
+        if self._batch_above < self.config.hysteresis:
+            return None
+        return {"observed_batch": float(observed), "planned_batch": float(self._planned_batch)}
+
     def maybe_replan(self, executor: StreamExecutor) -> ReplanEvent | None:
         """Called at every frame boundary (executor ``on_tick``)."""
         cfg = self.config
@@ -470,10 +531,21 @@ class Replanner:
             if load is not None:
                 trigger, d = "load", load
         if trigger is None:
+            shift = self._batch_signal(executor)
+            if shift is not None:
+                trigger, d = "batch", shift
+        if trigger is None:
             return None
         tick = executor.tick_count
         if self._last_swap_tick is not None and tick - self._last_swap_tick < cfg.cooldown_ticks:
             return None
+        if trigger == "batch":
+            # commit the new planning bucket only once the fire is going
+            # through: incumbent and candidates are then both re-scored at
+            # the same amortized costs, and planned == observed afterwards
+            # quiesces the trigger whether or not the swap happens
+            self._planned_batch = int(d["observed_batch"])
+            self._batch_above = 0
         # this is a re-plan fire: bump the escalation counter before
         # planning, so the escalate_after-th fire already plans fine
         self._fires += 1
@@ -549,6 +621,7 @@ class Replanner:
             self._last_swap_tick = executor.tick_count
             self._incumbent_max_cuts = executor.plan.max_cuts
             self._impl_mode = getattr(executor.plan, "impl_mode", "xla")
+            self._planned_batch = max(int(getattr(executor.plan, "batch", 1)), 1)
             self._rebaseline()
         else:
             # plan already as good as it gets under the drifted costs: stop
@@ -589,6 +662,9 @@ class Replanner:
             "escalated": self._escalated,
             "drift_fires": self._fires,
             "load_fires": sum(e.trigger == "load" for e in self.events),
+            "batch_fires": sum(e.trigger == "batch" for e in self.events),
+            "planned_batch": self._planned_batch,
+            "batch_ema": round(self._batch_ema, 3),
             "swap_stall": swap_stall_summary(self.swap_stalls),
             "events": [
                 {

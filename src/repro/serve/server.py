@@ -25,6 +25,7 @@ from ..core.pipeline import StagedModel
 from ..core.plan_ir import PlanIR
 from ..core.scheduler import NModelPlan
 from .admission import ADMIT, DROP, AdmissionConfig
+from .batching import BatchConfig
 from .executor import StreamExecutor
 from .metrics import ServeMetrics, segment_summary
 from .replanner import Replanner
@@ -52,6 +53,7 @@ class MultiStreamServer:
         replanner: Replanner | None = None,
         admission: AdmissionConfig | None = None,
         resolution_flexible: bool | list[bool] = False,
+        batching: BatchConfig | None = None,
     ):
         self.executor = StreamExecutor(
             models,
@@ -63,6 +65,7 @@ class MultiStreamServer:
             place_fns=place_fns,
             dispatch=dispatch,
             jit_segments=jit_segments,
+            batching=batching,
         )
         self.replanner = replanner
         self.metrics = ServeMetrics(
@@ -207,7 +210,9 @@ class MultiStreamServer:
 
     def _fold_completions(self):
         for c in self.executor.completions[self._recorded :]:
-            self.metrics.record(c.stream, c.latency_s, degrade=c.degrade)
+            self.metrics.record(
+                c.stream, c.latency_s, degrade=c.degrade, batch=c.batch, held=c.held
+            )
         self._recorded = len(self.executor.completions)
         for t in self.executor.tick_stats[self._recorded_ticks :]:
             self.metrics.record_tick(t)

@@ -64,6 +64,12 @@ class FrameQueue:
     def pop(self) -> Any:
         return self._q.popleft()
 
+    def peek(self, i: int = 0) -> Any:
+        """Inspect the i-th queued item without popping — the coalescer's
+        hold decision looks at waiting frames before committing to admit
+        them (held frames must stay queued, not sit in limbo)."""
+        return self._q[i]
+
     def evict_newest(self) -> Any | None:
         """Drop and return the most recent frame (admission control's
         make-room path: the newest low-priority frame has waited least,

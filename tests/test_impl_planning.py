@@ -235,3 +235,48 @@ def test_server_executes_pallas_plan_matches_run_all():
                 np.testing.assert_allclose(
                     np.float32(a), np.float32(b), atol=5e-3, rtol=1e-2
                 )
+
+
+# ------------------------------------------------- bare 1x1 head convs
+
+
+def test_yolo_head_bare_convs_register_span1_fuse_groups():
+    """The YOLO head's final box3/cls3 convs (conv+bias, no norm/act)
+    carry span-1 ``pallas_fused`` fuse attrs on the expanded graph —
+    one fused kernel per conv, exact at any batch (no batch-norm
+    caveat)."""
+    g = YOLOv8(YOLOv8Config(img_size=32)).layer_graph().expand()
+    heads = {
+        l.name: l.attrs["fuse"]
+        for l in g
+        if (l.name.endswith(".box3") or l.name.endswith(".cls3")) and "fuse" in l.attrs
+    }
+    # every detection scale registers both head convs
+    assert {n.split(".")[0] for n in heads} == {"head3", "head4", "head5"}
+    assert len(heads) == 6
+    for fu in heads.values():
+        assert fu["span"] == 1
+        assert (fu["kind"], fu["norm"], fu["act"]) == ("conv", "none", "none")
+        assert fu["flops"] > 0 and fu["bytes"] > 0
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_yolo_head_conv_fused_parity(dtype):
+    """The fused norm-free/act-free conv_block matches the plain Conv2D
+    head conv at both serving dtypes on the real head shapes."""
+    from repro.nn.conv import Conv2D
+
+    for i, (shape, cout) in enumerate(
+        [((1, 4, 4, 64), 64), ((1, 2, 2, 128), 2), ((1, 1, 1, 256), 64)]
+    ):
+        cin = shape[-1]
+        x = jax.random.normal(jax.random.key(2 * i), shape).astype(dtype)
+        w = (jax.random.normal(jax.random.key(2 * i + 1), (1, 1, cin, cout)) * 0.1).astype(
+            jnp.float32
+        )
+        b = (jax.random.normal(jax.random.key(100 + i), (cout,)) * 0.1).astype(jnp.float32)
+        got = conv_block(x, w, b=b, stride=1, padding=0, norm="none", act="none")
+        want = Conv2D(cin, cout, 1, 1, padding=0)({"w": w, "b": b}, x)
+        assert got.dtype == want.dtype
+        atol = 1e-5 if dtype == jnp.float32 else 5e-2
+        np.testing.assert_allclose(np.float32(got), np.float32(want), atol=atol)
